@@ -1,0 +1,99 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * lookahead window size — memory vs. source-poll trade-off of the
+//!   incremental loader (the Table-1 mechanism);
+//! * memory-sampling cadence — observability overhead;
+//! * output sink — in-memory vs. CSV streaming vs. null;
+//! * scheduler re-sort per decision (sorting schedulers) vs. FIFO baseline.
+//!
+//! `cargo bench --bench micro_ablation`
+
+use accasim::benchkit::Bencher;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::sim::{SimOptions, Simulator};
+use accasim::traces;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new("micro_ablation");
+    let (swf, _) = traces::materialize(&traces::SETH, "data", 0.02, 1)?;
+    let sys = traces::SETH.sys_config();
+    let tmp = std::env::temp_dir().join("accasim_ablation");
+    std::fs::create_dir_all(&tmp)?;
+
+    // --- lookahead window --------------------------------------------------
+    for lookahead in [600u64, 4 * 3600, 24 * 3600, 7 * 24 * 3600] {
+        b.bench(&format!("lookahead/{}h", lookahead / 3600), || {
+            let d = dispatcher_from_label("FIFO-FF").unwrap();
+            let opts = SimOptions {
+                lookahead,
+                output: OutputCollector::null(),
+                mem_sample_every: 0,
+                ..Default::default()
+            };
+            let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();
+            sim.run().unwrap().jobs_completed
+        });
+    }
+
+    // --- memory sampling cadence -------------------------------------------
+    for every in [0u64, 1, 64, 1024] {
+        b.bench(&format!("mem_sample_every/{every}"), || {
+            let d = dispatcher_from_label("FIFO-FF").unwrap();
+            let opts = SimOptions {
+                mem_sample_every: every,
+                output: OutputCollector::null(),
+                ..Default::default()
+            };
+            let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();
+            sim.run().unwrap().jobs_completed
+        });
+    }
+
+    // --- output sink -------------------------------------------------------
+    let sinks: Vec<(&str, Box<dyn Fn() -> OutputCollector>)> = vec![
+        ("null", Box::new(OutputCollector::null)),
+        ("in_memory", Box::new(|| OutputCollector::in_memory(true, true))),
+        ("csv", {
+            let tmp = tmp.clone();
+            Box::new(move || {
+                OutputCollector::null()
+                    .with_job_file(tmp.join("jobs.csv"))
+                    .unwrap()
+                    .with_perf_file(tmp.join("perf.csv"))
+                    .unwrap()
+            })
+        }),
+    ];
+    for (name, mk) in &sinks {
+        b.bench(&format!("output_sink/{name}"), || {
+            let d = dispatcher_from_label("FIFO-FF").unwrap();
+            let opts = SimOptions {
+                output: mk(),
+                mem_sample_every: 0,
+                ..Default::default()
+            };
+            let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();
+            sim.run().unwrap().jobs_completed
+        });
+    }
+
+    // --- scheduler families (sort cost + backfill cost on one workload) ----
+    for label in ["FIFO-FF", "SJF-FF", "EBF-FF", "EBF_SJF-FF", "CBF-FF"] {
+        b.bench(&format!("scheduler/{label}"), || {
+            let d = dispatcher_from_label(label).unwrap();
+            let opts = SimOptions {
+                output: OutputCollector::null(),
+                mem_sample_every: 0,
+                ..Default::default()
+            };
+            let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();
+            sim.run().unwrap().jobs_completed
+        });
+    }
+
+    let csv = b.write_csv()?;
+    println!("wrote {}", csv.display());
+    let _ = std::fs::remove_dir_all(&tmp);
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Micro-benchmarks of the simulator substrates: SWF parsing, resource
+//! manager allocate/release, event-loop throughput, JSON config parsing,
+//! and the stats kit — the knobs the §Perf pass turns.
+//!
+//! `cargo bench --bench micro_core`
+
+use accasim::benchkit::Bencher;
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::resources::{Allocation, ResourceManager};
+use accasim::rng::Pcg64;
+use accasim::sim::{SimOptions, Simulator};
+use accasim::stats::BoxStats;
+use accasim::traces;
+use accasim::workload::{parse_swf_line, Job};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new("micro_core");
+
+    // --- SWF parse throughput -------------------------------------------
+    let line = "123456 1027839845 -1 3600 16 -1 -1 16 7200 524288 1 42 3 17 1 1 -1 -1";
+    b.bench("swf_parse_100k_lines", || {
+        let mut n = 0u64;
+        for _ in 0..100_000 {
+            n += parse_swf_line(std::hint::black_box(line)).unwrap().job_number as u64;
+        }
+        n
+    });
+
+    // --- resource manager hot ops ----------------------------------------
+    let sys = SysConfig::homogeneous("b", 512, &[("core", 16), ("mem", 65536)], 0);
+    let mut rm = ResourceManager::from_config(&sys);
+    let job = Job {
+        id: 1,
+        submit: 0,
+        duration: 10,
+        req_time: 10,
+        slots: 64,
+        per_slot: vec![1, 512],
+        user: 0,
+        app: 0,
+        status: 1,
+    };
+    b.bench("rm_allocate_release_10k", || {
+        for _ in 0..10_000 {
+            let alloc = Allocation { slices: vec![(0, 16), (1, 16), (2, 16), (3, 16)] };
+            rm.allocate(&job, alloc).unwrap();
+            rm.release(&job).unwrap();
+        }
+        rm.live_allocations()
+    });
+    b.bench("rm_total_hostable_512n_10k", || {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            acc += rm.total_hostable_slots(std::hint::black_box(&job.per_slot));
+        }
+        acc
+    });
+
+    // --- event-loop throughput (rejecting dispatcher = pure overhead) ----
+    let (swf, _) = traces::materialize(&traces::SETH, "data", 0.02, 1)?;
+    let sys_seth = traces::SETH.sys_config();
+    b.bench("event_loop_reject_4k_jobs", || {
+        let d = dispatcher_from_label("REJECT-FF").unwrap();
+        let opts = SimOptions {
+            output: OutputCollector::null(),
+            mem_sample_every: 0,
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(&swf, sys_seth.clone(), d, opts).unwrap();
+        sim.run().unwrap().jobs_rejected
+    });
+
+    // --- full FIFO simulation (event loop + dispatch + records) ----------
+    b.bench("sim_fifo_ff_4k_jobs", || {
+        let d = dispatcher_from_label("FIFO-FF").unwrap();
+        let opts = SimOptions {
+            output: OutputCollector::null(),
+            mem_sample_every: 0,
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(&swf, sys_seth.clone(), d, opts).unwrap();
+        sim.run().unwrap().jobs_completed
+    });
+
+    // --- JSON config parse -------------------------------------------------
+    let cfg_text = traces::METACENTRUM.sys_config().to_json();
+    b.bench("sysconfig_parse_10k", || {
+        let mut nodes = 0;
+        for _ in 0..10_000 {
+            nodes += SysConfig::from_json(std::hint::black_box(&cfg_text)).unwrap().total_nodes();
+        }
+        nodes
+    });
+
+    // --- stats kit ----------------------------------------------------------
+    let mut rng = Pcg64::new(1);
+    let xs: Vec<f64> = (0..100_000).map(|_| rng.lognormal(1.0, 2.0)).collect();
+    b.bench("boxstats_100k", || BoxStats::from(std::hint::black_box(&xs)).median);
+
+    let csv = b.write_csv()?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Micro-benchmarks of dispatching: per-scheduler decision cost vs queue
+//! size (the Fig 12/13 mechanism) and allocator node-ordering cost,
+//! including the PJRT fit_score path when artifacts are present.
+//!
+//! `cargo bench --bench micro_dispatch`
+
+use accasim::benchkit::Bencher;
+use accasim::config::SysConfig;
+use accasim::dispatch::{
+    dispatcher_from_label, Allocator, BestFit, FirstFit, SystemView, XlaFit,
+};
+use accasim::resources::ResourceManager;
+use accasim::rng::Pcg64;
+use accasim::runtime::Engine;
+use accasim::workload::Job;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn arb_job(rng: &mut Pcg64, id: u64) -> Job {
+    Job {
+        id,
+        submit: 0,
+        duration: rng.range_u64(10, 5_000),
+        req_time: rng.range_u64(10, 10_000),
+        slots: rng.range_u64(1, 32) as u32,
+        per_slot: vec![rng.range_u64(1, 2), rng.range_u64(64, 1024)],
+        user: 0,
+        app: 0,
+        status: 1,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new("micro_dispatch");
+    let sys = SysConfig::homogeneous("b", 480, &[("core", 4), ("mem", 4096)], 0);
+
+    // decision cost per scheduler at growing queue sizes (Fig 13 mechanism)
+    for qsize in [32usize, 128, 512] {
+        for label in ["FIFO-FF", "SJF-FF", "EBF-FF", "FIFO-BF", "EBF-BF"] {
+            let mut rng = Pcg64::new(qsize as u64);
+            let mut d = dispatcher_from_label(label)?;
+            b.bench(&format!("decision/{label}/q{qsize}"), || {
+                // fresh state per iteration: queue of qsize jobs, idle system
+                let mut rm = ResourceManager::from_config(&sys);
+                let jobs: Vec<Job> =
+                    (1..=qsize as u64).map(|id| arb_job(&mut rng, id)).collect();
+                let extra = BTreeMap::new();
+                let view = SystemView {
+                    now: 0,
+                    queue: jobs.iter().collect(),
+                    running: Vec::new(),
+                    extra: &extra,
+                };
+                d.dispatch(&view, &mut rm).started.len()
+            });
+        }
+    }
+
+    // allocator node-order cost on a partially loaded 480-node system
+    let mut rng = Pcg64::new(7);
+    let mut rm = ResourceManager::from_config(&sys);
+    let mut ff = FirstFit::new();
+    for id in 0..600u64 {
+        let j = arb_job(&mut rng, 10_000 + id);
+        if let Some(a) = ff.place(&j, &rm) {
+            rm.allocate(&j, a).unwrap();
+        }
+    }
+    let probe = arb_job(&mut rng, 1);
+    b.bench("node_order/FF/480n", || {
+        FirstFit::new().node_order(std::hint::black_box(&probe), &rm).len()
+    });
+    b.bench("node_order/BF/480n", || {
+        BestFit::new().node_order(std::hint::black_box(&probe), &rm).len()
+    });
+
+    // PJRT fit_score path (XlaFit), when artifacts are available
+    if std::path::Path::new("artifacts/fit_score.hlo.txt").exists() {
+        let engine = Arc::new(Engine::with_artifacts("artifacts")?);
+        let mut xf = XlaFit::new(engine)?;
+        b.bench("node_order/XlaFit/480n", || {
+            xf.node_order(std::hint::black_box(&probe), &rm).len()
+        });
+    } else {
+        println!("    (skipping XlaFit bench: run `make artifacts`)");
+    }
+
+    let csv = b.write_csv()?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

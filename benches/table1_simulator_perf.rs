@@ -1,0 +1,57 @@
+//! Table 1 bench: simulator CPU time and memory across loading strategies
+//! (AccaSim incremental vs Batsim-like eager-heavy vs Alea-like
+//! eager-light) on the three paper datasets, rejecting dispatcher.
+//!
+//! `cargo bench --bench table1_simulator_perf` (add `-- --quick` for 3 its;
+//! env `T1_SCALE` overrides the default 2% trace scale).
+
+use accasim::baselines::{run_rejecting, LoaderMode};
+use accasim::benchkit::Bencher;
+use accasim::traces;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::var("T1_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.02);
+    let mut b = Bencher::new("table1");
+    println!("== Table 1: simulator overhead (scale {scale}) ==");
+    let mut mem_rows = Vec::new();
+    for spec in traces::ALL {
+        let (swf, _cfg) = traces::materialize(spec, "data", scale, 1)?;
+        let sys = spec.sys_config();
+        for mode in [LoaderMode::Incremental, LoaderMode::EagerLight, LoaderMode::EagerHeavy] {
+            let swf2 = swf.clone();
+            let sys2 = sys.clone();
+            let mut last = None;
+            b.bench(&format!("{}/{}", spec.name, mode.label()), || {
+                let r = run_rejecting(&swf2, &sys2, mode).expect("run");
+                let jobs = r.jobs;
+                last = Some(r);
+                jobs
+            });
+            if let Some(r) = last {
+                println!(
+                    "    {} {}: {} jobs, mem avg {:.1} MB / max {:.1} MB",
+                    spec.name,
+                    mode.label(),
+                    r.jobs,
+                    r.avg_rss_kb as f64 / 1024.0,
+                    r.max_rss_kb as f64 / 1024.0
+                );
+                mem_rows.push(format!(
+                    "{},{},{},{:.2},{:.2}",
+                    spec.name,
+                    mode.label(),
+                    r.jobs,
+                    r.avg_rss_kb as f64 / 1024.0,
+                    r.max_rss_kb as f64 / 1024.0
+                ));
+            }
+        }
+    }
+    let csv = b.write_csv()?;
+    std::fs::write(
+        "results/bench_table1_memory.csv",
+        format!("workload,simulator,jobs,mem_avg_mb,mem_max_mb\n{}\n", mem_rows.join("\n")),
+    )?;
+    println!("wrote {} and results/bench_table1_memory.csv", csv.display());
+    Ok(())
+}

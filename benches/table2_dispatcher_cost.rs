@@ -1,0 +1,61 @@
+//! Table 2 bench: per-dispatcher total CPU time, dispatch-decision time and
+//! memory on the Seth-like workload (all eight paper dispatchers).
+//!
+//! `cargo bench --bench table2_dispatcher_cost` (env `T2_SCALE` overrides
+//! the default 2% trace scale).
+
+use accasim::benchkit::Bencher;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::sim::{SimOptions, Simulator};
+use accasim::traces;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::var("T2_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.02);
+    let (swf, _cfg) = traces::materialize(&traces::SETH, "data", scale, 1)?;
+    let sys = traces::SETH.sys_config();
+    let mut b = Bencher::new("table2");
+    println!("== Table 2: dispatcher cost on Seth (scale {scale}) ==");
+    let mut rows = Vec::new();
+    for s in ["FIFO", "LJF", "SJF", "EBF"] {
+        for a in ["FF", "BF"] {
+            let label = format!("{s}-{a}");
+            let mut dispatch_s = 0.0;
+            let mut mem = (0u64, 0u64);
+            let mut slowdown = 0.0;
+            let r = b.bench(&label, || {
+                let d = dispatcher_from_label(&label).unwrap();
+                let opts =
+                    SimOptions { output: OutputCollector::null(), ..Default::default() };
+                let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();
+                let out = sim.run().unwrap();
+                dispatch_s = out.dispatch_ns as f64 / 1e9;
+                mem = (out.avg_rss_kb, out.max_rss_kb);
+                slowdown = out.avg_slowdown();
+                out.jobs_completed
+            });
+            println!(
+                "    {label}: dispatch {dispatch_s:.3}s of {:.3}s total | mem {:.0}/{:.0} MB | slowdown {slowdown:.2}",
+                r.mean.as_secs_f64(),
+                mem.0 as f64 / 1024.0,
+                mem.1 as f64 / 1024.0
+            );
+            rows.push(format!(
+                "{label},{:.4},{dispatch_s:.4},{:.1},{:.1},{slowdown:.3}",
+                r.mean.as_secs_f64(),
+                mem.0 as f64 / 1024.0,
+                mem.1 as f64 / 1024.0
+            ));
+        }
+    }
+    let csv = b.write_csv()?;
+    std::fs::write(
+        "results/bench_table2_detail.csv",
+        format!(
+            "dispatcher,total_s,dispatch_s,mem_avg_mb,mem_max_mb,avg_slowdown\n{}\n",
+            rows.join("\n")
+        ),
+    )?;
+    println!("wrote {} and results/bench_table2_detail.csv", csv.display());
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Dispatcher evaluation case study (§7.1–7.2) — the END-TO-END DRIVER:
+//! run the full experimentation tool over the Seth-like workload with all
+//! eight paper dispatchers ({FIFO, SJF, LJF, EBF} × {FF, BF}), multiple
+//! repetitions, and regenerate the data behind Figures 10, 11, 12 and 13
+//! plus the Table 2 rows.
+//!
+//! Run: `cargo run --release --example dispatcher_study [-- --scale 0.02 --reps 2]`
+
+use accasim::experiment::Experiment;
+use accasim::plotdata::{PlotFactory, PlotKind};
+use accasim::stats::mean;
+use accasim::traces;
+use accasim::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale: f64 = args.get_parse("scale", 0.02)?;
+    let reps: u32 = args.get_parse("reps", 2)?;
+
+    let (workload, _cfg) = traces::materialize(&traces::SETH, "data", scale, 1)?;
+    println!(
+        "Seth-like workload: {} jobs, {} reps per dispatcher",
+        traces::SETH.scaled_jobs(scale),
+        reps
+    );
+
+    // Figure 5: Experiment + gen_dispatchers cross-product.
+    let mut experiment = Experiment::new("case_study", &workload, traces::SETH.sys_config());
+    experiment.gen_dispatchers(&["FIFO", "SJF", "LJF", "EBF"], &["FF", "BF"]);
+    experiment.repetitions = reps;
+    let results = experiment.run_simulation()?;
+
+    println!(
+        "\n{:<10} {:>9} {:>12} {:>12} {:>12} {:>13} {:>11}",
+        "dispatcher", "completed", "slowdown μ", "queue med", "total s", "dispatch ms", "mem max MB"
+    );
+    let mut pf = PlotFactory::new();
+    for (label, outs) in &results.runs {
+        pf.add_run(label.clone(), outs.clone());
+    }
+    let qb = pf.queue_boxes();
+    for ((label, outs), (_, q)) in results.runs.iter().zip(&qb) {
+        let sd: Vec<f64> = outs.iter().map(|o| o.avg_slowdown()).collect();
+        let wall: Vec<f64> = outs.iter().map(|o| o.wall_s).collect();
+        let disp: Vec<f64> = outs.iter().map(|o| o.dispatch_ns as f64 / 1e6).collect();
+        let mem: Vec<f64> = outs.iter().map(|o| o.max_rss_kb as f64 / 1024.0).collect();
+        println!(
+            "{label:<10} {:>9} {:>12.2} {:>12.1} {:>12.2} {:>13.1} {:>11.1}",
+            outs[0].jobs_completed,
+            mean(&sd),
+            q.median,
+            mean(&wall),
+            mean(&disp),
+            mean(&mem),
+        );
+    }
+
+    println!("\n== slowdown distributions (Fig 10) ==");
+    println!("{}", pf.render_boxes(PlotKind::Slowdown, 52));
+    println!("== queue size distributions (Fig 11) ==");
+    println!("{}", pf.render_boxes(PlotKind::QueueSize, 52));
+
+    println!("figure data written:");
+    for p in &results.plots {
+        println!("  {}", p.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart — the paper's Figure 4 instantiation, end to end:
+//!
+//! 1. materialize a Seth-like workload + system config,
+//! 2. simulate it under FIFO scheduling with First-Fit allocation,
+//! 3. print Figure 8/9-style monitoring and the slowdown summary, and
+//! 4. write the decision-quality plot data (slowdown distribution).
+//!
+//! Run: `cargo run --release --example quickstart [-- --scale 0.01]`
+
+use accasim::monitor::{render_utilization, SystemStatus};
+use accasim::output::OutputCollector;
+use accasim::plotdata::{PlotFactory, PlotKind};
+use accasim::prelude::*;
+use accasim::traces;
+use accasim::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale: f64 = args.get_parse("scale", 0.01)?;
+
+    // 1. workload + system (substitute for downloading the Seth archive)
+    let (workload, sys_cfg) = traces::materialize(&traces::SETH, "data", scale, 1)?;
+    let sys = SysConfig::from_json_file(&sys_cfg)?;
+    println!("workload: {} | system: {} nodes", workload.display(), sys.total_nodes());
+
+    // 2. dispatcher = FIFO scheduler ∘ First-Fit allocator (Fig 4, lines 9-11)
+    let dispatcher =
+        Dispatcher::new(Box::new(FifoScheduler::new()), Box::new(FirstFit::new()));
+    let opts = accasim::sim::SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        ..Default::default()
+    };
+    let mut simulator = Simulator::new(&workload, sys, dispatcher, opts)?;
+    let out = simulator.run()?;
+
+    // 3. monitoring (Figs 8-9)
+    let status = SystemStatus::gather(
+        out.last_completion,
+        0,
+        0,
+        0,
+        out.jobs_completed,
+        out.jobs_rejected,
+        simulator.resource_manager(),
+        out.cpu_ms,
+    );
+    println!("\n== system status (Fig 8) ==\n{}", status.render());
+    println!(
+        "== utilization (Fig 9) ==\n{}",
+        render_utilization(simulator.resource_manager(), 72)
+    );
+
+    println!("== summary ==");
+    println!("completed {} / rejected {}", out.jobs_completed, out.jobs_rejected);
+    println!("makespan          : {:.1} days", out.makespan as f64 / 86_400.0);
+    println!("avg slowdown      : {:.3}", out.avg_slowdown());
+    println!("avg wait          : {:.1} s", out.avg_wait());
+    println!("throughput        : {:.1} jobs/h", out.throughput_per_hour());
+    println!("simulator wall    : {:.2} s ({} time points)", out.wall_s, out.time_points);
+
+    // 4. plot factory (Fig 4, lines 14-16)
+    std::fs::create_dir_all("results")?;
+    let mut plot_factory = PlotFactory::new();
+    let label = out.dispatcher.clone();
+    plot_factory.add_run(label, vec![out]);
+    plot_factory.produce_plot(PlotKind::Slowdown, "results/quickstart_slowdown.csv")?;
+    println!("\n{}", plot_factory.render_boxes(PlotKind::Slowdown, 56));
+    println!("wrote results/quickstart_slowdown.csv");
+    Ok(())
+}

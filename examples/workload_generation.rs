@@ -1,0 +1,118 @@
+//! Synthetic workload generation case study (§7.3, Figures 14–17):
+//! generate datasets from Seth-like and RICC-like seeds under the paper's
+//! four configurations, compare the submission-time and GFLOPS
+//! distributions against the seed, and write the figure data.
+//!
+//! Run: `cargo run --release --example workload_generation [-- --jobs 20000]`
+
+use accasim::generator::{RequestLimits, WorkloadGenerator};
+use accasim::plotdata::{gflops_histogram, submission_distributions, write_series_csv};
+use accasim::stats::ks_statistic;
+use accasim::traces::{self, TraceSpec};
+use accasim::util::args::Args;
+use accasim::workload::SwfReader;
+use std::collections::BTreeMap;
+
+fn seed_times_and_gflops(path: &std::path::Path, core_gflops: f64) -> (Vec<u64>, Vec<f64>) {
+    let mut times = Vec::new();
+    let mut gflops = Vec::new();
+    for rec in SwfReader::open(path).unwrap() {
+        let f = rec.unwrap();
+        times.push(f.submit_time.max(0) as u64);
+        let procs = f.requested_procs.max(1) as f64;
+        gflops.push(f.run_time.max(1) as f64 * procs * core_gflops);
+    }
+    (times, gflops)
+}
+
+fn study(
+    spec: &'static TraceSpec,
+    fig_submission: &str,
+    fig_gflops: &str,
+    jobs: u64,
+) -> anyhow::Result<()> {
+    println!("\n=== {} seed ===", spec.name);
+    let scale = 4_000.0 / spec.jobs as f64;
+    let (seed_swf, _cfg) = traces::materialize(spec, "data", scale, 1)?;
+    let core_gflops = 1.667;
+    let perf: BTreeMap<String, f64> =
+        [("core".to_string(), core_gflops)].into_iter().collect();
+
+    // The four §7.3 configurations: (label, jobs, core perf factor, #gpus)
+    let configs: [(&str, u64, f64, u64); 4] = [
+        ("gen-50K", jobs / 4, 1.5, 0),
+        ("gen-100K", jobs / 2, 1.0, 0),
+        ("gen-200K", jobs, 1.0, 2),
+        ("gen-500K", jobs * 2, 1.5, 2),
+    ];
+
+    let (seed_times, seed_gflops) = seed_times_and_gflops(&seed_swf, core_gflops);
+    let (sh, sd_, sm) = submission_distributions(&seed_times);
+    let mut hourly_series = vec![("original".to_string(), sh.clone())];
+    let mut daily_series = vec![("original-daily".to_string(), sd_.clone())];
+    let mut monthly_series = vec![("original-monthly".to_string(), sm.clone())];
+    let seed_hist = gflops_histogram(&seed_gflops, 0.0, 8.0, 32);
+    let mut gflops_series = vec![("original".to_string(), seed_hist.weights())];
+
+    for (label, n, perf_factor, gpus) in configs {
+        let limits = RequestLimits::new(
+            &[("core", 1), ("mem", 1)],
+            &[("core", spec.max_procs), ("mem", spec.mem_per_node_mb)],
+        );
+        let mut p = perf.clone();
+        p.insert("core".to_string(), core_gflops * perf_factor);
+        if gpus > 0 {
+            p.insert("gpu".to_string(), 933.0); // §7.3: 933 GFLOPS GPUs
+        }
+        let mut gen = WorkloadGenerator::from_swf(
+            &seed_swf,
+            spec.sys_config(),
+            p,
+            limits,
+            42 + n,
+        )?;
+        let out = format!("data/{}_{label}.swf", spec.name);
+        let rep = gen.generate_jobs(n, &out)?;
+        let (gh, gd, gm) = submission_distributions(&rep.times);
+        let ks_h = ks_statistic(
+            &rep.times.iter().map(|t| ((t % 86_400) / 3_600) as f64).collect::<Vec<_>>(),
+            &seed_times.iter().map(|t| ((t % 86_400) / 3_600) as f64).collect::<Vec<_>>(),
+        );
+        let g_hist = gflops_histogram(&rep.gflops, 0.0, 8.0, 32);
+        println!(
+            "{label:>9}: {n} jobs | hourly-KS vs seed {ks_h:.3} | gflops log-mean {:.2}",
+            rep.gflops.iter().map(|g| g.max(1e-12).log10()).sum::<f64>()
+                / rep.gflops.len() as f64
+        );
+        hourly_series.push((label.to_string(), gh));
+        daily_series.push((format!("{label}-daily"), gd));
+        monthly_series.push((format!("{label}-monthly"), gm));
+        gflops_series.push((label.to_string(), g_hist.weights()));
+    }
+
+    std::fs::create_dir_all("results")?;
+    let mut all_submission = hourly_series;
+    all_submission.extend(daily_series);
+    all_submission.extend(monthly_series);
+    write_series_csv(
+        format!("results/{fig_submission}"),
+        "series,bin,weight",
+        &all_submission,
+    )?;
+    write_series_csv(
+        format!("results/{fig_gflops}"),
+        "series,log10_gflops_bin,weight",
+        &gflops_series,
+    )?;
+    println!("wrote results/{fig_submission} and results/{fig_gflops}");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    // Paper-size is 50K/100K/200K/500K; default scaled for a quick run.
+    let jobs: u64 = args.get_parse("jobs", 20_000)?;
+    study(&traces::SETH, "fig14_seth_submission.csv", "fig16_seth_gflops.csv", jobs)?;
+    study(&traces::RICC, "fig15_ricc_submission.csv", "fig17_ricc_gflops.csv", jobs)?;
+    Ok(())
+}

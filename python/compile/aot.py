@@ -1,0 +1,97 @@
+"""AOT entry point: lower every L2 model to HLO *text* artifacts consumed by
+the Rust runtime (`rust/src/runtime/mod.rs`).
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+    python -m compile.aot --print-shapes   # bucket-shape contract check
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+ARTIFACTS = {
+    "fit_score": (
+        model.fit_score_model,
+        (
+            f32(shapes.FIT_J, shapes.FIT_R),
+            f32(shapes.FIT_N, shapes.FIT_R),
+            f32(shapes.FIT_N),
+        ),
+    ),
+    "metrics": (
+        model.metrics_model,
+        (f32(shapes.MET_B), f32(shapes.MET_B), f32(shapes.MET_B)),
+    ),
+    "slot_hist": (
+        model.slot_hist_model,
+        (f32(shapes.SLOT_B), f32(shapes.SLOT_B)),
+    ),
+}
+
+
+def lower_artifact(name: str) -> str:
+    fn, args = ARTIFACTS[name]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", help="lower a single artifact")
+    ap.add_argument(
+        "--print-shapes",
+        action="store_true",
+        help="emit the bucket-shape contract as KEY=VALUE lines and exit",
+    )
+    args = ap.parse_args()
+
+    if args.print_shapes:
+        for key in (
+            "FIT_J",
+            "FIT_N",
+            "FIT_R",
+            "MET_B",
+            "MET_K",
+            "SLOT_B",
+            "SLOT_K",
+        ):
+            print(f"{key}={getattr(shapes, key)}")
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.only] if args.only else list(ARTIFACTS)
+    for name in names:
+        text = lower_artifact(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: (job × node) allocation fitness scoring.
+
+This is the compute hot-spot of the Best-Fit allocator: for every queued job
+and every node, how many of the job's slots fit (`hostable`) and the
+Best-Fit ordering key (`score` = node busy load, −1 when infeasible). The
+Rust coordinator calls the AOT-compiled artifact per dispatch round.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (J, N) plane is tiled
+into (FIT_TJ, FIT_TN) VMEM blocks via BlockSpec — one block holds
+req (16×4) + free (128×4) + two out tiles (16×128), ≈ 18 KB of f32, far
+under VMEM; the reduction over R happens in-registers on the VPU. Lowered
+with interpret=True for CPU-PJRT execution (Mosaic custom-calls cannot run
+on the CPU plugin).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+
+def _kernel(req_ref, free_ref, busy_ref, score_ref, host_ref):
+    req = req_ref[...]  # (TJ, R)
+    free = free_ref[...]  # (TN, R)
+    busy = busy_ref[...]  # (TN,)
+    req_b = req[:, None, :]  # (TJ, 1, R)
+    free_b = free[None, :, :]  # (1, TN, R)
+    ratio = jnp.where(
+        req_b > 0.0,
+        jnp.floor(free_b / jnp.maximum(req_b, 1e-9)),
+        jnp.inf,
+    )
+    hostable = jnp.min(ratio, axis=-1)  # (TJ, TN)
+    hostable = jnp.where(jnp.isinf(hostable), 0.0, hostable)
+    feasible = hostable >= 1.0
+    score_ref[...] = jnp.where(feasible, busy[None, :], -1.0).astype(jnp.float32)
+    host_ref[...] = hostable.astype(jnp.float32)
+
+
+def fit_score(req, free, busy):
+    """(J,R) f32, (N,R) f32, (N,) f32 -> (score (J,N), hostable (J,N))."""
+    j, r = req.shape
+    n, r2 = free.shape
+    assert r == r2 and busy.shape == (n,)
+    tj = min(shapes.FIT_TJ, j)
+    tn = min(shapes.FIT_TN, n)
+    assert j % tj == 0 and n % tn == 0, f"shape ({j},{n}) not tileable by ({tj},{tn})"
+    return pl.pallas_call(
+        _kernel,
+        grid=(j // tj, n // tn),
+        in_specs=[
+            pl.BlockSpec((tj, r), lambda i, k: (i, 0)),
+            pl.BlockSpec((tn, r), lambda i, k: (k, 0)),
+            pl.BlockSpec((tn,), lambda i, k: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tj, tn), lambda i, k: (i, k)),
+            pl.BlockSpec((tj, tn), lambda i, k: (i, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, n), jnp.float32),
+            jax.ShapeDtypeStruct((j, n), jnp.float32),
+        ],
+        interpret=True,
+    )(req, free, busy)

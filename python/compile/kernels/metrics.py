@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: batched job slowdown + log-histogram.
+
+Computes per-job slowdown and a log10 histogram over the batch in one pass —
+the reduction behind the Fig 10 distributions, callable from Rust on live
+output batches. Demonstrates the cross-grid-step accumulation pattern: the
+histogram output block maps to the same (single) block at every grid step
+and is accumulated with a `pl.when(first_step)` initialization.
+
+VMEM per step: 3×(TB=1024) inputs + (TB) out + (K=64) accumulator ≈ 16 KB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+
+def _kernel(wait_ref, dur_ref, mask_ref, sd_ref, hist_ref):
+    wait = wait_ref[...]
+    dur = dur_ref[...]
+    mask = mask_ref[...]
+    tr = jnp.maximum(dur, 1.0)
+    sd = (wait + tr) / tr
+    sd = jnp.where(mask > 0.0, sd, 0.0)
+    sd_ref[...] = sd.astype(jnp.float32)
+
+    logsd = jnp.log10(jnp.maximum(sd, 1.0))
+    k = shapes.MET_K
+    idx = jnp.floor(
+        (logsd - shapes.MET_LOG_LO) / (shapes.MET_LOG_HI - shapes.MET_LOG_LO) * k
+    ).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, k - 1)
+    onehot = (idx[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    block_hist = jnp.sum(onehot * (mask > 0.0)[:, None], axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += block_hist.astype(jnp.float32)
+
+
+def metrics(wait, dur, mask):
+    """(B,), (B,), (B,) f32 -> (slowdown (B,), hist (MET_K,))."""
+    (b,) = wait.shape
+    assert dur.shape == (b,) and mask.shape == (b,)
+    tb = min(shapes.MET_TB, b)
+    assert b % tb == 0, f"batch {b} not tileable by {tb}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((shapes.MET_K,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((shapes.MET_K,), jnp.float32),
+        ],
+        interpret=True,
+    )(wait, dur, mask)

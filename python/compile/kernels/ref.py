@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+signal: pytest asserts kernel == ref across shapes and inputs)."""
+
+import jax.numpy as jnp
+
+from .. import shapes
+
+
+def fit_score_ref(req, free, busy):
+    """(J,R), (N,R), (N,) -> score (J,N), hostable (J,N).
+
+    hostable[j,n] = min over r with req[j,r] > 0 of floor(free[n,r] / req[j,r])
+                    (0 when the job requests nothing);
+    score[j,n]    = busy[n] if hostable >= 1 else -1   (Best-Fit ordering key).
+    """
+    req_b = req[:, None, :]  # (J,1,R)
+    free_b = free[None, :, :]  # (1,N,R)
+    ratio = jnp.where(req_b > 0, jnp.floor(free_b / jnp.maximum(req_b, 1e-9)), jnp.inf)
+    hostable = jnp.min(ratio, axis=-1)  # (J,N)
+    hostable = jnp.where(jnp.isinf(hostable), 0.0, hostable)
+    feasible = hostable >= 1.0
+    score = jnp.where(feasible, busy[None, :], -1.0)
+    return score.astype(jnp.float32), hostable.astype(jnp.float32)
+
+
+def metrics_ref(wait, dur, mask):
+    """(B,), (B,), (B,) -> slowdown (B,), hist (K,).
+
+    slowdown = (wait + max(dur,1)) / max(dur,1), zeroed where mask == 0;
+    hist     = counts of log10(slowdown) in K bins over [LOG_LO, LOG_HI),
+               clamped to the edge bins, masked jobs excluded.
+    """
+    tr = jnp.maximum(dur, 1.0)
+    sd = (wait + tr) / tr
+    sd = jnp.where(mask > 0, sd, 0.0)
+    logsd = jnp.log10(jnp.maximum(sd, 1.0))
+    k = shapes.MET_K
+    idx = jnp.floor(
+        (logsd - shapes.MET_LOG_LO)
+        / (shapes.MET_LOG_HI - shapes.MET_LOG_LO)
+        * k
+    ).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, k - 1)
+    onehot = (idx[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    hist = jnp.sum(onehot * (mask > 0)[:, None], axis=0)
+    return sd.astype(jnp.float32), hist.astype(jnp.float32)
+
+
+def slot_hist_ref(times, mask):
+    """(B,), (B,) -> counts (SLOT_K,): submissions per 30-minute day slot."""
+    slot = jnp.floor(
+        (times % shapes.DAY_SECONDS) / shapes.SLOT_SECONDS
+    ).astype(jnp.int32)
+    slot = jnp.clip(slot, 0, shapes.SLOT_K - 1)
+    onehot = (slot[:, None] == jnp.arange(shapes.SLOT_K)[None, :]).astype(jnp.float32)
+    return jnp.sum(onehot * (mask > 0)[:, None], axis=0).astype(jnp.float32)

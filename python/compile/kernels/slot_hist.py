@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: 48-slot day histogram of submission times.
+
+The Slot Weight Method (Lublin–Feitelson [24]) that drives the workload
+generator needs the per-half-hour submission weights of the seed dataset;
+this kernel computes the counts for a batch of epoch-second timestamps.
+Same cross-grid-step accumulation pattern as the metrics kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+
+def _kernel(times_ref, mask_ref, hist_ref):
+    times = times_ref[...]
+    mask = mask_ref[...]
+    slot = jnp.floor((times % shapes.DAY_SECONDS) / shapes.SLOT_SECONDS).astype(jnp.int32)
+    slot = jnp.clip(slot, 0, shapes.SLOT_K - 1)
+    onehot = (slot[:, None] == jnp.arange(shapes.SLOT_K)[None, :]).astype(jnp.float32)
+    block = jnp.sum(onehot * (mask > 0.0)[:, None], axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += block.astype(jnp.float32)
+
+
+def slot_hist(times, mask):
+    """(B,), (B,) f32 -> counts (SLOT_K,)."""
+    (b,) = times.shape
+    assert mask.shape == (b,)
+    tb = min(shapes.SLOT_TB, b)
+    assert b % tb == 0, f"batch {b} not tileable by {tb}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((shapes.SLOT_K,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((shapes.SLOT_K,), jnp.float32)],
+        interpret=True,
+    )(times, mask)

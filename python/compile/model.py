@@ -1,0 +1,50 @@
+"""L2: the JAX compute graphs the Rust coordinator calls, each wrapping an
+L1 Pallas kernel. Lowered once by `aot.py`; never imported at runtime.
+
+Every model returns a tuple (lowered with return_tuple=True) so the Rust
+side can uniformly `to_tuple()` the result literal.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.fit_score import fit_score
+from .kernels.metrics import metrics
+from .kernels.slot_hist import slot_hist
+
+
+def fit_score_model(req, free, busy):
+    """Allocation fitness for the XlaFit allocator.
+
+    (J,R), (N,R), (N,) -> (score (J,N), hostable (J,N)).
+    """
+    score, hostable = fit_score(req, free, busy)
+    return (score, hostable)
+
+
+def metrics_model(wait, dur, mask):
+    """Slowdown + log-histogram + summary stats for the plot factory.
+
+    (B,), (B,), (B,) -> (slowdown (B,), hist (K,), summary (4,))
+    summary = [count, mean, max, sum] over the masked slowdowns.
+    """
+    sd, hist = metrics(wait, dur, mask)
+    count = jnp.sum(mask > 0.0).astype(jnp.float32)
+    total = jnp.sum(sd)
+    mean = total / jnp.maximum(count, 1.0)
+    mx = jnp.max(sd)
+    summary = jnp.stack([count, mean, mx, total])
+    return (sd, hist, summary)
+
+
+def slot_hist_model(times, mask):
+    """Slot weights for the workload generator.
+
+    (B,), (B,) -> (counts (48,), weights (48,)) — weights normalized to 1
+    (uniform fallback for an empty batch).
+    """
+    (counts,) = slot_hist(times, mask)
+    total = jnp.sum(counts)
+    weights = jnp.where(
+        total > 0.0, counts / jnp.maximum(total, 1.0), 1.0 / counts.shape[0]
+    )
+    return (counts, weights)

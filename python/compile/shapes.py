@@ -1,0 +1,25 @@
+"""Fixed AOT bucket shapes shared between the Python compile path and the
+Rust runtime (`rust/src/runtime/mod.rs::shapes`). `python -m compile.aot
+--print-shapes` emits them for contract checks."""
+
+# fit_score: (jobs, nodes, resource types) bucket
+FIT_J = 64
+FIT_N = 512
+FIT_R = 4
+# fit_score pallas tile sizes (VMEM blocks)
+FIT_TJ = 16
+FIT_TN = 128
+
+# metrics: job batch and histogram bins (log10 slowdown over [0, 3))
+MET_B = 8192
+MET_K = 64
+MET_TB = 1024
+MET_LOG_LO = 0.0
+MET_LOG_HI = 3.0
+
+# slot_hist: submission-time batch, 48 half-hour day slots
+SLOT_B = 8192
+SLOT_K = 48
+SLOT_TB = 1024
+DAY_SECONDS = 86_400.0
+SLOT_SECONDS = 1800.0

@@ -1,0 +1,58 @@
+"""AOT lowering contract: every artifact lowers to parseable HLO text with
+the expected entry signature, and the shape contract matches the Rust side."""
+
+import re
+
+import pytest
+
+from compile import aot, shapes
+
+
+@pytest.mark.parametrize("name", sorted(aot.ARTIFACTS))
+def test_artifact_lowers_to_hlo_text(name):
+    text = aot.lower_artifact(name)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # interpret-mode pallas must not leave TPU custom-calls behind
+    assert "mosaic" not in text.lower()
+
+
+def params_of(text):
+    """Parameter/root shape declarations of the entry computation."""
+    return [l for l in text.splitlines() if "parameter(" in l or "ROOT" in l]
+
+
+def test_fit_score_entry_signature():
+    text = aot.lower_artifact("fit_score")
+    decls = "\n".join(params_of(text))
+    assert f"f32[{shapes.FIT_J},{shapes.FIT_R}]" in decls
+    assert f"f32[{shapes.FIT_N},{shapes.FIT_R}]" in decls
+    # tuple output of two (J, N) arrays
+    assert f"f32[{shapes.FIT_J},{shapes.FIT_N}]" in decls
+
+
+def test_metrics_entry_signature():
+    text = aot.lower_artifact("metrics")
+    decls = "\n".join(params_of(text))
+    assert decls.count(f"f32[{shapes.MET_B}]") >= 3
+    assert f"f32[{shapes.MET_K}]" in decls
+
+
+def test_slot_hist_entry_signature():
+    text = aot.lower_artifact("slot_hist")
+    decls = "\n".join(params_of(text))
+    assert decls.count(f"f32[{shapes.SLOT_B}]") >= 2
+    assert f"f32[{shapes.SLOT_K}]" in decls
+
+
+def test_shape_contract_matches_rust():
+    """The constants in rust/src/runtime/mod.rs must equal compile.shapes."""
+    rust = open("../rust/src/runtime/mod.rs").read()
+
+    def rust_const(name):
+        m = re.search(rf"pub const {name}: usize = (\d+);", rust)
+        assert m, f"missing {name} in rust runtime"
+        return int(m.group(1))
+
+    for key in ("FIT_J", "FIT_N", "FIT_R", "MET_B", "MET_K", "SLOT_B", "SLOT_K"):
+        assert rust_const(key) == getattr(shapes, key), key

@@ -1,0 +1,184 @@
+"""Kernel vs pure-jnp-oracle correctness — the core L1 signal.
+
+Hypothesis sweeps shapes and values; every kernel must match ref.py
+bit-for-bit within float tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import shapes
+from compile.kernels import ref
+from compile.kernels.fit_score import fit_score
+from compile.kernels.metrics import metrics
+from compile.kernels.slot_hist import slot_hist
+
+
+def f32(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+# ---------------------------------------------------------------- fit_score
+
+
+@st.composite
+def fit_inputs(draw):
+    j = draw(st.sampled_from([16, 32, 64]))
+    n = draw(st.sampled_from([128, 256, 512]))
+    r = draw(st.integers(1, shapes.FIT_R))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    req = rng.integers(0, 5, size=(j, r)).astype(np.float32)
+    free = rng.integers(0, 64, size=(n, r)).astype(np.float32)
+    busy = rng.integers(0, 32, size=(n,)).astype(np.float32)
+    return req, free, busy
+
+
+@settings(max_examples=25, deadline=None)
+@given(fit_inputs())
+def test_fit_score_matches_ref(inputs):
+    req, free, busy = inputs
+    score, host = fit_score(req, free, busy)
+    score_r, host_r = ref.fit_score_ref(req, free, busy)
+    np.testing.assert_allclose(score, score_r, rtol=0, atol=0)
+    np.testing.assert_allclose(host, host_r, rtol=0, atol=0)
+
+
+def test_fit_score_semantics_hand_checked():
+    # 1 real job: wants 2 cores, 10 mem per slot
+    req = f32(np.zeros((16, 2)))
+    req[0] = [2, 10]
+    free = f32([[4, 100]] * 64 + [[1, 100]] * 64)  # second half infeasible
+    busy = f32(np.arange(128))
+    score, host = fit_score(req, free, np.asarray(busy))
+    assert host[0, 0] == 2.0  # min(4//2, 100//10) = 2
+    assert score[0, 0] == 0.0  # busy[0]
+    assert score[0, 5] == 5.0
+    assert (score[0, 64:] == -1.0).all()  # 1 core < 2 per slot
+    assert (host[0, 64:] == 0.0).all()
+
+
+def test_fit_score_zero_request_is_infeasible():
+    req = f32(np.zeros((16, 2)))  # job 0 requests nothing
+    free = f32(np.full((128, 2), 50.0))
+    busy = f32(np.zeros(128))
+    score, host = fit_score(req, free, busy)
+    assert (host[0] == 0.0).all()
+    assert (score[0] == -1.0).all()
+
+
+def test_fit_score_full_bucket_shape():
+    rng = np.random.default_rng(0)
+    req = f32(rng.integers(0, 4, size=(shapes.FIT_J, shapes.FIT_R)))
+    free = f32(rng.integers(0, 32, size=(shapes.FIT_N, shapes.FIT_R)))
+    busy = f32(rng.integers(0, 16, size=(shapes.FIT_N,)))
+    score, host = fit_score(req, free, busy)
+    assert score.shape == (shapes.FIT_J, shapes.FIT_N)
+    score_r, host_r = ref.fit_score_ref(req, free, busy)
+    np.testing.assert_allclose(score, score_r)
+    np.testing.assert_allclose(host, host_r)
+
+
+# ------------------------------------------------------------------ metrics
+
+
+@st.composite
+def metric_inputs(draw):
+    b = draw(st.sampled_from([1024, 2048, 8192]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    wait = rng.integers(0, 100_000, size=b).astype(np.float32)
+    dur = rng.integers(0, 50_000, size=b).astype(np.float32)
+    mask = (rng.random(b) < draw(st.floats(0.0, 1.0))).astype(np.float32)
+    return wait, dur, mask
+
+
+@settings(max_examples=20, deadline=None)
+@given(metric_inputs())
+def test_metrics_matches_ref(inputs):
+    wait, dur, mask = inputs
+    sd, hist = metrics(wait, dur, mask)
+    sd_r, hist_r = ref.metrics_ref(wait, dur, mask)
+    np.testing.assert_allclose(sd, sd_r, rtol=1e-6)
+    np.testing.assert_allclose(hist, hist_r, rtol=0, atol=0)
+
+
+def test_metrics_hand_checked():
+    b = 1024
+    wait = np.zeros(b, dtype=np.float32)
+    dur = np.ones(b, dtype=np.float32)
+    mask = np.ones(b, dtype=np.float32)
+    wait[0], dur[0] = 100.0, 100.0  # slowdown 2
+    wait[1], dur[1] = 0.0, 50.0  # slowdown 1
+    wait[2], dur[2] = 999.0, 1.0  # slowdown 1000 -> last bin edge
+    mask[3] = 0.0
+    sd, hist = metrics(wait, dur, mask)
+    assert sd[0] == 2.0
+    assert sd[1] == 1.0
+    assert sd[2] == 1000.0
+    assert sd[3] == 0.0
+    assert hist.sum() == b - 1  # one masked out
+    # slowdown 1 -> bin 0
+    assert hist[0] >= b - 3
+
+
+def test_metrics_histogram_accumulates_across_blocks():
+    # batch spanning 8 grid steps, all slowdown 10 -> log10=1 -> bin K/3
+    b = shapes.MET_B
+    wait = np.full(b, 9.0, dtype=np.float32)
+    dur = np.ones(b, dtype=np.float32)
+    mask = np.ones(b, dtype=np.float32)
+    _, hist = metrics(wait, dur, mask)
+    k = int(1.0 / 3.0 * shapes.MET_K)
+    assert hist[k] == b
+    assert hist.sum() == b
+
+
+def test_metrics_zero_duration_guard():
+    b = 1024
+    wait = np.full(b, 5.0, dtype=np.float32)
+    dur = np.zeros(b, dtype=np.float32)
+    mask = np.ones(b, dtype=np.float32)
+    sd, _ = metrics(wait, dur, mask)
+    assert (sd == 6.0).all()  # duration clamped to 1
+
+
+# ---------------------------------------------------------------- slot_hist
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31), st.sampled_from([1024, 4096, 8192]))
+def test_slot_hist_matches_ref(seed, b):
+    rng = np.random.default_rng(seed)
+    times = rng.integers(0, 10_000_000, size=b).astype(np.float32)
+    mask = (rng.random(b) < 0.8).astype(np.float32)
+    (counts,) = slot_hist(times, mask)
+    counts_r = ref.slot_hist_ref(times, mask)
+    np.testing.assert_allclose(counts, counts_r)
+
+
+def test_slot_hist_hand_checked():
+    b = 1024
+    times = np.zeros(b, dtype=np.float32)
+    mask = np.ones(b, dtype=np.float32)
+    times[0] = 0.0  # slot 0
+    times[1] = 1800.0  # slot 1
+    times[2] = 86_400.0 + 900.0  # next day, slot 0
+    times[3] = 47 * 1800.0  # slot 47
+    (counts,) = slot_hist(times[: b], mask)
+    assert counts.sum() == b
+    assert counts[1] == 1
+    assert counts[47] == 1
+    assert counts[0] == b - 2
+
+
+def test_slot_hist_mask_excludes():
+    b = 1024
+    times = np.zeros(b, dtype=np.float32)
+    mask = np.zeros(b, dtype=np.float32)
+    mask[:10] = 1.0
+    (counts,) = slot_hist(times, mask)
+    assert counts.sum() == 10
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

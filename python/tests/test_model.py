@@ -1,0 +1,58 @@
+"""L2 model shape/semantics tests."""
+
+import numpy as np
+
+from compile import model, shapes
+
+
+def test_fit_score_model_shapes():
+    req = np.zeros((shapes.FIT_J, shapes.FIT_R), np.float32)
+    free = np.zeros((shapes.FIT_N, shapes.FIT_R), np.float32)
+    busy = np.zeros((shapes.FIT_N,), np.float32)
+    score, host = model.fit_score_model(req, free, busy)
+    assert score.shape == (shapes.FIT_J, shapes.FIT_N)
+    assert host.shape == (shapes.FIT_J, shapes.FIT_N)
+
+
+def test_metrics_model_summary():
+    b = shapes.MET_B
+    wait = np.zeros(b, np.float32)
+    dur = np.ones(b, np.float32)
+    mask = np.zeros(b, np.float32)
+    mask[:100] = 1.0
+    wait[:100] = 3.0  # slowdown 4
+    sd, hist, summary = model.metrics_model(wait, dur, mask)
+    count, mean, mx, total = np.asarray(summary)
+    assert count == 100
+    assert mx == 4.0
+    assert abs(total - 400.0) < 1e-3
+    assert abs(mean - 4.0) < 1e-5
+    assert hist.sum() == 100
+    assert sd.shape == (b,)
+
+
+def test_metrics_model_empty_mask():
+    b = shapes.MET_B
+    z = np.zeros(b, np.float32)
+    _, hist, summary = model.metrics_model(z, z, z)
+    count, mean, mx, total = np.asarray(summary)
+    assert count == 0 and total == 0 and mx == 0
+    assert mean == 0
+    assert hist.sum() == 0
+
+
+def test_slot_hist_model_weights_normalized():
+    b = shapes.SLOT_B
+    rng = np.random.default_rng(1)
+    times = rng.integers(0, 1_000_000, size=b).astype(np.float32)
+    mask = np.ones(b, np.float32)
+    counts, weights = model.slot_hist_model(times, mask)
+    assert counts.shape == (shapes.SLOT_K,)
+    assert abs(float(np.sum(np.asarray(weights))) - 1.0) < 1e-5
+
+
+def test_slot_hist_model_empty_batch_uniform():
+    b = shapes.SLOT_B
+    z = np.zeros(b, np.float32)
+    _, weights = model.slot_hist_model(z, z)
+    np.testing.assert_allclose(np.asarray(weights), 1.0 / shapes.SLOT_K, rtol=1e-6)

@@ -1,0 +1,142 @@
+//! A small benchmark harness (offline substitute for `criterion`): timed
+//! runs with warm-up, mean/σ/min reporting and CSV export. The `benches/`
+//! targets (`harness = false`) are built on this.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u32,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub const CSV_HEADER: &'static str = "name,iterations,mean_s,std_s,min_s,max_s";
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{:.6},{:.6},{:.6},{:.6}",
+            self.name,
+            self.iterations,
+            self.mean.as_secs_f64(),
+            self.std_dev.as_secs_f64(),
+            self.min.as_secs_f64(),
+            self.max.as_secs_f64()
+        )
+    }
+}
+
+/// A named group of benchmark cases.
+pub struct Bencher {
+    group: String,
+    /// Measured iterations per case.
+    pub iterations: u32,
+    /// Warm-up iterations per case.
+    pub warmup: u32,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        // Honour the common `cargo bench -- --quick` convention.
+        let quick = std::env::args().any(|a| a == "--quick");
+        Bencher {
+            group: group.to_string(),
+            iterations: if quick { 3 } else { 10 },
+            warmup: if quick { 0 } else { 2 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record the case. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iterations as usize);
+        for _ in 0..self.iterations.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let mean_s = samples.iter().map(Duration::as_secs_f64).sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / samples.len() as f64;
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iterations: self.iterations,
+            mean: Duration::from_secs_f64(mean_s),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min: samples.iter().min().copied().unwrap_or_default(),
+            max: samples.iter().max().copied().unwrap_or_default(),
+        };
+        println!(
+            "{:<48} {:>12.3?} ±{:>10.3?}  (min {:.3?}, n={})",
+            result.name, result.mean, result.std_dev, result.min, result.iterations
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as CSV under `results/bench_<group>.csv`.
+    pub fn write_csv(&self) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("results")?;
+        let path = std::path::PathBuf::from(format!("results/bench_{}.csv", self.group));
+        let mut out = String::from(BenchResult::CSV_HEADER);
+        out.push('\n');
+        for r in &self.results {
+            out.push_str(&r.to_csv());
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut b = Bencher::new("unit");
+        b.iterations = 3;
+        b.warmup = 0;
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..100_000u64 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.min <= r.mean);
+        assert!(r.mean <= r.max);
+        assert_eq!(r.iterations, 3);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut b = Bencher::new("unit2");
+        b.iterations = 1;
+        b.warmup = 0;
+        b.bench("noop", || 0);
+        let csv = b.results()[0].to_csv();
+        assert!(csv.starts_with("unit2/noop,1,"));
+        assert_eq!(csv.split(',').count(), BenchResult::CSV_HEADER.split(',').count());
+    }
+}

@@ -1,0 +1,440 @@
+//! Command-line interface of the `accasim` binary (hand-rolled parser —
+//! see `accasim::util::args`; the offline build has no clap).
+//!
+//! Subcommands map one-to-one onto the paper's workflows:
+//!
+//! * `simulate`  — Figure 4: one workload, one system, one dispatcher.
+//! * `experiment`— Figure 5: dispatcher cross-products + automatic plots.
+//! * `generate`  — Figure 6: synthetic workload generation from a seed.
+//! * `traces`    — materialize the Seth/RICC/MetaCentrum-like datasets.
+//! * `table1` / `table2` — regenerate the paper's tables.
+//! * `status`    — run a simulation and print Fig 8/9 style monitoring.
+
+use accasim::baselines::{run_rejecting, LoaderMode};
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::experiment::Experiment;
+use accasim::generator::{RequestLimits, WorkloadGenerator};
+use accasim::monitor::{render_utilization, SystemStatus};
+use accasim::output::OutputCollector;
+use accasim::plotdata::{PlotFactory, PlotKind};
+use accasim::sim::{SimOptions, Simulator};
+use accasim::stats::{mean, stddev};
+use accasim::traces::{self, spec_by_name};
+use accasim::util::args::Args;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+accasim — workload management simulator for job dispatching research
+
+USAGE: accasim <COMMAND> [ARGS]
+
+COMMANDS:
+  simulate <workload.swf> --sys <cfg.json> [--dispatcher FIFO-FF]
+           [--out-jobs jobs.csv] [--out-perf perf.csv]
+  experiment <workload.swf> --sys <cfg.json> [--name NAME]
+           [--schedulers FIFO,SJF,LJF,EBF] [--allocators FF,BF] [--reps 1]
+  generate <seed.swf> --sys <cfg.json> [--jobs 50000] [--out generated.swf]
+           [--core-gflops 1.667] [--rng-seed 42]
+  traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
+  table1   [--scale 0.05] [--dir data] [--reps 3] [--out results/table1.csv]
+  table2   [--scale 0.05] [--dir data] [--reps 1] [--out results/table2.csv]
+  status   <workload.swf> --sys <cfg.json> [--dispatcher FIFO-FF]
+  validate <workload.swf>                  lint a workload dataset
+  analyze  <jobs.csv>                      analyze saved job records
+";
+
+pub fn run() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let Some(cmd) = args.positionals.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "simulate" => simulate(&args),
+        "experiment" => experiment(&args),
+        "generate" => generate(&args),
+        "traces" => cmd_traces(&args),
+        "table1" => table1(&args),
+        "table2" => table2(&args),
+        "status" => status(&args),
+        "validate" => validate(&args),
+        "analyze" => analyze(&args),
+        // hidden: one isolated Table-1 run in a child process
+        "run-one" => run_one(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn need_workload(args: &Args) -> anyhow::Result<PathBuf> {
+    args.positionals
+        .get(1)
+        .map(PathBuf::from)
+        .ok_or_else(|| anyhow::anyhow!("missing <workload.swf> argument\n{USAGE}"))
+}
+
+fn need_sys(args: &Args) -> anyhow::Result<SysConfig> {
+    let p = args
+        .get_opt("sys")
+        .ok_or_else(|| anyhow::anyhow!("missing --sys <cfg.json>\n{USAGE}"))?;
+    SysConfig::from_json_file(p)
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let workload = need_workload(args)?;
+    let sys = need_sys(args)?;
+    let d = dispatcher_from_label(&args.get("dispatcher", "FIFO-FF"))?;
+    let mut output = OutputCollector::in_memory(true, true);
+    if let Some(p) = args.get_opt("out-jobs") {
+        output = output.with_job_file(p)?;
+    }
+    if let Some(p) = args.get_opt("out-perf") {
+        output = output.with_perf_file(p)?;
+    }
+    args.reject_unknown()?;
+    let opts = SimOptions { output, ..Default::default() };
+    let mut sim = Simulator::new(&workload, sys, d, opts)?;
+    let out = sim.run()?;
+    println!("dispatcher        : {}", out.dispatcher);
+    println!("jobs completed    : {}", out.jobs_completed);
+    println!("jobs rejected     : {}", out.jobs_rejected);
+    println!("makespan          : {} s", out.makespan);
+    println!("avg slowdown      : {:.3}", out.avg_slowdown());
+    println!("avg wait          : {:.1} s", out.avg_wait());
+    println!("throughput        : {:.1} jobs/h", out.throughput_per_hour());
+    println!("simulator wall    : {:.2} s", out.wall_s);
+    println!("simulator cpu     : {} ms", out.cpu_ms);
+    println!("dispatch time     : {:.1} ms", out.dispatch_ns as f64 / 1e6);
+    println!("memory avg/max    : {}/{} KB", out.avg_rss_kb, out.max_rss_kb);
+    Ok(())
+}
+
+fn experiment(args: &Args) -> anyhow::Result<()> {
+    let workload = need_workload(args)?;
+    let sys = need_sys(args)?;
+    let name = args.get("name", "experiment");
+    let schedulers = args.get("schedulers", "FIFO,SJF,LJF,EBF");
+    let allocators = args.get("allocators", "FF,BF");
+    let reps: u32 = args.get_parse("reps", 1)?;
+    args.reject_unknown()?;
+    let mut e = Experiment::new(&name, &workload, sys);
+    let scheds: Vec<&str> = schedulers.split(',').collect();
+    let allocs: Vec<&str> = allocators.split(',').collect();
+    e.gen_dispatchers(&scheds, &allocs);
+    e.repetitions = reps;
+    let res = e.run_simulation()?;
+    println!(
+        "{:<10} {:>10} {:>13} {:>11} {:>12}",
+        "dispatcher", "completed", "avg slowdown", "avg wait s", "disp ms"
+    );
+    for (label, outs) in &res.runs {
+        let sd: Vec<f64> = outs.iter().map(|o| o.avg_slowdown()).collect();
+        let wt: Vec<f64> = outs.iter().map(|o| o.avg_wait()).collect();
+        let dm: Vec<f64> = outs.iter().map(|o| o.dispatch_ns as f64 / 1e6).collect();
+        println!(
+            "{label:<10} {:>10} {:>13.3} {:>11.1} {:>12.1}",
+            outs[0].jobs_completed,
+            mean(&sd),
+            mean(&wt),
+            mean(&dm),
+        );
+    }
+    for p in &res.plots {
+        println!("plot: {}", p.display());
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> anyhow::Result<()> {
+    let seed = need_workload(args)?; // positional 1 = seed SWF
+    let sys = need_sys(args)?;
+    let jobs: u64 = args.get_parse("jobs", 50_000)?;
+    let out = PathBuf::from(args.get("out", "generated.swf"));
+    let core_gflops: f64 = args.get_parse("core-gflops", 1.667)?;
+    let rng_seed: u64 = args.get_parse("rng-seed", 42)?;
+    args.reject_unknown()?;
+    let perf: BTreeMap<String, f64> = [("core".to_string(), core_gflops)].into_iter().collect();
+    let max_core =
+        sys.groups.values().filter_map(|g| g.get("core")).max().copied().unwrap_or(8);
+    let max_mem =
+        sys.groups.values().filter_map(|g| g.get("mem")).max().copied().unwrap_or(1024);
+    let limits =
+        RequestLimits::new(&[("core", 1), ("mem", 1)], &[("core", max_core), ("mem", max_mem)]);
+    let mut g = WorkloadGenerator::from_swf(&seed, sys, perf, limits, rng_seed)?;
+    let rep = g.generate_jobs(jobs, &out)?;
+    println!(
+        "generated {} jobs spanning {} days into {}",
+        rep.jobs,
+        rep.span_seconds / 86_400,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_traces(args: &Args) -> anyhow::Result<()> {
+    let which = args.positionals.get(1).cloned().unwrap_or_else(|| "all".to_string());
+    let scale: f64 = args.get_parse("scale", 0.05)?;
+    let dir = PathBuf::from(args.get("dir", "data"));
+    let seed: u64 = args.get_parse("seed", 1)?;
+    args.reject_unknown()?;
+    let specs: Vec<&traces::TraceSpec> = if which == "all" {
+        traces::ALL.to_vec()
+    } else {
+        vec![spec_by_name(&which)
+            .ok_or_else(|| anyhow::anyhow!("unknown trace {which:?} (seth|ricc|mc)"))?]
+    };
+    for spec in specs {
+        let (swf, cfg) = traces::materialize(spec, &dir, scale, seed)?;
+        println!(
+            "{}: {} jobs -> {} (config {})",
+            spec.name,
+            spec.scaled_jobs(scale),
+            swf.display(),
+            cfg.display()
+        );
+    }
+    Ok(())
+}
+
+/// Lint a workload dataset (the §6.2 preprocessing, as a report).
+fn validate(args: &Args) -> anyhow::Result<()> {
+    let workload = need_workload(args)?;
+    args.reject_unknown()?;
+    let mut reader = accasim::workload::SwfReader::open(&workload)?;
+    let report = accasim::workload::lint(&mut reader);
+    print!("{}", report.render());
+    if report.total_issues() > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Analyze saved job records (per-user stats, utilization, size buckets).
+fn analyze(args: &Args) -> anyhow::Result<()> {
+    let csv = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("missing <jobs.csv> argument"))?;
+    args.reject_unknown()?;
+    let records = accasim::output::read_job_csv(csv)?;
+    use accasim::plotdata::analysis;
+    println!("{}", analysis::summary_line(&records));
+    println!("\nwait by job size:");
+    for (bucket, stats) in analysis::wait_by_size(&records) {
+        println!(
+            "  {bucket:>5} slots: n={:<6} median {:>8.0}s  p75 {:>8.0}s  max {:>10.0}s",
+            stats.n, stats.median, stats.q3, stats.max
+        );
+    }
+    let tl = analysis::utilization_timeline(&records);
+    if let Some(peak) = tl.iter().map(|&(_, b)| b).max() {
+        println!("\npeak busy slots: {peak}");
+    }
+    Ok(())
+}
+
+/// Hidden subcommand: execute one rejecting-dispatcher run and print a
+/// single machine-readable CSV line (used by `table1` for process-isolated
+/// memory measurements, mirroring the paper's child-process protocol).
+fn run_one(args: &Args) -> anyhow::Result<()> {
+    let workload = need_workload(args)?;
+    let sys = need_sys(args)?;
+    let mode = match args.get("mode", "incremental").as_str() {
+        "incremental" => LoaderMode::Incremental,
+        "eager-light" => LoaderMode::EagerLight,
+        "eager-heavy" => LoaderMode::EagerHeavy,
+        other => anyhow::bail!("unknown mode {other:?}"),
+    };
+    let r = run_rejecting(&workload, &sys, mode)?;
+    println!(
+        "RESULT,{},{:.6},{},{},{},{}",
+        r.jobs, r.wall_s, r.cpu_ms, r.avg_rss_kb, r.max_rss_kb, r.base_rss_kb
+    );
+    Ok(())
+}
+
+/// One isolated Table-1 measurement: spawn ourselves with `run-one`.
+fn spawn_run_one(
+    swf: &std::path::Path,
+    cfg: &std::path::Path,
+    mode: LoaderMode,
+) -> anyhow::Result<accasim::baselines::BaselineOutput> {
+    let exe = std::env::current_exe()?;
+    let mode_s = match mode {
+        LoaderMode::Incremental => "incremental",
+        LoaderMode::EagerLight => "eager-light",
+        LoaderMode::EagerHeavy => "eager-heavy",
+    };
+    let out = std::process::Command::new(exe)
+        .args(["run-one", &swf.to_string_lossy(), "--sys", &cfg.to_string_lossy(), "--mode", mode_s])
+        .output()?;
+    anyhow::ensure!(out.status.success(), "child failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("RESULT,"))
+        .ok_or_else(|| anyhow::anyhow!("no RESULT line in child output"))?;
+    let f: Vec<&str> = line.split(',').collect();
+    Ok(accasim::baselines::BaselineOutput {
+        mode: mode.label(),
+        jobs: f[1].parse()?,
+        wall_s: f[2].parse()?,
+        cpu_ms: f[3].parse()?,
+        avg_rss_kb: f[4].parse()?,
+        max_rss_kb: f[5].parse()?,
+        base_rss_kb: f[6].parse()?,
+    })
+}
+
+/// Table 1: total time + memory per loader strategy per dataset.
+fn table1(args: &Args) -> anyhow::Result<()> {
+    let scale: f64 = args.get_parse("scale", 0.05)?;
+    let dir = PathBuf::from(args.get("dir", "data"));
+    let reps: u32 = args.get_parse("reps", 3)?;
+    let out = PathBuf::from(args.get("out", "results/table1.csv"));
+    args.reject_unknown()?;
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut csv = String::from(
+        "workload,simulator,reps,time_s_mean,time_s_std,cpu_ms_mean,mem_avg_mb_mean,mem_max_mb_mean,mem_delta_avg_mb,mem_delta_max_mb\n",
+    );
+    for spec in traces::ALL {
+        let (swf, cfg) = traces::materialize(spec, &dir, scale, 1)?;
+        for mode in [LoaderMode::Incremental, LoaderMode::EagerLight, LoaderMode::EagerHeavy] {
+            let mut times = Vec::new();
+            let mut cpu = Vec::new();
+            let mut avg_mb = Vec::new();
+            let mut max_mb = Vec::new();
+            let mut davg_mb = Vec::new();
+            let mut dmax_mb = Vec::new();
+            for _ in 0..reps.max(1) {
+                // each repetition in a fresh child process (§6.2 protocol)
+                let r = spawn_run_one(&swf, &cfg, mode)?;
+                times.push(r.wall_s);
+                cpu.push(r.cpu_ms as f64);
+                avg_mb.push(r.avg_rss_kb as f64 / 1024.0);
+                max_mb.push(r.max_rss_kb as f64 / 1024.0);
+                davg_mb.push(r.delta_avg_kb() as f64 / 1024.0);
+                dmax_mb.push(r.delta_max_kb() as f64 / 1024.0);
+            }
+            println!(
+                "{:<6} {:<28} time {:>7.2}s ±{:>5.2}  mem Δavg {:>8.1} MB  Δmax {:>8.1} MB",
+                spec.name,
+                mode.label(),
+                mean(&times),
+                stddev(&times),
+                mean(&davg_mb),
+                mean(&dmax_mb)
+            );
+            csv.push_str(&format!(
+                "{},{},{},{:.3},{:.3},{:.1},{:.2},{:.2},{:.2},{:.2}\n",
+                spec.name,
+                mode.label(),
+                reps,
+                mean(&times),
+                stddev(&times),
+                mean(&cpu),
+                mean(&avg_mb),
+                mean(&max_mb),
+                mean(&davg_mb),
+                mean(&dmax_mb)
+            ));
+        }
+    }
+    std::fs::write(&out, csv)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Table 2: per-dispatcher total/dispatch CPU time + memory on Seth.
+fn table2(args: &Args) -> anyhow::Result<()> {
+    let scale: f64 = args.get_parse("scale", 0.05)?;
+    let dir = PathBuf::from(args.get("dir", "data"));
+    let reps: u32 = args.get_parse("reps", 1)?;
+    let out = PathBuf::from(args.get("out", "results/table2.csv"));
+    args.reject_unknown()?;
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let (swf, _cfg) = traces::materialize(&traces::SETH, &dir, scale, 1)?;
+    let sys = traces::SETH.sys_config();
+    let mut csv = String::from(
+        "dispatcher,reps,total_s_mean,total_s_std,dispatch_s_mean,dispatch_s_std,mem_avg_mb,mem_max_mb,avg_slowdown\n",
+    );
+    for s in ["FIFO", "LJF", "SJF", "EBF"] {
+        for a in ["FF", "BF"] {
+            let label = format!("{s}-{a}");
+            let mut total = Vec::new();
+            let mut disp = Vec::new();
+            let mut avg_mb = Vec::new();
+            let mut max_mb = Vec::new();
+            let mut sd = Vec::new();
+            for _ in 0..reps.max(1) {
+                let d = dispatcher_from_label(&label)?;
+                let opts = SimOptions { output: OutputCollector::null(), ..Default::default() };
+                let mut sim = Simulator::new(&swf, sys.clone(), d, opts)?;
+                let o = sim.run()?;
+                total.push(o.wall_s);
+                disp.push(o.dispatch_ns as f64 / 1e9);
+                avg_mb.push(o.avg_rss_kb as f64 / 1024.0);
+                max_mb.push(o.max_rss_kb as f64 / 1024.0);
+                sd.push(o.avg_slowdown());
+            }
+            println!(
+                "{label:<8} total {:>7.2}s ±{:>5.2}  dispatch {:>7.2}s  mem {:>7.1}/{:>7.1} MB  slowdown {:>8.2}",
+                mean(&total),
+                stddev(&total),
+                mean(&disp),
+                mean(&avg_mb),
+                mean(&max_mb),
+                mean(&sd)
+            );
+            csv.push_str(&format!(
+                "{label},{reps},{:.3},{:.3},{:.3},{:.3},{:.2},{:.2},{:.3}\n",
+                mean(&total),
+                stddev(&total),
+                mean(&disp),
+                stddev(&disp),
+                mean(&avg_mb),
+                mean(&max_mb),
+                mean(&sd)
+            ));
+        }
+    }
+    std::fs::write(&out, csv)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn status(args: &Args) -> anyhow::Result<()> {
+    let workload = need_workload(args)?;
+    let sys = need_sys(args)?;
+    let d = dispatcher_from_label(&args.get("dispatcher", "FIFO-FF"))?;
+    args.reject_unknown()?;
+    let opts =
+        SimOptions { output: OutputCollector::in_memory(true, true), ..Default::default() };
+    let mut sim = Simulator::new(&workload, sys, d, opts)?;
+    let out = sim.run()?;
+    let st = SystemStatus::gather(
+        out.last_completion,
+        0,
+        0,
+        0,
+        out.jobs_completed,
+        out.jobs_rejected,
+        sim.resource_manager(),
+        out.cpu_ms,
+    );
+    println!("{}", st.render());
+    println!("{}", render_utilization(sim.resource_manager(), 80));
+    let mut pf = PlotFactory::new();
+    pf.add_run(out.dispatcher.clone(), vec![out]);
+    println!("{}", pf.render_boxes(PlotKind::Slowdown, 60));
+    Ok(())
+}

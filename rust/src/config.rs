@@ -1,0 +1,296 @@
+//! Synthetic system configuration (the paper's `sys_config.json`).
+//!
+//! A configuration defines the *resource types* of the system and its *node
+//! groups*: each group describes the per-node quantity of every resource type,
+//! and how many identical nodes belong to the group. This is what lets AccaSim
+//! model heterogeneous systems (e.g. a quarter of the nodes carrying two GPUs,
+//! as in §7.3) with a single JSON file.
+//!
+//! Example (Figure 7 of the paper — the Seth system):
+//!
+//! ```json
+//! {
+//!   "system_name": "Seth",
+//!   "start_time": 1027839845,
+//!   "groups": { "compute": { "core": 4, "mem": 1024 } },
+//!   "resources": { "compute": 120 }
+//! }
+//! ```
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A node group: per-node resource quantities, keyed by resource type name.
+pub type GroupSpec = BTreeMap<String, u64>;
+
+/// Parsed system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SysConfig {
+    /// Human-readable system name (used in output labels).
+    pub system_name: String,
+    /// Epoch second at which the simulated system "boots".
+    pub start_time: u64,
+    /// Group name → per-node resources.
+    pub groups: BTreeMap<String, GroupSpec>,
+    /// Group name → number of nodes in the group.
+    pub resources: BTreeMap<String, u64>,
+}
+
+impl SysConfig {
+    /// Load a configuration from a JSON file.
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("reading system config {}: {e}", path.as_ref().display())
+        })?;
+        Self::from_json(&text)
+    }
+
+    /// Parse a configuration from a JSON string and validate it.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text)?;
+        let system_name =
+            v.get("system_name").and_then(|s| s.as_str()).unwrap_or_default().to_string();
+        let start_time = v.get("start_time").and_then(|s| s.as_u64()).unwrap_or(0);
+        let groups_json = v
+            .get("groups")
+            .and_then(|g| g.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("system config needs a \"groups\" object"))?;
+        let mut groups = BTreeMap::new();
+        for (gname, spec) in groups_json {
+            let obj = spec
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("group {gname:?} must be an object"))?;
+            let mut out = GroupSpec::new();
+            for (rtype, q) in obj {
+                let q = q
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("group {gname:?} resource {rtype:?} must be a non-negative integer"))?;
+                out.insert(rtype.clone(), q);
+            }
+            groups.insert(gname.clone(), out);
+        }
+        let res_json = v
+            .get("resources")
+            .and_then(|g| g.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("system config needs a \"resources\" object"))?;
+        let mut resources = BTreeMap::new();
+        for (gname, n) in res_json {
+            let n = n
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("node count of {gname:?} must be a non-negative integer"))?;
+            resources.insert(gname.clone(), n);
+        }
+        let cfg = SysConfig { system_name, start_time, groups, resources };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to pretty JSON.
+    pub fn to_json(&self) -> String {
+        let mut groups = BTreeMap::new();
+        for (g, spec) in &self.groups {
+            let obj: BTreeMap<String, Json> =
+                spec.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect();
+            groups.insert(g.clone(), Json::Obj(obj));
+        }
+        let resources: BTreeMap<String, Json> =
+            self.resources.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect();
+        let mut root = BTreeMap::new();
+        root.insert("system_name".to_string(), Json::Str(self.system_name.clone()));
+        root.insert("start_time".to_string(), Json::Num(self.start_time as f64));
+        root.insert("groups".to_string(), Json::Obj(groups));
+        root.insert("resources".to_string(), Json::Obj(resources));
+        Json::Obj(root).to_string_pretty()
+    }
+
+    /// Write to a JSON file.
+    pub fn write_json_file<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Structural validation: every group referenced in `resources` must be
+    /// defined, every group must have at least one resource, quantities > 0.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.groups.is_empty() {
+            anyhow::bail!("system config has no groups");
+        }
+        if self.resources.is_empty() {
+            anyhow::bail!("system config has no node counts (\"resources\")");
+        }
+        for (g, count) in &self.resources {
+            if !self.groups.contains_key(g) {
+                anyhow::bail!("node count references undefined group {g:?}");
+            }
+            if *count == 0 {
+                anyhow::bail!("group {g:?} has zero nodes");
+            }
+        }
+        for (g, spec) in &self.groups {
+            if spec.is_empty() {
+                anyhow::bail!("group {g:?} defines no resources");
+            }
+            if spec.values().all(|q| *q == 0) {
+                anyhow::bail!("group {g:?} has all-zero resource quantities");
+            }
+        }
+        Ok(())
+    }
+
+    /// The ordered union of resource-type names across all groups.
+    /// Order is deterministic (BTreeMap iteration = lexicographic).
+    pub fn resource_types(&self) -> Vec<String> {
+        let mut set = std::collections::BTreeSet::new();
+        for spec in self.groups.values() {
+            for k in spec.keys() {
+                set.insert(k.clone());
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Total number of nodes in the system.
+    pub fn total_nodes(&self) -> u64 {
+        self.resources.values().sum()
+    }
+
+    /// Total quantity of a resource type across the system.
+    pub fn total_of(&self, rtype: &str) -> u64 {
+        self.resources
+            .iter()
+            .map(|(g, n)| n * self.groups.get(g).and_then(|s| s.get(rtype)).copied().unwrap_or(0))
+            .sum()
+    }
+
+    /// Build a homogeneous single-group config.
+    pub fn homogeneous(
+        name: &str,
+        nodes: u64,
+        per_node: &[(&str, u64)],
+        start_time: u64,
+    ) -> Self {
+        let mut groups = BTreeMap::new();
+        groups.insert(
+            "compute".to_string(),
+            per_node.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        );
+        let mut resources = BTreeMap::new();
+        resources.insert("compute".to_string(), nodes);
+        SysConfig { system_name: name.to_string(), start_time, groups, resources }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil as tempfile;
+
+    fn seth_json() -> &'static str {
+        r#"{
+            "system_name": "Seth",
+            "start_time": 1027839845,
+            "groups": { "compute": { "core": 4, "mem": 1024 } },
+            "resources": { "compute": 120 }
+        }"#
+    }
+
+    #[test]
+    fn parses_seth_figure7() {
+        let cfg = SysConfig::from_json(seth_json()).unwrap();
+        assert_eq!(cfg.system_name, "Seth");
+        assert_eq!(cfg.start_time, 1027839845);
+        assert_eq!(cfg.total_nodes(), 120);
+        assert_eq!(cfg.total_of("core"), 480);
+        assert_eq!(cfg.total_of("mem"), 120 * 1024);
+        assert_eq!(cfg.resource_types(), vec!["core".to_string(), "mem".to_string()]);
+    }
+
+    #[test]
+    fn heterogeneous_groups() {
+        let cfg = SysConfig::from_json(
+            r#"{
+                "groups": {
+                    "cpu_only": { "core": 8, "mem": 2048 },
+                    "gpu": { "core": 8, "mem": 4096, "gpu": 2 }
+                },
+                "resources": { "cpu_only": 90, "gpu": 30 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.total_nodes(), 120);
+        assert_eq!(cfg.total_of("gpu"), 60);
+        assert_eq!(cfg.total_of("core"), 960);
+        assert_eq!(
+            cfg.resource_types(),
+            vec!["core".to_string(), "gpu".to_string(), "mem".to_string()]
+        );
+    }
+
+    #[test]
+    fn rejects_undefined_group() {
+        let err = SysConfig::from_json(
+            r#"{"groups": {"a": {"core": 1}}, "resources": {"b": 3}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("undefined group"));
+    }
+
+    #[test]
+    fn rejects_zero_nodes() {
+        assert!(SysConfig::from_json(
+            r#"{"groups": {"a": {"core": 1}}, "resources": {"a": 0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_empty_groups() {
+        assert!(SysConfig::from_json(r#"{"groups": {}, "resources": {}}"#).is_err());
+        assert!(SysConfig::from_json(r#"{"groups": {"a": {}}, "resources": {"a": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_all_zero_quantities() {
+        assert!(SysConfig::from_json(
+            r#"{"groups": {"a": {"core": 0, "mem": 0}}, "resources": {"a": 1}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_non_integer_quantities() {
+        assert!(SysConfig::from_json(
+            r#"{"groups": {"a": {"core": 1.5}}, "resources": {"a": 1}}"#
+        )
+        .is_err());
+        assert!(SysConfig::from_json(
+            r#"{"groups": {"a": {"core": -1}}, "resources": {"a": 1}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = SysConfig::from_json(seth_json()).unwrap();
+        let back = SysConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn homogeneous_builder() {
+        let cfg = SysConfig::homogeneous("test", 10, &[("core", 16), ("mem", 65536)], 0);
+        assert_eq!(cfg.total_nodes(), 10);
+        assert_eq!(cfg.total_of("core"), 160);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = SysConfig::homogeneous("t", 4, &[("core", 2)], 100);
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("sys.json");
+        cfg.write_json_file(&p).unwrap();
+        assert_eq!(SysConfig::from_json_file(&p).unwrap(), cfg);
+    }
+}

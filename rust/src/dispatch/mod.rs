@@ -1,0 +1,219 @@
+//! The dispatcher (§3): *scheduler* (which queued jobs run next) composed
+//! with an *allocator* (on which resources they run).
+//!
+//! Schedulers implement [`Scheduler`]; shipped implementations are
+//! [`FifoScheduler`], [`SjfScheduler`], [`LjfScheduler`] (shortest/longest
+//! job first by *estimated* duration — the dispatcher never sees true
+//! durations, §3), [`EasyBackfilling`] (EASY with FIFO priority, single
+//! reservation [36]) and [`RejectScheduler`] (rejects everything; used to
+//! isolate simulator overhead in Table 1).
+//!
+//! Allocators implement [`Allocator`]: [`FirstFit`] walks nodes in index
+//! order, [`BestFit`] prefers the busiest feasible nodes (reduces
+//! fragmentation), and [`XlaFit`] scores (job × node) fitness with the
+//! AOT-compiled Pallas kernel executed through PJRT (see `runtime`).
+
+mod allocators;
+mod cbf;
+mod ebf;
+mod power_cap;
+mod schedulers;
+mod xla_fit;
+
+pub use allocators::{place_in_matrix, BestFit, FirstFit, WorstFit};
+pub use cbf::ConservativeBackfilling;
+pub use ebf::EasyBackfilling;
+pub use power_cap::PowerCapped;
+pub use schedulers::{
+    FifoScheduler, LjfScheduler, RejectScheduler, SjfScheduler, SortPolicy, SortingScheduler,
+};
+pub use xla_fit::XlaFit;
+
+use crate::resources::{Allocation, ResourceManager};
+use crate::workload::{Job, JobId};
+use std::collections::BTreeMap;
+
+/// A running job as seen by the dispatcher: the job plus its start time.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningInfo<'a> {
+    pub job: &'a Job,
+    pub start: u64,
+}
+
+impl RunningInfo<'_> {
+    /// Dispatcher-visible estimated completion (start + requested time).
+    /// Clamped so estimates never lie in the past relative to `now`.
+    pub fn estimated_completion(&self, now: u64) -> u64 {
+        self.job.estimated_completion_at(self.start).max(now + 1)
+    }
+}
+
+/// The current system status handed to the dispatcher (§3: queued jobs,
+/// running jobs, resource availability — never true durations).
+pub struct SystemView<'a> {
+    /// Current simulation time.
+    pub now: u64,
+    /// Queued jobs in arrival (FIFO) order.
+    pub queue: Vec<&'a Job>,
+    /// Currently running jobs.
+    pub running: Vec<RunningInfo<'a>>,
+    /// Values published by `AdditionalData` providers (power, failures, …),
+    /// keyed by metric name.
+    pub extra: &'a BTreeMap<String, f64>,
+}
+
+/// The dispatching decision for one invocation.
+///
+/// Started jobs have already had their resources deducted from the
+/// [`ResourceManager`] by the scheduler; the simulator records starts and
+/// schedules completions.
+#[derive(Debug, Default)]
+pub struct Decision {
+    /// Jobs to start *now*, with their committed allocations.
+    pub started: Vec<(JobId, Allocation)>,
+    /// Jobs rejected outright (removed from the queue, never run).
+    pub rejected: Vec<JobId>,
+}
+
+/// Scheduling half of the dispatcher (AccaSim's `SchedulerBase`).
+pub trait Scheduler {
+    /// Short policy name, e.g. `"FIFO"`.
+    fn name(&self) -> &'static str;
+    /// Produce a decision. Implementations call `alloc` to place jobs and
+    /// commit successful placements to `rm` before listing them in the
+    /// decision.
+    fn schedule(
+        &mut self,
+        view: &SystemView,
+        rm: &mut ResourceManager,
+        alloc: &mut dyn Allocator,
+    ) -> Decision;
+}
+
+/// Allocation half of the dispatcher (AccaSim's `AllocatorBase`).
+pub trait Allocator {
+    /// Short policy name, e.g. `"FF"`.
+    fn name(&self) -> &'static str;
+
+    /// Hook called once per dispatch round with the whole queue; batch
+    /// allocators (the XLA kernel) compute all scores here.
+    fn begin_round(&mut self, _queue: &[&Job], _rm: &ResourceManager) {}
+
+    /// Node visit order for placing `job` (most preferred first). Only nodes
+    /// that can host at least one slot need appear.
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager) -> Vec<u32>;
+
+    /// Greedy placement of all slots following [`Allocator::node_order`].
+    /// Returns `None` when the job cannot fully fit right now.
+    fn place(&mut self, job: &Job, rm: &ResourceManager) -> Option<Allocation> {
+        let order = self.node_order(job, rm);
+        let mut remaining = job.slots as u64;
+        let mut slices = Vec::new();
+        for n in order {
+            if remaining == 0 {
+                break;
+            }
+            let h = rm.hostable_slots(n as usize, &job.per_slot).min(remaining);
+            if h > 0 {
+                slices.push((n, h as u32));
+                remaining -= h;
+            }
+        }
+        if remaining == 0 {
+            Some(Allocation { slices })
+        } else {
+            None
+        }
+    }
+}
+
+/// A dispatcher: scheduler ∘ allocator, as instantiated in the paper's
+/// Figure 4 (`FirstInFirstOut(FirstFit())`).
+pub struct Dispatcher {
+    scheduler: Box<dyn Scheduler>,
+    allocator: Box<dyn Allocator>,
+}
+
+impl Dispatcher {
+    /// Compose a scheduler with an allocator.
+    pub fn new(scheduler: Box<dyn Scheduler>, allocator: Box<dyn Allocator>) -> Self {
+        Dispatcher { scheduler, allocator }
+    }
+
+    /// `"FIFO-FF"`-style label used in tables and plots.
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.scheduler.name(), self.allocator.name())
+    }
+
+    /// Generate a dispatching decision for the current system status.
+    pub fn dispatch(&mut self, view: &SystemView, rm: &mut ResourceManager) -> Decision {
+        self.allocator.begin_round(&view.queue, rm);
+        self.scheduler.schedule(view, rm, self.allocator.as_mut())
+    }
+}
+
+/// Construct a dispatcher from `"FIFO-FF"`-style labels. Supported
+/// schedulers: FIFO, SJF, LJF, EBF, EBF_SJF, EBF_LJF, CBF, REJECT;
+/// allocators: FF, BF, WF. (XlaFit requires an engine; build it
+/// explicitly.)
+pub fn dispatcher_from_label(label: &str) -> anyhow::Result<Dispatcher> {
+    let (s, a) = label
+        .split_once('-')
+        .ok_or_else(|| anyhow::anyhow!("dispatcher label {label:?} is not SCHED-ALLOC"))?;
+    let scheduler: Box<dyn Scheduler> = match s.to_ascii_uppercase().as_str() {
+        "FIFO" => Box::new(FifoScheduler::new()),
+        "SJF" => Box::new(SjfScheduler::new()),
+        "LJF" => Box::new(LjfScheduler::new()),
+        "EBF" => Box::new(EasyBackfilling::new()),
+        "EBF_SJF" => Box::new(EasyBackfilling::with_priority(SortPolicy::Sjf)),
+        "EBF_LJF" => Box::new(EasyBackfilling::with_priority(SortPolicy::Ljf)),
+        "CBF" => Box::new(ConservativeBackfilling::new()),
+        "REJECT" => Box::new(RejectScheduler::new()),
+        other => anyhow::bail!("unknown scheduler {other:?}"),
+    };
+    let allocator: Box<dyn Allocator> = match a.to_ascii_uppercase().as_str() {
+        "FF" => Box::new(FirstFit::new()),
+        "BF" => Box::new(BestFit::new()),
+        "WF" => Box::new(WorstFit::new()),
+        other => anyhow::bail!("unknown allocator {other:?}"),
+    };
+    Ok(Dispatcher::new(scheduler, allocator))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_compose() {
+        let d = dispatcher_from_label("FIFO-FF").unwrap();
+        assert_eq!(d.label(), "FIFO-FF");
+        let d = dispatcher_from_label("ebf-bf").unwrap();
+        assert_eq!(d.label(), "EBF-BF");
+    }
+
+    #[test]
+    fn bad_labels_error() {
+        assert!(dispatcher_from_label("FIFO").is_err());
+        assert!(dispatcher_from_label("XXX-FF").is_err());
+        assert!(dispatcher_from_label("FIFO-ZZ").is_err());
+    }
+
+    #[test]
+    fn all_paper_dispatchers_constructible() {
+        for s in ["FIFO", "SJF", "LJF", "EBF"] {
+            for a in ["FF", "BF"] {
+                let d = dispatcher_from_label(&format!("{s}-{a}")).unwrap();
+                assert_eq!(d.label(), format!("{s}-{a}"));
+            }
+        }
+    }
+
+    #[test]
+    fn extension_dispatchers_constructible() {
+        for label in ["CBF-FF", "CBF-BF", "EBF_SJF-FF", "EBF_LJF-BF", "FIFO-WF", "SJF-WF"] {
+            let d = dispatcher_from_label(label).unwrap();
+            assert_eq!(d.label(), label.to_string());
+        }
+    }
+}

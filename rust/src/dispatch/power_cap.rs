@@ -1,0 +1,177 @@
+//! Power-capped scheduling — an *advanced dispatcher* built on the
+//! additional-data interface (§3: "energy and power-aware … algorithms"),
+//! in the spirit of Bodas et al. [5] and Borghesi et al. [6].
+//!
+//! Wraps any inner scheduler and enforces a system power budget: the
+//! current draw is read from the `power.system_w` metric published by
+//! [`crate::addons::PowerModel`], each candidate job's marginal draw is
+//! estimated from its slot count, and starts that would exceed the budget
+//! are deferred (the inner decision is truncated, preserving its order).
+
+use super::{Allocator, Decision, Scheduler, SystemView};
+use crate::resources::ResourceManager;
+
+/// A scheduler decorator enforcing a power budget.
+pub struct PowerCapped {
+    inner: Box<dyn Scheduler>,
+    /// System power budget in watts.
+    pub budget_w: f64,
+    /// Estimated marginal draw of one running slot (W).
+    pub watts_per_slot: f64,
+    /// Starts deferred by the cap so far (observability).
+    pub deferred: u64,
+}
+
+impl PowerCapped {
+    pub fn new(inner: Box<dyn Scheduler>, budget_w: f64, watts_per_slot: f64) -> Self {
+        PowerCapped { inner, budget_w, watts_per_slot, deferred: 0 }
+    }
+}
+
+impl Scheduler for PowerCapped {
+    fn name(&self) -> &'static str {
+        "PCAP"
+    }
+
+    fn schedule(
+        &mut self,
+        view: &SystemView,
+        rm: &mut ResourceManager,
+        alloc: &mut dyn Allocator,
+    ) -> Decision {
+        let mut inner = self.inner.schedule(view, rm, alloc);
+        let mut draw = view.extra.get("power.system_w").copied().unwrap_or(0.0);
+        let mut kept = Vec::new();
+        let mut dropped = Vec::new();
+        for (id, a) in inner.started.drain(..) {
+            let slots: u64 = a.slices.iter().map(|&(_, s)| s as u64).sum();
+            let marginal = slots as f64 * self.watts_per_slot;
+            if draw + marginal <= self.budget_w {
+                draw += marginal;
+                kept.push((id, a));
+            } else {
+                dropped.push((id, a));
+            }
+        }
+        // un-commit the resources of capped starts
+        for (id, a) in dropped {
+            let job = view.queue.iter().find(|j| j.id == id).expect("started job was queued");
+            debug_assert_eq!(rm.allocation_of(id), Some(&a));
+            rm.release(job).expect("capped job releases");
+            self.deferred += 1;
+        }
+        Decision { started: kept, rejected: inner.rejected }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SysConfig;
+    use crate::dispatch::{FifoScheduler, FirstFit};
+    use crate::workload::Job;
+    use std::collections::BTreeMap;
+
+    fn job(id: u64, slots: u32) -> Job {
+        Job {
+            id,
+            submit: 0,
+            duration: 10,
+            req_time: 10,
+            slots,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+        }
+    }
+
+    fn setup() -> (ResourceManager, BTreeMap<String, f64>) {
+        let rm = ResourceManager::from_config(&SysConfig::homogeneous(
+            "t",
+            4,
+            &[("core", 4)],
+            0,
+        ));
+        let mut extra = BTreeMap::new();
+        extra.insert("power.system_w".to_string(), 400.0);
+        (rm, extra)
+    }
+
+    #[test]
+    fn starts_within_budget_only() {
+        let (mut rm, extra) = setup();
+        // budget 500 W, base draw 400, 20 W/slot → only 5 slots may start
+        let mut s = PowerCapped::new(Box::new(FifoScheduler::new()), 500.0, 20.0);
+        let j1 = job(1, 4); // 80 W — fits (480)
+        let j2 = job(2, 4); // would hit 560 — deferred
+        let view = SystemView { now: 0, queue: vec![&j1, &j2], running: vec![], extra: &extra };
+        let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
+        assert_eq!(d.started.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(s.deferred, 1);
+        // j2's resources must have been released
+        assert_eq!(rm.live_allocations(), 1);
+        assert!(rm.allocation_of(2).is_none());
+    }
+
+    #[test]
+    fn unlimited_budget_passes_through() {
+        let (mut rm, extra) = setup();
+        let mut s = PowerCapped::new(Box::new(FifoScheduler::new()), f64::INFINITY, 20.0);
+        let j1 = job(1, 4);
+        let j2 = job(2, 4);
+        let view = SystemView { now: 0, queue: vec![&j1, &j2], running: vec![], extra: &extra };
+        let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
+        assert_eq!(d.started.len(), 2);
+        assert_eq!(s.deferred, 0);
+    }
+
+    #[test]
+    fn missing_power_metric_means_zero_draw() {
+        let (mut rm, _extra) = setup();
+        let empty = BTreeMap::new();
+        let mut s = PowerCapped::new(Box::new(FifoScheduler::new()), 100.0, 20.0);
+        let j1 = job(1, 4); // 80 W from zero → fits
+        let j2 = job(2, 2); // 40 more → 120 > 100, deferred
+        let view = SystemView { now: 0, queue: vec![&j1, &j2], running: vec![], extra: &empty };
+        let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
+        assert_eq!(d.started.len(), 1);
+    }
+
+    #[test]
+    fn end_to_end_energy_reduction() {
+        // With a tight cap, peak power (and thus energy rate) is bounded
+        // while all jobs still eventually complete.
+        use crate::addons::PowerModel;
+        use crate::dispatch::Dispatcher;
+        use crate::output::OutputCollector;
+        use crate::sim::{SimOptions, Simulator};
+        let sys = SysConfig::homogeneous("t", 4, &[("core", 4)], 0);
+        let jobs: Vec<Job> = (1..=20).map(|i| job(i, 4)).collect();
+        let capped = Dispatcher::new(
+            Box::new(PowerCapped::new(Box::new(FifoScheduler::new()), 900.0, 50.0)),
+            Box::new(FirstFit::new()),
+        );
+        let opts = SimOptions {
+            addons: vec![Box::new(PowerModel::new(100.0, 300.0))],
+            output: OutputCollector::in_memory(true, false),
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs, sys, capped, opts);
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed, 20);
+        // 4 nodes × 300 W max = 1200 W uncapped; capped peak must be under
+        // budget + one idle-node slack. We can't observe instantaneous
+        // power here, but the schedule must be longer than the uncapped
+        // one (serialization evidences the cap engaging).
+        let uncapped = Dispatcher::new(Box::new(FifoScheduler::new()), Box::new(FirstFit::new()));
+        let mut sim2 = Simulator::from_jobs(
+            (1..=20).map(|i| job(i, 4)).collect(),
+            SysConfig::homogeneous("t", 4, &[("core", 4)], 0),
+            uncapped,
+            SimOptions { output: OutputCollector::in_memory(true, false), ..Default::default() },
+        );
+        let base = sim2.run().unwrap();
+        assert!(out.last_completion > base.last_completion);
+    }
+}

@@ -1,0 +1,301 @@
+//! FIFO / SJF / LJF sorting schedulers and the rejecting scheduler.
+
+use super::{Allocator, Decision, Scheduler, SystemView};
+use crate::resources::ResourceManager;
+use crate::workload::Job;
+
+/// Sort key policies for [`SortingScheduler`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SortPolicy {
+    #[default]
+    /// Arrival order (stable — the queue is already FIFO).
+    Fifo,
+    /// Shortest estimated duration first (ties: arrival order).
+    Sjf,
+    /// Longest estimated duration first (ties: arrival order).
+    Ljf,
+}
+
+/// A scheduler that orders the queue by a key and then starts jobs greedily
+/// until the first job that does not fit (no skipping — skipping ahead is
+/// exactly what distinguishes backfilling).
+pub struct SortingScheduler {
+    policy: SortPolicy,
+    name: &'static str,
+    /// scratch: indices into the queue
+    order: Vec<u32>,
+}
+
+impl SortingScheduler {
+    pub fn with_policy(policy: SortPolicy) -> Self {
+        let name = match policy {
+            SortPolicy::Fifo => "FIFO",
+            SortPolicy::Sjf => "SJF",
+            SortPolicy::Ljf => "LJF",
+        };
+        SortingScheduler { policy, name, order: Vec::new() }
+    }
+
+    fn sort(&mut self, queue: &[&Job]) {
+        self.order.clear();
+        self.order.extend(0..queue.len() as u32);
+        match self.policy {
+            SortPolicy::Fifo => {}
+            SortPolicy::Sjf => self
+                .order
+                .sort_by_key(|&i| (queue[i as usize].req_time, i)),
+            SortPolicy::Ljf => self
+                .order
+                .sort_by_key(|&i| (std::cmp::Reverse(queue[i as usize].req_time), i)),
+        }
+    }
+}
+
+impl Scheduler for SortingScheduler {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn schedule(
+        &mut self,
+        view: &SystemView,
+        rm: &mut ResourceManager,
+        alloc: &mut dyn Allocator,
+    ) -> Decision {
+        let mut decision = Decision::default();
+        self.sort(&view.queue);
+        for &i in &self.order {
+            let job = view.queue[i as usize];
+            match alloc.place(job, rm) {
+                Some(a) => {
+                    rm.allocate(job, a.clone()).expect("allocator produced valid placement");
+                    decision.started.push((job.id, a));
+                }
+                // Blocking semantics: the highest-priority job that does not
+                // fit stalls the queue until resources free up.
+                None => break,
+            }
+        }
+        decision
+    }
+}
+
+/// First In First Out.
+pub struct FifoScheduler(SortingScheduler);
+impl FifoScheduler {
+    pub fn new() -> Self {
+        FifoScheduler(SortingScheduler::with_policy(SortPolicy::Fifo))
+    }
+}
+impl Default for FifoScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn schedule(
+        &mut self,
+        view: &SystemView,
+        rm: &mut ResourceManager,
+        alloc: &mut dyn Allocator,
+    ) -> Decision {
+        self.0.schedule(view, rm, alloc)
+    }
+}
+
+/// Shortest Job First (by estimated duration).
+pub struct SjfScheduler(SortingScheduler);
+impl SjfScheduler {
+    pub fn new() -> Self {
+        SjfScheduler(SortingScheduler::with_policy(SortPolicy::Sjf))
+    }
+}
+impl Default for SjfScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+impl Scheduler for SjfScheduler {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn schedule(
+        &mut self,
+        view: &SystemView,
+        rm: &mut ResourceManager,
+        alloc: &mut dyn Allocator,
+    ) -> Decision {
+        self.0.schedule(view, rm, alloc)
+    }
+}
+
+/// Longest Job First (by estimated duration).
+pub struct LjfScheduler(SortingScheduler);
+impl LjfScheduler {
+    pub fn new() -> Self {
+        LjfScheduler(SortingScheduler::with_policy(SortPolicy::Ljf))
+    }
+}
+impl Default for LjfScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+impl Scheduler for LjfScheduler {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn schedule(
+        &mut self,
+        view: &SystemView,
+        rm: &mut ResourceManager,
+        alloc: &mut dyn Allocator,
+    ) -> Decision {
+        self.0.schedule(view, rm, alloc)
+    }
+}
+
+/// Rejects every submitted job. Table 1's instrument: "to isolate the core
+/// actions of a simulator … we use a dispatcher which rejects any submitted
+/// job" (§6.2).
+#[derive(Debug, Default)]
+pub struct RejectScheduler;
+
+impl RejectScheduler {
+    pub fn new() -> Self {
+        RejectScheduler
+    }
+}
+
+impl Scheduler for RejectScheduler {
+    fn name(&self) -> &'static str {
+        "REJECT"
+    }
+
+    fn schedule(
+        &mut self,
+        view: &SystemView,
+        _rm: &mut ResourceManager,
+        _alloc: &mut dyn Allocator,
+    ) -> Decision {
+        Decision {
+            started: Vec::new(),
+            rejected: view.queue.iter().map(|j| j.id).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SysConfig;
+    use crate::dispatch::FirstFit;
+    use std::collections::BTreeMap;
+
+    fn rm() -> ResourceManager {
+        ResourceManager::from_config(&SysConfig::homogeneous("t", 2, &[("core", 4)], 0))
+    }
+
+    fn job(id: u64, slots: u32, req_time: u64) -> Job {
+        Job {
+            id,
+            submit: 0,
+            duration: req_time,
+            req_time,
+            slots,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+        }
+    }
+
+    fn view<'a>(queue: Vec<&'a Job>, extra: &'a BTreeMap<String, f64>) -> SystemView<'a> {
+        SystemView { now: 0, queue, running: Vec::new(), extra }
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order_and_blocks() {
+        let mut rm = rm();
+        let extra = BTreeMap::new();
+        let j1 = job(1, 4, 10);
+        let j2 = job(2, 8, 10); // doesn't fit after j1 (8 cores total, 4 left)
+        let j3 = job(3, 1, 10); // would fit, but FIFO must not skip j2
+        let mut s = FifoScheduler::new();
+        let d = s.schedule(&view(vec![&j1, &j2, &j3], &extra), &mut rm, &mut FirstFit::new());
+        assert_eq!(d.started.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn sjf_orders_by_estimate() {
+        let mut rm = rm();
+        let extra = BTreeMap::new();
+        let j1 = job(1, 2, 100);
+        let j2 = job(2, 2, 5);
+        let j3 = job(3, 2, 50);
+        let mut s = SjfScheduler::new();
+        let d = s.schedule(&view(vec![&j1, &j2, &j3], &extra), &mut rm, &mut FirstFit::new());
+        assert_eq!(
+            d.started.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![2, 3, 1]
+        );
+    }
+
+    #[test]
+    fn ljf_orders_reverse() {
+        let mut rm = rm();
+        let extra = BTreeMap::new();
+        let j1 = job(1, 2, 100);
+        let j2 = job(2, 2, 5);
+        let j3 = job(3, 2, 50);
+        let mut s = LjfScheduler::new();
+        let d = s.schedule(&view(vec![&j1, &j2, &j3], &extra), &mut rm, &mut FirstFit::new());
+        assert_eq!(
+            d.started.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![1, 3, 2]
+        );
+    }
+
+    #[test]
+    fn sjf_ties_break_fifo() {
+        let mut rm = rm();
+        let extra = BTreeMap::new();
+        let j1 = job(10, 1, 5);
+        let j2 = job(11, 1, 5);
+        let mut s = SjfScheduler::new();
+        let d = s.schedule(&view(vec![&j1, &j2], &extra), &mut rm, &mut FirstFit::new());
+        assert_eq!(
+            d.started.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![10, 11]
+        );
+    }
+
+    #[test]
+    fn reject_rejects_all() {
+        let mut rm = rm();
+        let extra = BTreeMap::new();
+        let j1 = job(1, 1, 1);
+        let j2 = job(2, 1, 1);
+        let mut s = RejectScheduler::new();
+        let d = s.schedule(&view(vec![&j1, &j2], &extra), &mut rm, &mut FirstFit::new());
+        assert!(d.started.is_empty());
+        assert_eq!(d.rejected, vec![1, 2]);
+        assert_eq!(rm.live_allocations(), 0);
+    }
+
+    #[test]
+    fn started_jobs_are_committed_to_rm() {
+        let mut rm = rm();
+        let extra = BTreeMap::new();
+        let j1 = job(1, 8, 10);
+        let mut s = FifoScheduler::new();
+        let d = s.schedule(&view(vec![&j1], &extra), &mut rm, &mut FirstFit::new());
+        assert_eq!(d.started.len(), 1);
+        assert_eq!(rm.live_allocations(), 1);
+        assert_eq!(rm.node_free(0)[0], 0);
+        assert_eq!(rm.node_free(1)[0], 0);
+    }
+}

@@ -1,0 +1,132 @@
+//! `XlaFit`: Best-Fit allocation whose (job × node) fitness scores are
+//! computed by the AOT-compiled Pallas kernel (`artifacts/fit_score.hlo.txt`)
+//! executed through PJRT — the L1/L2 layers on the L3 hot path.
+//!
+//! Semantics match [`super::BestFit`] exactly (busiest feasible node first,
+//! index tie-break); the equivalence is enforced by
+//! `rust/tests/runtime_bridge.rs`. Systems larger than one bucket
+//! (`shapes::FIT_N` nodes) are processed in node chunks.
+
+use super::Allocator;
+use crate::resources::ResourceManager;
+use crate::runtime::{shapes, Engine};
+use crate::workload::Job;
+use std::sync::Arc;
+
+/// XLA-accelerated Best-Fit allocator.
+pub struct XlaFit {
+    engine: Arc<Engine>,
+    /// Scratch buffers reused across calls to avoid hot-loop allocation.
+    req: Vec<f32>,
+    free: Vec<f32>,
+    busy: Vec<f32>,
+    scored: Vec<(f32, u32)>,
+}
+
+impl XlaFit {
+    /// Build from an engine that has the `fit_score` artifact loaded.
+    pub fn new(engine: Arc<Engine>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            engine.has("fit_score"),
+            "fit_score artifact not loaded — run `make artifacts`"
+        );
+        Ok(XlaFit {
+            engine,
+            req: vec![0.0; shapes::FIT_J * shapes::FIT_R],
+            free: vec![0.0; shapes::FIT_N * shapes::FIT_R],
+            busy: vec![0.0; shapes::FIT_N],
+            scored: Vec::new(),
+        })
+    }
+
+    /// Score one node chunk `[n0, n1)` for `job`, pushing feasible nodes
+    /// into `self.scored` as `(score, node)`.
+    fn score_chunk(
+        &mut self,
+        job: &Job,
+        rm: &ResourceManager,
+        n0: usize,
+        n1: usize,
+    ) -> anyhow::Result<()> {
+        let types = rm.num_types();
+        // job request → row 0 of the (J, R) request matrix
+        self.req.iter_mut().for_each(|x| *x = 0.0);
+        for (r, q) in job.per_slot.iter().enumerate().take(shapes::FIT_R) {
+            self.req[r] = *q as f32;
+        }
+        // free matrix chunk, padded with zeros (zero-free ⇒ infeasible)
+        self.free.iter_mut().for_each(|x| *x = 0.0);
+        self.busy.iter_mut().for_each(|x| *x = -1.0); // padding sorts last
+        let fm = rm.free_matrix();
+        for (i, n) in (n0..n1).enumerate() {
+            for r in 0..types.min(shapes::FIT_R) {
+                self.free[i * shapes::FIT_R + r] = fm[n * types + r] as f32;
+            }
+            self.busy[i] = rm.node_busy_slots(n) as f32;
+        }
+        // NOTE (§Perf): the buffer-based partial-readback path
+        // (`execute_f32_partial`) was measured ~1.6× *slower* here — on the
+        // CPU PJRT client, per-input `buffer_from_host_buffer` calls cost
+        // more than one staged Literal execute. Kept the literal path.
+        let out = self.engine.execute_f32(
+            "fit_score",
+            &[
+                (&self.req, &[shapes::FIT_J as i64, shapes::FIT_R as i64]),
+                (&self.free, &[shapes::FIT_N as i64, shapes::FIT_R as i64]),
+                (&self.busy, &[shapes::FIT_N as i64]),
+            ],
+        )?;
+        // out[0] = scores (J, N): busy count for feasible nodes, -1 otherwise.
+        let scores = &out[0];
+        for (i, n) in (n0..n1).enumerate() {
+            let s = scores[i]; // row 0 of the (J, N) matrix
+            if s >= 0.0 {
+                self.scored.push((s, n as u32));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Allocator for XlaFit {
+    fn name(&self) -> &'static str {
+        "XF"
+    }
+
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager) -> Vec<u32> {
+        assert!(
+            rm.num_types() <= shapes::FIT_R,
+            "XlaFit supports up to {} resource types (system has {})",
+            shapes::FIT_R,
+            rm.num_types()
+        );
+        self.scored.clear();
+        let nodes = rm.num_nodes();
+        let mut n0 = 0;
+        while n0 < nodes {
+            let n1 = (n0 + shapes::FIT_N).min(nodes);
+            self.score_chunk(job, rm, n0, n1)
+                .expect("fit_score execution failed on the hot path");
+            n0 = n1;
+        }
+        // Best-Fit order: busiest first, node index ascending on ties.
+        self.scored
+            .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        self.scored.iter().map(|&(_, n)| n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Construction without artifacts must fail loudly; the numeric
+    // equivalence tests against BestFit live in rust/tests/runtime_bridge.rs
+    // and require `make artifacts`.
+    use super::*;
+
+    #[test]
+    fn requires_fit_score_artifact() {
+        let engine = Arc::new(Engine::cpu().unwrap());
+        let err = XlaFit::new(engine).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("fit_score"));
+    }
+}

@@ -1,0 +1,150 @@
+//! The experimentation tool (§3, *tools*; Figure 5): configure a workload,
+//! a system and a set of dispatchers; run a simulation per dispatcher
+//! (optionally repeated); produce all comparative plot data automatically.
+
+use crate::config::SysConfig;
+use crate::dispatch::dispatcher_from_label;
+use crate::output::OutputCollector;
+use crate::plotdata::{PlotFactory, PlotKind};
+use crate::sim::{SimOptions, SimOutput, Simulator};
+use std::path::{Path, PathBuf};
+
+/// An experiment over one workload × one system × many dispatchers.
+pub struct Experiment {
+    name: String,
+    workload: PathBuf,
+    sys: SysConfig,
+    dispatchers: Vec<String>,
+    /// Repetitions per dispatcher (the paper uses 10).
+    pub repetitions: u32,
+    /// Output directory (named after the experiment, as in AccaSim).
+    pub out_dir: PathBuf,
+}
+
+/// Results: per dispatcher label, one [`SimOutput`] per repetition.
+pub struct ExperimentResults {
+    pub runs: Vec<(String, Vec<SimOutput>)>,
+    /// Paths of the plot CSVs written (fig10–fig13 equivalents).
+    pub plots: Vec<PathBuf>,
+}
+
+impl Experiment {
+    /// Mirror of `Experiment(name, workload, sys_cfg)`.
+    pub fn new<P: AsRef<Path>>(name: &str, workload: P, sys: SysConfig) -> Self {
+        Experiment {
+            name: name.to_string(),
+            workload: workload.as_ref().to_path_buf(),
+            sys,
+            dispatchers: Vec::new(),
+            repetitions: 1,
+            out_dir: PathBuf::from("results").join(name),
+        }
+    }
+
+    /// Mirror of `gen_dispatchers(sched_list, alloc_list)`: register the
+    /// full cross-product of schedulers × allocators.
+    pub fn gen_dispatchers(&mut self, schedulers: &[&str], allocators: &[&str]) {
+        for s in schedulers {
+            for a in allocators {
+                self.dispatchers.push(format!("{s}-{a}"));
+            }
+        }
+    }
+
+    /// Mirror of `add_dispatcher`: register a single dispatcher label.
+    pub fn add_dispatcher(&mut self, label: &str) {
+        self.dispatchers.push(label.to_string());
+    }
+
+    /// Registered dispatcher labels.
+    pub fn dispatchers(&self) -> &[String] {
+        &self.dispatchers
+    }
+
+    /// Mirror of `run_simulation()`: simulate every dispatcher
+    /// `repetitions` times and write all comparative plot CSVs.
+    pub fn run_simulation(&self) -> anyhow::Result<ExperimentResults> {
+        anyhow::ensure!(!self.dispatchers.is_empty(), "experiment {} has no dispatchers", self.name);
+        std::fs::create_dir_all(&self.out_dir)?;
+        let mut factory = PlotFactory::new();
+        let mut runs = Vec::new();
+        for label in &self.dispatchers {
+            let mut outs = Vec::new();
+            for _rep in 0..self.repetitions.max(1) {
+                let dispatcher = dispatcher_from_label(label)?;
+                let opts = SimOptions {
+                    output: OutputCollector::in_memory(true, true),
+                    ..Default::default()
+                };
+                let mut sim =
+                    Simulator::new(&self.workload, self.sys.clone(), dispatcher, opts)?;
+                outs.push(sim.run()?);
+            }
+            factory.add_run(label.clone(), outs.clone());
+            runs.push((label.clone(), outs));
+        }
+        let mut plots = Vec::new();
+        for (kind, file) in [
+            (PlotKind::Slowdown, "fig10_slowdown.csv"),
+            (PlotKind::QueueSize, "fig11_queue.csv"),
+            (PlotKind::CpuTime, "fig12_cputime.csv"),
+            (PlotKind::Scalability, "fig13_scalability.csv"),
+        ] {
+            let p = self.out_dir.join(file);
+            factory.produce_plot(kind, &p)?;
+            plots.push(p);
+        }
+        Ok(ExperimentResults { runs, plots })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::testutil as tempfile;
+    use crate::traces::SETH;
+
+    #[test]
+    fn cross_product_generation() {
+        let sys = SysConfig::homogeneous("t", 2, &[("core", 2)], 0);
+        let mut e = Experiment::new("x", "w.swf", sys);
+        e.gen_dispatchers(&["FIFO", "SJF"], &["FF", "BF"]);
+        e.add_dispatcher("EBF-FF");
+        assert_eq!(
+            e.dispatchers(),
+            &["FIFO-FF", "FIFO-BF", "SJF-FF", "SJF-BF", "EBF-FF"]
+        );
+    }
+
+    #[test]
+    fn empty_experiment_errors() {
+        let sys = SysConfig::homogeneous("t", 2, &[("core", 2)], 0);
+        let e = Experiment::new("x", "w.swf", sys);
+        assert!(e.run_simulation().is_err());
+    }
+
+    #[test]
+    fn runs_all_dispatchers_and_writes_plots() {
+        let dir = tempfile::tempdir().unwrap();
+        let swf = dir.path().join("w.swf");
+        SETH.synthesize(&swf, 0.001, 5).unwrap(); // ~200 jobs
+        let mut e = Experiment::new("itest", &swf, SETH.sys_config());
+        e.out_dir = dir.path().join("out");
+        e.gen_dispatchers(&["FIFO", "SJF"], &["FF"]);
+        e.repetitions = 2;
+        let res = e.run_simulation().unwrap();
+        assert_eq!(res.runs.len(), 2);
+        for (label, outs) in &res.runs {
+            assert_eq!(outs.len(), 2, "{label}");
+            for o in outs {
+                assert!(o.jobs_completed > 150, "{label}: {}", o.jobs_completed);
+            }
+        }
+        assert_eq!(res.plots.len(), 4);
+        for p in &res.plots {
+            assert!(p.exists());
+            assert!(std::fs::read_to_string(p).unwrap().lines().count() >= 3);
+        }
+    }
+}

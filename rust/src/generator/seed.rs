@@ -1,0 +1,242 @@
+//! Seed-dataset statistics fitted by the workload generator: slot weights,
+//! hourly/daily/monthly submission shares, inter-arrival bound, empirical
+//! job-size distribution and the log-normal FLOP model.
+
+use super::DAY_SLOTS;
+use crate::rng::Pcg64;
+use crate::workload::{Reader, SwfFields, SwfReader};
+use std::collections::BTreeMap;
+
+/// Statistics extracted from a seed (real) workload dataset.
+#[derive(Debug, Clone)]
+pub struct SeedStats {
+    /// Number of seed jobs.
+    pub jobs: u64,
+    /// First/last submission time.
+    pub first_submit: u64,
+    pub last_submit: u64,
+    /// `last − first`.
+    pub span_seconds: u64,
+    /// Normalized weight of each 30-minute day slot (Slot Weight Method).
+    pub slot_weights: Vec<f64>,
+    /// Normalized hour-of-day (24), day-of-week (7), month (12) shares.
+    pub hourly: Vec<f64>,
+    pub daily: Vec<f64>,
+    pub monthly: Vec<f64>,
+    /// Maximum inter-arrival time in days (the paper's modified `v_max`).
+    pub max_interarrival_days: f64,
+    /// Empirical processor-count distribution `(procs, weight)`.
+    pub procs_dist: Vec<(u64, f64)>,
+    /// Log-normal fit of per-job theoretical GFLOPs: `ln` mean and σ.
+    pub log_gflops_mu: f64,
+    pub log_gflops_sigma: f64,
+}
+
+impl SeedStats {
+    /// Fit statistics from an SWF file.
+    pub fn from_swf<P: AsRef<std::path::Path>>(
+        path: P,
+        performance: &BTreeMap<String, f64>,
+    ) -> anyhow::Result<Self> {
+        let mut reader = SwfReader::open(path)?;
+        let mut recs = Vec::new();
+        while let Some(r) = reader.next_record() {
+            if let Ok(f) = r {
+                recs.push(f);
+            }
+        }
+        anyhow::ensure!(!recs.is_empty(), "seed workload is empty");
+        Ok(Self::from_records(recs.iter(), performance))
+    }
+
+    /// Fit statistics from raw records.
+    pub fn from_records<'a, I: Iterator<Item = &'a SwfFields>>(
+        records: I,
+        performance: &BTreeMap<String, f64>,
+    ) -> Self {
+        let perf_core = performance.get("core").copied().unwrap_or(1.0);
+        let mut slot_counts = vec![0u64; DAY_SLOTS];
+        let mut hourly = vec![0u64; 24];
+        let mut daily = vec![0u64; 7];
+        let mut monthly = vec![0u64; 12];
+        let mut procs_counts: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut log_flops: Vec<f64> = Vec::new();
+        let mut first = u64::MAX;
+        let mut last = 0u64;
+        let mut prev: Option<u64> = None;
+        let mut max_inter = 0u64;
+        let mut n = 0u64;
+
+        for f in records {
+            if f.submit_time < 0 {
+                continue;
+            }
+            let t = f.submit_time as u64;
+            n += 1;
+            first = first.min(t);
+            last = last.max(t);
+            if let Some(p) = prev {
+                max_inter = max_inter.max(t.saturating_sub(p));
+            }
+            prev = Some(t);
+            slot_counts[((t % 86_400) / 1800) as usize] += 1;
+            hourly[((t % 86_400) / 3_600) as usize] += 1;
+            daily[(((t / 86_400) + 3) % 7) as usize] += 1;
+            monthly[((((t / 86_400) % 365) as f64) / 30.44).min(11.0) as usize] += 1;
+
+            let procs = if f.requested_procs > 0 {
+                f.requested_procs as u64
+            } else if f.allocated_procs > 0 {
+                f.allocated_procs as u64
+            } else {
+                1
+            };
+            *procs_counts.entry(procs).or_default() += 1;
+            let dur = f.run_time.max(1) as f64;
+            // theoretical FLOPs: duration × procs × per-core GFLOPS
+            log_flops.push((dur * procs as f64 * perf_core).max(1e-9).ln());
+        }
+
+        let n = n.max(1);
+        let norm = |counts: Vec<u64>| -> Vec<f64> {
+            counts.into_iter().map(|c| c as f64 / n as f64).collect()
+        };
+        let mu = log_flops.iter().sum::<f64>() / log_flops.len().max(1) as f64;
+        let var = log_flops.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>()
+            / log_flops.len().max(2) as f64;
+
+        SeedStats {
+            jobs: n,
+            first_submit: if first == u64::MAX { 0 } else { first },
+            last_submit: last,
+            span_seconds: last.saturating_sub(if first == u64::MAX { 0 } else { first }),
+            slot_weights: norm(slot_counts),
+            hourly: norm(hourly),
+            daily: norm(daily),
+            monthly: norm(monthly),
+            max_interarrival_days: (max_inter.max(1) as f64 / 86_400.0).max(1.0 / 48.0),
+            procs_dist: procs_counts
+                .into_iter()
+                .map(|(p, c)| (p, c as f64 / n as f64))
+                .collect(),
+            log_gflops_mu: mu,
+            log_gflops_sigma: var.sqrt().max(1e-6),
+        }
+    }
+
+    /// Recompute the Slot Weight Method weights through the AOT-compiled
+    /// `slot_hist` Pallas kernel (PJRT path). Numerically equivalent to the
+    /// CPU fit in [`SeedStats::from_records`]; used to cross-check the
+    /// L1/L2 artifact against the L3 implementation and as the batch path
+    /// for very large seeds on accelerator backends.
+    pub fn slot_weights_via_engine(
+        times: &[u64],
+        engine: &crate::runtime::Engine,
+    ) -> anyhow::Result<Vec<f64>> {
+        use crate::runtime::shapes::{SLOT_B, SLOT_K};
+        let mut counts = vec![0f64; SLOT_K];
+        let mut buf = vec![0f32; SLOT_B];
+        let mut mask = vec![0f32; SLOT_B];
+        for chunk in times.chunks(SLOT_B) {
+            buf.iter_mut().for_each(|x| *x = 0.0);
+            mask.iter_mut().for_each(|x| *x = 0.0);
+            for (i, &t) in chunk.iter().enumerate() {
+                // f32 cannot hold epoch seconds exactly; the kernel only
+                // needs the time-of-day, so reduce mod 86400 on the host.
+                buf[i] = (t % 86_400) as f32;
+                mask[i] = 1.0;
+            }
+            let out = engine.execute_f32(
+                "slot_hist",
+                &[(&buf, &[SLOT_B as i64]), (&mask, &[SLOT_B as i64])],
+            )?;
+            for (c, v) in counts.iter_mut().zip(&out[0]) {
+                *c += *v as f64;
+            }
+        }
+        let total: f64 = counts.iter().sum();
+        if total > 0.0 {
+            counts.iter_mut().for_each(|c| *c /= total);
+        }
+        Ok(counts)
+    }
+
+    /// Resample a processor count from the empirical distribution.
+    pub fn sample_procs(&self, rng: &mut Pcg64) -> u64 {
+        let weights: Vec<f64> = self.procs_dist.iter().map(|(_, w)| *w).collect();
+        self.procs_dist[rng.weighted_index(&weights)].0
+    }
+
+    /// Sample a theoretical GFLOP value from the log-normal fit.
+    pub fn sample_gflops(&self, rng: &mut Pcg64) -> f64 {
+        rng.lognormal(self.log_gflops_mu, self.log_gflops_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs() -> Vec<SwfFields> {
+        (0..100i64)
+            .map(|i| SwfFields {
+                job_number: i + 1,
+                submit_time: i * 3600, // one per hour
+                run_time: 600,
+                requested_procs: if i % 4 == 0 { 1 } else { 4 },
+                ..Default::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn weights_normalized() {
+        let perf: BTreeMap<String, f64> = [("core".to_string(), 2.0)].into_iter().collect();
+        let s = SeedStats::from_records(recs().iter(), &perf);
+        assert_eq!(s.jobs, 100);
+        assert!((s.slot_weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!((s.hourly.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!((s.daily.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interarrival_and_span() {
+        let perf = BTreeMap::new();
+        let s = SeedStats::from_records(recs().iter(), &perf);
+        assert_eq!(s.first_submit, 0);
+        assert_eq!(s.last_submit, 99 * 3600);
+        assert!((s.max_interarrival_days - 3600.0 / 86_400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn procs_distribution_matches() {
+        let perf = BTreeMap::new();
+        let s = SeedStats::from_records(recs().iter(), &perf);
+        let w1 = s.procs_dist.iter().find(|(p, _)| *p == 1).unwrap().1;
+        let w4 = s.procs_dist.iter().find(|(p, _)| *p == 4).unwrap().1;
+        assert!((w1 - 0.25).abs() < 1e-9);
+        assert!((w4 - 0.75).abs() < 1e-9);
+        let mut rng = Pcg64::new(1);
+        let samples: Vec<u64> = (0..4000).map(|_| s.sample_procs(&mut rng)).collect();
+        let ones = samples.iter().filter(|&&p| p == 1).count() as f64 / 4000.0;
+        assert!((ones - 0.25).abs() < 0.05);
+    }
+
+    #[test]
+    fn gflops_lognormal_fit() {
+        let perf: BTreeMap<String, f64> = [("core".to_string(), 1.0)].into_iter().collect();
+        let s = SeedStats::from_records(recs().iter(), &perf);
+        // flops = 600×1 or 600×4
+        let expected_mu = (0.25 * (600f64).ln()) + (0.75 * (2400f64).ln());
+        assert!((s.log_gflops_mu - expected_mu).abs() < 1e-9);
+        assert!(s.log_gflops_sigma > 0.0);
+    }
+
+    #[test]
+    fn empty_records_are_safe() {
+        let perf = BTreeMap::new();
+        let s = SeedStats::from_records([].iter(), &perf);
+        assert_eq!(s.jobs, 1); // clamped to avoid div-by-zero
+        assert_eq!(s.span_seconds, 0);
+    }
+}

@@ -1,0 +1,96 @@
+//! # AccaSim-RS
+//!
+//! A customizable workload management simulator for job dispatching research in
+//! HPC systems — a Rust + JAX/Pallas reproduction of
+//! *Galleguillos, Kiziltan, Netti, Soto: "AccaSim: a Customizable Workload
+//! Management Simulator for Job Dispatching Research in HPC Systems"* (2018).
+//!
+//! The crate is organised the way the paper's §3 architecture is:
+//!
+//! * [`workload`] — job model, SWF reader/writer, job factory (the *job
+//!   submission* component).
+//! * [`config`] — synthetic system configuration (resource types, node groups).
+//! * [`resources`] — the resource manager: per-node multi-resource accounting.
+//! * [`sim`] — the event manager / discrete-event core driving the
+//!   loaded → queued → running → completed lifecycle.
+//! * [`dispatch`] — schedulers (FIFO, SJF, LJF, EBF) and allocators (FF, BF,
+//!   and the XLA-accelerated [`dispatch::XlaFit`]).
+//! * [`addons`] — the *additional data* interface (power/energy, failures).
+//! * [`monitor`] — system status, utilization visualization, CPU/memory probes.
+//! * [`output`] — dispatching-decision and simulator-performance records.
+//! * [`stats`] — descriptive statistics used by the plot factory.
+//! * [`plotdata`] — the results-visualization tool: emits the data series behind
+//!   every figure in the paper (Figs 10–17).
+//! * [`experiment`] — the experimentation tool (dispatcher cross-products).
+//! * [`generator`] — the synthetic workload generator (§7.3).
+//! * [`traces`] — deterministic synthesizers for Seth/RICC/MetaCentrum-like
+//!   traces (substitute for the online SWF archives; see DESIGN.md).
+//! * [`baselines`] — eager-loading baseline simulator modes used to reproduce
+//!   Table 1's AccaSim-vs-Batsim/Alea comparison shape.
+//! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas kernels
+//!   from `artifacts/*.hlo.txt` and executes them from the Rust hot path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use accasim::prelude::*;
+//!
+//! let sys = SysConfig::from_json_file("configs/seth.json").unwrap();
+//! let dispatcher = Dispatcher::new(Box::new(FifoScheduler::new()), Box::new(FirstFit::new()));
+//! let mut sim = Simulator::new("data/seth.swf", sys, dispatcher, SimOptions::default()).unwrap();
+//! let out = sim.run().unwrap();
+//! println!("completed {} jobs, makespan {}s", out.jobs_completed, out.makespan);
+//! ```
+
+pub mod addons;
+pub mod baselines;
+pub mod benchkit;
+pub mod config;
+pub mod dispatch;
+pub mod experiment;
+pub mod generator;
+pub mod monitor;
+pub mod output;
+pub mod plotdata;
+pub mod resources;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+#[doc(hidden)]
+pub mod testkit;
+#[doc(hidden)]
+pub mod testutil;
+pub mod traces;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports covering the public API surface used by examples.
+pub mod prelude {
+    pub use crate::addons::{AdditionalData, PowerModel};
+    pub use crate::config::SysConfig;
+    pub use crate::dispatch::{
+        BestFit, ConservativeBackfilling, Dispatcher, EasyBackfilling, FifoScheduler,
+        FirstFit, LjfScheduler, PowerCapped, RejectScheduler, SjfScheduler, WorstFit, XlaFit,
+    };
+    pub use crate::experiment::Experiment;
+    pub use crate::generator::WorkloadGenerator;
+    pub use crate::plotdata::PlotFactory;
+    pub use crate::resources::ResourceManager;
+    pub use crate::sim::{SimOptions, SimOutput, Simulator};
+    pub use crate::workload::{Job, JobState, SwfReader, SwfWriter};
+}
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn version_is_semver() {
+        let v = super::version();
+        assert_eq!(v.split('.').count(), 3);
+    }
+}

@@ -1,0 +1,7 @@
+//! `accasim` CLI — leader entrypoint. See `accasim --help`.
+
+mod cli;
+
+fn main() -> anyhow::Result<()> {
+    cli::run()
+}

@@ -1,0 +1,247 @@
+//! Monitoring tools (§3, *tools*): process CPU/memory probes (the data
+//! behind Tables 1–2 and Figures 12–13), the *system status* query
+//! (Figure 8) and the *system utilization* visualization (Figure 9, ASCII).
+
+use crate::resources::ResourceManager;
+
+/// Resident-set sampling via `/proc/self/statm` + peak via `VmHWM`.
+/// (The paper samples with psutil every 10 ms from a parent process; we
+/// sample in-process at event granularity — same metric, see DESIGN.md.)
+#[derive(Debug, Default, Clone)]
+pub struct MemProbe {
+    page_kb: u64,
+    /// Sum and count of samples for the average; max of samples for peak.
+    pub samples: u64,
+    pub sum_kb: u64,
+    pub max_kb: u64,
+}
+
+impl MemProbe {
+    pub fn new() -> Self {
+        // conservative default when sysconf isn't readable: 4 KiB pages
+        MemProbe { page_kb: 4, samples: 0, sum_kb: 0, max_kb: 0 }
+    }
+
+    /// Current RSS in KB (0 when /proc is unavailable, e.g. non-Linux).
+    pub fn rss_kb(&self) -> u64 {
+        let Ok(s) = std::fs::read_to_string("/proc/self/statm") else {
+            return 0;
+        };
+        s.split_ascii_whitespace()
+            .nth(1)
+            .and_then(|x| x.parse::<u64>().ok())
+            .map(|pages| pages * self.page_kb)
+            .unwrap_or(0)
+    }
+
+    /// Peak RSS (VmHWM) in KB since process start.
+    pub fn peak_rss_kb(&self) -> u64 {
+        let Ok(s) = std::fs::read_to_string("/proc/self/status") else {
+            return 0;
+        };
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                return rest
+                    .trim()
+                    .trim_end_matches(" kB")
+                    .trim()
+                    .parse::<u64>()
+                    .unwrap_or(0);
+            }
+        }
+        0
+    }
+
+    /// Take a sample, updating avg/max accumulators; returns the sample.
+    pub fn sample(&mut self) -> u64 {
+        let kb = self.rss_kb();
+        self.samples += 1;
+        self.sum_kb += kb;
+        self.max_kb = self.max_kb.max(kb);
+        kb
+    }
+
+    /// Average of samples taken so far (KB).
+    pub fn avg_kb(&self) -> u64 {
+        if self.samples == 0 {
+            0
+        } else {
+            self.sum_kb / self.samples
+        }
+    }
+}
+
+/// Process CPU time (user + system) in milliseconds, via `/proc/self/stat`.
+pub fn process_cpu_ms() -> u64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/stat") else {
+        return 0;
+    };
+    // fields after the parenthesized comm; utime is field 14, stime 15 (1-based)
+    let Some(close) = s.rfind(')') else { return 0 };
+    let rest: Vec<&str> = s[close + 1..].split_ascii_whitespace().collect();
+    let utime: u64 = rest.get(11).and_then(|x| x.parse().ok()).unwrap_or(0);
+    let stime: u64 = rest.get(12).and_then(|x| x.parse().ok()).unwrap_or(0);
+    // CLK_TCK is 100 on every Linux we target → 10 ms per tick.
+    (utime + stime) * 10
+}
+
+/// A snapshot of the current synthetic system status (Figure 8).
+#[derive(Debug, Clone, Default)]
+pub struct SystemStatus {
+    pub sim_time: u64,
+    pub loaded: usize,
+    pub queued: usize,
+    pub running: usize,
+    pub completed: u64,
+    pub rejected: u64,
+    /// `(resource type, used, capacity)` triples.
+    pub usage: Vec<(String, u64, u64)>,
+    /// Simulator CPU time elapsed so far (ms).
+    pub cpu_ms: u64,
+}
+
+impl SystemStatus {
+    /// Gather a status snapshot from the resource manager + counters.
+    pub fn gather(
+        sim_time: u64,
+        loaded: usize,
+        queued: usize,
+        running: usize,
+        completed: u64,
+        rejected: u64,
+        rm: &ResourceManager,
+        cpu_ms: u64,
+    ) -> Self {
+        let usage = rm
+            .resource_types()
+            .iter()
+            .enumerate()
+            .map(|(r, name)| {
+                let cap: u64 = (0..rm.num_nodes()).map(|n| rm.node_capacity(n)[r]).sum();
+                let free: u64 = (0..rm.num_nodes()).map(|n| rm.node_free(n)[r]).sum();
+                (name.clone(), cap - free, cap)
+            })
+            .collect();
+        SystemStatus { sim_time, loaded, queued, running, completed, rejected, usage, cpu_ms }
+    }
+
+    /// Render the Figure-8-style status panel.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("simulation time : {}\n", self.sim_time));
+        out.push_str(&format!(
+            "jobs            : loaded={} queued={} running={} completed={} rejected={}\n",
+            self.loaded, self.queued, self.running, self.completed, self.rejected
+        ));
+        for (name, used, cap) in &self.usage {
+            let pct = if *cap == 0 { 0.0 } else { 100.0 * *used as f64 / *cap as f64 };
+            out.push_str(&format!("{name:<12}: {used}/{cap} ({pct:.1}%)\n"));
+        }
+        out.push_str(&format!("simulator CPU   : {} ms\n", self.cpu_ms));
+        out
+    }
+}
+
+/// Figure-9-style utilization visualization: one ASCII block row per
+/// resource type, one cell per node shaded by its utilization.
+pub fn render_utilization(rm: &ResourceManager, width: usize) -> String {
+    const SHADES: [char; 5] = [' ', '░', '▒', '▓', '█'];
+    let mut out = String::new();
+    let nodes = rm.num_nodes();
+    let per_cell = nodes.div_ceil(width.max(1));
+    for (r, name) in rm.resource_types().iter().enumerate() {
+        out.push_str(&format!("{name:<10} |"));
+        let mut n = 0;
+        while n < nodes {
+            let hi = (n + per_cell).min(nodes);
+            let mut used = 0u64;
+            let mut cap = 0u64;
+            for node in n..hi {
+                cap += rm.node_capacity(node)[r];
+                used += rm.node_capacity(node)[r] - rm.node_free(node)[r];
+            }
+            let frac = if cap == 0 { 0.0 } else { used as f64 / cap as f64 };
+            let idx = ((frac * 4.0).round() as usize).min(4);
+            out.push(SHADES[idx]);
+            n = hi;
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SysConfig;
+    use crate::resources::Allocation;
+    use crate::workload::Job;
+
+    fn rm() -> ResourceManager {
+        ResourceManager::from_config(&SysConfig::homogeneous("t", 4, &[("core", 4)], 0))
+    }
+
+    #[test]
+    fn mem_probe_reads_positive_rss() {
+        let mut p = MemProbe::new();
+        let kb = p.sample();
+        assert!(kb > 0, "rss should be positive on linux");
+        assert!(p.peak_rss_kb() >= kb / 2);
+        assert_eq!(p.avg_kb(), kb);
+        assert_eq!(p.max_kb, kb);
+    }
+
+    #[test]
+    fn cpu_probe_monotonic() {
+        let a = process_cpu_ms();
+        // burn a little cpu
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let b = process_cpu_ms();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn status_render_contains_counts() {
+        let rm = rm();
+        let st = SystemStatus::gather(1234, 5, 3, 2, 100, 1, &rm, 42);
+        let s = st.render();
+        assert!(s.contains("queued=3"));
+        assert!(s.contains("completed=100"));
+        assert!(s.contains("core"));
+        assert!(s.contains("0/16"));
+    }
+
+    #[test]
+    fn utilization_render_shades_busy_nodes() {
+        let mut rm = rm();
+        let j = Job {
+            id: 1,
+            submit: 0,
+            duration: 1,
+            req_time: 1,
+            slots: 4,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+        };
+        rm.allocate(&j, Allocation { slices: vec![(0, 4)] }).unwrap();
+        let viz = render_utilization(&rm, 4);
+        assert!(viz.contains('█'));
+        assert!(viz.contains(' '));
+        assert!(viz.starts_with("core"));
+    }
+
+    #[test]
+    fn utilization_render_narrow_width_aggregates() {
+        let rm = rm();
+        let viz = render_utilization(&rm, 2);
+        // 4 nodes in 2 cells + label/pipes
+        let line = viz.lines().next().unwrap();
+        assert_eq!(line.chars().filter(|c| *c == ' ' || *c == '█').count() >= 2, true);
+    }
+}

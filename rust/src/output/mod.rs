@@ -1,0 +1,238 @@
+//! Output data (§3, *output*): per-job dispatching records (decision
+//! quality) and per-time-point simulator performance records (simulation
+//! process), streamed to CSV and/or kept in memory for the plot factory.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Execution record of one dispatched job (first output type of §3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobRecord {
+    pub id: u64,
+    pub submit: u64,
+    pub start: u64,
+    pub end: u64,
+    pub slots: u32,
+    /// Waiting time `T_w = start - submit`.
+    pub wait: u64,
+    /// Slowdown `(T_w + T_r) / T_r`.
+    pub slowdown: f64,
+}
+
+impl JobRecord {
+    pub const CSV_HEADER: &'static str = "id,submit,start,end,slots,wait,slowdown";
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{:.6}",
+            self.id, self.submit, self.start, self.end, self.slots, self.wait, self.slowdown
+        )
+    }
+}
+
+/// Simulator-performance record at one simulation time point (second output
+/// type of §3): CPU time of the dispatch decision vs. the rest, queue size,
+/// memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfRecord {
+    /// Simulation time point.
+    pub t: u64,
+    /// Wall-clock nanoseconds spent generating the dispatching decision.
+    pub dispatch_ns: u64,
+    /// Wall-clock nanoseconds spent on everything else at this time point
+    /// (event processing, loading, bookkeeping).
+    pub other_ns: u64,
+    /// Queue length *before* the decision.
+    pub queue_len: u32,
+    /// Running jobs after the decision.
+    pub running: u32,
+    /// Jobs started by the decision.
+    pub started: u32,
+    /// RSS sample in KB (0 when not sampled at this point).
+    pub rss_kb: u64,
+}
+
+impl PerfRecord {
+    pub const CSV_HEADER: &'static str = "t,dispatch_ns,other_ns,queue_len,running,started,rss_kb";
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{}",
+            self.t, self.dispatch_ns, self.other_ns, self.queue_len, self.running, self.started,
+            self.rss_kb
+        )
+    }
+}
+
+/// Where simulation records go: optional CSV streams plus optional in-memory
+/// retention (the plot factory consumes the in-memory form).
+#[derive(Default)]
+pub struct OutputCollector {
+    job_file: Option<BufWriter<std::fs::File>>,
+    perf_file: Option<BufWriter<std::fs::File>>,
+    /// In-memory job records (only when `keep_jobs`).
+    pub jobs: Vec<JobRecord>,
+    /// In-memory perf records (only when `keep_perf`).
+    pub perf: Vec<PerfRecord>,
+    keep_jobs: bool,
+    keep_perf: bool,
+}
+
+impl OutputCollector {
+    /// A collector that drops everything (Table-1 style overhead runs).
+    pub fn null() -> Self {
+        Self::default()
+    }
+
+    /// Keep records in memory for later analysis.
+    pub fn in_memory(jobs: bool, perf: bool) -> Self {
+        OutputCollector { keep_jobs: jobs, keep_perf: perf, ..Default::default() }
+    }
+
+    /// Stream job records to a CSV file.
+    pub fn with_job_file<P: AsRef<Path>>(mut self, path: P) -> anyhow::Result<Self> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "{}", JobRecord::CSV_HEADER)?;
+        self.job_file = Some(w);
+        Ok(self)
+    }
+
+    /// Stream perf records to a CSV file.
+    pub fn with_perf_file<P: AsRef<Path>>(mut self, path: P) -> anyhow::Result<Self> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "{}", PerfRecord::CSV_HEADER)?;
+        self.perf_file = Some(w);
+        Ok(self)
+    }
+
+    /// Record a completed job.
+    pub fn record_job(&mut self, rec: JobRecord) {
+        if let Some(w) = &mut self.job_file {
+            let _ = writeln!(w, "{}", rec.to_csv());
+        }
+        if self.keep_jobs {
+            self.jobs.push(rec);
+        }
+    }
+
+    /// Record a time-point performance sample.
+    pub fn record_perf(&mut self, rec: PerfRecord) {
+        if let Some(w) = &mut self.perf_file {
+            let _ = writeln!(w, "{}", rec.to_csv());
+        }
+        if self.keep_perf {
+            self.perf.push(rec);
+        }
+    }
+
+    /// Flush file streams.
+    pub fn finish(&mut self) -> anyhow::Result<()> {
+        if let Some(w) = &mut self.job_file {
+            w.flush()?;
+        }
+        if let Some(w) = &mut self.perf_file {
+            w.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse a job-record CSV produced by [`OutputCollector`] (for re-analysis
+/// of saved runs, mirroring `PlotFactory.set_files`).
+pub fn read_job_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<JobRecord>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(f.len() == 7, "bad job csv line {}", i + 1);
+        out.push(JobRecord {
+            id: f[0].parse()?,
+            submit: f[1].parse()?,
+            start: f[2].parse()?,
+            end: f[3].parse()?,
+            slots: f[4].parse()?,
+            wait: f[5].parse()?,
+            slowdown: f[6].parse()?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::testutil as tempfile;
+
+    fn rec(id: u64) -> JobRecord {
+        JobRecord { id, submit: 10, start: 20, end: 50, slots: 2, wait: 10, slowdown: 1.333333 }
+    }
+
+    #[test]
+    fn null_collector_drops_everything() {
+        let mut c = OutputCollector::null();
+        c.record_job(rec(1));
+        c.record_perf(PerfRecord {
+            t: 1,
+            dispatch_ns: 2,
+            other_ns: 3,
+            queue_len: 4,
+            running: 5,
+            started: 6,
+            rss_kb: 7,
+        });
+        assert!(c.jobs.is_empty());
+        assert!(c.perf.is_empty());
+        c.finish().unwrap();
+    }
+
+    #[test]
+    fn in_memory_keeps_records() {
+        let mut c = OutputCollector::in_memory(true, true);
+        c.record_job(rec(1));
+        c.record_job(rec(2));
+        assert_eq!(c.jobs.len(), 2);
+        assert_eq!(c.jobs[1].id, 2);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("jobs.csv");
+        let mut c = OutputCollector::null().with_job_file(&p).unwrap();
+        c.record_job(rec(1));
+        c.record_job(rec(2));
+        c.finish().unwrap();
+        let back = read_job_csv(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].id, 1);
+        assert_eq!(back[0].wait, 10);
+        assert!((back[0].slowdown - 1.333333).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perf_csv_format() {
+        let r = PerfRecord {
+            t: 100,
+            dispatch_ns: 5000,
+            other_ns: 300,
+            queue_len: 7,
+            running: 3,
+            started: 2,
+            rss_kb: 18000,
+        };
+        assert_eq!(r.to_csv(), "100,5000,300,7,3,2,18000");
+        assert_eq!(PerfRecord::CSV_HEADER.split(',').count(), r.to_csv().split(',').count());
+    }
+
+    #[test]
+    fn read_job_csv_rejects_malformed() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("bad.csv");
+        std::fs::write(&p, "id,submit\n1,2,3\n").unwrap();
+        assert!(read_job_csv(&p).is_err());
+    }
+}

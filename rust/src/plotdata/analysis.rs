@@ -1,0 +1,219 @@
+//! Deeper output analysis (§7.2: "AccaSim users are free to analyze the
+//! output data as they wish"): per-user aggregates, the system-utilization
+//! timeline, weekly submission profiles, and wait-vs-size breakdowns.
+
+use crate::output::JobRecord;
+use crate::stats::{mean, BoxStats};
+use std::collections::BTreeMap;
+
+/// Per-user aggregate over job records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UserStats {
+    pub jobs: u64,
+    pub total_wait: u64,
+    pub avg_slowdown: f64,
+    pub core_seconds: u64,
+}
+
+/// Aggregate job records per user id (requires the job table to map record
+/// ids to users; pass a lookup closure).
+pub fn per_user<F: Fn(u64) -> u32>(records: &[JobRecord], user_of: F) -> BTreeMap<u32, UserStats> {
+    let mut acc: BTreeMap<u32, (u64, u64, f64, u64)> = BTreeMap::new();
+    for r in records {
+        let e = acc.entry(user_of(r.id)).or_default();
+        e.0 += 1;
+        e.1 += r.wait;
+        e.2 += r.slowdown;
+        e.3 += (r.end - r.start) * r.slots as u64;
+    }
+    acc.into_iter()
+        .map(|(u, (jobs, total_wait, sd, cs))| {
+            (
+                u,
+                UserStats {
+                    jobs,
+                    total_wait,
+                    avg_slowdown: sd / jobs as f64,
+                    core_seconds: cs,
+                },
+            )
+        })
+        .collect()
+}
+
+/// System-utilization timeline: slot-seconds in use, sampled at each
+/// start/end event; returns `(time, busy_slots)` steps.
+pub fn utilization_timeline(records: &[JobRecord]) -> Vec<(u64, u64)> {
+    let mut deltas: BTreeMap<u64, i64> = BTreeMap::new();
+    for r in records {
+        *deltas.entry(r.start).or_default() += r.slots as i64;
+        *deltas.entry(r.end).or_default() -= r.slots as i64;
+    }
+    let mut busy = 0i64;
+    deltas
+        .into_iter()
+        .map(|(t, d)| {
+            busy += d;
+            debug_assert!(busy >= 0);
+            (t, busy as u64)
+        })
+        .collect()
+}
+
+/// Average busy slots weighted by interval length (the area under
+/// [`utilization_timeline`] divided by the horizon).
+pub fn avg_utilization_slots(records: &[JobRecord]) -> f64 {
+    let tl = utilization_timeline(records);
+    if tl.len() < 2 {
+        return 0.0;
+    }
+    let mut area = 0u128;
+    for w in tl.windows(2) {
+        area += (w[1].0 - w[0].0) as u128 * w[0].1 as u128;
+    }
+    let span = tl.last().unwrap().0 - tl[0].0;
+    if span == 0 {
+        0.0
+    } else {
+        area as f64 / span as f64
+    }
+}
+
+/// Weekly submission profile: 7×24 normalized weights (Fig 14's structure,
+/// one row per weekday).
+pub fn weekly_profile(times: &[u64]) -> [[f64; 24]; 7] {
+    let mut counts = [[0u64; 24]; 7];
+    for &t in times {
+        let dow = ((t / 86_400 + 3) % 7) as usize;
+        let hour = ((t % 86_400) / 3_600) as usize;
+        counts[dow][hour] += 1;
+    }
+    let total: u64 = counts.iter().flatten().sum();
+    let mut out = [[0f64; 24]; 7];
+    if total > 0 {
+        for d in 0..7 {
+            for h in 0..24 {
+                out[d][h] = counts[d][h] as f64 / total as f64;
+            }
+        }
+    }
+    out
+}
+
+/// Wait-time distribution bucketed by job size (slot count ranges),
+/// the classic "do big jobs starve?" check.
+pub fn wait_by_size(records: &[JobRecord]) -> Vec<(String, BoxStats)> {
+    let buckets: [(&str, std::ops::Range<u32>); 4] = [
+        ("1", 1..2),
+        ("2-8", 2..9),
+        ("9-64", 9..65),
+        ("65+", 65..u32::MAX),
+    ];
+    buckets
+        .iter()
+        .map(|(label, range)| {
+            let waits: Vec<f64> = records
+                .iter()
+                .filter(|r| range.contains(&r.slots))
+                .map(|r| r.wait as f64)
+                .collect();
+            (label.to_string(), BoxStats::from(&waits))
+        })
+        .collect()
+}
+
+/// One-line textual report of a record set.
+pub fn summary_line(records: &[JobRecord]) -> String {
+    let sd: Vec<f64> = records.iter().map(|r| r.slowdown).collect();
+    let wait: Vec<f64> = records.iter().map(|r| r.wait as f64).collect();
+    format!(
+        "{} jobs | slowdown mean {:.2} max {:.2} | wait mean {:.0}s | avg busy slots {:.1}",
+        records.len(),
+        mean(&sd),
+        sd.iter().copied().fold(0.0, f64::max),
+        mean(&wait),
+        avg_utilization_slots(records),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, start: u64, end: u64, slots: u32, wait: u64) -> JobRecord {
+        JobRecord {
+            id,
+            submit: start.saturating_sub(wait),
+            start,
+            end,
+            slots,
+            wait,
+            slowdown: (wait + (end - start).max(1)) as f64 / (end - start).max(1) as f64,
+        }
+    }
+
+    #[test]
+    fn per_user_aggregates() {
+        let recs = vec![rec(1, 10, 20, 2, 0), rec(2, 10, 30, 1, 10), rec(3, 40, 50, 4, 5)];
+        let stats = per_user(&recs, |id| if id < 3 { 7 } else { 9 });
+        assert_eq!(stats[&7].jobs, 2);
+        assert_eq!(stats[&7].total_wait, 10);
+        assert_eq!(stats[&7].core_seconds, 2 * 10 + 20);
+        assert_eq!(stats[&9].jobs, 1);
+        assert_eq!(stats[&9].core_seconds, 40);
+    }
+
+    #[test]
+    fn utilization_timeline_steps() {
+        let recs = vec![rec(1, 0, 10, 2, 0), rec(2, 5, 15, 3, 0)];
+        let tl = utilization_timeline(&recs);
+        assert_eq!(tl, vec![(0, 2), (5, 5), (10, 3), (15, 0)]);
+    }
+
+    #[test]
+    fn avg_utilization_area() {
+        // 2 slots over [0,10), 3 more over [5,15) → area = 2*5 + 5*5 + 3*5 = 50
+        let recs = vec![rec(1, 0, 10, 2, 0), rec(2, 5, 15, 3, 0)];
+        let avg = avg_utilization_slots(&recs);
+        assert!((avg - 50.0 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn avg_utilization_degenerate() {
+        assert_eq!(avg_utilization_slots(&[]), 0.0);
+        assert_eq!(avg_utilization_slots(&[rec(1, 5, 5, 1, 0)]), 0.0);
+    }
+
+    #[test]
+    fn weekly_profile_normalized() {
+        let monday_9am = 4 * 86_400 + 9 * 3_600;
+        let times = vec![monday_9am; 5];
+        let p = weekly_profile(&times);
+        assert!((p[0][9] - 1.0).abs() < 1e-12);
+        let total: f64 = p.iter().flatten().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_by_size_buckets() {
+        let recs = vec![
+            rec(1, 10, 20, 1, 5),
+            rec(2, 10, 20, 4, 50),
+            rec(3, 10, 20, 32, 500),
+            rec(4, 10, 20, 100, 5000),
+        ];
+        let buckets = wait_by_size(&recs);
+        assert_eq!(buckets.len(), 4);
+        assert_eq!(buckets[0].1.n, 1);
+        assert_eq!(buckets[0].1.median, 5.0);
+        assert_eq!(buckets[3].1.median, 5000.0);
+    }
+
+    #[test]
+    fn summary_line_contains_counts() {
+        let recs = vec![rec(1, 0, 10, 2, 10)];
+        let s = summary_line(&recs);
+        assert!(s.contains("1 jobs"));
+        assert!(s.contains("slowdown"));
+    }
+}

@@ -1,0 +1,392 @@
+//! The results-visualization tool (§3, *tools*): turns simulation output
+//! into the exact data series behind every evaluation figure of the paper.
+//!
+//! Decision-related plots: job slowdown (Fig 10) and queue size (Fig 11)
+//! distributions. Performance-related plots: average CPU time per simulation
+//! time point (Fig 12) and dispatch CPU time vs. queue size (Fig 13).
+//! Workload-comparison plots: submission-time distributions (Figs 14–15)
+//! and job GFLOPS distributions (Figs 16–17).
+//!
+//! Series are emitted as CSV (the reproducible artifact of a figure) plus a
+//! quick ASCII rendering for the terminal.
+
+pub mod analysis;
+
+use crate::sim::SimOutput;
+use crate::stats::{BoxStats, Histogram};
+use std::path::Path;
+
+/// Plot kinds, mirroring `PlotFactory.produce_plot` arguments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlotKind {
+    /// Fig 10: distribution of job slowdown per dispatcher.
+    Slowdown,
+    /// Fig 11: distribution of queue size per dispatcher.
+    QueueSize,
+    /// Fig 12: average CPU time at a simulation time point per dispatcher.
+    CpuTime,
+    /// Fig 13: average dispatch CPU time vs queue size per dispatcher.
+    Scalability,
+}
+
+/// A labeled collection of simulation results to compare (one entry per
+/// dispatcher, typically over several repetitions).
+#[derive(Default)]
+pub struct PlotFactory {
+    runs: Vec<(String, Vec<SimOutput>)>,
+}
+
+impl PlotFactory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register the results of one dispatcher (any number of repetitions),
+    /// mirroring `PlotFactory.set_files`.
+    pub fn add_run(&mut self, label: impl Into<String>, outputs: Vec<SimOutput>) {
+        self.runs.push((label.into(), outputs));
+    }
+
+    /// Labels in insertion order.
+    pub fn labels(&self) -> Vec<&str> {
+        self.runs.iter().map(|(l, _)| l.as_str()).collect()
+    }
+
+    /// Fig 10 series: slowdown box stats per dispatcher.
+    pub fn slowdown_boxes(&self) -> Vec<(String, BoxStats)> {
+        self.runs
+            .iter()
+            .map(|(label, outs)| {
+                let xs: Vec<f64> =
+                    outs.iter().flat_map(|o| o.jobs.iter().map(|j| j.slowdown)).collect();
+                (label.clone(), BoxStats::from(&xs))
+            })
+            .collect()
+    }
+
+    /// Fig 11 series: queue-size box stats per dispatcher (queue length at
+    /// each dispatching time point).
+    pub fn queue_boxes(&self) -> Vec<(String, BoxStats)> {
+        self.runs
+            .iter()
+            .map(|(label, outs)| {
+                let xs: Vec<f64> = outs
+                    .iter()
+                    .flat_map(|o| o.perf.iter().map(|p| p.queue_len as f64))
+                    .collect();
+                (label.clone(), BoxStats::from(&xs))
+            })
+            .collect()
+    }
+
+    /// Fig 12 series: `(label, avg dispatch ms, avg other ms)` per
+    /// simulation time point.
+    pub fn cpu_time_rows(&self) -> Vec<(String, f64, f64)> {
+        self.runs
+            .iter()
+            .map(|(label, outs)| {
+                let mut disp = 0u128;
+                let mut other = 0u128;
+                let mut n = 0u128;
+                for o in outs {
+                    disp += o.dispatch_ns as u128;
+                    other += o.other_ns as u128;
+                    n += o.time_points as u128;
+                }
+                let n = n.max(1) as f64;
+                (label.clone(), disp as f64 / n / 1e6, other as f64 / n / 1e6)
+            })
+            .collect()
+    }
+
+    /// Fig 13 series: `(label, queue-size bucket, avg dispatch ms)`.
+    /// Queue sizes are grouped into buckets of width `bucket`.
+    pub fn scalability_rows(&self, bucket: u32) -> Vec<(String, u32, f64)> {
+        let bucket = bucket.max(1);
+        let mut rows = Vec::new();
+        for (label, outs) in &self.runs {
+            let mut acc: std::collections::BTreeMap<u32, (u128, u64)> = Default::default();
+            for o in outs {
+                for p in &o.perf {
+                    let b = (p.queue_len / bucket) * bucket;
+                    let e = acc.entry(b).or_default();
+                    e.0 += p.dispatch_ns as u128;
+                    e.1 += 1;
+                }
+            }
+            for (b, (ns, n)) in acc {
+                rows.push((label.clone(), b, ns as f64 / n as f64 / 1e6));
+            }
+        }
+        rows
+    }
+
+    /// Write the CSV for a plot kind; returns the written path.
+    pub fn produce_plot<P: AsRef<Path>>(&self, kind: PlotKind, path: P) -> anyhow::Result<()> {
+        let mut out = String::new();
+        match kind {
+            PlotKind::Slowdown | PlotKind::QueueSize => {
+                out.push_str(&format!("label,{}\n", BoxStats::CSV_HEADER));
+                let boxes = if kind == PlotKind::Slowdown {
+                    self.slowdown_boxes()
+                } else {
+                    self.queue_boxes()
+                };
+                for (label, b) in boxes {
+                    out.push_str(&format!("{label},{}\n", b.to_csv()));
+                }
+            }
+            PlotKind::CpuTime => {
+                out.push_str("label,avg_dispatch_ms,avg_other_ms\n");
+                for (label, d, o) in self.cpu_time_rows() {
+                    out.push_str(&format!("{label},{d:.6},{o:.6}\n"));
+                }
+            }
+            PlotKind::Scalability => {
+                out.push_str("label,queue_size,avg_dispatch_ms\n");
+                for (label, q, ms) in self.scalability_rows(10) {
+                    out.push_str(&format!("{label},{q},{ms:.6}\n"));
+                }
+            }
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// ASCII rendering of the Fig 10/11 style box plots.
+    pub fn render_boxes(&self, kind: PlotKind, width: usize) -> String {
+        let boxes = match kind {
+            PlotKind::Slowdown => self.slowdown_boxes(),
+            PlotKind::QueueSize => self.queue_boxes(),
+            _ => return String::new(),
+        };
+        let hi = boxes
+            .iter()
+            .map(|(_, b)| b.whisker_hi)
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(1e-9);
+        let mut out = String::new();
+        let scale = |x: f64| ((x / hi) * (width.saturating_sub(1)) as f64) as usize;
+        for (label, b) in &boxes {
+            if b.n == 0 {
+                continue;
+            }
+            let mut row = vec![' '; width];
+            let (wl, q1, md, q3, wh) = (
+                scale(b.whisker_lo),
+                scale(b.q1),
+                scale(b.median),
+                scale(b.q3),
+                scale(b.whisker_hi),
+            );
+            for c in row.iter_mut().take(wh + 1).skip(wl) {
+                *c = '-';
+            }
+            for c in row.iter_mut().take(q3 + 1).skip(q1) {
+                *c = '=';
+            }
+            row[md.min(width - 1)] = '#';
+            let line: String = row.into_iter().collect();
+            out.push_str(&format!(
+                "{label:<10} |{line}| med={:.2} mean={:.2}\n",
+                b.median, b.mean
+            ));
+        }
+        out
+    }
+}
+
+/// Submission-time distributions for Figs 14–15: normalized hourly (24),
+/// day-of-week (7) and monthly (12) weights of epoch-second timestamps.
+pub fn submission_distributions(times: &[u64]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut hourly = Histogram::new(0.0, 24.0, 24);
+    let mut daily = Histogram::new(0.0, 7.0, 7);
+    let mut monthly = Histogram::new(0.0, 12.0, 12);
+    for &t in times {
+        let days = t / 86_400;
+        hourly.add(((t % 86_400) / 3_600) as f64);
+        // epoch day 0 = Thursday (1970-01-01); weekday index 0 = Monday
+        daily.add(((days + 3) % 7) as f64);
+        // month via proportional 30.44-day months within the year
+        let day_of_year = (days % 365) as f64;
+        monthly.add((day_of_year / 30.44).min(11.0));
+    }
+    (hourly.weights(), daily.weights(), monthly.weights())
+}
+
+/// GFLOPS histogram for Figs 16–17 over per-job theoretical GFLOP values,
+/// log10-binned between `10^lo` and `10^hi`.
+pub fn gflops_histogram(gflops: &[f64], lo: f64, hi: f64, bins: usize) -> Histogram {
+    let mut h = Histogram::new(lo, hi, bins);
+    for &g in gflops {
+        h.add(g.max(1e-12).log10());
+    }
+    h
+}
+
+/// Write a labeled multi-series CSV: `series,bin,value` rows (used for the
+/// Fig 14–17 real-vs-generated comparisons).
+pub fn write_series_csv<P: AsRef<Path>>(
+    path: P,
+    header: &str,
+    series: &[(String, Vec<f64>)],
+) -> anyhow::Result<()> {
+    let mut out = String::from(header);
+    out.push('\n');
+    for (name, values) in series {
+        for (i, v) in values.iter().enumerate() {
+            out.push_str(&format!("{name},{i},{v:.8}\n"));
+        }
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::testutil as tempfile;
+    use crate::output::{JobRecord, PerfRecord};
+
+    fn out_with(slowdowns: &[f64], queues: &[u32]) -> SimOutput {
+        let jobs = slowdowns
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| JobRecord {
+                id: i as u64,
+                submit: 0,
+                start: 0,
+                end: 10,
+                slots: 1,
+                wait: 0,
+                slowdown: s,
+            })
+            .collect();
+        let perf = queues
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| PerfRecord {
+                t: i as u64,
+                dispatch_ns: 1_000_000,
+                other_ns: 200_000,
+                queue_len: q,
+                running: 0,
+                started: 0,
+                rss_kb: 0,
+            })
+            .collect();
+        SimOutput {
+            dispatcher: "X".into(),
+            jobs,
+            perf,
+            dispatch_ns: 4_000_000,
+            other_ns: 800_000,
+            time_points: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn slowdown_and_queue_boxes() {
+        let mut pf = PlotFactory::new();
+        pf.add_run("FIFO-FF", vec![out_with(&[1.0, 2.0, 3.0], &[1, 5, 9, 3])]);
+        let sb = pf.slowdown_boxes();
+        assert_eq!(sb.len(), 1);
+        assert_eq!(sb[0].1.n, 3);
+        assert!((sb[0].1.median - 2.0).abs() < 1e-12);
+        let qb = pf.queue_boxes();
+        assert!((qb[0].1.median - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiple_repetitions_pool() {
+        let mut pf = PlotFactory::new();
+        pf.add_run(
+            "SJF-BF",
+            vec![out_with(&[1.0], &[0]), out_with(&[3.0], &[2])],
+        );
+        assert_eq!(pf.slowdown_boxes()[0].1.n, 2);
+        assert_eq!(pf.queue_boxes()[0].1.n, 2);
+    }
+
+    #[test]
+    fn cpu_time_rows_average_per_time_point() {
+        let mut pf = PlotFactory::new();
+        pf.add_run("EBF-FF", vec![out_with(&[1.0], &[1, 1, 1, 1])]);
+        let rows = pf.cpu_time_rows();
+        assert_eq!(rows.len(), 1);
+        assert!((rows[0].1 - 1.0).abs() < 1e-9); // 4 ms over 4 points
+        assert!((rows[0].2 - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scalability_buckets() {
+        let mut pf = PlotFactory::new();
+        pf.add_run("FIFO-FF", vec![out_with(&[1.0], &[0, 5, 12, 25])]);
+        let rows = pf.scalability_rows(10);
+        let buckets: Vec<u32> = rows.iter().map(|r| r.1).collect();
+        assert_eq!(buckets, vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn produce_plot_writes_csv() {
+        let dir = tempfile::tempdir().unwrap();
+        let mut pf = PlotFactory::new();
+        pf.add_run("FIFO-FF", vec![out_with(&[1.0, 2.0], &[1, 2])]);
+        for (kind, name) in [
+            (PlotKind::Slowdown, "f10.csv"),
+            (PlotKind::QueueSize, "f11.csv"),
+            (PlotKind::CpuTime, "f12.csv"),
+            (PlotKind::Scalability, "f13.csv"),
+        ] {
+            let p = dir.path().join(name);
+            pf.produce_plot(kind, &p).unwrap();
+            let text = std::fs::read_to_string(&p).unwrap();
+            assert!(text.lines().count() >= 2, "{name} has data rows");
+            assert!(text.contains("FIFO-FF"));
+        }
+    }
+
+    #[test]
+    fn render_boxes_ascii() {
+        let mut pf = PlotFactory::new();
+        pf.add_run("FIFO-FF", vec![out_with(&[1.0, 2.0, 3.0, 10.0], &[1])]);
+        let s = pf.render_boxes(PlotKind::Slowdown, 40);
+        assert!(s.contains("FIFO-FF"));
+        assert!(s.contains('#'));
+        assert!(s.contains('='));
+    }
+
+    #[test]
+    fn submission_distributions_normalized() {
+        // all at hour 9 on a Monday-equivalent day
+        let monday = 4 * 86_400; // epoch day 4 = Monday
+        let times: Vec<u64> = (0..10).map(|_| monday + 9 * 3600).collect();
+        let (h, d, _m) = submission_distributions(&times);
+        assert!((h[9] - 1.0).abs() < 1e-12);
+        assert!((d[0] - 1.0).abs() < 1e-12, "daily={d:?}");
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gflops_histogram_logbins() {
+        let h = gflops_histogram(&[1.0, 10.0, 100.0, 1e6], 0.0, 4.0, 4);
+        assert_eq!(h.counts, vec![1, 1, 1, 1]); // 1e6 clamps to last bin
+    }
+
+    #[test]
+    fn series_csv_written() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("s.csv");
+        write_series_csv(
+            &p,
+            "series,bin,value",
+            &[("real".into(), vec![0.5, 0.5]), ("gen".into(), vec![0.4, 0.6])],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 5);
+        assert!(text.contains("gen,1,0.6"));
+    }
+}

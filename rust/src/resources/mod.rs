@@ -1,0 +1,564 @@
+//! The resource manager (§3, subcomponent of the event manager).
+//!
+//! Defines the synthetic resources from a [`SysConfig`] and mimics their
+//! allocation and release at job start and completion times. Resources are
+//! held as two flat `nodes × resource-types` matrices (capacity and free) for
+//! cache-friendly scans — the allocator hot path walks these matrices for
+//! every dispatching decision, so layout matters (see DESIGN.md §Perf).
+
+use crate::config::SysConfig;
+use crate::workload::{Job, JobId};
+use std::collections::HashMap;
+
+/// Where a job's slots were placed: `(node index, slot count)` slices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub slices: Vec<(u32, u32)>,
+}
+
+impl Allocation {
+    /// Total slots across slices.
+    pub fn total_slots(&self) -> u64 {
+        self.slices.iter().map(|(_, s)| *s as u64).sum()
+    }
+}
+
+/// Per-node multi-resource accounting.
+#[derive(Debug, Clone)]
+pub struct ResourceManager {
+    resource_types: Vec<String>,
+    /// Group name of each node (for status displays).
+    node_group: Vec<u32>,
+    group_names: Vec<String>,
+    /// Flat `nodes × types` capacity matrix.
+    capacity: Vec<u64>,
+    /// Flat `nodes × types` free matrix.
+    free: Vec<u64>,
+    /// Live allocations by job.
+    allocations: HashMap<JobId, Allocation>,
+    /// Number of running slots per node (the Best-Fit "busy load" signal).
+    node_busy_slots: Vec<u32>,
+    /// Nodes taken out of service by failure injection.
+    down: Vec<bool>,
+    nodes: usize,
+    types: usize,
+}
+
+impl ResourceManager {
+    /// Instantiate the synthetic resources of a system configuration.
+    pub fn from_config(sys: &SysConfig) -> Self {
+        let resource_types = sys.resource_types();
+        let types = resource_types.len();
+        let mut capacity = Vec::new();
+        let mut node_group = Vec::new();
+        let mut group_names = Vec::new();
+        // BTreeMap iteration gives deterministic node ordering by group name.
+        for (gname, count) in &sys.resources {
+            let spec = &sys.groups[gname];
+            let gid = group_names.len() as u32;
+            group_names.push(gname.clone());
+            let row: Vec<u64> = resource_types
+                .iter()
+                .map(|t| spec.get(t).copied().unwrap_or(0))
+                .collect();
+            for _ in 0..*count {
+                capacity.extend_from_slice(&row);
+                node_group.push(gid);
+            }
+        }
+        let nodes = node_group.len();
+        ResourceManager {
+            resource_types,
+            node_group,
+            group_names,
+            free: capacity.clone(),
+            capacity,
+            allocations: HashMap::new(),
+            node_busy_slots: vec![0; nodes],
+            down: vec![false; nodes],
+            nodes,
+            types,
+        }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Number of resource types.
+    #[inline]
+    pub fn num_types(&self) -> usize {
+        self.types
+    }
+
+    /// Ordered resource-type names (the indexing order of job requests).
+    pub fn resource_types(&self) -> &[String] {
+        &self.resource_types
+    }
+
+    /// Group name of a node.
+    pub fn node_group_name(&self, node: usize) -> &str {
+        &self.group_names[self.node_group[node] as usize]
+    }
+
+    /// Free vector of a node.
+    #[inline]
+    pub fn node_free(&self, node: usize) -> &[u64] {
+        &self.free[node * self.types..(node + 1) * self.types]
+    }
+
+    /// Capacity vector of a node.
+    #[inline]
+    pub fn node_capacity(&self, node: usize) -> &[u64] {
+        &self.capacity[node * self.types..(node + 1) * self.types]
+    }
+
+    /// The whole flat free matrix (`nodes × types`), e.g. for the XLA kernel.
+    pub fn free_matrix(&self) -> &[u64] {
+        &self.free
+    }
+
+    /// The whole flat capacity matrix.
+    pub fn capacity_matrix(&self) -> &[u64] {
+        &self.capacity
+    }
+
+    /// Running slots currently placed on a node (Best-Fit's load signal).
+    #[inline]
+    pub fn node_busy_slots(&self, node: usize) -> u32 {
+        self.node_busy_slots[node]
+    }
+
+    /// How many slots of `per_slot` shape fit on `node` right now.
+    #[inline]
+    pub fn hostable_slots(&self, node: usize, per_slot: &[u64]) -> u64 {
+        if self.down[node] {
+            return 0;
+        }
+        hostable_slots_in(self.node_free(node), per_slot)
+    }
+
+    /// Take a node out of service. Only honored when the node is idle (no
+    /// running slots); returns whether the node is now down.
+    pub fn set_node_down(&mut self, node: usize) -> bool {
+        if node < self.nodes && self.node_busy_slots[node] == 0 {
+            self.down[node] = true;
+        }
+        node < self.nodes && self.down[node]
+    }
+
+    /// Return a node to service.
+    pub fn set_node_up(&mut self, node: usize) {
+        if node < self.nodes {
+            self.down[node] = false;
+        }
+    }
+
+    /// Whether a node is currently out of service.
+    pub fn is_node_down(&self, node: usize) -> bool {
+        self.down[node]
+    }
+
+    /// Total slots of `per_slot` shape hostable across the system.
+    pub fn total_hostable_slots(&self, per_slot: &[u64]) -> u64 {
+        (0..self.nodes).map(|n| self.hostable_slots(n, per_slot)).sum()
+    }
+
+    /// Whether `job` could start right now (enough free resources somewhere).
+    pub fn can_host(&self, job: &Job) -> bool {
+        let mut remaining = job.slots as u64;
+        for n in 0..self.nodes {
+            let h = self.hostable_slots(n, &job.per_slot);
+            remaining = remaining.saturating_sub(h);
+            if remaining == 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Whether `job` could *ever* run on this system when idle.
+    pub fn can_ever_host(&self, job: &Job) -> bool {
+        let mut remaining = job.slots as u64;
+        for n in 0..self.nodes {
+            let h = hostable_slots_in(self.node_capacity(n), &job.per_slot);
+            remaining = remaining.saturating_sub(h);
+            if remaining == 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Commit an allocation decided by an allocator: deduct resources.
+    ///
+    /// Fails (without partial effects) if the slices oversubscribe any node
+    /// or the slot total doesn't match the job's request.
+    pub fn allocate(&mut self, job: &Job, alloc: Allocation) -> anyhow::Result<()> {
+        if alloc.total_slots() != job.slots as u64 {
+            anyhow::bail!(
+                "allocation covers {} slots, job {} requests {}",
+                alloc.total_slots(),
+                job.id,
+                job.slots
+            );
+        }
+        if self.allocations.contains_key(&job.id) {
+            anyhow::bail!("job {} is already allocated", job.id);
+        }
+        // validate first (no partial commit)
+        for &(node, slots) in &alloc.slices {
+            let node = node as usize;
+            if node >= self.nodes {
+                anyhow::bail!("allocation references node {node} of {}", self.nodes);
+            }
+            if self.hostable_slots(node, &job.per_slot) < slots as u64 {
+                anyhow::bail!(
+                    "node {node} cannot host {slots} slots of job {}",
+                    job.id
+                );
+            }
+        }
+        for &(node, slots) in &alloc.slices {
+            let base = node as usize * self.types;
+            for (r, q) in job.per_slot.iter().enumerate() {
+                self.free[base + r] -= q * slots as u64;
+            }
+            self.node_busy_slots[node as usize] += slots;
+        }
+        self.allocations.insert(job.id, alloc);
+        Ok(())
+    }
+
+    /// Release a completed job's resources.
+    pub fn release(&mut self, job: &Job) -> anyhow::Result<()> {
+        let alloc = self
+            .allocations
+            .remove(&job.id)
+            .ok_or_else(|| anyhow::anyhow!("release of unallocated job {}", job.id))?;
+        for &(node, slots) in &alloc.slices {
+            let base = node as usize * self.types;
+            for (r, q) in job.per_slot.iter().enumerate() {
+                self.free[base + r] += q * slots as u64;
+                debug_assert!(
+                    self.free[base + r] <= self.capacity[base + r],
+                    "release overflows capacity"
+                );
+            }
+            self.node_busy_slots[node as usize] -= slots;
+        }
+        Ok(())
+    }
+
+    /// Allocation of a running job, if any.
+    pub fn allocation_of(&self, job: JobId) -> Option<&Allocation> {
+        self.allocations.get(&job)
+    }
+
+    /// Number of live allocations.
+    pub fn live_allocations(&self) -> usize {
+        self.allocations.len()
+    }
+
+    /// System-wide utilization of a resource type in `[0, 1]`.
+    pub fn utilization(&self, rtype_idx: usize) -> f64 {
+        let mut cap = 0u64;
+        let mut free = 0u64;
+        for n in 0..self.nodes {
+            cap += self.capacity[n * self.types + rtype_idx];
+            free += self.free[n * self.types + rtype_idx];
+        }
+        if cap == 0 {
+            0.0
+        } else {
+            (cap - free) as f64 / cap as f64
+        }
+    }
+
+    /// A detached copy of the free matrix for shadow simulations (EBF).
+    pub fn shadow(&self) -> ShadowState {
+        ShadowState { free: self.free.clone(), types: self.types, nodes: self.nodes }
+    }
+}
+
+/// Slots of `per_slot` shape fitting in a free vector.
+#[inline]
+pub fn hostable_slots_in(free: &[u64], per_slot: &[u64]) -> u64 {
+    let mut h = u64::MAX;
+    for (f, q) in free.iter().zip(per_slot) {
+        if *q > 0 {
+            h = h.min(f / q);
+            if h == 0 {
+                return 0;
+            }
+        }
+    }
+    if h == u64::MAX {
+        0 // a job requesting nothing hosts nowhere
+    } else {
+        h
+    }
+}
+
+/// A lightweight copy of the free state used by EASY backfilling to simulate
+/// future completions without touching the live manager.
+#[derive(Debug, Clone)]
+pub struct ShadowState {
+    free: Vec<u64>,
+    types: usize,
+    nodes: usize,
+}
+
+impl ShadowState {
+    /// Apply the release of a running job's allocation.
+    pub fn release(&mut self, job: &Job, alloc: &Allocation) {
+        for &(node, slots) in &alloc.slices {
+            let base = node as usize * self.types;
+            for (r, q) in job.per_slot.iter().enumerate() {
+                self.free[base + r] += q * slots as u64;
+            }
+        }
+    }
+
+    /// Reserve (deduct) an allocation-shaped chunk greedily; used to model a
+    /// head-job reservation. Returns the implied slices, or `None` if it does
+    /// not fit.
+    pub fn reserve_greedy(&mut self, job: &Job) -> Option<Allocation> {
+        let mut remaining = job.slots as u64;
+        let mut slices = Vec::new();
+        for n in 0..self.nodes {
+            if remaining == 0 {
+                break;
+            }
+            let free = &self.free[n * self.types..(n + 1) * self.types];
+            let h = hostable_slots_in(free, &job.per_slot).min(remaining);
+            if h > 0 {
+                slices.push((n as u32, h as u32));
+                remaining -= h;
+            }
+        }
+        if remaining > 0 {
+            // roll back nothing: we only collected slices, now commit
+            return None;
+        }
+        for &(node, slots) in &slices {
+            let base = node as usize * self.types;
+            for (r, q) in job.per_slot.iter().enumerate() {
+                self.free[base + r] -= q * slots as u64;
+            }
+        }
+        Some(Allocation { slices })
+    }
+
+    /// The shadow's flat free matrix.
+    pub fn free_matrix(&self) -> &[u64] {
+        &self.free
+    }
+
+    /// Deduct a concrete allocation (e.g. a backfilled job extending past the
+    /// reservation point).
+    pub fn deduct(&mut self, job: &Job, alloc: &Allocation) {
+        for &(node, slots) in &alloc.slices {
+            let base = node as usize * self.types;
+            for (r, q) in job.per_slot.iter().enumerate() {
+                self.free[base + r] = self.free[base + r].saturating_sub(q * slots as u64);
+            }
+        }
+    }
+
+    /// Whether `job` fits in the shadow state right now.
+    pub fn can_host(&self, job: &Job) -> bool {
+        let mut remaining = job.slots as u64;
+        for n in 0..self.nodes {
+            let free = &self.free[n * self.types..(n + 1) * self.types];
+            remaining = remaining.saturating_sub(hostable_slots_in(free, &job.per_slot));
+            if remaining == 0 {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SysConfig {
+        SysConfig::homogeneous("t", 3, &[("core", 4), ("mem", 100)], 0)
+    }
+
+    fn job(id: JobId, slots: u32, core: u64, mem: u64) -> Job {
+        Job {
+            id,
+            submit: 0,
+            duration: 10,
+            req_time: 10,
+            slots,
+            per_slot: vec![core, mem],
+            user: 0,
+            app: 0,
+            status: 1,
+        }
+    }
+
+    #[test]
+    fn capacity_layout() {
+        let rm = ResourceManager::from_config(&sys());
+        assert_eq!(rm.num_nodes(), 3);
+        assert_eq!(rm.num_types(), 2);
+        assert_eq!(rm.node_capacity(0), &[4, 100]);
+        assert_eq!(rm.node_free(2), &[4, 100]);
+        assert_eq!(rm.node_group_name(0), "compute");
+    }
+
+    #[test]
+    fn hostable_slots_math() {
+        assert_eq!(hostable_slots_in(&[4, 100], &[1, 30]), 3);
+        assert_eq!(hostable_slots_in(&[4, 100], &[1, 0]), 4);
+        assert_eq!(hostable_slots_in(&[4, 100], &[0, 0]), 0);
+        assert_eq!(hostable_slots_in(&[0, 100], &[1, 1]), 0);
+    }
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let j = job(1, 6, 1, 10);
+        assert!(rm.can_host(&j));
+        rm.allocate(&j, Allocation { slices: vec![(0, 4), (1, 2)] }).unwrap();
+        assert_eq!(rm.node_free(0), &[0, 60]);
+        assert_eq!(rm.node_free(1), &[2, 80]);
+        assert_eq!(rm.node_busy_slots(0), 4);
+        assert_eq!(rm.live_allocations(), 1);
+        assert!((rm.utilization(0) - 0.5).abs() < 1e-12);
+
+        rm.release(&j).unwrap();
+        assert_eq!(rm.node_free(0), &[4, 100]);
+        assert_eq!(rm.node_free(1), &[4, 100]);
+        assert_eq!(rm.live_allocations(), 0);
+        assert_eq!(rm.utilization(0), 0.0);
+    }
+
+    #[test]
+    fn allocate_rejects_oversubscription() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let j = job(1, 5, 1, 10);
+        // 5 slots on node 0 but only 4 cores there
+        assert!(rm.allocate(&j, Allocation { slices: vec![(0, 5)] }).is_err());
+        // failed allocation must not leak
+        assert_eq!(rm.node_free(0), &[4, 100]);
+        assert_eq!(rm.live_allocations(), 0);
+    }
+
+    #[test]
+    fn allocate_rejects_slot_mismatch() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let j = job(1, 4, 1, 10);
+        assert!(rm.allocate(&j, Allocation { slices: vec![(0, 3)] }).is_err());
+    }
+
+    #[test]
+    fn allocate_rejects_double_allocation() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let j = job(1, 1, 1, 1);
+        rm.allocate(&j, Allocation { slices: vec![(0, 1)] }).unwrap();
+        assert!(rm.allocate(&j, Allocation { slices: vec![(1, 1)] }).is_err());
+    }
+
+    #[test]
+    fn release_unallocated_errors() {
+        let mut rm = ResourceManager::from_config(&sys());
+        assert!(rm.release(&job(9, 1, 1, 1)).is_err());
+    }
+
+    #[test]
+    fn can_host_spans_nodes() {
+        let rm = ResourceManager::from_config(&sys());
+        assert!(rm.can_host(&job(1, 12, 1, 10))); // 12 cores across 3 nodes
+        assert!(!rm.can_host(&job(2, 13, 1, 10)));
+        // memory-bound: 100/30 = 3 slots per node → 9 total
+        assert!(rm.can_host(&job(3, 9, 1, 30)));
+        assert!(!rm.can_host(&job(4, 10, 1, 30)));
+    }
+
+    #[test]
+    fn can_ever_host_ignores_current_use() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let big = job(1, 12, 1, 0);
+        rm.allocate(&big, Allocation { slices: vec![(0, 4), (1, 4), (2, 4)] }).unwrap();
+        assert!(!rm.can_host(&job(2, 1, 1, 1)));
+        assert!(rm.can_ever_host(&job(2, 1, 1, 1)));
+        assert!(!rm.can_ever_host(&job(3, 1, 5, 1))); // 5 cores/slot never fits
+    }
+
+    #[test]
+    fn shadow_release_and_reserve() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let j1 = job(1, 8, 1, 10);
+        rm.allocate(&j1, Allocation { slices: vec![(0, 4), (1, 4)] }).unwrap();
+        let mut sh = rm.shadow();
+        let j2 = job(2, 10, 1, 10);
+        assert!(!sh.can_host(&j2));
+        sh.release(&j1, rm.allocation_of(1).unwrap());
+        assert!(sh.can_host(&j2));
+        let alloc = sh.reserve_greedy(&j2).unwrap();
+        assert_eq!(alloc.total_slots(), 10);
+        // after reservation only 2 cores left
+        assert!(!sh.can_host(&job(3, 3, 1, 1)));
+        assert!(sh.can_host(&job(3, 2, 1, 1)));
+    }
+
+    #[test]
+    fn node_down_blocks_allocation_only_when_idle() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let j = job(1, 2, 1, 10);
+        rm.allocate(&j, Allocation { slices: vec![(0, 2)] }).unwrap();
+        // busy node refuses to go down
+        assert!(!rm.set_node_down(0));
+        // idle node goes down and stops hosting
+        assert!(rm.set_node_down(1));
+        assert!(rm.is_node_down(1));
+        assert_eq!(rm.hostable_slots(1, &[1, 1]), 0);
+        let j2 = job(2, 1, 1, 1);
+        assert!(rm.allocate(&j2, Allocation { slices: vec![(1, 1)] }).is_err());
+        rm.set_node_up(1);
+        assert_eq!(rm.hostable_slots(1, &[1, 1]), 4);
+        rm.allocate(&j2, Allocation { slices: vec![(1, 1)] }).unwrap();
+    }
+
+    #[test]
+    fn heterogeneous_nodes_ordering() {
+        let cfg = SysConfig::from_json(
+            r#"{
+                "groups": {
+                    "a_cpu": { "core": 2 },
+                    "b_gpu": { "core": 2, "gpu": 1 }
+                },
+                "resources": { "a_cpu": 2, "b_gpu": 1 }
+            }"#,
+        )
+        .unwrap();
+        let rm = ResourceManager::from_config(&cfg);
+        assert_eq!(rm.num_nodes(), 3);
+        // types sorted: core, gpu
+        assert_eq!(rm.resource_types(), &["core".to_string(), "gpu".to_string()]);
+        assert_eq!(rm.node_capacity(0), &[2, 0]); // a_cpu nodes first
+        assert_eq!(rm.node_capacity(2), &[2, 1]);
+        // gpu job only fits on the gpu node
+        let gj = Job {
+            id: 1,
+            submit: 0,
+            duration: 1,
+            req_time: 1,
+            slots: 1,
+            per_slot: vec![1, 1],
+            user: 0,
+            app: 0,
+            status: 1,
+        };
+        assert_eq!(rm.hostable_slots(0, &gj.per_slot), 0);
+        assert_eq!(rm.hostable_slots(2, &gj.per_slot), 1);
+    }
+}

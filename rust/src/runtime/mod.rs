@@ -1,0 +1,248 @@
+//! PJRT runtime bridge: loads the AOT-compiled JAX/Pallas computations
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from the Rust hot path. Python never runs at simulation time.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Fixed AOT bucket shapes. These must match `python/compile/aot.py`
+/// (`python -m compile.aot --print-shapes` asserts the contract).
+pub mod shapes {
+    /// fit_score: max jobs per batch.
+    pub const FIT_J: usize = 64;
+    /// fit_score: max nodes per chunk.
+    pub const FIT_N: usize = 512;
+    /// fit_score: max resource types.
+    pub const FIT_R: usize = 4;
+    /// metrics: job batch size.
+    pub const MET_B: usize = 8192;
+    /// metrics: histogram bins (log10 slowdown, 0..=3 decades + overflow).
+    pub const MET_K: usize = 64;
+    /// slot_hist: submission-time batch size.
+    pub const SLOT_B: usize = 8192;
+    /// slot_hist: slots per day (48 × 30 min — the Slot Weight Method [24]).
+    pub const SLOT_K: usize = 48;
+}
+
+/// Names of the artifacts the simulator knows about.
+pub const ARTIFACTS: &[&str] = &["fit_score", "metrics", "slot_hist"];
+
+/// A loaded PJRT engine: one compiled executable per artifact.
+///
+/// Interior mutability: PJRT execution takes `&self` but the underlying
+/// client is not thread-safe for concurrent executes; a mutex serializes.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<String> = self.exes.borrow().keys().cloned().collect();
+        f.debug_struct("Engine").field("artifacts", &names).finish()
+    }
+}
+
+impl Engine {
+    /// Create a CPU PJRT client with no artifacts loaded.
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        Ok(Engine { client, exes: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load + compile one HLO-text artifact under `name`.
+    pub fn load_hlo_file<P: AsRef<Path>>(&self, name: &str, path: P) -> anyhow::Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.as_ref().to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.as_ref().display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every known artifact present in `dir` (skips missing ones);
+    /// returns the names loaded.
+    pub fn load_dir<P: AsRef<Path>>(&self, dir: P) -> anyhow::Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        for name in ARTIFACTS {
+            let path = dir.as_ref().join(format!("{name}.hlo.txt"));
+            if path.exists() {
+                self.load_hlo_file(name, &path)?;
+                loaded.push(name.to_string());
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Convenience: CPU engine with everything in `dir` loaded.
+    pub fn with_artifacts<P: AsRef<Path>>(dir: P) -> anyhow::Result<Self> {
+        let e = Self::cpu()?;
+        e.load_dir(dir)?;
+        Ok(e)
+    }
+
+    /// Whether an artifact is available.
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.borrow().contains_key(name)
+    }
+
+    /// Execute artifact `name` on f32 inputs given as `(data, dims)` pairs;
+    /// returns the tuple outputs as flat f32 vectors.
+    ///
+    /// All our L2 models are lowered with `return_tuple=True`, so the single
+    /// result literal is always a tuple.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let expect: i64 = dims.iter().product();
+                anyhow::ensure!(
+                    expect as usize == data.len(),
+                    "input data len {} != shape {:?}",
+                    data.len(),
+                    dims
+                );
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let guard = self.exes.borrow();
+        let exe = guard
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded (run `make artifacts`)"))?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback {name}: {e:?}"))?;
+        drop(guard);
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+impl Engine {
+    /// Fast-path execution: host→device buffers (no `Literal` staging copy)
+    /// and *partial* readback — output `i` is read back only for
+    /// `out_lens[i]` leading elements (0 = skip entirely). The XlaFit hot
+    /// path needs just row 0 of the (J, N) score matrix; skipping the rest
+    /// of the tuple halves the per-call overhead (EXPERIMENTS.md §Perf).
+    pub fn execute_f32_partial(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+        out_lens: &[usize],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                self.client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("h2d: {e:?}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let guard = self.exes.borrow();
+        let exe = guard
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded (run `make artifacts`)"))?;
+        let outs = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        drop(guard);
+        let replica = &outs[0];
+        // PJRT may untuple outputs (one buffer per element) or return a
+        // single tuple buffer; handle the untupled case on the fast path.
+        if replica.len() >= out_lens.len() {
+            let mut result = Vec::with_capacity(out_lens.len());
+            for (buf, &len) in replica.iter().zip(out_lens) {
+                let mut host = vec![0f32; len];
+                if len > 0 {
+                    buf.copy_raw_to_host_sync(&mut host, 0)
+                        .map_err(|e| anyhow::anyhow!("d2h {name}: {e:?}"))?;
+                }
+                result.push(host);
+            }
+            return Ok(result);
+        }
+        // tuple fallback
+        let parts = replica[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback {name}: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .zip(out_lens)
+            .map(|(l, &len)| {
+                l.to_vec::<f32>()
+                    .map(|mut v| {
+                        v.truncate(len);
+                        v
+                    })
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+/// Locate the artifacts directory: `$ACCASIM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("ACCASIM_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::testutil as tempfile;
+
+    #[test]
+    fn engine_constructs_and_reports_missing() {
+        let e = Engine::cpu().unwrap();
+        assert!(!e.has("fit_score"));
+        let err = e.execute_f32("fit_score", &[]).unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn load_dir_skips_absent_files() {
+        let e = Engine::cpu().unwrap();
+        let dir = tempfile::tempdir().unwrap();
+        let loaded = e.load_dir(dir.path()).unwrap();
+        assert!(loaded.is_empty());
+    }
+
+    #[test]
+    fn execute_checks_shape_mismatch() {
+        let e = Engine::cpu().unwrap();
+        let data = vec![0f32; 3];
+        let err = e.execute_f32("whatever", &[(&data, &[2, 2])]).unwrap_err();
+        assert!(err.to_string().contains("!= shape"));
+    }
+
+    // Round-trip tests against real artifacts live in rust/tests/runtime_bridge.rs
+    // (they require `make artifacts` to have run).
+}

@@ -1,0 +1,293 @@
+//! Descriptive statistics used by the plot factory and benchmark tables:
+//! means/σ, quantiles, box-and-whisker five-number summaries, histograms
+//! and ECDFs.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (n−1 denominator; 0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolation quantile over a *sorted* slice, `q ∈ [0, 1]`.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Box-and-whisker five-number summary plus mean (the statistic behind
+/// Figures 10–11). Whiskers use the 1.5×IQR convention clamped to data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub whisker_lo: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub whisker_hi: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl BoxStats {
+    /// Compute from unsorted data.
+    pub fn from(xs: &[f64]) -> BoxStats {
+        if xs.is_empty() {
+            return BoxStats {
+                min: 0.0,
+                whisker_lo: 0.0,
+                q1: 0.0,
+                median: 0.0,
+                q3: 0.0,
+                whisker_hi: 0.0,
+                max: 0.0,
+                mean: 0.0,
+                n: 0,
+            };
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = quantile_sorted(&s, 0.25);
+        let q3 = quantile_sorted(&s, 0.75);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = s.iter().copied().find(|x| *x >= lo_fence).unwrap_or(s[0]);
+        let whisker_hi =
+            s.iter().rev().copied().find(|x| *x <= hi_fence).unwrap_or(s[s.len() - 1]);
+        BoxStats {
+            min: s[0],
+            whisker_lo,
+            q1,
+            median: quantile_sorted(&s, 0.5),
+            q3,
+            whisker_hi,
+            max: s[s.len() - 1],
+            mean: mean(&s),
+            n: s.len(),
+        }
+    }
+
+    /// CSV header matching [`BoxStats::to_csv`].
+    pub const CSV_HEADER: &'static str = "n,min,whisker_lo,q1,median,q3,whisker_hi,max,mean";
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}",
+            self.n,
+            self.min,
+            self.whisker_lo,
+            self.q1,
+            self.median,
+            self.q3,
+            self.whisker_hi,
+            self.max,
+            self.mean
+        )
+    }
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values outside
+/// clamp to the edge buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    /// Add one observation.
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = if x < self.lo {
+            0
+        } else if x >= self.hi {
+            bins - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * bins as f64) as usize
+        };
+        self.counts[idx.min(bins - 1)] += 1;
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Normalized weights (fractions summing to 1; zeros when empty).
+    pub fn weights(&self) -> Vec<f64> {
+        let total = self.total();
+        if total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts.iter().map(|c| *c as f64 / total as f64).collect()
+    }
+
+    /// Bin center values.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len()).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+}
+
+/// Empirical CDF evaluated at sorted sample points: returns `(x, F(x))`.
+pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len() as f64;
+    s.iter().enumerate().map(|(i, &x)| (x, (i + 1) as f64 / n)).collect()
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic (max |F1 − F2|); the measure we
+/// use to quantify real-vs-generated similarity in Figures 14–17.
+pub fn ks_statistic(a: &[f64], b: &[f64]) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return 1.0;
+    }
+    let mut sa = a.to_vec();
+    let mut sb = b.to_vec();
+    sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d: f64 = 0.0;
+    while i < sa.len() && j < sb.len() {
+        let (x, y) = (sa[i], sb[j]);
+        // advance past ties on both sides so equal samples never diverge
+        if x <= y {
+            i += 1;
+        }
+        if y <= x {
+            j += 1;
+        }
+        let fa = i as f64 / sa.len() as f64;
+        let fb = j as f64 / sb.len() as f64;
+        d = d.max((fa - fb).abs());
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935299395).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_sorted(&s, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&s, 1.0), 4.0);
+        assert!((quantile_sorted(&s, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile_sorted(&s, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_basic() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let b = BoxStats::from(&xs);
+        assert_eq!(b.n, 100);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 100.0);
+        assert!((b.median - 50.5).abs() < 1e-12);
+        assert!((b.mean - 50.5).abs() < 1e-12);
+        assert!(b.q1 < b.median && b.median < b.q3);
+        // no outliers in a uniform ramp → whiskers hit min/max
+        assert_eq!(b.whisker_lo, 1.0);
+        assert_eq!(b.whisker_hi, 100.0);
+    }
+
+    #[test]
+    fn box_stats_detects_outlier() {
+        let mut xs: Vec<f64> = (1..=20).map(|x| x as f64).collect();
+        xs.push(1000.0);
+        let b = BoxStats::from(&xs);
+        assert_eq!(b.max, 1000.0);
+        assert!(b.whisker_hi < 1000.0);
+    }
+
+    #[test]
+    fn box_stats_empty() {
+        let b = BoxStats::from(&[]);
+        assert_eq!(b.n, 0);
+        assert_eq!(b.median, 0.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.7, 9.9, -5.0, 15.0] {
+            h.add(x);
+        }
+        assert_eq!(h.counts[0], 2); // 0.5 and clamped -5.0
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 2); // 9.9 and clamped 15.0
+        assert_eq!(h.total(), 6);
+        let w = h.weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_centers() {
+        let h = Histogram::new(0.0, 4.0, 4);
+        assert_eq!(h.centers(), vec![0.5, 1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let e = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(e[0], (1.0, 1.0 / 3.0));
+        assert_eq!(e[2], (3.0, 1.0));
+    }
+
+    #[test]
+    fn ks_identical_zero_distant_one() {
+        let a: Vec<f64> = (0..1000).map(|x| x as f64).collect();
+        assert!(ks_statistic(&a, &a) < 1e-9);
+        let b: Vec<f64> = (10_000..11_000).map(|x| x as f64).collect();
+        assert!((ks_statistic(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ks_similar_distributions_small() {
+        let mut r = crate::rng::Pcg64::new(5);
+        let a: Vec<f64> = (0..5000).map(|_| r.normal()).collect();
+        let b: Vec<f64> = (0..5000).map(|_| r.normal()).collect();
+        assert!(ks_statistic(&a, &b) < 0.05);
+    }
+}

@@ -1,0 +1,96 @@
+//! A miniature property-based testing kit (offline substitute for
+//! `proptest`): seeded random case generation with failing-seed reporting.
+//! Coordinator invariants in `rust/tests/prop_invariants.rs` are built on
+//! this.
+
+#![doc(hidden)]
+
+use crate::rng::Pcg64;
+
+/// Run `cases` random property checks. Each case gets an independent,
+/// deterministic RNG derived from `base_seed`; on panic the failing case
+/// seed is printed so the case can be replayed exactly.
+pub fn check<F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe>(
+    name: &str,
+    base_seed: u64,
+    cases: u32,
+    prop: F,
+) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed on case {case} (replay seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random job generator used by coordinator property tests.
+pub fn arb_job(rng: &mut Pcg64, id: u64, max_slots: u32, types: usize) -> crate::workload::Job {
+    let slots = rng.range_u64(1, max_slots as u64) as u32;
+    let per_slot = (0..types)
+        .map(|r| if r == 0 { 1 } else { rng.range_u64(0, 8) })
+        .collect();
+    let duration = rng.range_u64(0, 5_000);
+    crate::workload::Job {
+        id,
+        submit: rng.range_u64(0, 50_000),
+        duration,
+        // estimates are wrong on purpose: dispatchers must tolerate it
+        req_time: (duration as f64 * rng.range_f64(0.5, 4.0)) as u64 + 1,
+        slots,
+        per_slot,
+        user: rng.next_u32() % 16,
+        app: rng.next_u32() % 8,
+        status: 1,
+    }
+}
+
+/// Random batch of jobs with distinct ids.
+pub fn arb_jobs(
+    rng: &mut Pcg64,
+    n: usize,
+    max_slots: u32,
+    types: usize,
+) -> Vec<crate::workload::Job> {
+    (0..n).map(|i| arb_job(rng, i as u64 + 1, max_slots, types)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU32::new(0);
+        check("count", 1, 25, |_rng| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("fail", 2, 10, |rng| {
+            assert!(rng.f64() < 0.5, "eventually fails");
+        });
+    }
+
+    #[test]
+    fn arb_jobs_well_formed() {
+        let mut rng = Pcg64::new(3);
+        for j in arb_jobs(&mut rng, 100, 8, 3) {
+            assert!(j.slots >= 1 && j.slots <= 8);
+            assert_eq!(j.per_slot.len(), 3);
+            assert_eq!(j.per_slot[0], 1);
+            assert!(j.req_time >= 1);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Test utilities (offline substitute for the `tempfile` crate).
+//!
+//! Test modules import this as `use crate::testutil as tempfile;` so the
+//! familiar `tempfile::tempdir()` idiom keeps working. Integration tests use
+//! `use accasim::testutil as tempfile;`.
+
+#![doc(hidden)]
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A uniquely named temporary directory removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Create a fresh temporary directory under the system temp dir.
+pub fn tempdir() -> std::io::Result<TempDir> {
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!(
+        "accasim-test-{}-{}-{}",
+        std::process::id(),
+        n,
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0)
+    ));
+    std::fs::create_dir_all(&path)?;
+    Ok(TempDir { path })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_exists_and_cleans_up() {
+        let p;
+        {
+            let d = tempdir().unwrap();
+            p = d.path().to_path_buf();
+            assert!(p.is_dir());
+            std::fs::write(p.join("x"), "y").unwrap();
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn tempdirs_unique() {
+        let a = tempdir().unwrap();
+        let b = tempdir().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

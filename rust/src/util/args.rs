@@ -1,0 +1,144 @@
+//! A tiny CLI argument parser (offline substitute for `clap`): positionals,
+//! `--key value`, `--key=value` and boolean `--flag`s, with typed accessors
+//! and unknown-option detection.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.options.get(key).cloned()
+    }
+
+    /// Typed option with default; errors on unparsable values.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    /// Boolean flag (also accepts `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+            || self.options.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Error on options/flags never consumed by the command (typo guard).
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        anyhow::ensure!(unknown.is_empty(), "unknown option(s): {unknown:?}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("simulate w.swf --sys cfg.json --reps 3 --verbose");
+        assert_eq!(a.positionals, vec!["simulate", "w.swf"]);
+        assert_eq!(a.get("sys", ""), "cfg.json");
+        assert_eq!(a.get_parse::<u32>("reps", 1).unwrap(), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--scale=0.5 --name=x");
+        assert_eq!(a.get_parse::<f64>("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get("name", ""), "x");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("cmd");
+        assert_eq!(a.get("missing", "dflt"), "dflt");
+        assert_eq!(a.get_parse::<u64>("jobs", 50_000).unwrap(), 50_000);
+        assert!(a.get_opt("missing").is_none());
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse("--reps abc");
+        assert!(a.get_parse::<u32>("reps", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = parse("--known 1 --typo 2");
+        let _ = a.get_parse::<u32>("known", 0).unwrap();
+        let err = a.reject_unknown().unwrap_err();
+        assert!(err.to_string().contains("typo"));
+        let _ = a.get("typo", "");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b val");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b", ""), "val");
+    }
+}

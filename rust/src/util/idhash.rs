@@ -1,0 +1,83 @@
+//! A fast integer-key hasher for job-id maps. The default SipHash showed up
+//! at ~4% of a Table-1 run (EXPERIMENTS.md §Perf); job ids need no HashDoS
+//! protection, so a single multiply-xorshift round (SplitMix64 finalizer)
+//! suffices.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hasher};
+
+/// Hasher state: the mixed key.
+#[derive(Default, Clone, Copy)]
+pub struct IdHasher(u64);
+
+impl Hasher for IdHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // generic fallback (not on the hot path)
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001B3);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        // SplitMix64 finalizer: full avalanche in 3 ops
+        let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        self.0 = z ^ (z >> 31);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// `BuildHasher` for [`IdHasher`].
+#[derive(Default, Clone, Copy)]
+pub struct BuildIdHasher;
+
+impl BuildHasher for BuildIdHasher {
+    type Hasher = IdHasher;
+    #[inline]
+    fn build_hasher(&self) -> IdHasher {
+        IdHasher::default()
+    }
+}
+
+/// A `HashMap` keyed by `u64` ids with the fast hasher.
+pub type IdHashMap<V> = HashMap<u64, V, BuildIdHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_like_hashmap() {
+        let mut m: IdHashMap<&str> = IdHashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, "x");
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert!(m.contains_key(&i));
+            assert!(m.remove(&i).is_some());
+        }
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn avalanche_differs_for_sequential_keys() {
+        let h = |x: u64| {
+            let mut hh = IdHasher::default();
+            hh.write_u64(x);
+            hh.finish()
+        };
+        // sequential ids land in different buckets (high bits differ)
+        let a = h(1) >> 56;
+        let b = h(2) >> 56;
+        let c = h(3) >> 56;
+        assert!(!(a == b && b == c), "no avalanche: {a} {b} {c}");
+    }
+}

@@ -1,0 +1,7 @@
+//! In-repo substrates replacing ecosystem crates unavailable in the offline
+//! build: a JSON parser/serializer ([`json`]) and a CLI argument parser
+//! ([`args`]).
+
+pub mod args;
+pub mod idhash;
+pub mod json;

@@ -1,0 +1,150 @@
+//! The synthetic job model.
+
+/// Identifier of a job inside one simulation (the SWF job number).
+pub type JobId = u64;
+
+/// Artificial job life-cycle states (§3, *event manager*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobState {
+    /// Known to the simulator but its submission time has not been reached.
+    Loaded,
+    /// Submitted and waiting in the queue.
+    Queued,
+    /// Dispatched and occupying resources.
+    Running,
+    /// Finished; resources released. Completed jobs are retired from memory.
+    Completed,
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            JobState::Loaded => "loaded",
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A synthetic job.
+///
+/// Resource requests use the *slot* model: a job asks for `slots` processing
+/// slots, each slot carrying `per_slot[r]` units of resource type `r`
+/// (resource types are indexed in the order of
+/// [`crate::config::SysConfig::resource_types`]). A slot is the schedulable
+/// grain — for an SWF trace a slot is one requested processor together with
+/// its proportional share of requested memory. Slots of one job may be placed
+/// on different nodes, which is how jobs span nodes while still permitting
+/// many small jobs to share one node (the paper's Seth case study models the
+/// system "made of cores instead of processors" for exactly this reason).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    /// SWF job number.
+    pub id: JobId,
+    /// Absolute submission time `T_sb` (epoch seconds).
+    pub submit: u64,
+    /// Actual duration (seconds). Known only to the event manager; the
+    /// dispatcher must rely on `req_time` (§3, *dispatcher*).
+    pub duration: u64,
+    /// User-requested wall time (the duration *estimation* dispatchers see).
+    pub req_time: u64,
+    /// Number of processing slots requested (≥ 1).
+    pub slots: u32,
+    /// Per-slot request for each resource type, indexed by the system's
+    /// resource-type order.
+    pub per_slot: Vec<u64>,
+    /// SWF user id (for per-user statistics; 0 when absent).
+    pub user: u32,
+    /// SWF executable/application id (0 when absent).
+    pub app: u32,
+    /// SWF status field (-1 when absent).
+    pub status: i32,
+}
+
+impl Job {
+    /// Completion time if started at `start`.
+    #[inline]
+    pub fn completion_at(&self, start: u64) -> u64 {
+        start + self.duration
+    }
+
+    /// Dispatcher-visible estimated completion if started at `start`.
+    #[inline]
+    pub fn estimated_completion_at(&self, start: u64) -> u64 {
+        start + self.req_time.max(1)
+    }
+
+    /// Total request of resource type `r` across all slots.
+    #[inline]
+    pub fn total_request(&self, r: usize) -> u64 {
+        self.per_slot.get(r).copied().unwrap_or(0) * self.slots as u64
+    }
+
+    /// Slowdown given waiting time `wait`:
+    /// `(T_w + T_r) / T_r` with `T_r` clamped to ≥ 1 s (the usual bounded
+    /// variant guard against zero-length jobs).
+    #[inline]
+    pub fn slowdown(&self, wait: u64) -> f64 {
+        let tr = self.duration.max(1) as f64;
+        (wait as f64 + tr) / tr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job {
+            id: 7,
+            submit: 100,
+            duration: 50,
+            req_time: 80,
+            slots: 4,
+            per_slot: vec![1, 256],
+            user: 3,
+            app: 9,
+            status: 1,
+        }
+    }
+
+    #[test]
+    fn completion_and_estimate() {
+        let j = job();
+        assert_eq!(j.completion_at(200), 250);
+        assert_eq!(j.estimated_completion_at(200), 280);
+    }
+
+    #[test]
+    fn total_request_scales_by_slots() {
+        let j = job();
+        assert_eq!(j.total_request(0), 4);
+        assert_eq!(j.total_request(1), 1024);
+        assert_eq!(j.total_request(2), 0); // out-of-range type
+    }
+
+    #[test]
+    fn slowdown_definition() {
+        let j = job();
+        assert!((j.slowdown(0) - 1.0).abs() < 1e-12);
+        assert!((j.slowdown(50) - 2.0).abs() < 1e-12);
+        assert!((j.slowdown(100) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowdown_zero_duration_guard() {
+        let mut j = job();
+        j.duration = 0;
+        assert!((j.slowdown(10) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn state_display() {
+        assert_eq!(JobState::Loaded.to_string(), "loaded");
+        assert_eq!(JobState::Queued.to_string(), "queued");
+        assert_eq!(JobState::Running.to_string(), "running");
+        assert_eq!(JobState::Completed.to_string(), "completed");
+    }
+}

@@ -1,0 +1,195 @@
+//! Workload dataset linting — the preprocessing/cleaning step of §6.2
+//! ("removes jobs with incomplete or erroneous data") surfaced as a
+//! diagnosable report instead of silent skips.
+
+use super::swf::SwfFields;
+use super::Reader;
+
+/// One category of workload issue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LintIssue {
+    /// Line could not be parsed at all (counted by the reader).
+    Malformed,
+    /// Negative or missing run time.
+    BadRunTime,
+    /// No processor request at all (neither requested nor allocated).
+    NoProcessors,
+    /// Submission time goes backwards relative to the previous record.
+    NonMonotonicSubmit,
+    /// Requested time smaller than actual run time (broken estimate).
+    EstimateBelowRuntime,
+    /// Duplicate job number.
+    DuplicateId,
+}
+
+impl LintIssue {
+    pub fn describe(&self) -> &'static str {
+        match self {
+            LintIssue::Malformed => "unparseable line",
+            LintIssue::BadRunTime => "missing/negative run time",
+            LintIssue::NoProcessors => "no processor request",
+            LintIssue::NonMonotonicSubmit => "submission time decreases",
+            LintIssue::EstimateBelowRuntime => "requested time < run time",
+            LintIssue::DuplicateId => "duplicate job number",
+        }
+    }
+}
+
+/// Lint report over a workload source.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub records: u64,
+    /// Issue → occurrence count.
+    pub issues: std::collections::BTreeMap<&'static str, u64>,
+    /// First few offending job numbers per issue (for digging in).
+    pub examples: std::collections::BTreeMap<&'static str, Vec<i64>>,
+    pub first_submit: i64,
+    pub last_submit: i64,
+}
+
+impl LintReport {
+    fn record(&mut self, issue: LintIssue, job: i64) {
+        let key = issue.describe();
+        *self.issues.entry(key).or_default() += 1;
+        let ex = self.examples.entry(key).or_default();
+        if ex.len() < 5 {
+            ex.push(job);
+        }
+    }
+
+    /// Total issue count.
+    pub fn total_issues(&self) -> u64 {
+        self.issues.values().sum()
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{} records, {} issue(s); span [{}, {}]\n",
+            self.records,
+            self.total_issues(),
+            self.first_submit,
+            self.last_submit
+        );
+        for (issue, count) in &self.issues {
+            out.push_str(&format!(
+                "  {count:>8} × {issue} (e.g. jobs {:?})\n",
+                self.examples[issue]
+            ));
+        }
+        out
+    }
+}
+
+/// Lint every record of a reader.
+pub fn lint<R: Reader>(reader: &mut R) -> LintReport {
+    let mut report = LintReport { first_submit: i64::MAX, ..Default::default() };
+    let mut prev_submit = i64::MIN;
+    let mut seen_ids = std::collections::HashSet::new();
+    while let Some(rec) = reader.next_record() {
+        let Ok(f) = rec else {
+            report.record(LintIssue::Malformed, -1);
+            continue;
+        };
+        report.records += 1;
+        report.first_submit = report.first_submit.min(f.submit_time);
+        report.last_submit = report.last_submit.max(f.submit_time);
+        check_record(&f, prev_submit, &mut seen_ids, &mut report);
+        prev_submit = f.submit_time;
+    }
+    if report.records == 0 {
+        report.first_submit = 0;
+    }
+    report
+}
+
+fn check_record(
+    f: &SwfFields,
+    prev_submit: i64,
+    seen: &mut std::collections::HashSet<i64>,
+    report: &mut LintReport,
+) {
+    if f.run_time < 0 {
+        report.record(LintIssue::BadRunTime, f.job_number);
+    }
+    if f.requested_procs <= 0 && f.allocated_procs <= 0 {
+        report.record(LintIssue::NoProcessors, f.job_number);
+    }
+    if f.submit_time < prev_submit {
+        report.record(LintIssue::NonMonotonicSubmit, f.job_number);
+    }
+    if f.requested_time > 0 && f.run_time > 0 && f.requested_time < f.run_time {
+        report.record(LintIssue::EstimateBelowRuntime, f.job_number);
+    }
+    if f.job_number >= 0 && !seen.insert(f.job_number) {
+        report.record(LintIssue::DuplicateId, f.job_number);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil as tempfile;
+    use crate::workload::SwfReader;
+    use std::io::Write;
+
+    fn lint_text(lines: &[&str]) -> LintReport {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("w.swf");
+        let mut f = std::fs::File::create(&p).unwrap();
+        for l in lines {
+            writeln!(f, "{l}").unwrap();
+        }
+        drop(f);
+        let mut r = SwfReader::open(&p).unwrap();
+        lint(&mut r)
+    }
+
+    #[test]
+    fn clean_workload_no_issues() {
+        let rep = lint_text(&[
+            "1 0 -1 60 2 -1 -1 2 120 -1 1 1 1 1 1 1 -1 -1",
+            "2 5 -1 30 1 -1 -1 1 60 -1 1 1 1 1 1 1 -1 -1",
+        ]);
+        assert_eq!(rep.records, 2);
+        assert_eq!(rep.total_issues(), 0);
+        assert_eq!(rep.first_submit, 0);
+        assert_eq!(rep.last_submit, 5);
+    }
+
+    #[test]
+    fn detects_each_issue() {
+        let rep = lint_text(&[
+            "1 10 -1 -1 2 -1 -1 2 120 -1 1 1 1 1 1 1 -1 -1", // bad runtime
+            "2 20 -1 60 -1 -1 -1 -1 120 -1 1 1 1 1 1 1 -1 -1", // no procs
+            "3 5 -1 60 2 -1 -1 2 120 -1 1 1 1 1 1 1 -1 -1",  // non-monotonic
+            "3 30 -1 60 2 -1 -1 2 10 -1 1 1 1 1 1 1 -1 -1",  // dup id + bad estimate
+        ]);
+        assert_eq!(rep.records, 4);
+        assert_eq!(rep.issues["missing/negative run time"], 1);
+        assert_eq!(rep.issues["no processor request"], 1);
+        assert_eq!(rep.issues["submission time decreases"], 1);
+        assert_eq!(rep.issues["requested time < run time"], 1);
+        assert_eq!(rep.issues["duplicate job number"], 1);
+        let rendered = rep.render();
+        assert!(rendered.contains("duplicate job number"));
+    }
+
+    #[test]
+    fn synthesized_traces_are_clean() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("seth.swf");
+        crate::traces::SETH.synthesize(&p, 0.002, 1).unwrap();
+        let mut r = SwfReader::open(&p).unwrap();
+        let rep = lint(&mut r);
+        assert_eq!(rep.records, 406);
+        assert_eq!(rep.total_issues(), 0, "{}", rep.render());
+    }
+
+    #[test]
+    fn empty_workload() {
+        let rep = lint_text(&["; just a header"]);
+        assert_eq!(rep.records, 0);
+        assert_eq!(rep.first_submit, 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Workload substrate: job model, Standard Workload Format (SWF) I/O and the
+//! job factory (the paper's *job submission* component, §3).
+//!
+//! The default input format is SWF (Feitelson et al. [12]); any other source
+//! can be plugged in by implementing [`Reader`], mirroring AccaSim's abstract
+//! `Reader` class. Reading is *incremental*: [`SwfReader`] is an iterator over
+//! jobs, so the simulator only materializes jobs that are close to submission
+//! (the paper's key scalability mechanism, contrasted with Batsim/Alea's eager
+//! loading in Table 1).
+
+mod factory;
+mod job;
+pub mod lint;
+mod swf;
+
+pub use factory::{FactoryConfig, JobFactory};
+pub use job::{Job, JobId, JobState};
+pub use lint::{lint, LintIssue, LintReport};
+pub use swf::{SwfFields, SwfReader, SwfWriter, parse_swf_line, SWF_FIELD_COUNT};
+
+/// Abstract workload source, mirroring AccaSim's `Reader` base class.
+///
+/// A reader yields raw [`SwfFields`] records in submission order; the
+/// [`JobFactory`] turns them into synthetic [`Job`]s for the simulator.
+pub trait Reader {
+    /// Pull the next raw record, `None` at end of workload.
+    fn next_record(&mut self) -> Option<anyhow::Result<SwfFields>>;
+}
+
+/// Abstract workload sink, mirroring AccaSim's `WorkloadWriter` base class.
+pub trait WorkloadWriter {
+    /// Append one job record.
+    fn write_job(&mut self, fields: &SwfFields) -> anyhow::Result<()>;
+    /// Flush any buffered output.
+    fn finish(&mut self) -> anyhow::Result<()>;
+}

@@ -1,0 +1,339 @@
+//! Standard Workload Format (SWF) parsing and writing.
+//!
+//! SWF (Feitelson, Tsafrir, Krakov [12]) is a line-oriented text format:
+//! comment/header lines start with `;`, data lines carry 18 whitespace-
+//! separated integer fields:
+//!
+//! ```text
+//!  1 job number          7 used memory (KB/proc)   13 group id
+//!  2 submit time         8 requested processors    14 executable (app) id
+//!  3 wait time           9 requested time          15 queue id
+//!  4 run time           10 requested memory        16 partition id
+//!  5 allocated procs    11 status                  17 preceding job
+//!  6 avg cpu time       12 user id                 18 think time
+//! ```
+//!
+//! `-1` means "unknown" for any field. The parser is tolerant: missing
+//! trailing fields are treated as `-1`, and malformed lines produce a
+//! descriptive error carrying the line number (the simulator skips them and
+//! counts them, mirroring the preprocessing the paper describes in §6.2).
+
+use super::{Reader, WorkloadWriter};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Number of fields in a full SWF record.
+pub const SWF_FIELD_COUNT: usize = 18;
+
+/// One raw SWF record. Field names follow the SWF standard; all are i64 with
+/// `-1` meaning unknown.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SwfFields {
+    pub job_number: i64,
+    pub submit_time: i64,
+    pub wait_time: i64,
+    pub run_time: i64,
+    pub allocated_procs: i64,
+    pub avg_cpu_time: i64,
+    pub used_memory: i64,
+    pub requested_procs: i64,
+    pub requested_time: i64,
+    pub requested_memory: i64,
+    pub status: i64,
+    pub user_id: i64,
+    pub group_id: i64,
+    pub app_id: i64,
+    pub queue_id: i64,
+    pub partition_id: i64,
+    pub preceding_job: i64,
+    pub think_time: i64,
+}
+
+impl SwfFields {
+    /// Render as one SWF data line.
+    pub fn to_line(&self) -> String {
+        format!(
+            "{} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
+            self.job_number,
+            self.submit_time,
+            self.wait_time,
+            self.run_time,
+            self.allocated_procs,
+            self.avg_cpu_time,
+            self.used_memory,
+            self.requested_procs,
+            self.requested_time,
+            self.requested_memory,
+            self.status,
+            self.user_id,
+            self.group_id,
+            self.app_id,
+            self.queue_id,
+            self.partition_id,
+            self.preceding_job,
+            self.think_time
+        )
+    }
+}
+
+/// Fast-path integer parse (the simulator spends ~15% of a Table-1 run in
+/// SWF parsing; `str::parse` + error plumbing dominated it — see
+/// EXPERIMENTS.md §Perf). Falls back to float parsing for the rare archives
+/// carrying fractional fields.
+#[inline]
+fn parse_swf_num(tok: &str) -> Option<i64> {
+    let b = tok.as_bytes();
+    let (neg, digits) = match b.first()? {
+        b'-' => (true, &b[1..]),
+        b'+' => (false, &b[1..]),
+        _ => (false, b),
+    };
+    if digits.is_empty() {
+        return None;
+    }
+    let mut acc: i64 = 0;
+    for &c in digits {
+        if !c.is_ascii_digit() {
+            // float field (e.g. "59.5") — slow path
+            return tok.parse::<f64>().ok().map(|f| f as i64);
+        }
+        acc = acc.checked_mul(10)?.checked_add((c - b'0') as i64)?;
+    }
+    Some(if neg { -acc } else { acc })
+}
+
+/// Parse one SWF data line (must not be a comment line).
+pub fn parse_swf_line(line: &str) -> anyhow::Result<SwfFields> {
+    let mut vals = [-1i64; SWF_FIELD_COUNT];
+    let mut n = 0;
+    for tok in line.split_ascii_whitespace() {
+        if n >= SWF_FIELD_COUNT {
+            break; // tolerate trailing junk
+        }
+        vals[n] = parse_swf_num(tok)
+            .ok_or_else(|| anyhow::anyhow!("non-numeric SWF field {:?}", tok))?;
+        n += 1;
+    }
+    if n < 4 {
+        anyhow::bail!("SWF line has only {n} fields (need at least job/submit/wait/run)");
+    }
+    Ok(SwfFields {
+        job_number: vals[0],
+        submit_time: vals[1],
+        wait_time: vals[2],
+        run_time: vals[3],
+        allocated_procs: vals[4],
+        avg_cpu_time: vals[5],
+        used_memory: vals[6],
+        requested_procs: vals[7],
+        requested_time: vals[8],
+        requested_memory: vals[9],
+        status: vals[10],
+        user_id: vals[11],
+        group_id: vals[12],
+        app_id: vals[13],
+        queue_id: vals[14],
+        partition_id: vals[15],
+        preceding_job: vals[16],
+        think_time: vals[17],
+    })
+}
+
+/// Streaming SWF reader (the default [`Reader`]); iterates records in file
+/// order without materializing the workload. Uses one reusable line buffer
+/// — `Lines<_>` allocates a fresh `String` per line, which showed up in the
+/// Table-1 profiles (EXPERIMENTS.md §Perf).
+pub struct SwfReader {
+    input: BufReader<std::fs::File>,
+    buf: String,
+    line_no: usize,
+    /// Header comment lines seen so far (`;` lines).
+    pub header: Vec<String>,
+    /// Count of malformed data lines skipped.
+    pub skipped: usize,
+}
+
+impl SwfReader {
+    /// Open an SWF file for streaming.
+    pub fn open<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let f = std::fs::File::open(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("opening workload {}: {e}", path.as_ref().display())
+        })?;
+        Ok(SwfReader {
+            input: BufReader::with_capacity(1 << 16, f),
+            buf: String::with_capacity(256),
+            line_no: 0,
+            header: Vec::new(),
+            skipped: 0,
+        })
+    }
+}
+
+impl Reader for SwfReader {
+    fn next_record(&mut self) -> Option<anyhow::Result<SwfFields>> {
+        loop {
+            self.buf.clear();
+            match self.input.read_line(&mut self.buf) {
+                Ok(0) => return None,
+                Ok(_) => {}
+                Err(e) => return Some(Err(e.into())),
+            }
+            self.line_no += 1;
+            let trimmed = self.buf.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Some(h) = trimmed.strip_prefix(';') {
+                self.header.push(h.trim().to_string());
+                continue;
+            }
+            match parse_swf_line(trimmed) {
+                Ok(f) => return Some(Ok(f)),
+                Err(_) => {
+                    // Preprocessing: skip malformed lines, keep count (§6.2).
+                    self.skipped += 1;
+                    continue;
+                }
+            }
+        }
+    }
+}
+
+impl Iterator for SwfReader {
+    type Item = anyhow::Result<SwfFields>;
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_record()
+    }
+}
+
+/// Buffered SWF writer (the default [`WorkloadWriter`]).
+pub struct SwfWriter {
+    out: BufWriter<std::fs::File>,
+    records: u64,
+}
+
+impl SwfWriter {
+    /// Create/truncate an SWF file, writing the given header comments.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[String]) -> anyhow::Result<Self> {
+        let f = std::fs::File::create(path)?;
+        let mut out = BufWriter::with_capacity(1 << 16, f);
+        for h in header {
+            writeln!(out, "; {h}")?;
+        }
+        Ok(SwfWriter { out, records: 0 })
+    }
+
+    /// Number of records written so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+}
+
+impl WorkloadWriter for SwfWriter {
+    fn write_job(&mut self, fields: &SwfFields) -> anyhow::Result<()> {
+        writeln!(self.out, "{}", fields.to_line())?;
+        self.records += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::testutil as tempfile;
+
+    #[test]
+    fn parse_full_line() {
+        let f = parse_swf_line("1 0 10 3600 4 -1 1024 4 7200 1024 1 5 2 3 1 1 -1 -1").unwrap();
+        assert_eq!(f.job_number, 1);
+        assert_eq!(f.submit_time, 0);
+        assert_eq!(f.run_time, 3600);
+        assert_eq!(f.requested_procs, 4);
+        assert_eq!(f.requested_time, 7200);
+        assert_eq!(f.user_id, 5);
+        assert_eq!(f.think_time, -1);
+    }
+
+    #[test]
+    fn parse_short_line_pads_unknown() {
+        let f = parse_swf_line("2 5 -1 60").unwrap();
+        assert_eq!(f.job_number, 2);
+        assert_eq!(f.run_time, 60);
+        assert_eq!(f.requested_procs, -1);
+        assert_eq!(f.status, -1);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_swf_line("a b c d").is_err());
+        assert!(parse_swf_line("1 2").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_float_fields() {
+        // some archives carry float avg-cpu-time
+        let f = parse_swf_line("1 0 0 60 4 59.5 -1 4 60 -1 1 1 1 1 1 1 -1 -1").unwrap();
+        assert_eq!(f.avg_cpu_time, 59);
+    }
+
+    #[test]
+    fn line_roundtrip() {
+        let f = parse_swf_line("9 100 2 30 1 -1 512 1 60 512 1 7 8 9 2 1 -1 -1").unwrap();
+        let f2 = parse_swf_line(&f.to_line()).unwrap();
+        assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn reader_streams_and_collects_header() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("w.swf");
+        let mut fh = std::fs::File::create(&p).unwrap();
+        writeln!(fh, "; Version: 2.2").unwrap();
+        writeln!(fh, "; MaxNodes: 120").unwrap();
+        writeln!(fh).unwrap();
+        writeln!(fh, "1 0 -1 60 1 -1 -1 1 120 -1 1 1 1 1 1 1 -1 -1").unwrap();
+        writeln!(fh, "this line is broken").unwrap();
+        writeln!(fh, "2 5 -1 30 2 -1 -1 2 60 -1 1 1 1 1 1 1 -1 -1").unwrap();
+        drop(fh);
+
+        let mut r = SwfReader::open(&p).unwrap();
+        let jobs: Vec<_> = (&mut r).map(|x| x.unwrap()).collect();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].job_number, 1);
+        assert_eq!(jobs[1].job_number, 2);
+        assert_eq!(r.skipped, 1);
+        assert_eq!(r.header.len(), 2);
+        assert!(r.header[1].contains("MaxNodes"));
+    }
+
+    #[test]
+    fn writer_then_reader_roundtrip() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("w.swf");
+        let mut w = SwfWriter::create(&p, &["UnitTime: seconds".to_string()]).unwrap();
+        for i in 1..=5i64 {
+            let f = SwfFields {
+                job_number: i,
+                submit_time: i * 10,
+                run_time: 60,
+                requested_procs: 2,
+                requested_time: 100,
+                ..Default::default()
+            };
+            w.write_job(&f).unwrap();
+        }
+        w.finish().unwrap();
+        assert_eq!(w.records(), 5);
+
+        let r = SwfReader::open(&p).unwrap();
+        let jobs: Vec<_> = r.map(|x| x.unwrap()).collect();
+        assert_eq!(jobs.len(), 5);
+        assert_eq!(jobs[4].submit_time, 50);
+    }
+}

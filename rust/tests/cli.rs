@@ -1,0 +1,211 @@
+//! End-to-end tests of the `accasim` binary: every subcommand run against
+//! real (synthesized) inputs, checking exit codes and output contracts.
+
+use accasim::testutil as tempfile;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_accasim"))
+}
+
+/// Synthesize a small Seth slice + config into a temp dir.
+fn fixtures() -> (tempfile::TempDir, std::path::PathBuf, std::path::PathBuf) {
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("seth.swf");
+    let cfg = dir.path().join("seth.json");
+    accasim::traces::SETH.synthesize(&swf, 0.001, 1).unwrap();
+    accasim::traces::SETH.sys_config().write_json_file(&cfg).unwrap();
+    (dir, swf, cfg)
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn simulate_reports_summary_and_writes_csv() {
+    let (dir, swf, cfg) = fixtures();
+    let jobs_csv = dir.path().join("jobs.csv");
+    let out = bin()
+        .args([
+            "simulate",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--dispatcher",
+            "SJF-BF",
+            "--out-jobs",
+            jobs_csv.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("dispatcher        : SJF-BF"));
+    assert!(stdout.contains("jobs completed    : 203"));
+    let records = accasim::output::read_job_csv(&jobs_csv).unwrap();
+    assert_eq!(records.len(), 203);
+}
+
+#[test]
+fn simulate_rejects_unknown_flag() {
+    let (_dir, swf, cfg) = fixtures();
+    let out = bin()
+        .args([
+            "simulate",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--dispather", // typo
+            "SJF-BF",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("dispather"));
+}
+
+#[test]
+fn experiment_runs_cross_product() {
+    let (dir, swf, cfg) = fixtures();
+    let out = bin()
+        .current_dir(dir.path())
+        .args([
+            "experiment",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--schedulers",
+            "FIFO,SJF",
+            "--allocators",
+            "FF",
+            "--name",
+            "clitest",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("FIFO-FF"));
+    assert!(stdout.contains("SJF-FF"));
+    assert!(dir.path().join("results/clitest/fig10_slowdown.csv").exists());
+}
+
+#[test]
+fn generate_produces_valid_swf() {
+    let (dir, swf, cfg) = fixtures();
+    let gen = dir.path().join("gen.swf");
+    let out = bin()
+        .args([
+            "generate",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--jobs",
+            "500",
+            "--out",
+            gen.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let n = accasim::workload::SwfReader::open(&gen).unwrap().count();
+    assert_eq!(n, 500);
+    // generated workload passes the linter
+    let lint = bin().args(["validate", gen.to_str().unwrap()]).output().unwrap();
+    assert!(lint.status.success(), "{}", String::from_utf8_lossy(&lint.stdout));
+}
+
+#[test]
+fn validate_flags_broken_workload() {
+    let dir = tempfile::tempdir().unwrap();
+    let bad = dir.path().join("bad.swf");
+    std::fs::write(&bad, "1 100 -1 -1 2 -1 -1 2 120 -1 1 1 1 1 1 1 -1 -1\n").unwrap();
+    let out = bin().args(["validate", bad.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("run time"));
+}
+
+#[test]
+fn status_renders_panels() {
+    let (_dir, swf, cfg) = fixtures();
+    let out = bin()
+        .args(["status", swf.to_str().unwrap(), "--sys", cfg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("simulation time"));
+    assert!(stdout.contains("core"));
+}
+
+#[test]
+fn traces_materializes_into_dir() {
+    let dir = tempfile::tempdir().unwrap();
+    let out = bin()
+        .args([
+            "traces",
+            "ricc",
+            "--scale",
+            "0.0005",
+            "--dir",
+            dir.path().to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.path().join("ricc_s1.swf").exists());
+    assert!(dir.path().join("ricc.json").exists());
+}
+
+#[test]
+fn analyze_reads_saved_records() {
+    let (dir, swf, cfg) = fixtures();
+    let jobs_csv = dir.path().join("jobs.csv");
+    bin()
+        .args([
+            "simulate",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--out-jobs",
+            jobs_csv.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let out = bin().args(["analyze", jobs_csv.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("203 jobs"));
+    assert!(stdout.contains("wait by job size"));
+    assert!(stdout.contains("peak busy slots"));
+}
+
+#[test]
+fn run_one_emits_result_line() {
+    let (_dir, swf, cfg) = fixtures();
+    let out = bin()
+        .args([
+            "run-one",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--mode",
+            "eager-heavy",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout.lines().find(|l| l.starts_with("RESULT,")).unwrap();
+    assert_eq!(line.split(',').count(), 7);
+}

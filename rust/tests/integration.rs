@@ -1,0 +1,267 @@
+//! Cross-module integration tests: full simulations over synthesized SWF
+//! traces, the experimentation tool end-to-end, baseline loader ordering,
+//! generator round-trips, and the Figure-shape expectations of §7.
+
+use accasim::baselines::{run_rejecting, LoaderMode};
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::experiment::Experiment;
+use accasim::generator::{RequestLimits, WorkloadGenerator};
+use accasim::output::OutputCollector;
+use accasim::plotdata::{submission_distributions, PlotFactory, PlotKind};
+use accasim::sim::{SimOptions, SimOutput, Simulator};
+use accasim::stats::ks_statistic;
+use accasim::testutil as tempfile;
+use accasim::traces::{self, SETH};
+use std::collections::BTreeMap;
+
+fn run_label(swf: &std::path::Path, sys: &SysConfig, label: &str) -> SimOutput {
+    let d = dispatcher_from_label(label).unwrap();
+    let opts = SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        ..Default::default()
+    };
+    let mut sim = Simulator::new(swf, sys.clone(), d, opts).unwrap();
+    sim.run().unwrap()
+}
+
+/// All eight paper dispatchers complete a Seth-slice end to end.
+#[test]
+fn all_dispatchers_complete_seth_slice() {
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("seth.swf");
+    SETH.synthesize(&swf, 0.002, 3).unwrap(); // ~400 jobs
+    let sys = SETH.sys_config();
+    let mut completions = Vec::new();
+    for s in ["FIFO", "SJF", "LJF", "EBF"] {
+        for a in ["FF", "BF"] {
+            let out = run_label(&swf, &sys, &format!("{s}-{a}"));
+            assert!(
+                out.jobs_completed + out.jobs_rejected == 406,
+                "{s}-{a}: {} + {}",
+                out.jobs_completed,
+                out.jobs_rejected
+            );
+            assert!(out.jobs_completed > 380, "{s}-{a} completed {}", out.jobs_completed);
+            completions.push((format!("{s}-{a}"), out));
+        }
+    }
+    // Fig 10 shape: SJF/EBF mean slowdown ≤ FIFO/LJF mean slowdown.
+    let mean = |l: &str| {
+        completions.iter().find(|(lab, _)| lab == l).unwrap().1.avg_slowdown()
+    };
+    let best = mean("SJF-FF").min(mean("EBF-FF"));
+    let worst = mean("FIFO-FF").max(mean("LJF-FF"));
+    assert!(
+        best <= worst + 1e-9,
+        "expected SJF/EBF ≤ FIFO/LJF slowdown: best {best} vs worst {worst}"
+    );
+}
+
+/// The experimentation tool writes all four figure CSVs with all dispatchers.
+#[test]
+fn experiment_tool_end_to_end() {
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("w.swf");
+    SETH.synthesize(&swf, 0.001, 9).unwrap();
+    let mut e = Experiment::new("it", &swf, SETH.sys_config());
+    e.out_dir = dir.path().join("out");
+    e.gen_dispatchers(&["FIFO", "SJF", "LJF", "EBF"], &["FF", "BF"]);
+    let res = e.run_simulation().unwrap();
+    assert_eq!(res.runs.len(), 8);
+    for p in &res.plots {
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.lines().count() >= 9, "{}: expected 8 dispatcher rows", p.display());
+    }
+}
+
+/// Table 1 memory ordering: incremental ≤ eager-light ≤ eager-heavy growth.
+#[test]
+fn baseline_memory_ordering() {
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("w.swf");
+    SETH.synthesize(&swf, 0.05, 4).unwrap(); // ~10k jobs
+    let sys = SETH.sys_config();
+    // measure in our own subprocess-free way: relative max growth
+    let inc = run_rejecting(&swf, &sys, LoaderMode::Incremental).unwrap();
+    let light = run_rejecting(&swf, &sys, LoaderMode::EagerLight).unwrap();
+    let heavy = run_rejecting(&swf, &sys, LoaderMode::EagerHeavy).unwrap();
+    assert_eq!(inc.jobs, light.jobs);
+    assert_eq!(light.jobs, heavy.jobs);
+    // RSS high-water persists across measurements in one process, so only
+    // the monotone ordering along increasing footprint is asserted.
+    assert!(
+        heavy.max_rss_kb >= light.max_rss_kb,
+        "heavy {} < light {}",
+        heavy.max_rss_kb,
+        light.max_rss_kb
+    );
+    assert!(
+        light.max_rss_kb >= inc.max_rss_kb,
+        "light {} < incremental {}",
+        light.max_rss_kb,
+        inc.max_rss_kb
+    );
+}
+
+/// Generator round trip (Figs 14–17): generated submissions and GFLOPs
+/// track the seed distributions.
+#[test]
+fn generator_tracks_seed_trace() {
+    let dir = tempfile::tempdir().unwrap();
+    let seed_swf = dir.path().join("seed.swf");
+    SETH.synthesize(&seed_swf, 0.01, 5).unwrap(); // ~2k jobs
+    let perf: BTreeMap<String, f64> = [("core".to_string(), 1.667)].into_iter().collect();
+    let limits = RequestLimits::new(&[("core", 1), ("mem", 1)], &[("core", 128), ("mem", 256)]);
+    let mut g =
+        WorkloadGenerator::from_swf(&seed_swf, SETH.sys_config(), perf, limits, 42).unwrap();
+    let rep = g.generate_jobs(5_000, dir.path().join("gen.swf")).unwrap();
+
+    // seed submissions
+    let seed_times: Vec<u64> = accasim::workload::SwfReader::open(&seed_swf)
+        .unwrap()
+        .map(|r| r.unwrap().submit_time as u64)
+        .collect();
+    let (sh, sd_, _) = submission_distributions(&seed_times);
+    let (gh, gd, _) = submission_distributions(&rep.times);
+    // hourly/daily shares: L1 distance below generous thresholds
+    let l1h: f64 = sh.iter().zip(&gh).map(|(a, b)| (a - b).abs()).sum();
+    let l1d: f64 = sd_.iter().zip(&gd).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1h < 0.5, "hourly L1 {l1h}");
+    assert!(l1d < 0.5, "daily L1 {l1d}");
+
+    // the generated dataset must simulate cleanly
+    let out = run_label(&dir.path().join("gen.swf"), &SETH.sys_config(), "SJF-FF");
+    assert!(out.jobs_completed > 4_500);
+    assert!(rep.gflops.iter().all(|g| *g > 0.0));
+}
+
+/// XLA metrics path equals the Rust stats path on real simulation output
+/// (plotdata cross-check; skipped without artifacts).
+#[test]
+fn xla_metrics_match_rust_on_sim_output() {
+    if !std::path::Path::new("artifacts/metrics.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let engine = accasim::runtime::Engine::with_artifacts("artifacts").unwrap();
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("w.swf");
+    SETH.synthesize(&swf, 0.002, 8).unwrap();
+    let out = run_label(&swf, &SETH.sys_config(), "FIFO-FF");
+    let b = accasim::runtime::shapes::MET_B;
+    let mut wait = vec![0f32; b];
+    let mut dur = vec![0f32; b];
+    let mut mask = vec![0f32; b];
+    for (i, rec) in out.jobs.iter().take(b).enumerate() {
+        wait[i] = rec.wait as f32;
+        dur[i] = (rec.end - rec.start) as f32;
+        mask[i] = 1.0;
+    }
+    let res = engine
+        .execute_f32(
+            "metrics",
+            &[(&wait, &[b as i64]), (&dur, &[b as i64]), (&mask, &[b as i64])],
+        )
+        .unwrap();
+    let n = out.jobs.len().min(b);
+    for (i, rec) in out.jobs.iter().take(n).enumerate() {
+        assert!(
+            (res[0][i] as f64 - rec.slowdown).abs() < 1e-3 * rec.slowdown,
+            "job {i}: xla {} vs rust {}",
+            res[0][i],
+            rec.slowdown
+        );
+    }
+    assert_eq!(res[2][0] as usize, n, "summary count");
+}
+
+/// Figure 12/13 shape: EBF spends more dispatch time than FIFO, and its
+/// per-decision time grows with queue size.
+#[test]
+fn ebf_dispatch_cost_dominates() {
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("w.swf");
+    // congested slice → long queues
+    SETH.synthesize(&swf, 0.005, 6).unwrap();
+    let sys = SETH.sys_config();
+    let fifo = run_label(&swf, &sys, "FIFO-FF");
+    let ebf = run_label(&swf, &sys, "EBF-FF");
+    let per_point = |o: &SimOutput| o.dispatch_ns as f64 / o.time_points.max(1) as f64;
+    assert!(
+        per_point(&ebf) > per_point(&fifo),
+        "EBF {} ≤ FIFO {} ns/point",
+        per_point(&ebf),
+        per_point(&fifo)
+    );
+
+    let mut pf = PlotFactory::new();
+    pf.add_run("EBF-FF", vec![ebf]);
+    let rows = pf.scalability_rows(10);
+    assert!(!rows.is_empty());
+}
+
+/// materialize() produces loadable config + workload pairs for all traces.
+#[test]
+fn materialized_traces_simulate() {
+    let dir = tempfile::tempdir().unwrap();
+    for spec in traces::ALL {
+        let scale = 100.0 / spec.jobs as f64; // ~100 jobs each
+        let (swf, cfg) = traces::materialize(spec, dir.path(), scale, 2).unwrap();
+        let sys = SysConfig::from_json_file(&cfg).unwrap();
+        let out = run_label(&swf, &sys, "FIFO-FF");
+        assert!(
+            out.jobs_completed + out.jobs_rejected >= 99,
+            "{}: {}",
+            spec.name,
+            out.jobs_completed
+        );
+    }
+}
+
+/// KS sanity: a trace is similar to itself and different seeds stay similar
+/// in distribution (calibrates the Fig 14–17 comparison metric).
+#[test]
+fn trace_distributions_stable_across_seeds() {
+    let dir = tempfile::tempdir().unwrap();
+    let (a, b) = (dir.path().join("a.swf"), dir.path().join("b.swf"));
+    SETH.synthesize(&a, 0.005, 1).unwrap();
+    SETH.synthesize(&b, 0.005, 2).unwrap();
+    let durs = |p: &std::path::Path| -> Vec<f64> {
+        accasim::workload::SwfReader::open(p)
+            .unwrap()
+            .map(|r| r.unwrap().run_time as f64)
+            .collect()
+    };
+    let ks = ks_statistic(&durs(&a), &durs(&b));
+    assert!(ks < 0.08, "duration KS across seeds = {ks}");
+}
+
+/// Fig 8/9 monitoring renders on a real post-simulation state.
+#[test]
+fn monitoring_renders() {
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("w.swf");
+    SETH.synthesize(&swf, 0.001, 7).unwrap();
+    let sys = SETH.sys_config();
+    let d = dispatcher_from_label("FIFO-FF").unwrap();
+    let mut sim = Simulator::new(&swf, sys, d, SimOptions::default()).unwrap();
+    let out = sim.run().unwrap();
+    let status = accasim::monitor::SystemStatus::gather(
+        out.last_completion,
+        0,
+        0,
+        0,
+        out.jobs_completed,
+        out.jobs_rejected,
+        sim.resource_manager(),
+        out.cpu_ms,
+    );
+    let panel = status.render();
+    assert!(panel.contains("completed=203"));
+    let viz = accasim::monitor::render_utilization(sim.resource_manager(), 60);
+    assert!(viz.contains("core"));
+    let mut pf = PlotFactory::new();
+    pf.add_run("FIFO-FF", vec![out]);
+    assert!(pf.render_boxes(PlotKind::Slowdown, 40).contains("FIFO-FF"));
+}

@@ -1,0 +1,262 @@
+//! Property-based coordinator invariants (testkit-driven; see
+//! `rust/src/testkit.rs`). Each property runs many randomized cases with a
+//! reported replay seed on failure.
+
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::resources::ResourceManager;
+use accasim::rng::Pcg64;
+use accasim::sim::{SimOptions, SimOutput, Simulator};
+use accasim::testkit::{arb_jobs, check};
+use accasim::workload::Job;
+
+const DISPATCHERS: &[&str] = &[
+    "FIFO-FF", "FIFO-BF", "SJF-FF", "SJF-BF", "LJF-FF", "LJF-BF", "EBF-FF", "EBF-BF",
+];
+
+fn arb_sys(rng: &mut Pcg64) -> SysConfig {
+    SysConfig::homogeneous(
+        "prop",
+        rng.range_u64(1, 12),
+        &[
+            ("core", rng.range_u64(1, 16)),
+            ("gpu", rng.range_u64(0, 2)),
+            ("mem", rng.range_u64(8, 128)),
+        ],
+        0,
+    )
+}
+
+fn run(jobs: Vec<Job>, sys: SysConfig, label: &str) -> SimOutput {
+    let d = dispatcher_from_label(label).unwrap();
+    let opts = SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        mem_sample_every: 0,
+        ..Default::default()
+    };
+    let mut sim = Simulator::from_jobs(jobs, sys, d, opts);
+    sim.run().expect("simulation completes")
+}
+
+/// Every submitted job is either completed or rejected — none lost, and the
+/// simulation always terminates.
+#[test]
+fn prop_conservation_of_jobs() {
+    check("conservation", 0xC0FFEE, 60, |rng| {
+        let sys = arb_sys(rng);
+        let n = rng.range_u64(1, 80) as usize;
+        let jobs = arb_jobs(rng, n, 16, 3);
+        let label = DISPATCHERS[rng.range_u64(0, DISPATCHERS.len() as u64 - 1) as usize];
+        let out = run(jobs, sys, label);
+        assert_eq!(
+            out.jobs_completed + out.jobs_rejected,
+            n as u64,
+            "{label}: {} + {} != {n}",
+            out.jobs_completed,
+            out.jobs_rejected
+        );
+    });
+}
+
+/// No job starts before its submission; every completed job runs for exactly
+/// its duration; waits/slowdowns are consistent.
+#[test]
+fn prop_job_timing() {
+    check("timing", 0xBEEF, 60, |rng| {
+        let sys = arb_sys(rng);
+        let n = rng.range_u64(1, 60) as usize;
+        let jobs = arb_jobs(rng, n, 16, 3);
+        let by_id: std::collections::HashMap<u64, Job> =
+            jobs.iter().map(|j| (j.id, j.clone())).collect();
+        let label = DISPATCHERS[rng.range_u64(0, DISPATCHERS.len() as u64 - 1) as usize];
+        let out = run(jobs, sys, label);
+        for rec in &out.jobs {
+            let j = &by_id[&rec.id];
+            assert!(rec.start >= j.submit, "job {} started early", rec.id);
+            assert_eq!(rec.end - rec.start, j.duration, "job {} wrong duration", rec.id);
+            assert_eq!(rec.wait, rec.start - j.submit);
+            let expect_sd = (rec.wait as f64 + j.duration.max(1) as f64)
+                / j.duration.max(1) as f64;
+            assert!((rec.slowdown - expect_sd).abs() < 1e-9);
+        }
+    });
+}
+
+/// At no simulation time point may the system be oversubscribed: replay the
+/// completed schedule as (start, +req)/(end, −req) events and assert total
+/// usage stays within capacity for every resource type.
+#[test]
+fn prop_no_oversubscription_via_replay() {
+    check("no-oversubscription", 0xFACE, 40, |rng| {
+        let sys = arb_sys(rng);
+        let n = rng.range_u64(1, 60) as usize;
+        let jobs = arb_jobs(rng, n, 16, 3);
+        let by_id: std::collections::HashMap<u64, Job> =
+            jobs.iter().map(|j| (j.id, j.clone())).collect();
+        let label = DISPATCHERS[rng.range_u64(0, DISPATCHERS.len() as u64 - 1) as usize];
+        let out = run(jobs, sys.clone(), label);
+
+        let rm = ResourceManager::from_config(&sys);
+        let types = rm.num_types();
+        let capacity: Vec<u64> = (0..types)
+            .map(|r| (0..rm.num_nodes()).map(|n| rm.node_capacity(n)[r]).sum())
+            .collect();
+        let mut events: Vec<(u64, i32, u64)> = Vec::new(); // (t, ±1, id)
+        for rec in &out.jobs {
+            events.push((rec.start, 1, rec.id));
+            events.push((rec.end, -1, rec.id));
+        }
+        // releases before starts at equal times (the simulator completes
+        // then dispatches within one time point)
+        events.sort_by_key(|&(t, s, _)| (t, s));
+        let mut used = vec![0i64; types];
+        for (t, sign, id) in events {
+            let j = &by_id[&id];
+            for (r, u) in used.iter_mut().enumerate() {
+                *u += sign as i64 * j.total_request(r) as i64;
+                assert!(
+                    *u >= 0 && *u as u64 <= capacity[r],
+                    "{label}: usage {} of type {r} outside [0, {}] at t={t}",
+                    *u,
+                    capacity[r]
+                );
+            }
+        }
+    });
+}
+
+/// FIFO never reorders: among completed jobs, start times are monotone in
+/// submission order.
+#[test]
+fn prop_fifo_order_preserved() {
+    check("fifo-order", 0xF1F0, 40, |rng| {
+        let sys = arb_sys(rng);
+        let n = rng.range_u64(2, 60) as usize;
+        let jobs = arb_jobs(rng, n, 16, 3);
+        let out = run(jobs, sys, "FIFO-FF");
+        let mut recs = out.jobs.clone();
+        recs.sort_by_key(|r| (r.submit, r.id));
+        for w in recs.windows(2) {
+            assert!(
+                w[0].start <= w[1].start,
+                "FIFO reordered: job {} started {} before job {} at {}",
+                w[1].id,
+                w[1].start,
+                w[0].id,
+                w[0].start
+            );
+        }
+    });
+}
+
+/// With exact estimates and a single reservation, EASY backfilling completes
+/// the same job set without extending the schedule relative to FIFO.
+#[test]
+fn prop_ebf_no_worse_than_fifo_with_exact_estimates() {
+    check("ebf-vs-fifo", 0xEB, 30, |rng| {
+        let sys = arb_sys(rng);
+        let n = rng.range_u64(2, 50) as usize;
+        let mut jobs = arb_jobs(rng, n, 16, 3);
+        for j in &mut jobs {
+            j.req_time = j.duration.max(1); // exact estimates
+        }
+        let fifo = run(jobs.clone(), sys.clone(), "FIFO-FF");
+        let ebf = run(jobs, sys, "EBF-FF");
+        assert_eq!(fifo.jobs_completed, ebf.jobs_completed);
+        assert!(
+            ebf.last_completion <= fifo.last_completion,
+            "EBF makespan {} > FIFO {}",
+            ebf.last_completion,
+            fifo.last_completion
+        );
+    });
+}
+
+/// SWF round-trip: parse(to_line(x)) == x for arbitrary records.
+#[test]
+fn prop_swf_roundtrip() {
+    use accasim::workload::{parse_swf_line, SwfFields};
+    check("swf-roundtrip", 0x5F5F, 200, |rng| {
+        let f = SwfFields {
+            job_number: rng.range_u64(1, 1 << 40) as i64,
+            submit_time: rng.range_u64(0, 1 << 40) as i64,
+            wait_time: rng.range_u64(0, 1 << 20) as i64 - 1,
+            run_time: rng.range_u64(0, 1 << 30) as i64,
+            allocated_procs: rng.range_u64(0, 4096) as i64 - 1,
+            avg_cpu_time: -1,
+            used_memory: rng.range_u64(0, 1 << 30) as i64 - 1,
+            requested_procs: rng.range_u64(0, 4096) as i64 - 1,
+            requested_time: rng.range_u64(0, 1 << 30) as i64 - 1,
+            requested_memory: rng.range_u64(0, 1 << 30) as i64 - 1,
+            status: rng.range_u64(0, 5) as i64 - 1,
+            user_id: rng.range_u64(0, 1000) as i64,
+            group_id: rng.range_u64(0, 100) as i64,
+            app_id: rng.range_u64(0, 100) as i64,
+            queue_id: rng.range_u64(0, 10) as i64,
+            partition_id: rng.range_u64(0, 10) as i64,
+            preceding_job: -1,
+            think_time: -1,
+        };
+        let parsed = parse_swf_line(&f.to_line()).expect("roundtrip parses");
+        assert_eq!(f, parsed);
+    });
+}
+
+/// Simulation is deterministic: identical inputs give identical records.
+#[test]
+fn prop_simulation_deterministic() {
+    check("determinism", 0xD3, 20, |rng| {
+        let sys = arb_sys(rng);
+        let n = rng.range_u64(1, 50) as usize;
+        let jobs = arb_jobs(rng, n, 16, 3);
+        let label = DISPATCHERS[rng.range_u64(0, DISPATCHERS.len() as u64 - 1) as usize];
+        let a = run(jobs.clone(), sys.clone(), label);
+        let b = run(jobs, sys, label);
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (ra, rb) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(ra, rb);
+        }
+    });
+}
+
+/// Estimation errors never change execution semantics: scrambled req_time
+/// may reorder decisions but every job still runs its true duration (§3).
+#[test]
+fn prop_estimates_do_not_affect_durations() {
+    check("estimates", 0xE5, 30, |rng| {
+        let sys = arb_sys(rng);
+        let n = rng.range_u64(1, 50) as usize;
+        let mut jobs = arb_jobs(rng, n, 16, 3);
+        for j in &mut jobs {
+            j.req_time = rng.range_u64(1, 10_000); // wildly wrong estimates
+        }
+        let by_id: std::collections::HashMap<u64, u64> =
+            jobs.iter().map(|j| (j.id, j.duration)).collect();
+        let label = DISPATCHERS[rng.range_u64(0, DISPATCHERS.len() as u64 - 1) as usize];
+        let out = run(jobs, sys, label);
+        for rec in &out.jobs {
+            assert_eq!(rec.end - rec.start, by_id[&rec.id]);
+        }
+    });
+}
+
+/// The allocation slice lists the simulator commits are internally
+/// consistent: per-job slot totals always equal the request (checked by the
+/// ResourceManager, surfaced here as "no panic across thousands of cases").
+#[test]
+fn prop_dense_contention_terminates() {
+    check("dense", 0xDE05E, 20, |rng| {
+        // tiny machine, many jobs, simultaneous submits — worst-case churn
+        let sys = SysConfig::homogeneous("tiny", 1, &[("core", 2)], 0);
+        let n = rng.range_u64(20, 120) as usize;
+        let mut jobs = arb_jobs(rng, n, 2, 1);
+        for j in &mut jobs {
+            j.submit = rng.range_u64(0, 5); // burst
+        }
+        let label = DISPATCHERS[rng.range_u64(0, DISPATCHERS.len() as u64 - 1) as usize];
+        let out = run(jobs, sys, label);
+        assert_eq!(out.jobs_completed + out.jobs_rejected, n as u64);
+    });
+}

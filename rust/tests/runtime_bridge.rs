@@ -1,0 +1,263 @@
+//! Integration tests over the PJRT runtime bridge: load the AOT artifacts,
+//! execute them from Rust, and check numerics against the pure-Rust
+//! implementations (the same contract pytest enforces against ref.py).
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) otherwise.
+
+use accasim::config::SysConfig;
+use accasim::dispatch::{Allocator, BestFit, XlaFit};
+use accasim::resources::{Allocation, ResourceManager};
+use accasim::rng::Pcg64;
+use accasim::runtime::{shapes, Engine};
+use accasim::workload::Job;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    if !std::path::Path::new("artifacts/fit_score.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Engine::with_artifacts("artifacts").expect("engine loads artifacts")))
+}
+
+#[test]
+fn loads_all_artifacts() {
+    let Some(e) = engine() else { return };
+    for name in ["fit_score", "metrics", "slot_hist"] {
+        assert!(e.has(name), "{name} should be loaded");
+    }
+}
+
+#[test]
+fn fit_score_roundtrip_matches_rust_semantics() {
+    let Some(e) = engine() else { return };
+    // job 0: 2 cores, 10 mem per slot
+    let mut req = vec![0f32; shapes::FIT_J * shapes::FIT_R];
+    req[0] = 2.0;
+    req[1] = 10.0;
+    let mut free = vec![0f32; shapes::FIT_N * shapes::FIT_R];
+    let mut busy = vec![-1f32; shapes::FIT_N];
+    // node 0: feasible, busy 3; node 1: infeasible (1 core); node 2: busy 7
+    for (n, (c, m, b)) in [(4.0, 100.0, 3.0), (1.0, 100.0, 0.0), (8.0, 50.0, 7.0)]
+        .iter()
+        .enumerate()
+    {
+        free[n * shapes::FIT_R] = *c;
+        free[n * shapes::FIT_R + 1] = *m;
+        busy[n] = *b;
+    }
+    let out = e
+        .execute_f32(
+            "fit_score",
+            &[
+                (&req, &[shapes::FIT_J as i64, shapes::FIT_R as i64]),
+                (&free, &[shapes::FIT_N as i64, shapes::FIT_R as i64]),
+                (&busy, &[shapes::FIT_N as i64]),
+            ],
+        )
+        .unwrap();
+    let score = &out[0];
+    let host = &out[1];
+    assert_eq!(score[0], 3.0);
+    assert_eq!(score[1], -1.0);
+    assert_eq!(score[2], 7.0);
+    assert_eq!(host[0], 2.0); // min(4/2, 100/10)
+    assert_eq!(host[2], 4.0); // min(8/2, 50/10) = 4... min(4,5)=4
+    // padded nodes infeasible
+    assert_eq!(score[3], -1.0);
+}
+
+#[test]
+fn metrics_roundtrip_matches_rust_stats() {
+    let Some(e) = engine() else { return };
+    let b = shapes::MET_B;
+    let mut rng = Pcg64::new(42);
+    let wait: Vec<f32> = (0..b).map(|_| rng.range_u64(0, 10_000) as f32).collect();
+    let dur: Vec<f32> = (0..b).map(|_| rng.range_u64(1, 5_000) as f32).collect();
+    let mask: Vec<f32> = (0..b).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+    let out = e
+        .execute_f32(
+            "metrics",
+            &[
+                (&wait, &[b as i64]),
+                (&dur, &[b as i64]),
+                (&mask, &[b as i64]),
+            ],
+        )
+        .unwrap();
+    let sd = &out[0];
+    let hist = &out[1];
+    let summary = &out[2];
+    // cross-check against rust-side slowdown math
+    let mut expect_sum = 0f64;
+    let mut expect_count = 0u64;
+    for i in 0..b {
+        let tr = dur[i].max(1.0) as f64;
+        let expected = if mask[i] > 0.0 { (wait[i] as f64 + tr) / tr } else { 0.0 };
+        assert!(
+            (sd[i] as f64 - expected).abs() < 1e-3 * expected.max(1.0),
+            "slowdown[{i}] {} vs {expected}",
+            sd[i]
+        );
+        if mask[i] > 0.0 {
+            expect_sum += expected;
+            expect_count += 1;
+        }
+    }
+    let hist_total: f32 = hist.iter().sum();
+    assert_eq!(hist_total as u64, expect_count);
+    assert_eq!(summary[0] as u64, expect_count);
+    assert!((summary[3] as f64 - expect_sum).abs() / expect_sum < 1e-4);
+}
+
+#[test]
+fn slot_hist_roundtrip() {
+    let Some(e) = engine() else { return };
+    let b = shapes::SLOT_B;
+    let mut times = vec![0f32; b];
+    let mask = vec![1f32; b];
+    // all at 09:00 → slot 18
+    for t in times.iter_mut() {
+        *t = 9.0 * 3600.0;
+    }
+    times[0] = 0.0; // slot 0
+    let out = e
+        .execute_f32("slot_hist", &[(&times, &[b as i64]), (&mask, &[b as i64])])
+        .unwrap();
+    let counts = &out[0];
+    let weights = &out[1];
+    assert_eq!(counts[18] as usize, b - 1);
+    assert_eq!(counts[0] as usize, 1);
+    assert!((weights.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+}
+
+#[test]
+fn slot_weights_via_engine_match_cpu_fit() {
+    let Some(e) = engine() else { return };
+    // synthesize a seed trace, fit slot weights on CPU, re-derive via the
+    // slot_hist artifact — the two paths must agree exactly
+    use accasim::generator::SeedStats;
+    use accasim::workload::SwfReader;
+    let dir = tempfile::tempdir().unwrap();
+    let p = dir.path().join("seed.swf");
+    accasim::traces::SETH.synthesize(&p, 0.05, 9).unwrap(); // > one SLOT_B chunk
+    let times: Vec<u64> = SwfReader::open(&p)
+        .unwrap()
+        .map(|r| r.unwrap().submit_time as u64)
+        .collect();
+    assert!(times.len() > accasim::runtime::shapes::SLOT_B);
+    let recs: Vec<accasim::workload::SwfFields> = SwfReader::open(&p)
+        .unwrap()
+        .map(|r| r.unwrap())
+        .collect();
+    let cpu = SeedStats::from_records(recs.iter(), &Default::default());
+    let xla = SeedStats::slot_weights_via_engine(&times, &e).unwrap();
+    assert_eq!(xla.len(), cpu.slot_weights.len());
+    for (k, (a, b)) in cpu.slot_weights.iter().zip(&xla).enumerate() {
+        assert!((a - b).abs() < 1e-9, "slot {k}: cpu {a} vs xla {b}");
+    }
+}
+
+use accasim::testutil as tempfile;
+
+// ---------------------------------------------------------------------------
+// XlaFit ≡ BestFit equivalence: same node order, same placements, end-to-end.
+// ---------------------------------------------------------------------------
+
+fn arb_rm(rng: &mut Pcg64, nodes: u64) -> ResourceManager {
+    let sys = SysConfig::homogeneous(
+        "t",
+        nodes,
+        &[("core", rng.range_u64(2, 16)), ("mem", rng.range_u64(64, 512))],
+        0,
+    );
+    ResourceManager::from_config(&sys)
+}
+
+fn arb_job(rng: &mut Pcg64, id: u64) -> Job {
+    Job {
+        id,
+        submit: 0,
+        duration: 100,
+        req_time: 100,
+        slots: rng.range_u64(1, 12) as u32,
+        per_slot: vec![rng.range_u64(1, 4), rng.range_u64(0, 64)],
+        user: 0,
+        app: 0,
+        status: 1,
+    }
+}
+
+#[test]
+fn xla_fit_orders_nodes_exactly_like_best_fit() {
+    let Some(e) = engine() else { return };
+    let mut xf = XlaFit::new(e).unwrap();
+    let mut bf = BestFit::new();
+    let mut rng = Pcg64::new(7);
+    for case in 0..20 {
+        let nodes = rng.range_u64(4, 64);
+        let mut rm = arb_rm(&mut rng, nodes);
+        // occupy some nodes to diversify busy counts
+        for k in 0..rng.range_u64(0, 8) {
+            let j = arb_job(&mut rng, 1000 + k);
+            if let Some(a) = bf.place(&j, &rm) {
+                rm.allocate(&j, a).unwrap();
+            }
+        }
+        let job = arb_job(&mut rng, 1);
+        let order_bf = bf.node_order(&job, &rm);
+        let order_xf = xf.node_order(&job, &rm);
+        assert_eq!(order_bf, order_xf, "case {case}: node orders diverge");
+    }
+}
+
+#[test]
+fn xla_fit_placements_match_best_fit_end_to_end() {
+    let Some(e) = engine() else { return };
+    let mut xf = XlaFit::new(e).unwrap();
+    let mut bf = BestFit::new();
+    let mut rng = Pcg64::new(11);
+    let mut rm_a = arb_rm(&mut rng, 32);
+    let mut rm_b = rm_a.clone();
+    for id in 1..=50u64 {
+        let job = arb_job(&mut rng, id);
+        let pa = bf.place(&job, &rm_a);
+        let pb = xf.place(&job, &rm_b);
+        assert_eq!(pa, pb, "job {id} placement diverged");
+        if let Some(a) = pa {
+            rm_a.allocate(&job, a.clone()).unwrap();
+            rm_b.allocate(&job, a).unwrap();
+        }
+    }
+    assert_eq!(rm_a.free_matrix(), rm_b.free_matrix());
+}
+
+#[test]
+fn xla_fit_handles_chunked_node_counts() {
+    let Some(e) = engine() else { return };
+    // more nodes than one FIT_N bucket → chunked execution
+    let mut xf = XlaFit::new(e).unwrap();
+    let mut bf = BestFit::new();
+    let mut rng = Pcg64::new(13);
+    let mut rm = arb_rm(&mut rng, (shapes::FIT_N + 37) as u64);
+    // make one far node the busiest
+    let far = shapes::FIT_N + 10;
+    let j0 = Job {
+        id: 999,
+        submit: 0,
+        duration: 1,
+        req_time: 1,
+        slots: 2,
+        per_slot: vec![1, 0],
+        user: 0,
+        app: 0,
+        status: 1,
+    };
+    rm.allocate(&j0, Allocation { slices: vec![(far as u32, 2)] }).unwrap();
+    // a 1-core job fits everywhere, so the busiest (far) node must lead
+    let job = Job { per_slot: vec![1, 0], slots: 1, ..j0.clone() };
+    let order_bf = bf.node_order(&job, &rm);
+    let order_xf = xf.node_order(&job, &rm);
+    assert_eq!(order_bf, order_xf);
+    assert_eq!(order_xf[0], far as u32);
+}
