@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
             let opts = SimOptions {
                 lookahead,
                 output: OutputCollector::null(),
-                mem_sample_every: 0,
+                mem_sample_secs: 0,
                 ..Default::default()
             };
             let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();
@@ -36,12 +36,12 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    // --- memory sampling cadence -------------------------------------------
-    for every in [0u64, 1, 64, 1024] {
-        b.bench(&format!("mem_sample_every/{every}"), || {
+    // --- memory sampling cadence (simulation seconds between samples) ------
+    for secs in [0u64, 60, 3600, 86_400] {
+        b.bench(&format!("mem_sample_secs/{secs}"), || {
             let d = dispatcher_from_label("FIFO-FF").unwrap();
             let opts = SimOptions {
-                mem_sample_every: every,
+                mem_sample_secs: secs,
                 output: OutputCollector::null(),
                 ..Default::default()
             };
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
             let d = dispatcher_from_label("FIFO-FF").unwrap();
             let opts = SimOptions {
                 output: mk(),
-                mem_sample_every: 0,
+                mem_sample_secs: 0,
                 ..Default::default()
             };
             let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
             let d = dispatcher_from_label(label).unwrap();
             let opts = SimOptions {
                 output: OutputCollector::null(),
-                mem_sample_every: 0,
+                mem_sample_secs: 0,
                 ..Default::default()
             };
             let mut sim = Simulator::new(&swf, sys.clone(), d, opts).unwrap();

@@ -10,10 +10,11 @@ use accasim::dispatch::dispatcher_from_label;
 use accasim::output::OutputCollector;
 use accasim::resources::{Allocation, ResourceManager};
 use accasim::rng::Pcg64;
-use accasim::sim::{SimOptions, Simulator};
+use accasim::sim::{EventPayload, EventQueue, SimOptions, Simulator};
 use accasim::stats::BoxStats;
 use accasim::traces;
 use accasim::workload::{parse_swf_line, Job};
+use std::collections::BTreeMap;
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new("micro_core");
@@ -58,6 +59,81 @@ fn main() -> anyhow::Result<()> {
         acc
     });
 
+    // --- event-queue substrate: unified min-heap vs the seed's BTreeMap
+    //     time index (Table-1 acceptance: heap must be no slower) ---------
+    let mut ev_rng = Pcg64::new(7);
+    let stamps: Vec<u64> = (0..100_000).map(|_| ev_rng.range_u64(0, 1 << 20)).collect();
+    b.bench("event_queue_heap_100k", || {
+        let mut q = EventQueue::new();
+        for (i, &t) in stamps.iter().enumerate() {
+            q.push(t, EventPayload::Complete(i as u64));
+        }
+        let mut acc = 0u64;
+        while let Some(t) = q.next_time() {
+            while let Some(ev) = q.pop_at(t) {
+                acc = acc.wrapping_add(ev.time);
+            }
+        }
+        acc
+    });
+    b.bench("event_queue_btreemap_100k", || {
+        let mut q: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for (i, &t) in stamps.iter().enumerate() {
+            q.entry(t).or_default().push(i as u64);
+        }
+        let mut acc = 0u64;
+        while let Some(t) = q.keys().next().copied() {
+            let ids = q.remove(&t).unwrap();
+            acc = acc.wrapping_add(t * ids.len() as u64);
+        }
+        acc
+    });
+    // Same comparison with full Submit(Job) payloads — the heap moves the
+    // Job on every sift, a cost the BTreeMap<_, Vec<Job>> index never paid.
+    let sub_job = Job {
+        id: 0,
+        submit: 0,
+        duration: 600,
+        req_time: 600,
+        slots: 4,
+        per_slot: vec![1, 512],
+        user: 3,
+        app: 1,
+        status: 1,
+    };
+    b.bench("event_queue_heap_submit_100k", || {
+        let mut q = EventQueue::new();
+        for (i, &t) in stamps.iter().enumerate() {
+            let mut j = sub_job.clone();
+            j.id = i as u64;
+            q.push(t, EventPayload::Submit(j));
+        }
+        let mut acc = 0u64;
+        while let Some(t) = q.next_time() {
+            while let Some(ev) = q.pop_at(t) {
+                if let EventPayload::Submit(j) = ev.payload {
+                    acc = acc.wrapping_add(j.id);
+                }
+            }
+        }
+        acc
+    });
+    b.bench("event_queue_btreemap_submit_100k", || {
+        let mut q: BTreeMap<u64, Vec<Job>> = BTreeMap::new();
+        for (i, &t) in stamps.iter().enumerate() {
+            let mut j = sub_job.clone();
+            j.id = i as u64;
+            q.entry(t).or_default().push(j);
+        }
+        let mut acc = 0u64;
+        while let Some(t) = q.keys().next().copied() {
+            for j in q.remove(&t).unwrap() {
+                acc = acc.wrapping_add(j.id);
+            }
+        }
+        acc
+    });
+
     // --- event-loop throughput (rejecting dispatcher = pure overhead) ----
     let (swf, _) = traces::materialize(&traces::SETH, "data", 0.02, 1)?;
     let sys_seth = traces::SETH.sys_config();
@@ -65,7 +141,7 @@ fn main() -> anyhow::Result<()> {
         let d = dispatcher_from_label("REJECT-FF").unwrap();
         let opts = SimOptions {
             output: OutputCollector::null(),
-            mem_sample_every: 0,
+            mem_sample_secs: 0,
             ..Default::default()
         };
         let mut sim = Simulator::new(&swf, sys_seth.clone(), d, opts).unwrap();
@@ -77,7 +153,7 @@ fn main() -> anyhow::Result<()> {
         let d = dispatcher_from_label("FIFO-FF").unwrap();
         let opts = SimOptions {
             output: OutputCollector::null(),
-            mem_sample_every: 0,
+            mem_sample_secs: 0,
             ..Default::default()
         };
         let mut sim = Simulator::new(&swf, sys_seth.clone(), d, opts).unwrap();

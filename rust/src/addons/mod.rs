@@ -2,6 +2,13 @@
 //! failures, thermals — computed alongside the event manager and exposed to
 //! dispatchers through the [`crate::dispatch::SystemView::extra`] map,
 //! enabling energy/power-aware and fault-resilient dispatching research.
+//!
+//! Providers are event-driven: besides updating at every simulation time
+//! point, a provider declares its next *timer* via
+//! [`AdditionalData::next_event`], and the event manager turns that into an
+//! [`crate::sim::EventPayload::AddonWake`] event on the unified queue. A
+//! node repair at t=1000 therefore fires at t=1000 even across a stretch of
+//! the workload with no job events (DESIGN.md §Events).
 
 use crate::resources::ResourceManager;
 
@@ -10,11 +17,21 @@ use crate::resources::ResourceManager;
 pub enum AddonAction {
     /// Publish a named metric to the dispatcher's `extra` map.
     Publish(String, f64),
-    /// Take a node out of service (honored when the node is idle; retried
-    /// by the provider otherwise).
+    /// Take a node out of service. Only honored when the node is idle; the
+    /// event manager reports the outcome back through
+    /// [`AdditionalData::acknowledge`] so a refused request can be retried
+    /// instead of being silently dropped.
     DisableNode(u32),
     /// Return a node to service.
     EnableNode(u32),
+}
+
+/// Feedback from the event manager after applying a provider's action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddonAck {
+    /// Result of [`AddonAction::DisableNode`]: whether the node actually
+    /// went out of service (busy nodes refuse until they drain).
+    NodeDown { node: u32, down: bool },
 }
 
 /// Abstract additional-data provider, mirroring AccaSim's `AdditionalData`
@@ -23,9 +40,31 @@ pub enum AddonAction {
 pub trait AdditionalData {
     /// Provider name (namespaces its published metrics).
     fn name(&self) -> &'static str;
+
     /// Called at each simulation time point, before dispatching.
     fn update(&mut self, t: u64, rm: &ResourceManager, queued: usize, running: usize)
         -> Vec<AddonAction>;
+
+    /// Earliest future simulation time at which this provider must run even
+    /// if no job event occurs (its timer). The event manager schedules an
+    /// `AddonWake` event for it, creating a time point of its own. `None`
+    /// (the default) means job events are enough.
+    fn next_event(&self, _now: u64) -> Option<u64> {
+        None
+    }
+
+    /// Outcome of an action this provider requested at the current time
+    /// point (e.g. whether a [`AddonAction::DisableNode`] was honored).
+    /// Default: ignore.
+    fn acknowledge(&mut self, _ack: &AddonAck) {}
+
+    /// Whether a future wake-up of this provider may *restore* capacity
+    /// (e.g. repair a failed node). The event manager keeps the simulation
+    /// alive for such wake-ups even when no job event remains, instead of
+    /// bulk-rejecting a stalled queue that could still be served.
+    fn may_restore_capacity(&self) -> bool {
+        false
+    }
 }
 
 /// A simple linear node power model: `idle_w + busy_fraction × (max_w −
@@ -36,6 +75,10 @@ pub trait AdditionalData {
 pub struct PowerModel {
     pub idle_w: f64,
     pub max_w: f64,
+    /// Integration cadence in simulation seconds: the model asks to be woken
+    /// this often, bounding the trapezoidal error across long gaps between
+    /// job events (0 = integrate only at job events, the seed behaviour).
+    pub cadence: u64,
     last_t: Option<u64>,
     last_power: f64,
     energy_j: f64,
@@ -43,7 +86,13 @@ pub struct PowerModel {
 
 impl PowerModel {
     pub fn new(idle_w: f64, max_w: f64) -> Self {
-        PowerModel { idle_w, max_w, last_t: None, last_power: 0.0, energy_j: 0.0 }
+        PowerModel { idle_w, max_w, cadence: 60, last_t: None, last_power: 0.0, energy_j: 0.0 }
+    }
+
+    /// Same model with a custom integration cadence (seconds).
+    pub fn with_cadence(mut self, secs: u64) -> Self {
+        self.cadence = secs;
+        self
     }
 
     /// Total energy integrated so far (joules).
@@ -90,26 +139,33 @@ impl AdditionalData for PowerModel {
             AddonAction::Publish("power.energy_kj".into(), self.energy_j / 1e3),
         ]
     }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        (self.cadence > 0).then_some(now + self.cadence)
+    }
 }
 
 /// Deterministic node failure/repair injector: each listed node fails at
 /// `fail_at` and recovers at `repair_at` (simulation seconds). Fault-
 /// resilience studies ([22, 7] in the paper) use this to perturb capacity.
+///
+/// A node busy at `fail_at` refuses to go down; the injector re-requests the
+/// failure at every later time point until the event manager acknowledges it
+/// (the node drained), so deferred failures are retried rather than lost.
 #[derive(Debug)]
 pub struct FailureInjector {
     /// `(node, fail_at, repair_at)` triples.
     pub plan: Vec<(u32, u64, u64)>,
-    /// Nodes whose failure is due but deferred because they were busy.
-    pending_fail: Vec<u32>,
+    /// Nodes confirmed down by the event manager.
     failed: Vec<u32>,
 }
 
 impl FailureInjector {
     pub fn new(plan: Vec<(u32, u64, u64)>) -> Self {
-        FailureInjector { plan, pending_fail: Vec::new(), failed: Vec::new() }
+        FailureInjector { plan, failed: Vec::new() }
     }
 
-    /// Nodes currently failed.
+    /// Nodes currently failed (acknowledged down).
     pub fn failed_nodes(&self) -> &[u32] {
         &self.failed
     }
@@ -128,28 +184,56 @@ impl AdditionalData for FailureInjector {
         _running: usize,
     ) -> Vec<AddonAction> {
         let mut actions = Vec::new();
-        for &(node, fail_at, repair_at) in &self.plan {
-            if t >= fail_at && t < repair_at && !self.failed.contains(&node) {
-                if !self.pending_fail.contains(&node) {
-                    self.pending_fail.push(node);
-                }
+        let mut seen: Vec<u32> = Vec::new();
+        for &(node, _, _) in &self.plan {
+            if seen.contains(&node) {
+                continue;
             }
-            if t >= repair_at && self.failed.contains(&node) {
+            seen.push(node);
+            // A node is down iff *any* of its windows covers `t`, so
+            // overlapping plan entries union instead of flapping the node
+            // in and out of service on alternating updates.
+            let should_be_down =
+                self.plan.iter().any(|&(n, f, r)| n == node && t >= f && t < r);
+            let is_down = self.failed.contains(&node);
+            if should_be_down && !is_down {
+                // (Re-)request the failure; only an acknowledged DisableNode
+                // marks the node failed, so a busy node keeps being retried
+                // at every later time point.
+                actions.push(AddonAction::DisableNode(node));
+            } else if !should_be_down && is_down {
                 self.failed.retain(|&n| n != node);
                 actions.push(AddonAction::EnableNode(node));
             }
         }
-        // (re-)attempt deferred failures; the sim acks by keeping the node
-        // disabled — we optimistically mark and let EnableNode undo later.
-        for node in std::mem::take(&mut self.pending_fail) {
-            self.failed.push(node);
-            actions.push(AddonAction::DisableNode(node));
-        }
+        // Acked state: a failure confirmed at this very point shows up in
+        // the count from the next time point on.
         actions.push(AddonAction::Publish(
             "failures.down_nodes".into(),
             self.failed.len() as f64,
         ));
         actions
+    }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        // earliest plan boundary strictly in the future
+        self.plan.iter().flat_map(|&(_, f, r)| [f, r]).filter(|&t| t > now).min()
+    }
+
+    fn acknowledge(&mut self, ack: &AddonAck) {
+        match *ack {
+            AddonAck::NodeDown { node, down } => {
+                if down && !self.failed.contains(&node) {
+                    self.failed.push(node);
+                }
+                // refused (busy node): stays out of `failed`, re-requested
+                // on the next update
+            }
+        }
+    }
+
+    fn may_restore_capacity(&self) -> bool {
+        true
     }
 }
 
@@ -206,6 +290,15 @@ mod tests {
     }
 
     #[test]
+    fn power_declares_cadence_timer() {
+        let pm = PowerModel::new(100.0, 300.0).with_cadence(45);
+        assert_eq!(pm.next_event(100), Some(145));
+        let off = PowerModel::new(100.0, 300.0).with_cadence(0);
+        assert_eq!(off.next_event(100), None);
+        assert!(!pm.may_restore_capacity());
+    }
+
+    #[test]
     fn failures_fire_and_repair() {
         let rm = rm();
         let mut fi = FailureInjector::new(vec![(1, 5, 20)]);
@@ -214,6 +307,9 @@ mod tests {
 
         let a5 = fi.update(5, &rm, 0, 0);
         assert!(a5.contains(&AddonAction::DisableNode(1)));
+        // the failure is only committed once the event manager acks it
+        assert!(fi.failed_nodes().is_empty());
+        fi.acknowledge(&AddonAck::NodeDown { node: 1, down: true });
         assert_eq!(fi.failed_nodes(), &[1]);
 
         let a20 = fi.update(20, &rm, 0, 0);
@@ -222,11 +318,75 @@ mod tests {
     }
 
     #[test]
+    fn refused_failure_is_retried_not_dropped() {
+        let rm = rm();
+        let mut fi = FailureInjector::new(vec![(0, 5, 100)]);
+        let a5 = fi.update(5, &rm, 0, 1);
+        assert!(a5.contains(&AddonAction::DisableNode(0)));
+        // the node was busy: the event manager acks `down: false`
+        fi.acknowledge(&AddonAck::NodeDown { node: 0, down: false });
+        assert!(fi.failed_nodes().is_empty(), "refused failure must not be marked");
+
+        // next time point: the request is re-issued
+        let a6 = fi.update(6, &rm, 0, 1);
+        assert!(a6.contains(&AddonAction::DisableNode(0)));
+        fi.acknowledge(&AddonAck::NodeDown { node: 0, down: true });
+        assert_eq!(fi.failed_nodes(), &[0]);
+
+        // once acked, no further requests
+        let a7 = fi.update(7, &rm, 0, 1);
+        assert!(!a7.iter().any(|a| matches!(a, AddonAction::DisableNode(_))));
+    }
+
+    #[test]
+    fn overlapping_windows_union_instead_of_flapping() {
+        let rm = rm();
+        // windows [10,100) and [50,60) overlap on node 0: after t=60 the
+        // expired entry must not re-enable the node while [10,100) holds
+        let mut fi = FailureInjector::new(vec![(0, 10, 100), (0, 50, 60)]);
+        let a = fi.update(55, &rm, 0, 0);
+        assert_eq!(
+            a.iter().filter(|x| matches!(x, AddonAction::DisableNode(0))).count(),
+            1,
+            "one request per node, not one per window"
+        );
+        fi.acknowledge(&AddonAck::NodeDown { node: 0, down: true });
+        let a70 = fi.update(70, &rm, 0, 0);
+        assert!(
+            !a70.iter().any(|x| matches!(x, AddonAction::EnableNode(_))),
+            "node must stay down until every covering window ends"
+        );
+        let a100 = fi.update(100, &rm, 0, 0);
+        assert!(a100.contains(&AddonAction::EnableNode(0)));
+        assert!(fi.failed_nodes().is_empty());
+    }
+
+    #[test]
+    fn failures_declare_boundary_timers() {
+        let fi = FailureInjector::new(vec![(1, 5, 20), (0, 12, 18)]);
+        assert_eq!(fi.next_event(0), Some(5));
+        assert_eq!(fi.next_event(5), Some(12));
+        assert_eq!(fi.next_event(12), Some(18));
+        assert_eq!(fi.next_event(18), Some(20));
+        assert_eq!(fi.next_event(20), None);
+        assert!(fi.may_restore_capacity());
+    }
+
+    #[test]
     fn failures_publish_down_count() {
         let rm = rm();
         let mut fi = FailureInjector::new(vec![(0, 0, 100)]);
         let acts = fi.update(0, &rm, 0, 0);
+        assert!(acts.contains(&AddonAction::DisableNode(0)));
+        // the count reflects *acknowledged* failures, so it reads 0 until
+        // the event manager confirms the node went down…
         assert!(acts
+            .iter()
+            .any(|a| matches!(a, AddonAction::Publish(k, v) if k == "failures.down_nodes" && *v == 0.0)));
+        fi.acknowledge(&AddonAck::NodeDown { node: 0, down: true });
+        // …and 1 from the next time point on.
+        let acts1 = fi.update(1, &rm, 0, 0);
+        assert!(acts1
             .iter()
             .any(|a| matches!(a, AddonAction::Publish(k, v) if k == "failures.down_nodes" && *v == 1.0)));
     }

@@ -122,7 +122,8 @@ fn run_incremental<P: AsRef<Path>>(workload: P, sys: &SysConfig) -> anyhow::Resu
     let base_rss_kb = MemProbe::new().rss_kb();
     let dispatcher = crate::dispatch::dispatcher_from_label("REJECT-FF")?;
     let opts = SimOptions {
-        mem_sample_every: 64,
+        // hourly samples ≈ the paper's bounded-cadence external probe
+        mem_sample_secs: 3600,
         output: crate::output::OutputCollector::null(),
         time_dispatch: false, // Table 1 measures externally (§6.2)
         ..Default::default()

@@ -10,6 +10,7 @@
 //! * `table1` / `table2` — regenerate the paper's tables.
 //! * `status`    — run a simulation and print Fig 8/9 style monitoring.
 
+use accasim::addons::{AdditionalData, FailureInjector, PowerModel};
 use accasim::baselines::{run_rejecting, LoaderMode};
 use accasim::config::SysConfig;
 use accasim::dispatch::dispatcher_from_label;
@@ -33,6 +34,8 @@ USAGE: accasim <COMMAND> [ARGS]
 COMMANDS:
   simulate <workload.swf> --sys <cfg.json> [--dispatcher FIFO-FF]
            [--out-jobs jobs.csv] [--out-perf perf.csv]
+           [--power IDLE_W,MAX_W] [--power-cadence SECS]
+           [--fail NODE:FAIL_AT:REPAIR_AT[,...]] [--mem-sample-secs SECS]
   experiment <workload.swf> --sys <cfg.json> [--name NAME]
            [--schedulers FIFO,SJF,LJF,EBF] [--allocators FF,BF] [--reps 1]
   generate <seed.swf> --sys <cfg.json> [--jobs 50000] [--out generated.swf]
@@ -85,6 +88,55 @@ fn need_sys(args: &Args) -> anyhow::Result<SysConfig> {
     SysConfig::from_json_file(p)
 }
 
+/// Parse `--fail NODE:FAIL_AT:REPAIR_AT[,NODE:FAIL_AT:REPAIR_AT...]`.
+fn parse_fail_plan(spec: &str) -> anyhow::Result<Vec<(u32, u64, u64)>> {
+    let mut plan = Vec::new();
+    for part in spec.split(',') {
+        let f: Vec<&str> = part.split(':').collect();
+        anyhow::ensure!(
+            f.len() == 3,
+            "bad --fail entry {part:?} (want node:fail_at:repair_at)"
+        );
+        let (node, fail_at, repair_at) = (f[0].parse()?, f[1].parse()?, f[2].parse()?);
+        anyhow::ensure!(fail_at < repair_at, "--fail entry {part:?}: fail_at >= repair_at");
+        plan.push((node, fail_at, repair_at));
+    }
+    Ok(plan)
+}
+
+/// Assemble additional-data providers from CLI options. `nodes` is the
+/// system size, so a failure plan naming a nonexistent node errors out
+/// instead of silently simulating nothing.
+fn parse_addons(args: &Args, nodes: u64) -> anyhow::Result<Vec<Box<dyn AdditionalData>>> {
+    let power = args.get_opt("power");
+    let cadence: u64 = args.get_parse("power-cadence", 60)?;
+    anyhow::ensure!(
+        power.is_some() || args.get_opt("power-cadence").is_none(),
+        "--power-cadence has no effect without --power IDLE_W,MAX_W"
+    );
+    let fail = args.get_opt("fail");
+    let mut addons: Vec<Box<dyn AdditionalData>> = Vec::new();
+    if let Some(p) = power {
+        let (idle, max) = p
+            .split_once(',')
+            .ok_or_else(|| anyhow::anyhow!("--power wants IDLE_W,MAX_W, got {p:?}"))?;
+        addons.push(Box::new(
+            PowerModel::new(idle.trim().parse()?, max.trim().parse()?).with_cadence(cadence),
+        ));
+    }
+    if let Some(spec) = fail {
+        let plan = parse_fail_plan(&spec)?;
+        for &(node, _, _) in &plan {
+            anyhow::ensure!(
+                (node as u64) < nodes,
+                "--fail names node {node}, but the system has only {nodes} nodes (0-based)"
+            );
+        }
+        addons.push(Box::new(FailureInjector::new(plan)));
+    }
+    Ok(addons)
+}
+
 fn simulate(args: &Args) -> anyhow::Result<()> {
     let workload = need_workload(args)?;
     let sys = need_sys(args)?;
@@ -96,8 +148,10 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(p) = args.get_opt("out-perf") {
         output = output.with_perf_file(p)?;
     }
+    let addons = parse_addons(args, sys.total_nodes())?;
+    let mem_sample_secs: u64 = args.get_parse("mem-sample-secs", 300)?;
     args.reject_unknown()?;
-    let opts = SimOptions { output, ..Default::default() };
+    let opts = SimOptions { output, addons, mem_sample_secs, ..Default::default() };
     let mut sim = Simulator::new(&workload, sys, d, opts)?;
     let out = sim.run()?;
     println!("dispatcher        : {}", out.dispatcher);
@@ -111,6 +165,12 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     println!("simulator cpu     : {} ms", out.cpu_ms);
     println!("dispatch time     : {:.1} ms", out.dispatch_ns as f64 / 1e6);
     println!("memory avg/max    : {}/{} KB", out.avg_rss_kb, out.max_rss_kb);
+    if out.addon_wakes > 0 {
+        println!("addon wakes       : {}", out.addon_wakes);
+    }
+    for (k, v) in &out.final_extra {
+        println!("{k:<18}: {v:.3}");
+    }
     Ok(())
 }
 

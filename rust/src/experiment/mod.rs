@@ -2,12 +2,18 @@
 //! a system and a set of dispatchers; run a simulation per dispatcher
 //! (optionally repeated); produce all comparative plot data automatically.
 
+use crate::addons::AdditionalData;
 use crate::config::SysConfig;
 use crate::dispatch::dispatcher_from_label;
 use crate::output::OutputCollector;
 use crate::plotdata::{PlotFactory, PlotKind};
 use crate::sim::{SimOptions, SimOutput, Simulator};
 use std::path::{Path, PathBuf};
+
+/// Builds a fresh set of additional-data providers for one run. Addons are
+/// stateful (energy integrals, failure state), so every repetition gets its
+/// own instances.
+pub type AddonFactory = Box<dyn Fn() -> Vec<Box<dyn AdditionalData>>>;
 
 /// An experiment over one workload × one system × many dispatchers.
 pub struct Experiment {
@@ -19,6 +25,9 @@ pub struct Experiment {
     pub repetitions: u32,
     /// Output directory (named after the experiment, as in AccaSim).
     pub out_dir: PathBuf,
+    /// Optional additional-data providers (power, failures, …), rebuilt per
+    /// run so every dispatcher is compared under the same scenario.
+    pub addon_factory: Option<AddonFactory>,
 }
 
 /// Results: per dispatcher label, one [`SimOutput`] per repetition.
@@ -38,7 +47,17 @@ impl Experiment {
             dispatchers: Vec::new(),
             repetitions: 1,
             out_dir: PathBuf::from("results").join(name),
+            addon_factory: None,
         }
+    }
+
+    /// Attach additional-data providers to every run of the experiment.
+    pub fn with_addons<F>(mut self, factory: F) -> Self
+    where
+        F: Fn() -> Vec<Box<dyn AdditionalData>> + 'static,
+    {
+        self.addon_factory = Some(Box::new(factory));
+        self
     }
 
     /// Mirror of `gen_dispatchers(sched_list, alloc_list)`: register the
@@ -74,6 +93,7 @@ impl Experiment {
                 let dispatcher = dispatcher_from_label(label)?;
                 let opts = SimOptions {
                     output: OutputCollector::in_memory(true, true),
+                    addons: self.addon_factory.as_ref().map(|f| f()).unwrap_or_default(),
                     ..Default::default()
                 };
                 let mut sim =
@@ -145,6 +165,27 @@ mod tests {
         for p in &res.plots {
             assert!(p.exists());
             assert!(std::fs::read_to_string(p).unwrap().lines().count() >= 3);
+        }
+    }
+
+    #[test]
+    fn addon_factory_attaches_providers_to_every_run() {
+        use crate::addons::PowerModel;
+        let dir = tempfile::tempdir().unwrap();
+        let swf = dir.path().join("w.swf");
+        SETH.synthesize(&swf, 0.001, 6).unwrap();
+        let mut e = Experiment::new("addons", &swf, SETH.sys_config())
+            .with_addons(|| vec![Box::new(PowerModel::new(80.0, 350.0))]);
+        e.out_dir = dir.path().join("out");
+        e.gen_dispatchers(&["FIFO", "SJF"], &["FF"]);
+        let res = e.run_simulation().unwrap();
+        for (label, outs) in &res.runs {
+            for o in outs {
+                assert!(
+                    o.final_extra.get("power.energy_kj").copied().unwrap_or(0.0) > 0.0,
+                    "{label}: power addon missing from run"
+                );
+            }
         }
     }
 }

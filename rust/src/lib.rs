@@ -12,7 +12,8 @@
 //! * [`config`] — synthetic system configuration (resource types, node groups).
 //! * [`resources`] — the resource manager: per-node multi-resource accounting.
 //! * [`sim`] — the event manager / discrete-event core driving the
-//!   loaded → queued → running → completed lifecycle.
+//!   loaded → queued → running → completed lifecycle over a unified
+//!   time-indexed event queue (job, addon and probe events alike).
 //! * [`dispatch`] — schedulers (FIFO, SJF, LJF, EBF) and allocators (FF, BF,
 //!   and the XLA-accelerated [`dispatch::XlaFit`]).
 //! * [`addons`] — the *additional data* interface (power/energy, failures).

@@ -6,7 +6,9 @@ use crate::resources::ResourceManager;
 
 /// Resident-set sampling via `/proc/self/statm` + peak via `VmHWM`.
 /// (The paper samples with psutil every 10 ms from a parent process; we
-/// sample in-process at event granularity — same metric, see DESIGN.md.)
+/// sample in-process, driven by `MemSample` events on the simulator's
+/// unified event queue at a bounded simulation-time cadence — same metric,
+/// see DESIGN.md §Monitoring and §Events.)
 #[derive(Debug, Default, Clone)]
 pub struct MemProbe {
     page_kb: u64,

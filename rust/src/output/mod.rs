@@ -76,6 +76,9 @@ pub struct OutputCollector {
     pub perf: Vec<PerfRecord>,
     keep_jobs: bool,
     keep_perf: bool,
+    /// Last perf timestamp seen, guarding the one-record-per-time-point
+    /// invariant (strictly increasing `t`; DESIGN.md §Events).
+    last_perf_t: Option<u64>,
 }
 
 impl OutputCollector {
@@ -115,8 +118,17 @@ impl OutputCollector {
         }
     }
 
-    /// Record a time-point performance sample.
+    /// Record a time-point performance sample. Timestamps must be strictly
+    /// increasing: the simulator coalesces all same-timestamp events into
+    /// one time point.
     pub fn record_perf(&mut self, rec: PerfRecord) {
+        debug_assert!(
+            self.last_perf_t.map_or(true, |p| rec.t > p),
+            "perf record timestamps must be strictly increasing ({} after {:?})",
+            rec.t,
+            self.last_perf_t
+        );
+        self.last_perf_t = Some(rec.t);
         if let Some(w) = &mut self.perf_file {
             let _ = writeln!(w, "{}", rec.to_csv());
         }

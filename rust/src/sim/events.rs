@@ -1,0 +1,236 @@
+//! The unified, time-indexed event queue of the event manager (§3; see
+//! DESIGN.md §Events).
+//!
+//! One min-heap carries every kind of simulation event — job submissions
+//! (`T_sb`), job completions (`T_c`), addon wake-ups and memory-probe
+//! samples — so that *any* future state change can create a simulation time
+//! point. The seed design derived time points from two `BTreeMap`s
+//! (submissions and completions) and therefore could never advance the
+//! clock to an addon-scheduled instant: a node repair at t=1000 with no job
+//! event in between starved forever and the stalled queue was bulk-rejected
+//! at loop end.
+//!
+//! Ordering: events pop in time order; at equal timestamps completions pop
+//! before submissions, submissions before addon wake-ups, and wake-ups
+//! before memory samples, ties within a kind broken by insertion order
+//! (FIFO). The simulator drains *all* events at one timestamp into a single
+//! time point, so the intra-timestamp order is a determinism guarantee on
+//! top of the semantic release-before-submit rule.
+
+use crate::workload::{Job, JobId};
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// What happens at an event's timestamp.
+#[derive(Debug, Clone)]
+pub enum EventPayload {
+    /// A running job reaches its completion time `T_c`.
+    Complete(JobId),
+    /// A loaded job reaches its submission time `T_sb`.
+    Submit(Job),
+    /// The additional-data provider at this index asked to be woken
+    /// (node repair due, energy-integration cadence, …).
+    AddonWake(usize),
+    /// Scheduled RSS sample. Observation only: a timestamp holding nothing
+    /// but memory samples never triggers a dispatch cycle or a perf record.
+    MemSample,
+}
+
+impl EventPayload {
+    /// Intra-timestamp rank: completions release resources first, then
+    /// submissions join the queue, then addons observe, then the probe.
+    fn rank(&self) -> u8 {
+        match self {
+            EventPayload::Complete(_) => 0,
+            EventPayload::Submit(_) => 1,
+            EventPayload::AddonWake(_) => 2,
+            EventPayload::MemSample => 3,
+        }
+    }
+}
+
+/// A timestamped event, ordered by `(time, kind rank, insertion sequence)`.
+#[derive(Debug)]
+pub struct Event {
+    /// Simulation time at which the event fires.
+    pub time: u64,
+    /// Insertion sequence number (FIFO tie-break within a kind).
+    seq: u64,
+    /// What fires.
+    pub payload: EventPayload,
+}
+
+impl Event {
+    #[inline]
+    fn key(&self) -> (u64, u8, u64) {
+        (self.time, self.payload.rank(), self.seq)
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// Min-heap event queue: `push` is O(log n), `next_time` O(1), `pop_at`
+/// O(log n) — one heap probe per time point where the seed paid two
+/// `BTreeMap` first-key probes plus two removals.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `payload` at `time`.
+    #[inline]
+    pub fn push(&mut self, time: u64, payload: EventPayload) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { time, seq, payload }));
+    }
+
+    /// Timestamp of the next event, if any.
+    #[inline]
+    pub fn next_time(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    /// Pop the next event only if it is scheduled exactly at `time`; the
+    /// simulator drains a timestamp with `while let Some(ev) = q.pop_at(t)`.
+    #[inline]
+    pub fn pop_at(&mut self, time: u64) -> Option<Event> {
+        if self.next_time() == Some(time) {
+            self.heap.pop().map(|Reverse(e)| e)
+        } else {
+            None
+        }
+    }
+
+    /// Events currently queued.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64) -> Job {
+        Job {
+            id,
+            submit: 0,
+            duration: 1,
+            req_time: 1,
+            slots: 1,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+        }
+    }
+
+    fn rank_of(ev: &Event) -> u8 {
+        match ev.payload {
+            EventPayload::Complete(_) => 0,
+            EventPayload::Submit(_) => 1,
+            EventPayload::AddonWake(_) => 2,
+            EventPayload::MemSample => 3,
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, EventPayload::Complete(3));
+        q.push(10, EventPayload::Complete(1));
+        q.push(20, EventPayload::Complete(2));
+        let mut times = Vec::new();
+        while let Some(t) = q.next_time() {
+            let ev = q.pop_at(t).unwrap();
+            times.push(ev.time);
+        }
+        assert_eq!(times, vec![10, 20, 30]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_timestamps_order_by_kind() {
+        // Push in reverse kind order; pop must come back as
+        // Complete < Submit < AddonWake < MemSample.
+        let mut q = EventQueue::new();
+        q.push(5, EventPayload::MemSample);
+        q.push(5, EventPayload::AddonWake(0));
+        q.push(5, EventPayload::Submit(job(7)));
+        q.push(5, EventPayload::Complete(1));
+        let mut ranks = Vec::new();
+        while let Some(ev) = q.pop_at(5) {
+            ranks.push(rank_of(&ev));
+        }
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_within_kind_are_fifo() {
+        let mut q = EventQueue::new();
+        q.push(9, EventPayload::Submit(job(1)));
+        q.push(9, EventPayload::Submit(job(2)));
+        q.push(9, EventPayload::Submit(job(3)));
+        let mut ids = Vec::new();
+        while let Some(ev) = q.pop_at(9) {
+            if let EventPayload::Submit(j) = ev.payload {
+                ids.push(j.id);
+            }
+        }
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pop_at_respects_timestamp() {
+        let mut q = EventQueue::new();
+        q.push(5, EventPayload::Complete(1));
+        assert_eq!(q.next_time(), Some(5));
+        assert!(q.pop_at(4).is_none());
+        assert_eq!(q.len(), 1);
+        assert!(q.pop_at(5).is_some());
+        assert!(q.pop_at(5).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn mixed_kinds_across_times() {
+        let mut q = EventQueue::new();
+        q.push(10, EventPayload::AddonWake(0));
+        q.push(5, EventPayload::MemSample);
+        q.push(10, EventPayload::Complete(1));
+        assert_eq!(q.next_time(), Some(5));
+        assert!(matches!(q.pop_at(5).unwrap().payload, EventPayload::MemSample));
+        assert_eq!(q.next_time(), Some(10));
+        assert!(matches!(q.pop_at(10).unwrap().payload, EventPayload::Complete(1)));
+        assert!(matches!(q.pop_at(10).unwrap().payload, EventPayload::AddonWake(0)));
+    }
+}

@@ -1,9 +1,11 @@
 //! The event manager / discrete-event core (§3).
 //!
 //! Drives the artificial job life-cycle `loaded → queued → running →
-//! completed` over time-indexed submission (`T_sb`) and completion (`T_c`)
-//! events. Two properties give AccaSim its Table-1 scalability and are
-//! preserved here:
+//! completed` over a single time-indexed event queue (see
+//! [`events::EventQueue`] and DESIGN.md §Events) carrying submission
+//! (`T_sb`), completion (`T_c`), addon wake-up and memory-sample events.
+//! Two properties give AccaSim its Table-1 scalability and are preserved
+//! here:
 //!
 //! 1. **Incremental job loading** — jobs are pulled from the workload source
 //!    only when their submission time approaches (a bounded lookahead
@@ -12,13 +14,19 @@
 //!    table immediately.
 //!
 //! The loop advances directly to the next event time (discrete-event), never
-//! ticking through empty seconds.
+//! ticking through empty seconds. Because *additional data* providers
+//! (power, failures, …) schedule their own wake-up events, a node repair at
+//! t=1000 fires at exactly t=1000 even when no job event falls between the
+//! last submission and the repair — the seed's two-`BTreeMap` design starved
+//! such timers and bulk-rejected the stalled queue instead.
 
+mod events;
 mod source;
 
+pub use events::{Event, EventPayload, EventQueue};
 pub use source::{JobSource, MemorySource, SwfSource};
 
-use crate::addons::{AddonAction, AdditionalData};
+use crate::addons::{AddonAck, AddonAction, AdditionalData};
 use crate::config::SysConfig;
 use crate::dispatch::{Dispatcher, RunningInfo, SystemView};
 use crate::monitor::{process_cpu_ms, MemProbe};
@@ -35,8 +43,12 @@ pub struct SimOptions {
     /// source once `submit ≤ now + lookahead`. Larger windows trade memory
     /// for fewer source polls.
     pub lookahead: u64,
-    /// Sample RSS every this many simulation time points (0 = never).
-    pub mem_sample_every: u64,
+    /// Sample RSS every this many *simulation seconds* via a scheduled
+    /// [`EventPayload::MemSample`] event (0 = never). A sample that lands
+    /// between job events is observation-only: it never triggers a dispatch
+    /// cycle or a perf record, so scheduling results are independent of the
+    /// probe cadence.
+    pub mem_sample_secs: u64,
     /// Reject jobs that could never run on this system (oversized), as the
     /// real preprocessing would.
     pub reject_unrunnable: bool,
@@ -55,7 +67,7 @@ impl Default for SimOptions {
     fn default() -> Self {
         SimOptions {
             lookahead: 4 * 3600,
-            mem_sample_every: 64,
+            mem_sample_secs: 300,
             reject_unrunnable: true,
             factory: FactoryConfig::default(),
             addons: Vec::new(),
@@ -90,6 +102,8 @@ pub struct SimOutput {
     pub other_ns: u64,
     /// Number of simulation time points processed.
     pub time_points: u64,
+    /// Addon wake-up events that fired (timer-driven time points).
+    pub addon_wakes: u64,
     /// Largest queue length observed.
     pub max_queue: usize,
     /// Mean/max RSS over samples (KB).
@@ -142,18 +156,21 @@ pub struct Simulator {
     dispatcher: Dispatcher,
     opts: SimOptions,
     // --- event state ---
-    /// Jobs loaded but not yet submitted, keyed by submission time.
-    pending: BTreeMap<u64, Vec<Job>>,
+    /// The unified time-indexed event queue (DESIGN.md §Events).
+    events: EventQueue,
+    /// Loaded-but-not-submitted jobs currently inside the event queue.
+    pending_submits: usize,
     /// Largest pending submission time (refill horizon cache).
     pending_max: u64,
     /// Live job table (queued + running only; completed jobs retire).
     jobs: IdHashMap<Job>,
     /// Queue in arrival order.
     queue: VecDeque<JobId>,
-    /// Completion events: time → job ids.
-    completions: BTreeMap<u64, Vec<JobId>>,
     /// Start times of running jobs.
     starts: IdHashMap<u64>,
+    /// Currently scheduled wake-up per addon; dedups [`EventPayload::AddonWake`]
+    /// events so each provider has at most one live timer.
+    addon_wake: Vec<Option<u64>>,
     /// Values published by addons for the dispatcher.
     extra: BTreeMap<String, f64>,
     source_done: bool,
@@ -193,12 +210,13 @@ impl Simulator {
             rm: ResourceManager::from_config(&sys),
             dispatcher,
             opts,
-            pending: BTreeMap::new(),
+            events: EventQueue::new(),
+            pending_submits: 0,
             pending_max: 0,
             jobs: IdHashMap::default(),
             queue: VecDeque::new(),
-            completions: BTreeMap::new(),
             starts: IdHashMap::default(),
+            addon_wake: Vec::new(),
             extra: BTreeMap::new(),
             source_done: false,
         }
@@ -218,11 +236,16 @@ impl Simulator {
         }
         let horizon = now.saturating_add(self.opts.lookahead);
         // Stop once something is pending beyond the horizon (cached max).
-        while self.pending.is_empty() || self.pending_max <= horizon {
+        while self.pending_submits == 0 || self.pending_max <= horizon {
             match self.source.next_job() {
                 Some(job) => {
-                    self.pending_max = self.pending_max.max(job.submit);
-                    self.pending.entry(job.submit).or_default().push(job);
+                    // Never schedule into the past: an unsorted source's
+                    // "late" job submits at the current time point, keeping
+                    // event times monotone.
+                    let at = job.submit.max(now);
+                    self.pending_max = self.pending_max.max(at);
+                    self.pending_submits += 1;
+                    self.events.push(at, EventPayload::Submit(job));
                 }
                 None => {
                     self.source_done = true;
@@ -232,6 +255,57 @@ impl Simulator {
         }
     }
 
+    /// Whether job-driven progress is still possible: a submission or
+    /// completion event is queued, a job is running, or the source can still
+    /// produce jobs. Queued-but-stuck jobs intentionally do *not* count —
+    /// only a capacity-restoring addon wake can unstick them, and those are
+    /// gated separately via [`AdditionalData::may_restore_capacity`].
+    fn has_job_work(&self) -> bool {
+        self.pending_submits > 0 || !self.starts.is_empty() || !self.source_done
+    }
+
+    /// Retire a batch of jobs completing at `now`: release resources and
+    /// emit their execution records.
+    fn complete_jobs(
+        &mut self,
+        now: u64,
+        ids: &[JobId],
+        out: &mut SimOutput,
+    ) -> anyhow::Result<()> {
+        for &id in ids {
+            let job = self.jobs.remove(&id).expect("running job in table");
+            let start = self.starts.remove(&id).expect("running job has start");
+            self.rm.release(&job)?;
+            let wait = start - job.submit;
+            let rec = JobRecord {
+                id,
+                submit: job.submit,
+                start,
+                end: now,
+                slots: job.slots,
+                wait,
+                slowdown: job.slowdown(wait),
+            };
+            out.slowdown_sum += rec.slowdown;
+            out.wait_sum += wait;
+            out.jobs_completed += 1;
+            out.last_completion = now;
+            self.opts.output.record_job(rec);
+        }
+        Ok(())
+    }
+
+    /// Enqueue (or reject) a job whose submission time has arrived.
+    fn submit_job(&mut self, job: Job, first_submit: &mut Option<u64>, out: &mut SimOutput) {
+        first_submit.get_or_insert(job.submit);
+        if self.opts.reject_unrunnable && !self.rm.can_ever_host(&job) {
+            out.jobs_rejected += 1;
+            return;
+        }
+        self.queue.push_back(job.id);
+        self.jobs.insert(job.id, job);
+    }
+
     /// Run the simulation to completion, consuming all events.
     pub fn run(&mut self) -> anyhow::Result<SimOutput> {
         let wall0 = Instant::now();
@@ -239,164 +313,249 @@ impl Simulator {
         let mut out = SimOutput { dispatcher: self.dispatcher.label(), ..Default::default() };
         let mut mem = MemProbe::new();
         let mut first_submit: Option<u64> = None;
+        let mut last_point: Option<u64> = None;
 
         self.refill(0);
+        self.addon_wake = vec![None; self.opts.addons.len()];
+        // Align the memory-probe cadence with the workload start. The chain
+        // pauses whenever job work stops (a stalled queue waiting on a
+        // repair) and is re-seeded at the next real time point.
+        let mut mem_armed = false;
+        if self.opts.mem_sample_secs > 0 {
+            if let Some(t0) = self.events.next_time() {
+                self.events.push(t0, EventPayload::MemSample);
+                mem_armed = true;
+            }
+        }
         let timing = self.opts.time_dispatch;
-        // Start the clock at the first event.
+
         loop {
-            let t_other0 = timing.then(Instant::now);
-            let next_submit = self.pending.keys().next().copied();
-            let next_complete = self.completions.keys().next().copied();
-            let now = match (next_submit, next_complete) {
-                (Some(s), Some(c)) => s.min(c),
-                (Some(s), None) => s,
-                (None, Some(c)) => c,
-                (None, None) => {
-                    if self.queue.is_empty() || out.time_points == 0 {
-                        break;
-                    }
-                    // Queue non-empty with no future events: the remaining
-                    // jobs can never start (e.g. the dispatcher refuses
-                    // them). Reject to terminate.
-                    for id in std::mem::take(&mut self.queue) {
-                        self.jobs.remove(&id);
-                        out.jobs_rejected += 1;
-                    }
-                    break;
+            let Some(now) = self.events.next_time() else {
+                // The event queue drained completely: no completion,
+                // submission or addon wake-up can ever free capacity again,
+                // so whatever is still queued can never start (e.g. the
+                // dispatcher refuses it). Reject to terminate.
+                for id in std::mem::take(&mut self.queue) {
+                    self.jobs.remove(&id);
+                    out.jobs_rejected += 1;
                 }
+                break;
             };
+            let t_other0 = timing.then(Instant::now);
 
-            // --- completions at `now` (release before submit/dispatch) ---
-            let mut started_this_point = 0u32;
-            if let Some(done) = self.completions.remove(&now) {
-                for id in done {
-                    let job = self.jobs.remove(&id).expect("running job in table");
-                    let start = self.starts.remove(&id).expect("running job has start");
-                    self.rm.release(&job)?;
-                    let wait = start - job.submit;
-                    let rec = JobRecord {
-                        id,
-                        submit: job.submit,
-                        start,
-                        end: now,
-                        slots: job.slots,
-                        wait,
-                        slowdown: job.slowdown(wait),
-                    };
-                    out.slowdown_sum += rec.slowdown;
-                    out.wait_sum += wait;
-                    out.jobs_completed += 1;
-                    out.last_completion = now;
-                    self.opts.output.record_job(rec);
-                }
-            }
-
-            // --- submissions at `now` ---
+            // Load submissions entering the lookahead horizon.
             self.refill(now);
-            if let Some(subs) = self.pending.remove(&now) {
-                for job in subs {
-                    first_submit.get_or_insert(job.submit);
-                    if self.opts.reject_unrunnable && !self.rm.can_ever_host(&job) {
-                        out.jobs_rejected += 1;
-                        continue;
-                    }
-                    self.queue.push_back(job.id);
-                    self.jobs.insert(job.id, job);
-                }
-            }
 
-            // --- additional data ---
-            if !self.opts.addons.is_empty() {
-                let mut addons = std::mem::take(&mut self.opts.addons);
-                for addon in addons.iter_mut() {
-                    for action in
-                        addon.update(now, &self.rm, self.queue.len(), self.starts.len())
-                    {
-                        match action {
-                            AddonAction::Publish(k, v) => {
-                                self.extra.insert(k, v);
-                            }
-                            AddonAction::DisableNode(n) => {
-                                self.rm.set_node_down(n as usize);
-                            }
-                            AddonAction::EnableNode(n) => {
-                                self.rm.set_node_up(n as usize);
+            // --- drain every event at `now`: one timestamp = one point ---
+            let mut completed: Vec<JobId> = Vec::new();
+            let mut submitted: Vec<Job> = Vec::new();
+            let mut addon_due = false;
+            let mut mem_due = false;
+            while let Some(ev) = self.events.pop_at(now) {
+                match ev.payload {
+                    EventPayload::Complete(id) => completed.push(id),
+                    EventPayload::Submit(job) => {
+                        self.pending_submits -= 1;
+                        submitted.push(job);
+                    }
+                    EventPayload::AddonWake(i) => {
+                        // A wake is fresh only while it matches the timer
+                        // currently scheduled for its addon; reschedules
+                        // leave stale heap entries behind, ignored here.
+                        // A timer planted while jobs were active can also
+                        // outlive the workload: once no job work and no
+                        // queued jobs remain it cannot matter any more, so
+                        // it is dropped — this keeps e.g. a power model
+                        // from sweeping its integral across the idle tail
+                        // to a far-future repair time. (Completions popping
+                        // first at equal timestamps means `starts` still
+                        // counts jobs finishing right now.)
+                        if self.addon_wake.get(i) == Some(&Some(now)) {
+                            self.addon_wake[i] = None;
+                            if self.has_job_work() || !self.queue.is_empty() {
+                                addon_due = true;
+                                out.addon_wakes += 1;
                             }
                         }
                     }
+                    EventPayload::MemSample => {
+                        mem_due = true;
+                        mem_armed = false;
+                    }
                 }
-                self.opts.addons = addons;
+            }
+            let job_event = !completed.is_empty() || !submitted.is_empty();
+
+            // --- completions at `now` (release before submit/dispatch) ---
+            self.complete_jobs(now, &completed, &mut out)?;
+
+            // --- submissions at `now` ---
+            for job in submitted {
+                self.submit_job(job, &mut first_submit, &mut out);
+            }
+
+            if !job_event && !addon_due {
+                // Observation-only timestamp (memory sample or stale wake):
+                // sample and move on without a dispatch cycle or perf
+                // record, so results don't depend on the probe cadence.
+                if mem_due {
+                    mem.sample();
+                    if self.opts.mem_sample_secs > 0 && self.has_job_work() {
+                        self.events
+                            .push(now + self.opts.mem_sample_secs, EventPayload::MemSample);
+                        mem_armed = true;
+                    }
+                }
+                continue;
+            }
+
+            // --- additional data (before the dispatcher sees the view) ---
+            let mut addons = std::mem::take(&mut self.opts.addons);
+            for addon in addons.iter_mut() {
+                for action in
+                    addon.update(now, &self.rm, self.queue.len(), self.starts.len())
+                {
+                    match action {
+                        AddonAction::Publish(k, v) => {
+                            self.extra.insert(k, v);
+                        }
+                        AddonAction::DisableNode(n) => {
+                            // Acknowledged: busy nodes refuse to go down and
+                            // the provider learns it immediately instead of
+                            // the request being silently dropped.
+                            let down = self.rm.set_node_down(n as usize);
+                            addon.acknowledge(&AddonAck::NodeDown { node: n, down });
+                        }
+                        AddonAction::EnableNode(n) => {
+                            self.rm.set_node_up(n as usize);
+                        }
+                    }
+                }
             }
 
             out.max_queue = out.max_queue.max(self.queue.len());
             let queue_len = self.queue.len() as u32;
 
             // --- dispatch ---
-            let t_disp0 = timing.then(Instant::now);
-            let other_ns = match (t_other0, t_disp0) {
-                (Some(a), Some(b)) => (b - a).as_nanos() as u64,
-                _ => 0,
-            };
-            let decision = {
-                let queue_jobs: Vec<&Job> =
-                    self.queue.iter().map(|id| &self.jobs[id]).collect();
-                let running: Vec<RunningInfo> = self
-                    .starts
-                    .iter()
-                    .map(|(id, &start)| RunningInfo { job: &self.jobs[id], start })
-                    .collect();
-                let view =
-                    SystemView { now, queue: queue_jobs, running, extra: &self.extra };
-                self.dispatcher.dispatch(&view, &mut self.rm)
-            };
-            let t_apply0 = timing.then(Instant::now);
-            let dispatch_ns = match (t_disp0, t_apply0) {
-                (Some(a), Some(b)) => (b - a).as_nanos() as u64,
-                _ => 0,
-            };
-
-            // --- apply decision ---
-            for (id, _alloc) in &decision.started {
-                let job = &self.jobs[id];
-                let completion = job.completion_at(now);
-                self.starts.insert(*id, now);
-                self.completions.entry(completion).or_default().push(*id);
-                started_this_point += 1;
-            }
-            for id in &decision.rejected {
-                self.jobs.remove(id);
-                out.jobs_rejected += 1;
-            }
-            // Remove started + rejected ids from the queue in one pass
-            // (a per-id retain is O(k·|queue|) and showed up in profiles).
-            let removed = decision.started.len() + decision.rejected.len();
-            if removed > 0 {
-                if removed == self.queue.len() {
-                    self.queue.clear();
-                } else {
-                    let started: std::collections::HashSet<JobId> = decision
-                        .started
+            // Re-dispatch while zero-duration jobs complete within this very
+            // timestamp, so one timestamp stays one time point (and perf
+            // timestamps stay strictly increasing) while freed capacity is
+            // still offered to the remaining queue.
+            let mut started_this_point = 0u32;
+            let mut dispatch_ns = 0u64;
+            loop {
+                let t_disp0 = timing.then(Instant::now);
+                let decision = {
+                    let queue_jobs: Vec<&Job> =
+                        self.queue.iter().map(|id| &self.jobs[id]).collect();
+                    let running: Vec<RunningInfo> = self
+                        .starts
                         .iter()
-                        .map(|(id, _)| *id)
-                        .chain(decision.rejected.iter().copied())
+                        .map(|(id, &start)| RunningInfo { job: &self.jobs[id], start })
                         .collect();
-                    self.queue.retain(|q| !started.contains(q));
+                    let view =
+                        SystemView { now, queue: queue_jobs, running, extra: &self.extra };
+                    self.dispatcher.dispatch(&view, &mut self.rm)
+                };
+                if let Some(t0) = t_disp0 {
+                    dispatch_ns += t0.elapsed().as_nanos() as u64;
+                }
+
+                // --- apply decision ---
+                for (id, _alloc) in &decision.started {
+                    let job = &self.jobs[id];
+                    let completion = job.completion_at(now);
+                    self.starts.insert(*id, now);
+                    self.events.push(completion, EventPayload::Complete(*id));
+                    started_this_point += 1;
+                }
+                for id in &decision.rejected {
+                    self.jobs.remove(id);
+                    out.jobs_rejected += 1;
+                }
+                // Remove started + rejected ids from the queue in one pass
+                // (a per-id retain is O(k·|queue|) and showed up in profiles).
+                let removed = decision.started.len() + decision.rejected.len();
+                if removed > 0 {
+                    if removed == self.queue.len() {
+                        self.queue.clear();
+                    } else {
+                        let started: std::collections::HashSet<JobId> = decision
+                            .started
+                            .iter()
+                            .map(|(id, _)| *id)
+                            .chain(decision.rejected.iter().copied())
+                            .collect();
+                        self.queue.retain(|q| !started.contains(q));
+                    }
+                }
+
+                if self.events.next_time() != Some(now) {
+                    break;
+                }
+                // Events materialized at the current timestamp (zero-duration
+                // completions): drain, retire, and dispatch again.
+                let mut done_now: Vec<JobId> = Vec::new();
+                while let Some(ev) = self.events.pop_at(now) {
+                    match ev.payload {
+                        EventPayload::Complete(id) => done_now.push(id),
+                        EventPayload::Submit(job) => {
+                            // defensive: an unsorted source clamped to `now`
+                            self.pending_submits -= 1;
+                            self.submit_job(job, &mut first_submit, &mut out);
+                        }
+                        EventPayload::AddonWake(i) => {
+                            // already updated at `now`; just clear the timer
+                            if self.addon_wake.get(i) == Some(&Some(now)) {
+                                self.addon_wake[i] = None;
+                            }
+                        }
+                        EventPayload::MemSample => {
+                            mem_due = true;
+                            mem_armed = false;
+                        }
+                    }
+                }
+                self.complete_jobs(now, &done_now, &mut out)?;
+            }
+
+            // --- addon wake-ups toward the *next* time point -------------
+            // Scheduled after dispatch so `has_job_work` sees jobs started
+            // at this very point (a power model must keep integrating while
+            // they run). A wake is only planted when it can matter: job work
+            // remains, or the queue is stalled and this provider may restore
+            // capacity (the repair that un-starves the queue).
+            for (i, addon) in addons.iter().enumerate() {
+                if let Some(t) = addon.next_event(now) {
+                    let useful = self.has_job_work()
+                        || (!self.queue.is_empty() && addon.may_restore_capacity());
+                    if t > now && useful && self.addon_wake[i].map_or(true, |s| t < s) {
+                        self.addon_wake[i] = Some(t);
+                        self.events.push(t, EventPayload::AddonWake(i));
+                    }
                 }
             }
+            self.opts.addons = addons;
 
             // --- bookkeeping / perf record ---
+            let rss = if mem_due { mem.sample() } else { 0 };
+            // (Re-)seed the probe chain: also revives sampling after a
+            // stall ended (queue waiting on a repair produced no job work,
+            // so the chain went quiet).
+            if self.opts.mem_sample_secs > 0 && !mem_armed && self.has_job_work() {
+                self.events.push(now + self.opts.mem_sample_secs, EventPayload::MemSample);
+                mem_armed = true;
+            }
             out.time_points += 1;
             out.dispatch_ns += dispatch_ns;
-            let rss = if self.opts.mem_sample_every > 0
-                && out.time_points % self.opts.mem_sample_every == 0
-            {
-                mem.sample()
-            } else {
-                0
-            };
-            let other_total =
-                other_ns + t_apply0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+            let elapsed = t_other0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+            let other_total = elapsed.saturating_sub(dispatch_ns);
             out.other_ns += other_total;
+            debug_assert!(
+                last_point.map_or(true, |p| now > p),
+                "time points must be strictly increasing: {now} after {last_point:?}"
+            );
+            last_point = Some(now);
             self.opts.output.record_perf(PerfRecord {
                 t: now,
                 dispatch_ns,
@@ -541,12 +700,40 @@ mod tests {
     }
 
     #[test]
+    fn perf_timestamps_strictly_increasing() {
+        // zero-duration jobs used to produce duplicate time points
+        let jobs = vec![job(1, 5, 0, 1), job(2, 5, 10, 1), job(3, 15, 0, 1)];
+        let mut sim = Simulator::from_jobs(jobs, sys(1, 2), fifo_ff(), SimOptions::default());
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed, 3);
+        for w in out.perf.windows(2) {
+            assert!(w[0].t < w[1].t, "duplicate perf timestamp {}", w[1].t);
+        }
+    }
+
+    #[test]
     fn zero_duration_jobs_complete_same_tick() {
         let jobs = vec![job(1, 5, 0, 1)];
         let mut sim = Simulator::from_jobs(jobs, sys(1, 1), fifo_ff(), SimOptions::default());
         let out = sim.run().unwrap();
         assert_eq!(out.jobs_completed, 1);
         assert_eq!(out.jobs[0].end, 5);
+        // exactly one time point at t=5, not one per dispatch round
+        assert_eq!(out.time_points, 1);
+    }
+
+    #[test]
+    fn same_timestamp_events_coalesce_into_one_point() {
+        // Two zero-duration jobs contending for one core: the second starts
+        // on capacity freed by the first *within* the same timestamp.
+        let jobs = vec![job(1, 5, 0, 1), job(2, 5, 0, 1)];
+        let mut sim = Simulator::from_jobs(jobs, sys(1, 1), fifo_ff(), SimOptions::default());
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed, 2);
+        assert!(out.jobs.iter().all(|r| r.end == 5));
+        assert_eq!(out.time_points, 1);
+        assert_eq!(out.perf.len(), 1);
+        assert_eq!(out.perf[0].started, 2);
     }
 
     #[test]
@@ -564,10 +751,37 @@ mod tests {
     }
 
     #[test]
+    fn power_integrates_at_bounded_cadence() {
+        use crate::addons::PowerModel;
+        // One job occupying the whole node for 1000 s. The seed integrated
+        // only at job events and both endpoints read *idle* power (update
+        // runs before dispatch at t=0 and after release at t=1000), so the
+        // busy plateau was invisible. Cadence wake-ups sample it.
+        let jobs = vec![job(1, 0, 1000, 1)];
+        let opts = SimOptions {
+            addons: vec![Box::new(PowerModel::new(100.0, 300.0).with_cadence(100))],
+            mem_sample_secs: 0,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs, sys(1, 1), fifo_ff(), opts);
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed, 1);
+        // wakes at t=100..=900 plus one coinciding with the completion at
+        // t=1000; job events at 0 and 1000
+        assert_eq!(out.addon_wakes, 10, "timer wakes, perf: {:?}", out.perf);
+        assert_eq!(out.time_points, 11);
+        // trapezoids: (100+300)/2·100 + 300·100·8 + (300+100)/2·100 = 280 kJ
+        let kj = out.final_extra["power.energy_kj"];
+        assert!((kj - 280.0).abs() < 1e-9, "energy {kj} kJ");
+    }
+
+    #[test]
     fn failure_injection_reduces_capacity() {
         use crate::addons::FailureInjector;
         // 2 nodes × 2 cores; node 1 down from t=0..1000. A 4-slot job can't
-        // run until repair.
+        // run until repair. The repair is an addon wake-up event, so even
+        // with no job event between t=10 and t=1000 the job starts at
+        // exactly t=1000 — deterministically, with no reject escape hatch.
         let jobs = vec![job(1, 10, 10, 4)];
         let opts = SimOptions {
             addons: vec![Box::new(FailureInjector::new(vec![(1, 0, 1000)]))],
@@ -576,15 +790,58 @@ mod tests {
         };
         let mut sim = Simulator::from_jobs(jobs, sys(2, 2), fifo_ff(), opts);
         let out = sim.run().unwrap();
-        // job waits for the repair event… but repair only fires at a time
-        // point; with no events between 10 and 1000 the queue would stall and
-        // the job is rejected at loop end. Either way it must NOT start
-        // before t=1000.
-        if out.jobs_completed == 1 {
-            assert!(out.jobs[0].start >= 1000);
-        } else {
-            assert_eq!(out.jobs_rejected, 1);
-        }
+        assert_eq!(out.jobs_completed, 1);
+        assert_eq!(out.jobs_rejected, 0);
+        assert_eq!(out.jobs[0].start, 1000);
+        assert_eq!(out.jobs[0].end, 1010);
+        assert!(out.addon_wakes >= 1, "repair must fire as a timer event");
+    }
+
+    #[test]
+    fn addon_timers_do_not_outlive_the_workload() {
+        use crate::addons::{FailureInjector, PowerModel};
+        // Node 1 repairs at t=10_000, long after the only job (which never
+        // needs node 1) finished at t=5. The wake planted while the job ran
+        // must be dropped once no work remains — not billed as a far-future
+        // time point sweeping idle energy across t=5..10_000.
+        let jobs = vec![job(1, 0, 5, 1)];
+        let opts = SimOptions {
+            addons: vec![
+                Box::new(FailureInjector::new(vec![(1, 0, 10_000)])),
+                Box::new(PowerModel::new(100.0, 300.0).with_cadence(0)),
+            ],
+            mem_sample_secs: 0,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs, sys(2, 2), fifo_ff(), opts);
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed, 1);
+        assert_eq!(out.time_points, 2, "perf: {:?}", out.perf); // t=0 and t=5
+        assert_eq!(out.perf.last().unwrap().t, 5);
+        assert_eq!(out.addon_wakes, 0);
+        // 2 idle-ish nodes for 5 s ≈ 1 kJ, not ~4 MJ over 10_000 s
+        assert!(out.final_extra["power.energy_kj"] < 10.0);
+    }
+
+    #[test]
+    fn failure_deferred_until_node_drains() {
+        use crate::addons::FailureInjector;
+        // 1 node × 2 cores. Job 1 occupies the node when the failure is due
+        // at t=10: the DisableNode is refused (busy) and must be *retried*,
+        // not silently dropped. The node then goes down as soon as it
+        // drains (t=20) and job 2 waits for the repair at t=30.
+        let jobs = vec![job(1, 0, 20, 2), job(2, 15, 10, 2)];
+        let opts = SimOptions {
+            addons: vec![Box::new(FailureInjector::new(vec![(0, 10, 30)]))],
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs, sys(1, 2), fifo_ff(), opts);
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed, 2);
+        assert_eq!(out.jobs_rejected, 0);
+        let r2 = out.jobs.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(r2.start, 30, "job 2 must wait out the deferred failure");
+        assert_eq!(r2.end, 40);
     }
 
     #[test]

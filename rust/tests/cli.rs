@@ -57,6 +57,67 @@ fn simulate_reports_summary_and_writes_csv() {
 }
 
 #[test]
+fn simulate_with_addons_reports_energy_and_failures() {
+    let (_dir, swf, cfg) = fixtures();
+    let out = bin()
+        .args([
+            "simulate",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--power",
+            "95,220",
+            "--power-cadence",
+            "3600",
+            "--fail",
+            "0:0:864000",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("power.energy_kj"), "missing energy line:\n{stdout}");
+    assert!(stdout.contains("failures.down_nodes"));
+    assert!(stdout.contains("addon wakes"));
+}
+
+#[test]
+fn simulate_rejects_out_of_range_fail_node() {
+    let (_dir, swf, cfg) = fixtures();
+    let out = bin()
+        .args([
+            "simulate",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--fail",
+            "9999:0:10",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("9999"));
+}
+
+#[test]
+fn simulate_rejects_malformed_fail_plan() {
+    let (_dir, swf, cfg) = fixtures();
+    let out = bin()
+        .args([
+            "simulate",
+            swf.to_str().unwrap(),
+            "--sys",
+            cfg.to_str().unwrap(),
+            "--fail",
+            "0:500", // missing repair_at
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--fail"));
+}
+
+#[test]
 fn simulate_rejects_unknown_flag() {
     let (_dir, swf, cfg) = fixtures();
     let out = bin()

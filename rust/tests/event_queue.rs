@@ -1,0 +1,186 @@
+//! Equivalence of the unified heap event loop against the seed's two-
+//! `BTreeMap` reference loop: on workloads without addons the refactor must
+//! be behaviour-preserving — identical `JobRecord`s out, identical
+//! completed/rejected counts — while fixing the duplicate-time-point and
+//! starvation defects that only addons and zero-duration jobs expose.
+
+use accasim::config::SysConfig;
+use accasim::dispatch::{dispatcher_from_label, RunningInfo, SystemView};
+use accasim::output::{JobRecord, OutputCollector};
+use accasim::resources::ResourceManager;
+use accasim::sim::{SimOptions, Simulator};
+use accasim::testkit::{arb_jobs, check};
+use accasim::util::idhash::IdHashMap;
+use accasim::workload::{Job, JobId};
+use std::collections::{BTreeMap, HashSet, VecDeque};
+
+/// The seed event loop, preserved as a test oracle: two time-indexed
+/// `BTreeMap`s (pending submissions, completions), bulk-reject at drain.
+fn reference_run(jobs: Vec<Job>, sys: &SysConfig, label: &str) -> (Vec<JobRecord>, u64, u64) {
+    let mut dispatcher = dispatcher_from_label(label).unwrap();
+    let mut rm = ResourceManager::from_config(sys);
+    let mut pending: BTreeMap<u64, Vec<Job>> = BTreeMap::new();
+    {
+        let mut sorted = jobs;
+        sorted.sort_by_key(|j| (j.submit, j.id));
+        for j in sorted {
+            pending.entry(j.submit).or_default().push(j);
+        }
+    }
+    let mut table: IdHashMap<Job> = IdHashMap::default();
+    let mut queue: VecDeque<JobId> = VecDeque::new();
+    let mut completions: BTreeMap<u64, Vec<JobId>> = BTreeMap::new();
+    let mut starts: IdHashMap<u64> = IdHashMap::default();
+    let extra = BTreeMap::new();
+    let mut records = Vec::new();
+    let (mut completed, mut rejected) = (0u64, 0u64);
+    loop {
+        let now = match (pending.keys().next().copied(), completions.keys().next().copied()) {
+            (Some(s), Some(c)) => s.min(c),
+            (Some(s), None) => s,
+            (None, Some(c)) => c,
+            (None, None) => {
+                for id in std::mem::take(&mut queue) {
+                    table.remove(&id);
+                    rejected += 1;
+                }
+                break;
+            }
+        };
+        if let Some(done) = completions.remove(&now) {
+            for id in done {
+                let job = table.remove(&id).unwrap();
+                let start = starts.remove(&id).unwrap();
+                rm.release(&job).unwrap();
+                let wait = start - job.submit;
+                records.push(JobRecord {
+                    id,
+                    submit: job.submit,
+                    start,
+                    end: now,
+                    slots: job.slots,
+                    wait,
+                    slowdown: job.slowdown(wait),
+                });
+                completed += 1;
+            }
+        }
+        if let Some(subs) = pending.remove(&now) {
+            for job in subs {
+                if !rm.can_ever_host(&job) {
+                    rejected += 1;
+                    continue;
+                }
+                queue.push_back(job.id);
+                table.insert(job.id, job);
+            }
+        }
+        let decision = {
+            let queue_jobs: Vec<&Job> = queue.iter().map(|id| &table[id]).collect();
+            let running: Vec<RunningInfo> = starts
+                .iter()
+                .map(|(id, &start)| RunningInfo { job: &table[id], start })
+                .collect();
+            let view = SystemView { now, queue: queue_jobs, running, extra: &extra };
+            dispatcher.dispatch(&view, &mut rm)
+        };
+        for (id, _alloc) in &decision.started {
+            let completion = table[id].completion_at(now);
+            starts.insert(*id, now);
+            completions.entry(completion).or_default().push(*id);
+        }
+        for id in &decision.rejected {
+            table.remove(id);
+            rejected += 1;
+        }
+        let remove: HashSet<JobId> = decision
+            .started
+            .iter()
+            .map(|(id, _)| *id)
+            .chain(decision.rejected.iter().copied())
+            .collect();
+        if !remove.is_empty() {
+            queue.retain(|q| !remove.contains(q));
+        }
+    }
+    (records, completed, rejected)
+}
+
+fn heap_run(jobs: Vec<Job>, sys: SysConfig, label: &str) -> (Vec<JobRecord>, u64, u64) {
+    let d = dispatcher_from_label(label).unwrap();
+    let opts = SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        mem_sample_secs: 0,
+        ..Default::default()
+    };
+    let mut sim = Simulator::from_jobs(jobs, sys, d, opts);
+    let out = sim.run().unwrap();
+    (out.jobs.clone(), out.jobs_completed, out.jobs_rejected)
+}
+
+/// Randomized workloads through both loops, record-for-record. Dispatchers
+/// whose decisions depend only on queue order and resource-manager state
+/// (not on running-set iteration order) make the oracle exact.
+#[test]
+fn heap_loop_matches_btreemap_reference() {
+    const LABELS: &[&str] = &["FIFO-FF", "SJF-BF", "LJF-FF"];
+    check("heap-vs-btreemap", 0x5EED, 40, |rng| {
+        let nodes = rng.range_u64(1, 10);
+        let sys = SysConfig::homogeneous(
+            "eq",
+            nodes,
+            &[("core", rng.range_u64(1, 16)), ("mem", rng.range_u64(8, 64))],
+            0,
+        );
+        let n = rng.range_u64(1, 70) as usize;
+        let jobs = arb_jobs(rng, n, 16, 2);
+        let label = LABELS[rng.range_u64(0, LABELS.len() as u64 - 1) as usize];
+
+        let (mut ref_recs, ref_done, ref_rej) = reference_run(jobs.clone(), &sys, label);
+        let (mut heap_recs, heap_done, heap_rej) = heap_run(jobs, sys, label);
+
+        assert_eq!(heap_done, ref_done, "{label}: completed diverged");
+        assert_eq!(heap_rej, ref_rej, "{label}: rejected diverged");
+        ref_recs.sort_by_key(|r| r.id);
+        heap_recs.sort_by_key(|r| r.id);
+        assert_eq!(heap_recs.len(), ref_recs.len());
+        for (h, r) in heap_recs.iter().zip(&ref_recs) {
+            assert_eq!(h, r, "{label}: record diverged for job {}", h.id);
+        }
+    });
+}
+
+/// The one intended divergence from the reference: equal-timestamp events
+/// coalesce into a single time point, so the heap loop emits exactly one
+/// perf record per timestamp even when zero-duration jobs complete within
+/// the timestamp they started.
+#[test]
+fn coalescing_emits_one_perf_record_per_timestamp() {
+    check("coalesce-perf", 0xC0A1, 30, |rng| {
+        let sys = SysConfig::homogeneous("eq", 2, &[("core", 4)], 0);
+        let n = rng.range_u64(5, 50) as usize;
+        let mut jobs = arb_jobs(rng, n, 4, 1);
+        for j in &mut jobs {
+            j.submit = rng.range_u64(0, 20); // dense bursts
+            if rng.range_u64(0, 1) == 1 {
+                j.duration = 0; // force same-timestamp completions
+            }
+        }
+        let d = dispatcher_from_label("FIFO-FF").unwrap();
+        let opts = SimOptions {
+            output: OutputCollector::in_memory(true, true),
+            mem_sample_secs: 0,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs, sys, d, opts);
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed + out.jobs_rejected, n as u64);
+        for w in out.perf.windows(2) {
+            assert!(
+                w[0].t < w[1].t,
+                "duplicate time point at t={} (perf must be strictly increasing)",
+                w[1].t
+            );
+        }
+    });
+}

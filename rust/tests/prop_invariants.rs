@@ -32,7 +32,7 @@ fn run(jobs: Vec<Job>, sys: SysConfig, label: &str) -> SimOutput {
     let d = dispatcher_from_label(label).unwrap();
     let opts = SimOptions {
         output: OutputCollector::in_memory(true, true),
-        mem_sample_every: 0,
+        mem_sample_secs: 0,
         ..Default::default()
     };
     let mut sim = Simulator::from_jobs(jobs, sys, d, opts);
@@ -238,6 +238,51 @@ fn prop_estimates_do_not_affect_durations() {
         let out = run(jobs, sys, label);
         for rec in &out.jobs {
             assert_eq!(rec.end - rec.start, by_id[&rec.id]);
+        }
+    });
+}
+
+/// No queued job is bulk-rejected while a future addon event could still
+/// free capacity: under finite failure/repair windows, every job the system
+/// could ever host completes — the repair fires as an addon wake-up event
+/// even when no job event falls inside the outage window. Perf timestamps
+/// stay strictly increasing throughout.
+#[test]
+fn prop_no_starvation_under_failures() {
+    use accasim::addons::FailureInjector;
+    check("failure-starvation", 0xFA11, 40, |rng| {
+        let nodes = rng.range_u64(2, 6);
+        let sys = SysConfig::homogeneous("prop", nodes, &[("core", rng.range_u64(2, 8))], 0);
+        let n = rng.range_u64(1, 40) as usize;
+        let jobs = arb_jobs(rng, n, 8, 1);
+        // finite failure windows over a random subset of nodes
+        let plan: Vec<(u32, u64, u64)> = (0..rng.range_u64(1, nodes - 1))
+            .map(|i| {
+                let fail = rng.range_u64(0, 5_000);
+                (i as u32, fail, fail + rng.range_u64(1, 5_000))
+            })
+            .collect();
+        let rm = ResourceManager::from_config(&sys);
+        let oversized = jobs.iter().filter(|j| !rm.can_ever_host(j)).count() as u64;
+        let d = dispatcher_from_label("FIFO-FF").unwrap();
+        let opts = SimOptions {
+            addons: vec![Box::new(FailureInjector::new(plan))],
+            output: OutputCollector::in_memory(true, true),
+            mem_sample_secs: 0,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs, sys, d, opts);
+        let out = sim.run().expect("simulation completes");
+        assert_eq!(
+            out.jobs_completed,
+            n as u64 - oversized,
+            "runnable jobs starved: completed {} rejected {} of {n}",
+            out.jobs_completed,
+            out.jobs_rejected
+        );
+        assert_eq!(out.jobs_rejected, oversized);
+        for w in out.perf.windows(2) {
+            assert!(w[0].t < w[1].t, "duplicate perf timestamp {}", w[1].t);
         }
     });
 }
