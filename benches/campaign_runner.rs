@@ -1,0 +1,50 @@
+//! Campaign-runner scaling: wall time of one 8-run campaign (Seth slice,
+//! 4 dispatchers × 2 seeds) vs. worker-thread count. Each measurement gets
+//! a fresh output directory so the resumable store never short-circuits the
+//! work; the shared trace realizations are pre-synthesized once so the
+//! benchmark times simulation + store, not SWF synthesis.
+//!
+//! `cargo bench --bench campaign_runner`
+
+use accasim::benchkit::Bencher;
+use accasim::campaign::{Campaign, CampaignSpec};
+use accasim::testutil;
+
+fn spec(workload_scale: f64) -> CampaignSpec {
+    let mut spec = CampaignSpec::new("bench");
+    spec.add_trace("seth", workload_scale)
+        .add_system_trace("seth")
+        .gen_dispatchers(&["FIFO", "SJF", "LJF", "EBF"], &["FF"]);
+    spec.seeds = vec![1, 2];
+    spec
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new("campaign_runner");
+    let scale = 0.002; // ~400 jobs per realization, 8 runs per campaign
+    // warm the realization cache shared by every measurement below
+    let cache = testutil::tempdir()?;
+    for &seed in &[1u64, 2] {
+        accasim::traces::SETH.realization(cache.path().join("w"), scale, seed)?;
+    }
+    for jobs in [1usize, 2, 4, 8] {
+        b.bench(&format!("runs8_jobs{jobs}"), || {
+            let out = testutil::tempdir().unwrap();
+            // reuse the pre-synthesized realizations
+            std::fs::create_dir_all(out.path().join("c")).unwrap();
+            let dst = out.path().join("c/workloads");
+            std::fs::create_dir_all(&dst).unwrap();
+            for entry in std::fs::read_dir(cache.path().join("w")).unwrap() {
+                let entry = entry.unwrap();
+                std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+            }
+            let report =
+                Campaign::new(spec(scale), out.path().join("c")).jobs(jobs).run().unwrap();
+            assert_eq!(report.executed, 8);
+            report.records.iter().map(|r| r.jobs_completed).sum::<u64>()
+        });
+    }
+    let csv = b.write_csv()?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

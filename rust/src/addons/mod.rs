@@ -37,7 +37,10 @@ pub enum AddonAck {
 /// Abstract additional-data provider, mirroring AccaSim's `AdditionalData`
 /// class: receives the necessary data from the event manager at every
 /// simulation time point and passes results back for the dispatcher.
-pub trait AdditionalData {
+///
+/// `Send` so providers can be instantiated by campaign addon factories and
+/// handed to simulators running on worker threads.
+pub trait AdditionalData: Send {
     /// Provider name (namespaces its published metrics).
     fn name(&self) -> &'static str;
 

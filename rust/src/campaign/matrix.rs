@@ -1,0 +1,162 @@
+//! Matrix expansion: a [`CampaignSpec`] flattened into an ordered list of
+//! [`RunSpec`]s with deterministic run ids and per-run derived seeds.
+//!
+//! Expansion order is fixed (workloads → systems → dispatchers → scenarios →
+//! seeds) and every derived value is a pure function of `(spec hash, run
+//! index)`, so the matrix is identical no matter how many worker threads
+//! later execute it — the invariant behind byte-identical parallel runs.
+
+use super::spec::{sanitize, CampaignSpec, ScenarioSpec, WorkloadSpec};
+use crate::config::SysConfig;
+use crate::dispatch::dispatcher_from_label;
+
+/// One fully-resolved cell of the campaign cross-product.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Position in the flat matrix (stable across re-runs of the same spec).
+    pub index: usize,
+    /// Filesystem-safe unique id, e.g. `r0003-seth-s500u-seth-SJF-FF-baseline-s2`.
+    pub run_id: String,
+    pub workload: WorkloadSpec,
+    pub system: String,
+    pub sys: SysConfig,
+    pub dispatcher: String,
+    pub scenario: ScenarioSpec,
+    /// User-level repetition seed (selects the workload realization for
+    /// trace workloads; identical across dispatchers so they stay comparable
+    /// within a repetition).
+    pub seed: u64,
+    /// Derived per-run seed `mix(spec_hash, index)`, plumbed into
+    /// [`crate::sim::SimOptions::seed`] and recorded in the manifest.
+    pub run_seed: u64,
+}
+
+/// The expanded matrix plus the spec hash it was derived from.
+#[derive(Debug, Clone)]
+pub struct RunMatrix {
+    pub spec_hash: u64,
+    pub runs: Vec<RunSpec>,
+}
+
+/// SplitMix64 finalizer: full-avalanche mixing for seed derivation.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// The per-run seed: a pure function of the spec identity and the run's
+/// matrix position — never of wall clock or execution order.
+pub fn derive_run_seed(spec_hash: u64, index: usize) -> u64 {
+    mix64(spec_hash ^ mix64(index as u64))
+}
+
+/// Expand a validated spec into the flat run matrix.
+pub fn expand(spec: &CampaignSpec) -> anyhow::Result<RunMatrix> {
+    spec.validate()?;
+    // Fail fast on unbuildable dispatcher labels, before any run executes.
+    for label in &spec.dispatchers {
+        dispatcher_from_label(label)?;
+    }
+    let systems = spec.resolved_systems()?;
+    let spec_hash = spec.spec_hash()?;
+    let mut runs = Vec::with_capacity(spec.run_count());
+    for workload in &spec.workloads {
+        for (system, sys) in &systems {
+            for dispatcher in &spec.dispatchers {
+                for scenario in &spec.scenarios {
+                    for &seed in &spec.seeds {
+                        let index = runs.len();
+                        let run_id = format!(
+                            "r{index:04}-{}-{}-{}-{}-s{seed}",
+                            workload.label(),
+                            sanitize(system),
+                            sanitize(dispatcher),
+                            sanitize(&scenario.name),
+                        );
+                        runs.push(RunSpec {
+                            index,
+                            run_id,
+                            workload: workload.clone(),
+                            system: system.clone(),
+                            sys: sys.clone(),
+                            dispatcher: dispatcher.clone(),
+                            scenario: scenario.clone(),
+                            seed,
+                            run_seed: derive_run_seed(spec_hash, index),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(RunMatrix { spec_hash, runs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> CampaignSpec {
+        let mut spec = CampaignSpec::new("demo");
+        spec.add_trace("seth", 0.001)
+            .add_system_trace("seth")
+            .gen_dispatchers(&["FIFO", "SJF"], &["FF"]);
+        spec.seeds = vec![1, 2];
+        spec
+    }
+
+    #[test]
+    fn expansion_matches_cross_product_in_fixed_order() {
+        let m = expand(&demo()).unwrap();
+        assert_eq!(m.runs.len(), 4);
+        // dispatchers outer, seeds inner
+        let ids: Vec<(&str, u64)> =
+            m.runs.iter().map(|r| (r.dispatcher.as_str(), r.seed)).collect();
+        assert_eq!(ids, vec![("FIFO-FF", 1), ("FIFO-FF", 2), ("SJF-FF", 1), ("SJF-FF", 2)]);
+        for (i, r) in m.runs.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert!(r.run_id.starts_with(&format!("r{i:04}-seth-s1000u-")), "{}", r.run_id);
+        }
+    }
+
+    #[test]
+    fn run_ids_unique_and_fs_safe() {
+        let m = expand(&demo()).unwrap();
+        let mut ids: Vec<&str> = m.runs.iter().map(|r| r.run_id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), m.runs.len());
+        for id in ids {
+            assert!(id
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')));
+        }
+    }
+
+    #[test]
+    fn derived_seeds_stable_and_distinct() {
+        let a = expand(&demo()).unwrap();
+        let b = expand(&demo()).unwrap();
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.run_seed, y.run_seed);
+        }
+        let mut seeds: Vec<u64> = a.runs.iter().map(|r| r.run_seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), a.runs.len(), "derived seeds must not collide");
+        // a different spec derives different seeds for the same index
+        let mut other = demo();
+        other.seeds = vec![1, 2, 3];
+        let c = expand(&other).unwrap();
+        assert_ne!(a.runs[0].run_seed, c.runs[0].run_seed);
+    }
+
+    #[test]
+    fn bad_dispatcher_fails_expansion() {
+        let mut spec = demo();
+        spec.add_dispatcher("BOGUS-FF");
+        assert!(expand(&spec).is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! The campaign engine: declarative scenario matrices executed in parallel
+//! with a persistent, resumable results store (DESIGN.md §Campaigns).
+//!
+//! AccaSim's experimentation tool (§3, Figure 5) runs one workload × one
+//! system × many dispatchers, serially. Dispatching studies at scale are
+//! campaign-shaped instead: a cross-product of workloads × systems ×
+//! dispatchers × addon scenarios × repetition seeds, executed in parallel,
+//! with results that survive the process and can be re-aggregated later.
+//! This module supplies that as four layers:
+//!
+//! * [`spec`] — [`CampaignSpec`]: the declarative matrix (JSON in/out).
+//! * [`matrix`] — expansion into flat [`RunSpec`]s with deterministic run
+//!   ids and per-run seeds derived from `(spec hash, run index)`.
+//! * [`runner`] — [`Campaign`]: a scoped-thread pool executing pending runs
+//!   (`--jobs N`); parallel and serial execution produce byte-identical
+//!   campaign artifacts.
+//! * [`store`] — per-run directories (`jobs.csv`, `perf.csv`, `run.json`)
+//!   plus the campaign `index.json`; presence of a valid `run.json` is what
+//!   makes a re-invocation skip a run (resume).
+//!
+//! The experimentation tool ([`crate::experiment::Experiment`]) is now a
+//! thin 1-workload × 1-system campaign, so both fronts share one engine.
+
+pub mod matrix;
+pub mod runner;
+pub mod spec;
+pub mod store;
+
+pub use matrix::{derive_run_seed, expand, RunMatrix, RunSpec};
+pub use runner::{Campaign, CampaignReport, CampaignStatus};
+pub use spec::{CampaignSpec, PowerSpec, ScenarioSpec, SystemSource, SystemSpec, WorkloadSpec};
+pub use store::{read_run_output, run_dir, RunRecord};

@@ -1,0 +1,392 @@
+//! The campaign runner: executes a [`RunMatrix`] on a pool of scoped worker
+//! threads and persists every run through the results store.
+//!
+//! Determinism contract: worker threads only *claim* run indices from an
+//! atomic counter — every input a run depends on (workload realization,
+//! system, dispatcher, scenario, seeds) is fixed by the matrix before the
+//! pool starts, and every run writes only its own directory. The
+//! campaign-level `index.json`, plot CSVs and `summary.csv` are rebuilt from
+//! the stored manifests in matrix order, so `--jobs 1` and `--jobs N`
+//! produce byte-identical campaign artifacts.
+//!
+//! Resume: a run directory with a valid `run.json` whose recorded derived
+//! seed still matches the spec is considered done and skipped; editing the
+//! spec changes the spec hash, invalidates the derived seeds and forces
+//! re-execution.
+
+use super::matrix::{expand, RunMatrix, RunSpec};
+use super::spec::{CampaignSpec, WorkloadSpec};
+use super::store::{self, RunRecord};
+use crate::addons::AdditionalData;
+use crate::dispatch::dispatcher_from_label;
+use crate::output::OutputCollector;
+use crate::plotdata::{PlotFactory, PlotKind};
+use crate::sim::{SimOptions, SimOutput, Simulator};
+use crate::traces::spec_by_name;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Rebuilds addon providers for one run (used by the experimentation tool to
+/// attach programmatic addons a declarative [`super::spec::ScenarioSpec`]
+/// cannot express). Must be callable from worker threads.
+pub type AddonFactoryRef<'a> = &'a (dyn Fn() -> Vec<Box<dyn AdditionalData>> + Send + Sync);
+
+/// Outcome of [`Campaign::run`].
+#[derive(Debug)]
+pub struct CampaignReport {
+    /// Runs executed in this invocation.
+    pub executed: usize,
+    /// Runs skipped because the store already held them (resume).
+    pub skipped: usize,
+    /// All run manifests, in matrix order.
+    pub records: Vec<RunRecord>,
+    /// The stored runs reloaded as [`SimOutput`]s, in matrix order — the
+    /// exact data the campaign aggregates were built from, returned so
+    /// callers (e.g. the experimentation tool) don't re-read the store.
+    pub outputs: Vec<SimOutput>,
+    /// Campaign-level artifacts written (plot CSVs + summary).
+    pub plots: Vec<PathBuf>,
+    /// Path of the campaign `index.json`.
+    pub index: PathBuf,
+}
+
+/// Progress snapshot from [`Campaign::status`].
+#[derive(Debug)]
+pub struct CampaignStatus {
+    pub total: usize,
+    pub done: usize,
+    /// Run ids still pending, in matrix order.
+    pub pending: Vec<String>,
+}
+
+/// A campaign bound to an output directory: the executable form of a
+/// [`CampaignSpec`].
+pub struct Campaign<'a> {
+    spec: CampaignSpec,
+    out_dir: PathBuf,
+    jobs: usize,
+    addon_factory: Option<AddonFactoryRef<'a>>,
+}
+
+impl<'a> Campaign<'a> {
+    /// Bind a spec to an output directory (created on [`Campaign::run`]).
+    pub fn new<P: AsRef<Path>>(spec: CampaignSpec, out_dir: P) -> Self {
+        Campaign { spec, out_dir: out_dir.as_ref().to_path_buf(), jobs: 1, addon_factory: None }
+    }
+
+    /// Worker-thread count (default 1 = serial).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Attach a programmatic addon factory applied to *every* run instead of
+    /// the per-scenario addon data.
+    ///
+    /// Caveat: the factory is opaque code and therefore *outside the spec
+    /// identity* — changing what it builds does not change the spec hash,
+    /// so previously stored runs are still considered valid and skipped.
+    /// Use a fresh output directory when the factory changes. (The same
+    /// holds for the *contents* of `WorkloadSpec::Swf` files, which are
+    /// treated as immutable datasets; declarative scenarios and system
+    /// configs are hashed and do invalidate.)
+    pub fn with_addon_factory(mut self, factory: AddonFactoryRef<'a>) -> Self {
+        self.addon_factory = Some(factory);
+        self
+    }
+
+    /// The bound spec.
+    pub fn spec(&self) -> &CampaignSpec {
+        &self.spec
+    }
+
+    /// The bound output directory.
+    pub fn out_dir(&self) -> &Path {
+        &self.out_dir
+    }
+
+    /// Resolve the workload file a run simulates, synthesizing trace
+    /// realizations (keyed by the *repetition* seed, so every dispatcher of
+    /// a repetition sees the same realization) on first use.
+    fn workload_path(&self, run: &RunSpec) -> anyhow::Result<PathBuf> {
+        match &run.workload {
+            WorkloadSpec::Swf(p) => {
+                anyhow::ensure!(p.exists(), "workload file {} not found", p.display());
+                Ok(p.clone())
+            }
+            WorkloadSpec::Trace { name, scale } => spec_by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown trace {name:?}"))?
+                .realization(self.out_dir.join("workloads"), *scale, run.seed),
+        }
+    }
+
+    /// Execute one run and persist it. Dispatcher, addons and simulator are
+    /// all constructed inside the calling worker thread; only plain spec
+    /// data crosses the thread boundary.
+    fn exec_run(&self, run: &RunSpec, workload: &Path) -> anyhow::Result<()> {
+        let dispatcher = dispatcher_from_label(&run.dispatcher)?;
+        let addons = match self.addon_factory {
+            Some(f) => f(),
+            None => run.scenario.build_addons(),
+        };
+        let opts = SimOptions {
+            seed: run.run_seed,
+            addons,
+            output: OutputCollector::in_memory(true, true),
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(workload, run.sys.clone(), dispatcher, opts)?;
+        let out = sim.run()?;
+        store::write_run(&store::run_dir(&self.out_dir, &run.run_id), run, &out)?;
+        Ok(())
+    }
+
+    /// Whether the store already holds a valid result for this run.
+    fn is_done(&self, run: &RunSpec) -> bool {
+        store::load_run(&store::run_dir(&self.out_dir, &run.run_id))
+            .is_some_and(|rec| rec.run_seed == run.run_seed)
+    }
+
+    /// Execute every pending run of the matrix, then rebuild the index and
+    /// the campaign-level aggregates from the store.
+    pub fn run(&self) -> anyhow::Result<CampaignReport> {
+        let matrix = expand(&self.spec)?;
+        std::fs::create_dir_all(self.out_dir.join("runs"))?;
+        std::fs::write(self.out_dir.join("campaign.json"), self.spec.to_json())?;
+
+        // Shared inputs are materialized serially before the pool starts
+        // (trace realizations are shared by every dispatcher of a
+        // repetition, and racing synthesizers would write the same file) —
+        // but only for *pending* runs, so a completed campaign re-aggregates
+        // from its store even when the original workload inputs are gone.
+        let skip: Vec<bool> = matrix.runs.iter().map(|r| self.is_done(r)).collect();
+        let mut workloads: Vec<Option<PathBuf>> = vec![None; matrix.runs.len()];
+        for (i, run) in matrix.runs.iter().enumerate() {
+            if !skip[i] {
+                workloads[i] = Some(self.workload_path(run)?);
+            }
+        }
+
+        let next = AtomicUsize::new(0);
+        let executed = AtomicUsize::new(0);
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let workers = self.jobs.min(matrix.runs.len()).max(1);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= matrix.runs.len() {
+                        break;
+                    }
+                    if skip[i] {
+                        continue;
+                    }
+                    let run = &matrix.runs[i];
+                    let workload =
+                        workloads[i].as_deref().expect("pending run has a workload path");
+                    match self.exec_run(run, workload) {
+                        Ok(()) => {
+                            executed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => errors.lock().unwrap().push(format!("{}: {e}", run.run_id)),
+                    }
+                });
+            }
+        });
+        let errors = errors.into_inner().unwrap();
+        anyhow::ensure!(
+            errors.is_empty(),
+            "campaign {:?}: {} run(s) failed:\n  {}",
+            self.spec.name,
+            errors.len(),
+            errors.join("\n  ")
+        );
+
+        // The store is the single source of truth: fresh and resumed runs
+        // alike are read back from disk, in matrix order.
+        let mut records = Vec::with_capacity(matrix.runs.len());
+        for run in &matrix.runs {
+            records.push(
+                store::load_run(&store::run_dir(&self.out_dir, &run.run_id)).ok_or_else(
+                    || anyhow::anyhow!("run {} completed without a manifest", run.run_id),
+                )?,
+            );
+        }
+        let index = store::write_index(&self.out_dir, &self.spec.name, matrix.spec_hash, &records)?;
+        let (plots, outputs) = self.aggregate(&matrix, &records)?;
+        Ok(CampaignReport {
+            executed: executed.into_inner(),
+            skipped: skip.iter().filter(|&&x| x).count(),
+            records,
+            outputs,
+            plots,
+            index,
+        })
+    }
+
+    /// Cross-scenario aggregation: pool stored runs per dispatcher into the
+    /// decision-quality figures (Figs 10–11; deterministic by construction —
+    /// the timing figures stay per-run, wall clock is not reproducible) plus
+    /// a flat `summary.csv`.
+    fn aggregate(
+        &self,
+        matrix: &RunMatrix,
+        records: &[RunRecord],
+    ) -> anyhow::Result<(Vec<PathBuf>, Vec<SimOutput>)> {
+        let plots_dir = self.out_dir.join("plots");
+        std::fs::create_dir_all(&plots_dir)?;
+        let mut outputs = Vec::with_capacity(matrix.runs.len());
+        for (run, rec) in matrix.runs.iter().zip(records) {
+            outputs
+                .push(store::read_run_output(&store::run_dir(&self.out_dir, &run.run_id), rec)?);
+        }
+        let mut by_dispatcher: BTreeMap<String, Vec<SimOutput>> = BTreeMap::new();
+        for (rec, out) in records.iter().zip(&outputs) {
+            by_dispatcher.entry(rec.dispatcher.clone()).or_default().push(out.clone());
+        }
+        let mut pf = PlotFactory::new();
+        for (label, outs) in by_dispatcher {
+            pf.add_run(label, outs);
+        }
+        let mut plots = Vec::new();
+        for (kind, file) in
+            [(PlotKind::Slowdown, "fig10_slowdown.csv"), (PlotKind::QueueSize, "fig11_queue.csv")]
+        {
+            let p = plots_dir.join(file);
+            pf.produce_plot(kind, &p)?;
+            plots.push(p);
+        }
+        let mut csv = String::from(
+            "run_id,workload,system,dispatcher,scenario,seed,completed,rejected,makespan,\
+             avg_slowdown,avg_wait,max_queue\n",
+        );
+        for rec in records {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{:.6},{:.6},{}\n",
+                rec.run_id,
+                rec.workload,
+                rec.system,
+                rec.dispatcher,
+                rec.scenario,
+                rec.seed,
+                rec.jobs_completed,
+                rec.jobs_rejected,
+                rec.makespan,
+                rec.avg_slowdown(),
+                rec.avg_wait(),
+                rec.max_queue
+            ));
+        }
+        let summary = self.out_dir.join("summary.csv");
+        std::fs::write(&summary, csv)?;
+        plots.push(summary);
+        Ok((plots, outputs))
+    }
+
+    /// How much of the matrix the store already holds.
+    pub fn status(&self) -> anyhow::Result<CampaignStatus> {
+        let matrix = expand(&self.spec)?;
+        let mut done = 0;
+        let mut pending = Vec::new();
+        for run in &matrix.runs {
+            if self.is_done(run) {
+                done += 1;
+            } else {
+                pending.push(run.run_id.clone());
+            }
+        }
+        Ok(CampaignStatus { total: matrix.runs.len(), done, pending })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::testutil as tempfile;
+
+    fn tiny_spec() -> CampaignSpec {
+        let mut spec = CampaignSpec::new("tiny");
+        spec.add_trace("seth", 0.0005).add_system_trace("seth").add_dispatcher("FIFO-FF");
+        spec.seeds = vec![1, 2];
+        spec
+    }
+
+    #[test]
+    fn runs_persist_and_resume_skips_everything() {
+        let tmp = tempfile::tempdir().unwrap();
+        let campaign = Campaign::new(tiny_spec(), tmp.path().join("out"));
+        let st = campaign.status().unwrap();
+        assert_eq!((st.total, st.done, st.pending.len()), (2, 0, 2));
+        let report = campaign.run().unwrap();
+        assert_eq!(report.executed, 2);
+        assert_eq!(report.skipped, 0);
+        assert_eq!(report.records.len(), 2);
+        assert!(report.index.exists());
+        for p in &report.plots {
+            assert!(p.exists(), "{}", p.display());
+        }
+        for rec in &report.records {
+            assert!(rec.jobs_completed > 0, "{}", rec.run_id);
+        }
+        let st = campaign.status().unwrap();
+        assert_eq!((st.done, st.pending.len()), (2, 0));
+        let again = campaign.run().unwrap();
+        assert_eq!(again.executed, 0);
+        assert_eq!(again.skipped, 2);
+    }
+
+    #[test]
+    fn repetition_seeds_produce_different_trace_realizations() {
+        let tmp = tempfile::tempdir().unwrap();
+        let report = Campaign::new(tiny_spec(), tmp.path().join("out")).run().unwrap();
+        let [a, b] = &report.records[..] else { panic!("expected 2 runs") };
+        assert_ne!(
+            (a.jobs_completed, a.makespan, a.slowdown_sum),
+            (b.jobs_completed, b.makespan, b.slowdown_sum),
+            "seeds 1 and 2 must observe different workload realizations"
+        );
+    }
+
+    #[test]
+    fn resume_works_without_original_workload_inputs() {
+        // A completed campaign is a portable artifact: re-aggregating it
+        // must not require the original SWF inputs.
+        let tmp = tempfile::tempdir().unwrap();
+        let swf = tmp.path().join("w.swf");
+        crate::traces::SETH.synthesize(&swf, 0.0005, 1).unwrap();
+        let mut spec = CampaignSpec::new("portable");
+        spec.add_swf(&swf).add_system_trace("seth").add_dispatcher("FIFO-FF");
+        let out = tmp.path().join("out");
+        let first = Campaign::new(spec.clone(), &out).run().unwrap();
+        assert_eq!(first.executed, 1);
+        std::fs::remove_file(&swf).unwrap();
+        let again = Campaign::new(spec, &out).run().unwrap();
+        assert_eq!((again.executed, again.skipped), (0, 1));
+        assert_eq!(again.outputs.len(), 1);
+        assert_eq!(again.outputs[0].jobs_completed, again.records[0].jobs_completed);
+    }
+
+    #[test]
+    fn spec_edit_invalidates_stored_runs() {
+        let tmp = tempfile::tempdir().unwrap();
+        let out = tmp.path().join("out");
+        Campaign::new(tiny_spec(), &out).run().unwrap();
+        let mut edited = tiny_spec();
+        edited.seeds = vec![1, 2, 3]; // hash changes → derived seeds change
+        let campaign = Campaign::new(edited, &out);
+        assert_eq!(campaign.status().unwrap().done, 0);
+    }
+
+    #[test]
+    fn failing_run_reports_and_leaves_no_manifest() {
+        let tmp = tempfile::tempdir().unwrap();
+        let mut spec = tiny_spec();
+        spec.workloads =
+            vec![WorkloadSpec::Swf(tmp.path().join("missing.swf"))];
+        let err = Campaign::new(spec, tmp.path().join("out")).run().unwrap_err();
+        assert!(err.to_string().contains("missing.swf"), "{err}");
+    }
+}

@@ -1,0 +1,634 @@
+//! Declarative campaign specifications: the cross-product of workloads ×
+//! systems × dispatchers × addon scenarios × seeds that a study runs over.
+//!
+//! A [`CampaignSpec`] is plain data — JSON in, JSON out — so a study is an
+//! artifact that can be versioned, diffed and re-run. Randomized parts of a
+//! campaign (trace realizations, future stochastic components) key off the
+//! per-entry `seeds` and the spec hash, never off execution order, which is
+//! what makes parallel and serial campaign runs byte-identical (see
+//! DESIGN.md §Campaigns).
+
+use crate::addons::{AdditionalData, FailureInjector, PowerModel};
+use crate::config::SysConfig;
+use crate::traces::spec_by_name;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Make a string safe for run ids / file names: anything outside
+/// `[A-Za-z0-9._-]` becomes `-`.
+pub(crate) fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') { c } else { '-' })
+        .collect()
+}
+
+/// One workload axis entry: a concrete SWF file, or a named [`crate::traces::TraceSpec`]
+/// synthesized per seed (so repetitions observe *different realizations* of
+/// the same statistical workload).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// An existing SWF file; identical for every seed.
+    Swf(PathBuf),
+    /// A named trace synthesizer (`seth`/`ricc`/`mc`) at a scale; each seed
+    /// produces its own realization.
+    Trace { name: String, scale: f64 },
+}
+
+impl WorkloadSpec {
+    /// Stable label used in run ids and manifests.
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSpec::Swf(p) => sanitize(
+                p.file_stem().and_then(|s| s.to_str()).unwrap_or("workload"),
+            ),
+            WorkloadSpec::Trace { name, scale } => {
+                format!("{}-s{}u", sanitize(name), (scale * 1e6).round() as u64)
+            }
+        }
+    }
+
+    /// Whether different seeds yield different realizations of this workload.
+    pub fn seed_sensitive(&self) -> bool {
+        matches!(self, WorkloadSpec::Trace { .. })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            WorkloadSpec::Swf(p) => {
+                m.insert("swf".to_string(), Json::Str(p.to_string_lossy().into_owned()));
+            }
+            WorkloadSpec::Trace { name, scale } => {
+                m.insert("trace".to_string(), Json::Str(name.clone()));
+                m.insert("scale".to_string(), Json::Num(*scale));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<Self> {
+        if let Some(p) = v.get("swf").and_then(|s| s.as_str()) {
+            return Ok(WorkloadSpec::Swf(PathBuf::from(p)));
+        }
+        if let Some(name) = v.get("trace").and_then(|s| s.as_str()) {
+            let scale = v.get("scale").and_then(|s| s.as_f64()).unwrap_or(1.0);
+            anyhow::ensure!(
+                scale > 0.0 && scale <= 1.0,
+                "workload {name:?}: scale {scale} outside (0, 1]"
+            );
+            return Ok(WorkloadSpec::Trace { name: name.to_string(), scale });
+        }
+        anyhow::bail!("workload entry needs \"swf\" or \"trace\": {}", v.to_string_compact())
+    }
+}
+
+/// One system axis entry: a named [`SysConfig`], inline, from a JSON file,
+/// or borrowed from a trace spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemSpec {
+    pub name: String,
+    pub source: SystemSource,
+}
+
+/// Where a [`SystemSpec`] gets its configuration from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SystemSource {
+    Inline(SysConfig),
+    Path(PathBuf),
+    Trace(String),
+}
+
+impl SystemSpec {
+    /// Resolve to a concrete configuration (reads files / trace specs).
+    pub fn resolve(&self) -> anyhow::Result<SysConfig> {
+        match &self.source {
+            SystemSource::Inline(cfg) => Ok(cfg.clone()),
+            SystemSource::Path(p) => SysConfig::from_json_file(p),
+            SystemSource::Trace(name) => spec_by_name(name)
+                .map(|t| t.sys_config())
+                .ok_or_else(|| anyhow::anyhow!("system {:?}: unknown trace {name:?}", self.name)),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        match &self.source {
+            SystemSource::Inline(cfg) => {
+                m.insert(
+                    "config".to_string(),
+                    Json::parse(&cfg.to_json()).expect("SysConfig::to_json is valid JSON"),
+                );
+            }
+            SystemSource::Path(p) => {
+                m.insert("path".to_string(), Json::Str(p.to_string_lossy().into_owned()));
+            }
+            SystemSource::Trace(t) => {
+                m.insert("trace".to_string(), Json::Str(t.clone()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<Self> {
+        if let Some(t) = v.get("trace").and_then(|s| s.as_str()) {
+            let name = v.get("name").and_then(|s| s.as_str()).unwrap_or(t).to_string();
+            return Ok(SystemSpec { name, source: SystemSource::Trace(t.to_string()) });
+        }
+        let name = v
+            .get("name")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("system entry needs a \"name\""))?
+            .to_string();
+        if let Some(p) = v.get("path").and_then(|s| s.as_str()) {
+            return Ok(SystemSpec { name, source: SystemSource::Path(PathBuf::from(p)) });
+        }
+        if let Some(cfg) = v.get("config") {
+            let cfg = SysConfig::from_json(&cfg.to_string_compact())?;
+            return Ok(SystemSpec { name, source: SystemSource::Inline(cfg) });
+        }
+        anyhow::bail!("system {name:?} needs \"config\", \"path\" or \"trace\"")
+    }
+}
+
+/// Parameters of a [`PowerModel`] addon in a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerSpec {
+    pub idle_w: f64,
+    pub max_w: f64,
+    /// Integration cadence in simulation seconds (0 = job events only).
+    pub cadence: u64,
+}
+
+/// One addon scenario: a named bundle of additional-data providers every run
+/// of the scenario is perturbed/observed by. Scenarios are *data*, so the
+/// runner can rebuild fresh provider instances inside each worker thread.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub power: Option<PowerSpec>,
+    /// `(node, fail_at, repair_at)` failure windows.
+    pub failures: Vec<(u32, u64, u64)>,
+}
+
+impl ScenarioSpec {
+    /// The addon-free scenario every campaign has by default.
+    pub fn baseline() -> Self {
+        ScenarioSpec { name: "baseline".to_string(), power: None, failures: Vec::new() }
+    }
+
+    /// Instantiate fresh provider instances for one run.
+    pub fn build_addons(&self) -> Vec<Box<dyn AdditionalData>> {
+        let mut addons: Vec<Box<dyn AdditionalData>> = Vec::new();
+        if let Some(p) = &self.power {
+            addons.push(Box::new(PowerModel::new(p.idle_w, p.max_w).with_cadence(p.cadence)));
+        }
+        if !self.failures.is_empty() {
+            addons.push(Box::new(FailureInjector::new(self.failures.clone())));
+        }
+        addons
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        if let Some(p) = &self.power {
+            let mut pm = BTreeMap::new();
+            pm.insert("idle_w".to_string(), Json::Num(p.idle_w));
+            pm.insert("max_w".to_string(), Json::Num(p.max_w));
+            pm.insert("cadence".to_string(), Json::Num(p.cadence as f64));
+            m.insert("power".to_string(), Json::Obj(pm));
+        }
+        if !self.failures.is_empty() {
+            let rows = self
+                .failures
+                .iter()
+                .map(|&(n, f, r)| {
+                    Json::Arr(vec![
+                        Json::Num(n as f64),
+                        Json::Num(f as f64),
+                        Json::Num(r as f64),
+                    ])
+                })
+                .collect();
+            m.insert("failures".to_string(), Json::Arr(rows));
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("scenario entry needs a \"name\""))?
+            .to_string();
+        let power = match v.get("power") {
+            None => None,
+            Some(p) => Some(PowerSpec {
+                idle_w: p
+                    .get("idle_w")
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("scenario {name:?}: power needs idle_w"))?,
+                max_w: p
+                    .get("max_w")
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("scenario {name:?}: power needs max_w"))?,
+                cadence: p.get("cadence").and_then(|x| x.as_u64()).unwrap_or(60),
+            }),
+        };
+        let mut failures = Vec::new();
+        if let Some(rows) = v.get("failures").and_then(|f| f.as_arr()) {
+            for row in rows {
+                let f: Vec<u64> = row
+                    .as_arr()
+                    .map(|xs| xs.iter().filter_map(|x| x.as_u64()).collect())
+                    .unwrap_or_default();
+                anyhow::ensure!(
+                    f.len() == 3 && f[1] < f[2],
+                    "scenario {name:?}: failure entries are [node, fail_at, repair_at] \
+                     with fail_at < repair_at, got {}",
+                    row.to_string_compact()
+                );
+                failures.push((f[0] as u32, f[1], f[2]));
+            }
+        }
+        Ok(ScenarioSpec { name, power, failures })
+    }
+}
+
+/// A declarative scenario matrix: the full study a campaign executes.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub name: String,
+    pub workloads: Vec<WorkloadSpec>,
+    pub systems: Vec<SystemSpec>,
+    /// `SCHED-ALLOC` dispatcher labels.
+    pub dispatchers: Vec<String>,
+    pub scenarios: Vec<ScenarioSpec>,
+    /// Repetition seeds. Each seed is a *repetition* of the whole matrix:
+    /// trace workloads synthesize one realization per seed, and the seed is
+    /// plumbed into every run's [`crate::sim::SimOptions::seed`].
+    pub seeds: Vec<u64>,
+}
+
+impl CampaignSpec {
+    /// An empty campaign with the baseline scenario and a single seed 0.
+    pub fn new(name: &str) -> Self {
+        CampaignSpec {
+            name: name.to_string(),
+            workloads: Vec::new(),
+            systems: Vec::new(),
+            dispatchers: Vec::new(),
+            scenarios: vec![ScenarioSpec::baseline()],
+            seeds: vec![0],
+        }
+    }
+
+    /// Add an SWF-file workload.
+    pub fn add_swf<P: AsRef<Path>>(&mut self, path: P) -> &mut Self {
+        self.workloads.push(WorkloadSpec::Swf(path.as_ref().to_path_buf()));
+        self
+    }
+
+    /// Add a trace-synthesizer workload (one realization per seed).
+    pub fn add_trace(&mut self, name: &str, scale: f64) -> &mut Self {
+        self.workloads.push(WorkloadSpec::Trace { name: name.to_string(), scale });
+        self
+    }
+
+    /// Add a named inline system configuration.
+    pub fn add_system(&mut self, name: &str, cfg: SysConfig) -> &mut Self {
+        self.systems
+            .push(SystemSpec { name: name.to_string(), source: SystemSource::Inline(cfg) });
+        self
+    }
+
+    /// Add the system configuration of a named trace spec.
+    pub fn add_system_trace(&mut self, trace: &str) -> &mut Self {
+        self.systems.push(SystemSpec {
+            name: trace.to_string(),
+            source: SystemSource::Trace(trace.to_string()),
+        });
+        self
+    }
+
+    /// Add a single dispatcher label.
+    pub fn add_dispatcher(&mut self, label: &str) -> &mut Self {
+        self.dispatchers.push(label.to_string());
+        self
+    }
+
+    /// Register the cross-product of schedulers × allocators (the
+    /// experimentation tool's `gen_dispatchers`).
+    pub fn gen_dispatchers(&mut self, schedulers: &[&str], allocators: &[&str]) -> &mut Self {
+        for s in schedulers {
+            for a in allocators {
+                self.dispatchers.push(format!("{s}-{a}"));
+            }
+        }
+        self
+    }
+
+    /// Add an addon scenario (the default `baseline` scenario stays; clear
+    /// [`CampaignSpec::scenarios`] first to drop it).
+    pub fn add_scenario(&mut self, scenario: ScenarioSpec) -> &mut Self {
+        self.scenarios.push(scenario);
+        self
+    }
+
+    /// Number of runs the matrix expands to.
+    pub fn run_count(&self) -> usize {
+        self.workloads.len()
+            * self.systems.len()
+            * self.dispatchers.len()
+            * self.scenarios.len()
+            * self.seeds.len()
+    }
+
+    /// Structural validation (axes non-empty, names resolvable/unique).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "campaign has no name");
+        anyhow::ensure!(!self.workloads.is_empty(), "campaign {:?} has no workloads", self.name);
+        anyhow::ensure!(!self.systems.is_empty(), "campaign {:?} has no systems", self.name);
+        anyhow::ensure!(
+            !self.dispatchers.is_empty(),
+            "campaign {:?} has no dispatchers",
+            self.name
+        );
+        anyhow::ensure!(!self.scenarios.is_empty(), "campaign {:?} has no scenarios", self.name);
+        anyhow::ensure!(!self.seeds.is_empty(), "campaign {:?} has no seeds", self.name);
+        for w in &self.workloads {
+            if let WorkloadSpec::Trace { name, scale } = w {
+                anyhow::ensure!(spec_by_name(name).is_some(), "unknown trace workload {name:?}");
+                anyhow::ensure!(
+                    *scale > 0.0 && *scale <= 1.0,
+                    "trace {name:?}: scale {scale} outside (0, 1]"
+                );
+            }
+        }
+        let mut names: Vec<&str> = self.scenarios.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::ensure!(
+            names.len() == self.scenarios.len(),
+            "campaign {:?} has duplicate scenario names",
+            self.name
+        );
+        // Labels become run-id / manifest components: collisions (two SWFs
+        // with the same file stem, two entries of the same trace whose
+        // scales round to the same label) would make results
+        // indistinguishable, so they are rejected loudly.
+        let mut labels: Vec<String> = self.workloads.iter().map(|w| w.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        anyhow::ensure!(
+            labels.len() == self.workloads.len(),
+            "campaign {:?} has workloads with colliding labels {labels:?}",
+            self.name
+        );
+        let mut sys_names: Vec<String> =
+            self.systems.iter().map(|s| sanitize(&s.name)).collect();
+        sys_names.sort_unstable();
+        sys_names.dedup();
+        anyhow::ensure!(
+            sys_names.len() == self.systems.len(),
+            "campaign {:?} has systems with colliding names",
+            self.name
+        );
+        // Seeds travel through JSON numbers (f64): values beyond 2^53 would
+        // silently round on round-trip and alias in the spec hash.
+        for &s in &self.seeds {
+            anyhow::ensure!(
+                s <= (1u64 << 53),
+                "seed {s} exceeds 2^53 and would be corrupted by JSON serialization; \
+                 use smaller repetition seeds"
+            );
+        }
+        Ok(())
+    }
+
+    /// Systems resolved to concrete configurations, in axis order.
+    pub fn resolved_systems(&self) -> anyhow::Result<Vec<(String, SysConfig)>> {
+        self.systems.iter().map(|s| Ok((s.name.clone(), s.resolve()?))).collect()
+    }
+
+    fn to_json_value(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert(
+            "workloads".to_string(),
+            Json::Arr(self.workloads.iter().map(|w| w.to_json()).collect()),
+        );
+        m.insert(
+            "systems".to_string(),
+            Json::Arr(self.systems.iter().map(|s| s.to_json()).collect()),
+        );
+        m.insert(
+            "dispatchers".to_string(),
+            Json::Arr(self.dispatchers.iter().map(|d| Json::Str(d.clone())).collect()),
+        );
+        m.insert(
+            "scenarios".to_string(),
+            Json::Arr(self.scenarios.iter().map(|s| s.to_json()).collect()),
+        );
+        m.insert(
+            "seeds".to_string(),
+            Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Pretty JSON of the spec as authored.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().to_string_pretty()
+    }
+
+    /// Canonical compact JSON with every system resolved inline — the hash
+    /// input, so editing a referenced config file changes the spec hash.
+    pub fn canonical_json(&self) -> anyhow::Result<String> {
+        let mut spec = self.clone();
+        spec.systems = self
+            .resolved_systems()?
+            .into_iter()
+            .map(|(name, cfg)| SystemSpec { name, source: SystemSource::Inline(cfg) })
+            .collect();
+        Ok(spec.to_json_value().to_string_compact())
+    }
+
+    /// FNV-1a 64 over [`CampaignSpec::canonical_json`]: the stable identity
+    /// every per-run derived seed is keyed on.
+    pub fn spec_hash(&self) -> anyhow::Result<u64> {
+        let canon = self.canonical_json()?;
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in canon.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Ok(h)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text)?;
+        let name = v
+            .get("name")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("campaign spec needs a \"name\""))?
+            .to_string();
+        let arr = |key: &str| -> Vec<Json> {
+            v.get(key).and_then(|a| a.as_arr()).map(|a| a.to_vec()).unwrap_or_default()
+        };
+        let workloads =
+            arr("workloads").iter().map(WorkloadSpec::from_json).collect::<Result<_, _>>()?;
+        let systems =
+            arr("systems").iter().map(SystemSpec::from_json).collect::<Result<_, _>>()?;
+        let dispatchers = arr("dispatchers")
+            .iter()
+            .map(|d| {
+                d.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow::anyhow!("dispatchers must be strings"))
+            })
+            .collect::<Result<_, _>>()?;
+        let scenarios = if v.get("scenarios").is_some() {
+            arr("scenarios").iter().map(ScenarioSpec::from_json).collect::<Result<_, _>>()?
+        } else {
+            vec![ScenarioSpec::baseline()]
+        };
+        let seeds = if v.get("seeds").is_some() {
+            arr("seeds")
+                .iter()
+                .map(|s| s.as_u64().ok_or_else(|| anyhow::anyhow!("seeds must be integers")))
+                .collect::<Result<_, _>>()?
+        } else {
+            vec![0]
+        };
+        let spec = CampaignSpec { name, workloads, systems, dispatchers, scenarios, seeds };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from a JSON file.
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("reading campaign spec {}: {e}", path.as_ref().display())
+        })?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> CampaignSpec {
+        let mut spec = CampaignSpec::new("demo");
+        spec.add_trace("seth", 0.001)
+            .add_swf("data/w.swf")
+            .add_system_trace("seth")
+            .gen_dispatchers(&["FIFO", "SJF"], &["FF"])
+            .add_scenario(ScenarioSpec {
+                name: "power".to_string(),
+                power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 300 }),
+                failures: vec![(0, 100, 2000)],
+            });
+        spec.seeds = vec![1, 2];
+        spec
+    }
+
+    #[test]
+    fn run_count_is_cross_product() {
+        let spec = demo();
+        // 2 workloads × 1 system × 2 dispatchers × 2 scenarios × 2 seeds
+        assert_eq!(spec.run_count(), 16);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_spec() {
+        let spec = demo();
+        let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.workloads, spec.workloads);
+        assert_eq!(back.systems, spec.systems);
+        assert_eq!(back.dispatchers, spec.dispatchers);
+        assert_eq!(back.scenarios, spec.scenarios);
+        assert_eq!(back.seeds, spec.seeds);
+        assert_eq!(back.spec_hash().unwrap(), spec.spec_hash().unwrap());
+    }
+
+    #[test]
+    fn defaults_fill_scenarios_and_seeds() {
+        let spec = CampaignSpec::from_json(
+            r#"{"name":"d","workloads":[{"trace":"seth","scale":0.001}],
+                "systems":[{"trace":"seth"}],"dispatchers":["FIFO-FF"]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.scenarios.len(), 1);
+        assert_eq!(spec.scenarios[0].name, "baseline");
+        assert_eq!(spec.seeds, vec![0]);
+        assert_eq!(spec.run_count(), 1);
+    }
+
+    #[test]
+    fn hash_sensitive_to_content_stable_across_calls() {
+        let a = demo();
+        let mut b = demo();
+        assert_eq!(a.spec_hash().unwrap(), b.spec_hash().unwrap());
+        b.seeds.push(3);
+        assert_ne!(a.spec_hash().unwrap(), b.spec_hash().unwrap());
+    }
+
+    #[test]
+    fn validation_rejects_empty_axes_and_unknown_traces() {
+        assert!(CampaignSpec::new("x").validate().is_err());
+        let mut spec = demo();
+        spec.workloads = vec![WorkloadSpec::Trace { name: "nope".to_string(), scale: 0.5 }];
+        assert!(spec.validate().unwrap_err().to_string().contains("nope"));
+        let mut dup = demo();
+        dup.add_scenario(ScenarioSpec::baseline());
+        assert!(dup.validate().unwrap_err().to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn validation_rejects_label_collisions_and_oversized_seeds() {
+        // two SWFs with the same file stem collapse to one label
+        let mut colliding = demo();
+        colliding.add_swf("other/w.swf"); // demo already has data/w.swf → "w"
+        assert!(colliding.validate().unwrap_err().to_string().contains("colliding"));
+        // seeds beyond 2^53 would be corrupted by JSON round-trips
+        let mut oversized = demo();
+        oversized.seeds = vec![1u64 << 60];
+        assert!(oversized.validate().unwrap_err().to_string().contains("2^53"));
+        assert!(CampaignSpec::from_json(
+            &{
+                let mut s = demo();
+                s.seeds = vec![1 << 53];
+                s.to_json()
+            }
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn scenario_builds_declared_addons() {
+        let spec = demo();
+        assert_eq!(spec.scenarios[0].build_addons().len(), 0);
+        let addons = spec.scenarios[1].build_addons();
+        assert_eq!(addons.len(), 2);
+        assert_eq!(addons[0].name(), "power");
+        assert_eq!(addons[1].name(), "failures");
+    }
+
+    #[test]
+    fn workload_labels_are_stable_and_fs_safe() {
+        assert_eq!(
+            WorkloadSpec::Trace { name: "seth".into(), scale: 0.0005 }.label(),
+            "seth-s500u"
+        );
+        assert_eq!(WorkloadSpec::Swf(PathBuf::from("a b/w x.swf")).label(), "w-x");
+        assert!(!WorkloadSpec::Swf(PathBuf::from("w.swf")).seed_sensitive());
+        assert!(WorkloadSpec::Trace { name: "seth".into(), scale: 0.1 }.seed_sensitive());
+    }
+}

@@ -1,0 +1,408 @@
+//! The campaign results store: one directory per run (`jobs.csv`,
+//! `perf.csv`, `run.json`) plus a campaign-level `index.json`.
+//!
+//! `run.json` is the completion marker — it is written last, so a run
+//! directory without it is a partial run and gets re-executed on resume.
+//! The manifest separates **result** fields (pure simulation outcomes,
+//! deterministic; these also make up `index.json`) from **measure** fields
+//! (wall time, CPU, RSS; inherently run-to-run noise, kept out of
+//! `index.json` so serial and parallel campaigns stay byte-identical).
+
+use super::matrix::RunSpec;
+use crate::output::{read_job_csv, read_perf_csv};
+use crate::sim::SimOutput;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Manifest of one completed run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub run_id: String,
+    pub index: usize,
+    pub workload: String,
+    pub system: String,
+    pub dispatcher: String,
+    pub scenario: String,
+    pub seed: u64,
+    pub run_seed: u64,
+    // --- result: deterministic simulation outcomes -----------------------
+    pub jobs_completed: u64,
+    pub jobs_rejected: u64,
+    pub lines_skipped: u64,
+    pub first_submit: u64,
+    pub last_completion: u64,
+    pub makespan: u64,
+    pub time_points: u64,
+    pub max_queue: usize,
+    pub slowdown_sum: f64,
+    pub wait_sum: u64,
+    /// Addon metrics at the final time point (deterministic).
+    pub extra: BTreeMap<String, f64>,
+    // --- measure: run-to-run noise (never in index.json) ------------------
+    pub wall_s: f64,
+    pub cpu_ms: u64,
+    pub dispatch_ns: u64,
+    pub other_ns: u64,
+    pub avg_rss_kb: u64,
+    pub max_rss_kb: u64,
+}
+
+impl RunRecord {
+    /// Mean slowdown over completed jobs.
+    pub fn avg_slowdown(&self) -> f64 {
+        if self.jobs_completed == 0 {
+            0.0
+        } else {
+            self.slowdown_sum / self.jobs_completed as f64
+        }
+    }
+
+    /// Mean waiting time (seconds).
+    pub fn avg_wait(&self) -> f64 {
+        if self.jobs_completed == 0 {
+            0.0
+        } else {
+            self.wait_sum as f64 / self.jobs_completed as f64
+        }
+    }
+
+    /// Build a manifest from a finished simulation.
+    pub fn from_output(run: &RunSpec, out: &SimOutput) -> Self {
+        RunRecord {
+            run_id: run.run_id.clone(),
+            index: run.index,
+            workload: run.workload.label(),
+            system: run.system.clone(),
+            dispatcher: run.dispatcher.clone(),
+            scenario: run.scenario.name.clone(),
+            seed: run.seed,
+            run_seed: run.run_seed,
+            jobs_completed: out.jobs_completed,
+            jobs_rejected: out.jobs_rejected,
+            lines_skipped: out.lines_skipped,
+            first_submit: out.first_submit,
+            last_completion: out.last_completion,
+            makespan: out.makespan,
+            time_points: out.time_points,
+            max_queue: out.max_queue,
+            slowdown_sum: out.slowdown_sum,
+            wait_sum: out.wait_sum,
+            extra: out.final_extra.clone(),
+            wall_s: out.wall_s,
+            cpu_ms: out.cpu_ms,
+            dispatch_ns: out.dispatch_ns,
+            other_ns: out.other_ns,
+            avg_rss_kb: out.avg_rss_kb,
+            max_rss_kb: out.max_rss_kb,
+        }
+    }
+
+    /// The deterministic portion: identity + result (what `index.json`
+    /// aggregates and what the byte-identical guarantee covers).
+    pub fn deterministic_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("run_id".to_string(), Json::Str(self.run_id.clone()));
+        m.insert("index".to_string(), Json::Num(self.index as f64));
+        m.insert("workload".to_string(), Json::Str(self.workload.clone()));
+        m.insert("system".to_string(), Json::Str(self.system.clone()));
+        m.insert("dispatcher".to_string(), Json::Str(self.dispatcher.clone()));
+        m.insert("scenario".to_string(), Json::Str(self.scenario.clone()));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        // 64-bit derived seeds exceed f64's exact-integer range; hex strings
+        // keep them lossless in JSON.
+        m.insert("run_seed".to_string(), Json::Str(format!("{:016x}", self.run_seed)));
+        let mut r = BTreeMap::new();
+        r.insert("jobs_completed".to_string(), Json::Num(self.jobs_completed as f64));
+        r.insert("jobs_rejected".to_string(), Json::Num(self.jobs_rejected as f64));
+        r.insert("lines_skipped".to_string(), Json::Num(self.lines_skipped as f64));
+        r.insert("first_submit".to_string(), Json::Num(self.first_submit as f64));
+        r.insert("last_completion".to_string(), Json::Num(self.last_completion as f64));
+        r.insert("makespan".to_string(), Json::Num(self.makespan as f64));
+        r.insert("time_points".to_string(), Json::Num(self.time_points as f64));
+        r.insert("max_queue".to_string(), Json::Num(self.max_queue as f64));
+        r.insert("slowdown_sum".to_string(), Json::Num(self.slowdown_sum));
+        r.insert("wait_sum".to_string(), Json::Num(self.wait_sum as f64));
+        m.insert("result".to_string(), Json::Obj(r));
+        let extra: BTreeMap<String, Json> =
+            self.extra.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        m.insert("extra".to_string(), Json::Obj(extra));
+        Json::Obj(m)
+    }
+
+    /// Full `run.json` document: deterministic portion + measurements.
+    pub fn to_json(&self) -> Json {
+        let Json::Obj(mut m) = self.deterministic_json() else { unreachable!() };
+        let mut w = BTreeMap::new();
+        w.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        w.insert("cpu_ms".to_string(), Json::Num(self.cpu_ms as f64));
+        w.insert("dispatch_ns".to_string(), Json::Num(self.dispatch_ns as f64));
+        w.insert("other_ns".to_string(), Json::Num(self.other_ns as f64));
+        w.insert("avg_rss_kb".to_string(), Json::Num(self.avg_rss_kb as f64));
+        w.insert("max_rss_kb".to_string(), Json::Num(self.max_rss_kb as f64));
+        m.insert("measure".to_string(), Json::Obj(w));
+        Json::Obj(m)
+    }
+
+    /// Parse a `run.json` document.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let s = |key: &str| -> anyhow::Result<String> {
+            v.get(key)
+                .and_then(|x| x.as_str())
+                .map(String::from)
+                .ok_or_else(|| anyhow::anyhow!("run.json missing string {key:?}"))
+        };
+        let result = v.get("result").ok_or_else(|| anyhow::anyhow!("run.json missing result"))?;
+        let ru = |key: &str| -> u64 { result.get(key).and_then(|x| x.as_u64()).unwrap_or(0) };
+        let measure = v.get("measure");
+        let mu = |key: &str| -> u64 {
+            measure.and_then(|m| m.get(key)).and_then(|x| x.as_u64()).unwrap_or(0)
+        };
+        let mut extra = BTreeMap::new();
+        if let Some(Json::Obj(map)) = v.get("extra") {
+            for (k, x) in map {
+                if let Some(f) = x.as_f64() {
+                    extra.insert(k.clone(), f);
+                }
+            }
+        }
+        Ok(RunRecord {
+            run_id: s("run_id")?,
+            index: v.get("index").and_then(|x| x.as_u64()).unwrap_or(0) as usize,
+            workload: s("workload")?,
+            system: s("system")?,
+            dispatcher: s("dispatcher")?,
+            scenario: s("scenario")?,
+            seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(0),
+            run_seed: u64::from_str_radix(&s("run_seed")?, 16)
+                .map_err(|e| anyhow::anyhow!("run.json bad run_seed: {e}"))?,
+            jobs_completed: ru("jobs_completed"),
+            jobs_rejected: ru("jobs_rejected"),
+            lines_skipped: ru("lines_skipped"),
+            first_submit: ru("first_submit"),
+            last_completion: ru("last_completion"),
+            makespan: ru("makespan"),
+            time_points: ru("time_points"),
+            max_queue: ru("max_queue") as usize,
+            slowdown_sum: result.get("slowdown_sum").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            wait_sum: ru("wait_sum"),
+            extra,
+            wall_s: measure
+                .and_then(|m| m.get("wall_s"))
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0),
+            cpu_ms: mu("cpu_ms"),
+            dispatch_ns: mu("dispatch_ns"),
+            other_ns: mu("other_ns"),
+            avg_rss_kb: mu("avg_rss_kb"),
+            max_rss_kb: mu("max_rss_kb"),
+        })
+    }
+}
+
+/// Directory of one run inside a campaign output directory.
+pub fn run_dir<P: AsRef<Path>>(out_dir: P, run_id: &str) -> PathBuf {
+    out_dir.as_ref().join("runs").join(run_id)
+}
+
+/// Persist one finished run: `jobs.csv`, `perf.csv`, then `run.json` last
+/// (the completion marker). Any stale partial contents are cleared first.
+pub fn write_run(dir: &Path, run: &RunSpec, out: &SimOutput) -> anyhow::Result<RunRecord> {
+    if dir.exists() {
+        std::fs::remove_dir_all(dir)?;
+    }
+    std::fs::create_dir_all(dir)?;
+    let mut jobs_csv = String::from(crate::output::JobRecord::CSV_HEADER);
+    jobs_csv.push('\n');
+    for j in &out.jobs {
+        jobs_csv.push_str(&j.to_csv());
+        jobs_csv.push('\n');
+    }
+    std::fs::write(dir.join("jobs.csv"), jobs_csv)?;
+    let mut perf_csv = String::from(crate::output::PerfRecord::CSV_HEADER);
+    perf_csv.push('\n');
+    for p in &out.perf {
+        perf_csv.push_str(&p.to_csv());
+        perf_csv.push('\n');
+    }
+    std::fs::write(dir.join("perf.csv"), perf_csv)?;
+    let record = RunRecord::from_output(run, out);
+    std::fs::write(dir.join("run.json"), record.to_json().to_string_pretty())?;
+    Ok(record)
+}
+
+/// Load a run's manifest; `None` when the run never completed (no readable
+/// `run.json`).
+pub fn load_run(dir: &Path) -> Option<RunRecord> {
+    let text = std::fs::read_to_string(dir.join("run.json")).ok()?;
+    RunRecord::from_json(&Json::parse(&text).ok()?).ok()
+}
+
+/// Reload a stored run as a [`SimOutput`] (records re-read from the CSVs),
+/// so resumed and freshly-executed runs feed aggregation identically.
+pub fn read_run_output(dir: &Path, rec: &RunRecord) -> anyhow::Result<SimOutput> {
+    Ok(SimOutput {
+        dispatcher: rec.dispatcher.clone(),
+        seed: rec.run_seed,
+        jobs_completed: rec.jobs_completed,
+        jobs_rejected: rec.jobs_rejected,
+        lines_skipped: rec.lines_skipped,
+        first_submit: rec.first_submit,
+        last_completion: rec.last_completion,
+        makespan: rec.makespan,
+        wall_s: rec.wall_s,
+        cpu_ms: rec.cpu_ms,
+        dispatch_ns: rec.dispatch_ns,
+        other_ns: rec.other_ns,
+        time_points: rec.time_points,
+        addon_wakes: 0,
+        max_queue: rec.max_queue,
+        avg_rss_kb: rec.avg_rss_kb,
+        max_rss_kb: rec.max_rss_kb,
+        slowdown_sum: rec.slowdown_sum,
+        wait_sum: rec.wait_sum,
+        jobs: read_job_csv(dir.join("jobs.csv"))?,
+        perf: read_perf_csv(dir.join("perf.csv"))?,
+        final_extra: rec.extra.clone(),
+    })
+}
+
+/// Write the campaign-level `index.json`: identity + the deterministic
+/// portion of every run manifest, in matrix order.
+pub fn write_index(
+    out_dir: &Path,
+    campaign: &str,
+    spec_hash: u64,
+    records: &[RunRecord],
+) -> anyhow::Result<PathBuf> {
+    let mut m = BTreeMap::new();
+    m.insert("campaign".to_string(), Json::Str(campaign.to_string()));
+    m.insert("spec_hash".to_string(), Json::Str(format!("{spec_hash:016x}")));
+    let mut sorted: Vec<&RunRecord> = records.iter().collect();
+    sorted.sort_by_key(|r| r.index);
+    m.insert(
+        "runs".to_string(),
+        Json::Arr(sorted.iter().map(|r| r.deterministic_json()).collect()),
+    );
+    let path = out_dir.join("index.json");
+    std::fs::write(&path, Json::Obj(m).to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[allow(unused_imports)]
+    use crate::testutil as tempfile;
+    use crate::campaign::matrix::expand;
+    use crate::campaign::CampaignSpec;
+    use crate::output::{JobRecord, PerfRecord};
+
+    fn demo_run() -> RunSpec {
+        let mut spec = CampaignSpec::new("s");
+        spec.add_trace("seth", 0.001).add_system_trace("seth").add_dispatcher("FIFO-FF");
+        expand(&spec).unwrap().runs.remove(0)
+    }
+
+    fn demo_output() -> SimOutput {
+        SimOutput {
+            dispatcher: "FIFO-FF".into(),
+            jobs_completed: 2,
+            makespan: 100,
+            last_completion: 110,
+            first_submit: 10,
+            time_points: 3,
+            max_queue: 2,
+            slowdown_sum: 3.5,
+            wait_sum: 60,
+            wall_s: 0.01,
+            cpu_ms: 5,
+            jobs: vec![JobRecord {
+                id: 1,
+                submit: 10,
+                start: 20,
+                end: 50,
+                slots: 2,
+                wait: 10,
+                slowdown: 1.25,
+            }],
+            perf: vec![PerfRecord {
+                t: 10,
+                dispatch_ns: 100,
+                other_ns: 50,
+                queue_len: 1,
+                running: 1,
+                started: 1,
+                rss_kb: 0,
+            }],
+            final_extra: [("power.energy_kj".to_string(), 1.5)].into_iter().collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn write_load_roundtrip() {
+        let tmp = tempfile::tempdir().unwrap();
+        let run = demo_run();
+        let dir = run_dir(tmp.path(), &run.run_id);
+        let rec = write_run(&dir, &run, &demo_output()).unwrap();
+        let back = load_run(&dir).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.run_seed, run.run_seed);
+        assert_eq!(back.avg_slowdown(), 1.75);
+        assert_eq!(back.avg_wait(), 30.0);
+        assert_eq!(back.extra["power.energy_kj"], 1.5);
+    }
+
+    #[test]
+    fn incomplete_run_is_not_loaded() {
+        let tmp = tempfile::tempdir().unwrap();
+        let dir = run_dir(tmp.path(), "r0000-partial");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("jobs.csv"), "id\n").unwrap();
+        assert!(load_run(&dir).is_none());
+        std::fs::write(dir.join("run.json"), "{ not json").unwrap();
+        assert!(load_run(&dir).is_none());
+    }
+
+    #[test]
+    fn read_run_output_restores_records() {
+        let tmp = tempfile::tempdir().unwrap();
+        let run = demo_run();
+        let dir = run_dir(tmp.path(), &run.run_id);
+        let rec = write_run(&dir, &run, &demo_output()).unwrap();
+        let out = read_run_output(&dir, &rec).unwrap();
+        assert_eq!(out.jobs.len(), 1);
+        assert_eq!(out.jobs[0].end, 50);
+        assert_eq!(out.perf.len(), 1);
+        assert_eq!(out.perf[0].queue_len, 1);
+        assert_eq!(out.final_extra["power.energy_kj"], 1.5);
+        assert_eq!(out.seed, run.run_seed);
+    }
+
+    #[test]
+    fn index_is_deterministic_and_excludes_measurements() {
+        let tmp = tempfile::tempdir().unwrap();
+        let run = demo_run();
+        let mut fast = RunRecord::from_output(&run, &demo_output());
+        let mut slow = fast.clone();
+        slow.wall_s = 99.0;
+        slow.cpu_ms = 12345;
+        slow.max_rss_kb = 1 << 30;
+        let a = write_index(tmp.path(), "c", 7, std::slice::from_ref(&fast)).unwrap();
+        let first = std::fs::read_to_string(&a).unwrap();
+        let b = write_index(tmp.path(), "c", 7, std::slice::from_ref(&slow)).unwrap();
+        let second = std::fs::read_to_string(&b).unwrap();
+        assert_eq!(first, second, "index.json must not depend on measurements");
+        assert!(!first.contains("wall_s"));
+        // but it does carry the deterministic results, sorted by index
+        assert!(first.contains("slowdown_sum"));
+        fast.index = 1;
+        let mut zero = fast.clone();
+        zero.index = 0;
+        zero.run_id = "r0000-x".into();
+        let c = write_index(tmp.path(), "c", 7, &[fast.clone(), zero.clone()]).unwrap();
+        let text = std::fs::read_to_string(&c).unwrap();
+        assert!(text.find("r0000-x").unwrap() < text.find(&fast.run_id).unwrap());
+    }
+}

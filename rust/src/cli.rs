@@ -5,6 +5,8 @@
 //!
 //! * `simulate`  — Figure 4: one workload, one system, one dispatcher.
 //! * `experiment`— Figure 5: dispatcher cross-products + automatic plots.
+//! * `campaign`  — declarative scenario matrices run in parallel with a
+//!                 persistent, resumable results store (DESIGN.md §Campaigns).
 //! * `generate`  — Figure 6: synthetic workload generation from a seed.
 //! * `traces`    — materialize the Seth/RICC/MetaCentrum-like datasets.
 //! * `table1` / `table2` — regenerate the paper's tables.
@@ -38,6 +40,10 @@ COMMANDS:
            [--fail NODE:FAIL_AT:REPAIR_AT[,...]] [--mem-sample-secs SECS]
   experiment <workload.swf> --sys <cfg.json> [--name NAME]
            [--schedulers FIFO,SJF,LJF,EBF] [--allocators FF,BF] [--reps 1]
+  campaign run <spec.json> [--out DIR] [--jobs N]
+           execute a scenario matrix; completed runs are skipped (resume)
+  campaign status <spec.json> [--out DIR]
+           show how much of the matrix the results store already holds
   generate <seed.swf> --sys <cfg.json> [--jobs 50000] [--out generated.swf]
            [--core-gflops 1.667] [--rng-seed 42]
   traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
@@ -57,6 +63,7 @@ pub fn run() -> anyhow::Result<()> {
     match cmd.as_str() {
         "simulate" => simulate(&args),
         "experiment" => experiment(&args),
+        "campaign" => campaign(&args),
         "generate" => generate(&args),
         "traces" => cmd_traces(&args),
         "table1" => table1(&args),
@@ -206,6 +213,80 @@ fn experiment(args: &Args) -> anyhow::Result<()> {
     }
     for p in &res.plots {
         println!("plot: {}", p.display());
+    }
+    Ok(())
+}
+
+/// The campaign engine: `campaign run <spec.json>` / `campaign status`.
+fn campaign(args: &Args) -> anyhow::Result<()> {
+    use accasim::campaign::{Campaign, CampaignSpec};
+    let action = args
+        .positionals
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("campaign wants `run` or `status`\n{USAGE}"))?;
+    let spec_path = args
+        .positionals
+        .get(2)
+        .map(PathBuf::from)
+        .ok_or_else(|| anyhow::anyhow!("missing <spec.json> argument\n{USAGE}"))?;
+    let spec = CampaignSpec::from_json_file(&spec_path)?;
+    let out_dir =
+        PathBuf::from(args.get("out", &format!("results/{}", spec.name)));
+    match action.as_str() {
+        "run" => {
+            let jobs: usize = args.get_parse("jobs", 1)?;
+            args.reject_unknown()?;
+            let total = spec.run_count();
+            let name = spec.name.clone();
+            let report = Campaign::new(spec, &out_dir).jobs(jobs).run()?;
+            println!(
+                "campaign {name}: {} run(s) executed, {} skipped (resume), {total} total",
+                report.executed, report.skipped
+            );
+            println!(
+                "{:<12} {:>5} {:>10} {:>13} {:>11}",
+                "dispatcher", "runs", "completed", "avg slowdown", "avg wait s"
+            );
+            let mut by_dispatcher: BTreeMap<&str, Vec<&accasim::campaign::RunRecord>> =
+                BTreeMap::new();
+            for rec in &report.records {
+                by_dispatcher.entry(&rec.dispatcher).or_default().push(rec);
+            }
+            for (label, recs) in by_dispatcher {
+                let sd: Vec<f64> = recs.iter().map(|r| r.avg_slowdown()).collect();
+                let wt: Vec<f64> = recs.iter().map(|r| r.avg_wait()).collect();
+                let completed: u64 = recs.iter().map(|r| r.jobs_completed).sum();
+                println!(
+                    "{label:<12} {:>5} {completed:>10} {:>13.3} {:>11.1}",
+                    recs.len(),
+                    mean(&sd),
+                    mean(&wt)
+                );
+            }
+            println!("index: {}", report.index.display());
+            for p in &report.plots {
+                println!("plot: {}", p.display());
+            }
+        }
+        "status" => {
+            args.reject_unknown()?;
+            let name = spec.name.clone();
+            let st = Campaign::new(spec, &out_dir).status()?;
+            println!(
+                "campaign {name}: {}/{} run(s) done, {} pending",
+                st.done,
+                st.total,
+                st.pending.len()
+            );
+            for id in st.pending.iter().take(20) {
+                println!("pending: {id}");
+            }
+            if st.pending.len() > 20 {
+                println!("… and {} more", st.pending.len() - 20);
+            }
+        }
+        other => anyhow::bail!("unknown campaign action {other:?} (run|status)\n{USAGE}"),
     }
     Ok(())
 }

@@ -1,27 +1,39 @@
 //! The experimentation tool (§3, *tools*; Figure 5): configure a workload,
 //! a system and a set of dispatchers; run a simulation per dispatcher
 //! (optionally repeated); produce all comparative plot data automatically.
+//!
+//! Since the campaign engine landed, `Experiment` is a thin 1-workload ×
+//! 1-system [`Campaign`]: it keeps its historical API and plot contract
+//! (fig10–fig13 CSVs in [`Experiment::out_dir`]) while gaining the engine's
+//! properties for free — a persistent per-run results store under
+//! `out_dir/runs/`, resume on re-invocation, and repetitions that actually
+//! vary: each repetition gets its own seed, and trace-backed workloads
+//! ([`Experiment::from_trace`]) resample one workload *realization* per
+//! repetition. (SWF-file workloads are a fixed dataset, so their
+//! repetitions remain identical by construction.)
 
 use crate::addons::AdditionalData;
+use crate::campaign::{Campaign, CampaignReport, CampaignSpec, WorkloadSpec};
 use crate::config::SysConfig;
-use crate::dispatch::dispatcher_from_label;
-use crate::output::OutputCollector;
 use crate::plotdata::{PlotFactory, PlotKind};
-use crate::sim::{SimOptions, SimOutput, Simulator};
+use crate::sim::SimOutput;
+use crate::traces::TraceSpec;
 use std::path::{Path, PathBuf};
 
 /// Builds a fresh set of additional-data providers for one run. Addons are
 /// stateful (energy integrals, failure state), so every repetition gets its
-/// own instances.
-pub type AddonFactory = Box<dyn Fn() -> Vec<Box<dyn AdditionalData>>>;
+/// own instances. `Send + Sync` so the factory can be invoked from campaign
+/// worker threads.
+pub type AddonFactory = Box<dyn Fn() -> Vec<Box<dyn AdditionalData>> + Send + Sync>;
 
 /// An experiment over one workload × one system × many dispatchers.
 pub struct Experiment {
     name: String,
-    workload: PathBuf,
+    workload: WorkloadSpec,
     sys: SysConfig,
     dispatchers: Vec<String>,
-    /// Repetitions per dispatcher (the paper uses 10).
+    /// Repetitions per dispatcher (the paper uses 10). Repetition `i` runs
+    /// with seed `i`; trace workloads resample their realization per seed.
     pub repetitions: u32,
     /// Output directory (named after the experiment, as in AccaSim).
     pub out_dir: PathBuf,
@@ -40,9 +52,24 @@ pub struct ExperimentResults {
 impl Experiment {
     /// Mirror of `Experiment(name, workload, sys_cfg)`.
     pub fn new<P: AsRef<Path>>(name: &str, workload: P, sys: SysConfig) -> Self {
+        Self::with_workload(name, WorkloadSpec::Swf(workload.as_ref().to_path_buf()), sys)
+    }
+
+    /// An experiment over a trace synthesizer instead of a fixed SWF file:
+    /// every repetition observes a different realization of the trace (the
+    /// system configuration is the trace's own).
+    pub fn from_trace(name: &str, trace: &TraceSpec, scale: f64) -> Self {
+        Self::with_workload(
+            name,
+            WorkloadSpec::Trace { name: trace.name.to_string(), scale },
+            trace.sys_config(),
+        )
+    }
+
+    fn with_workload(name: &str, workload: WorkloadSpec, sys: SysConfig) -> Self {
         Experiment {
             name: name.to_string(),
-            workload: workload.as_ref().to_path_buf(),
+            workload,
             sys,
             dispatchers: Vec::new(),
             repetitions: 1,
@@ -54,7 +81,7 @@ impl Experiment {
     /// Attach additional-data providers to every run of the experiment.
     pub fn with_addons<F>(mut self, factory: F) -> Self
     where
-        F: Fn() -> Vec<Box<dyn AdditionalData>> + 'static,
+        F: Fn() -> Vec<Box<dyn AdditionalData>> + Send + Sync + 'static,
     {
         self.addon_factory = Some(Box::new(factory));
         self
@@ -80,28 +107,52 @@ impl Experiment {
         &self.dispatchers
     }
 
+    /// The experiment expressed as a campaign spec: one workload, one
+    /// system, the registered dispatchers, the baseline scenario, one seed
+    /// per repetition.
+    pub fn to_campaign_spec(&self) -> CampaignSpec {
+        let mut spec = CampaignSpec::new(&self.name);
+        spec.workloads.push(self.workload.clone());
+        spec.add_system("system", self.sys.clone());
+        spec.dispatchers = self.dispatchers.clone();
+        spec.seeds = (0..self.repetitions.max(1) as u64).collect();
+        spec
+    }
+
     /// Mirror of `run_simulation()`: simulate every dispatcher
     /// `repetitions` times and write all comparative plot CSVs.
     pub fn run_simulation(&self) -> anyhow::Result<ExperimentResults> {
-        anyhow::ensure!(!self.dispatchers.is_empty(), "experiment {} has no dispatchers", self.name);
-        std::fs::create_dir_all(&self.out_dir)?;
+        anyhow::ensure!(
+            !self.dispatchers.is_empty(),
+            "experiment {} has no dispatchers",
+            self.name
+        );
+        let campaign = Campaign::new(self.to_campaign_spec(), &self.out_dir);
+        let campaign = match &self.addon_factory {
+            Some(f) => campaign.with_addon_factory(&**f),
+            None => campaign,
+        };
+        let CampaignReport { records, outputs, .. } = campaign.run()?;
+
+        // Regroup the already-loaded runs per dispatcher in registration
+        // order; the matrix nests seeds inside dispatchers, so repetitions
+        // arrive consecutively.
+        let mut runs: Vec<(String, Vec<SimOutput>)> =
+            self.dispatchers.iter().map(|d| (d.clone(), Vec::new())).collect();
+        for (rec, out) in records.iter().zip(outputs) {
+            let slot = runs
+                .iter_mut()
+                .find(|(label, _)| *label == rec.dispatcher)
+                .expect("stored run matches a registered dispatcher");
+            slot.1.push(out);
+        }
+
+        // The historical plot contract: all four figure CSVs at the root of
+        // out_dir (the campaign additionally keeps its deterministic
+        // aggregates under plots/).
         let mut factory = PlotFactory::new();
-        let mut runs = Vec::new();
-        for label in &self.dispatchers {
-            let mut outs = Vec::new();
-            for _rep in 0..self.repetitions.max(1) {
-                let dispatcher = dispatcher_from_label(label)?;
-                let opts = SimOptions {
-                    output: OutputCollector::in_memory(true, true),
-                    addons: self.addon_factory.as_ref().map(|f| f()).unwrap_or_default(),
-                    ..Default::default()
-                };
-                let mut sim =
-                    Simulator::new(&self.workload, self.sys.clone(), dispatcher, opts)?;
-                outs.push(sim.run()?);
-            }
+        for (label, outs) in &runs {
             factory.add_run(label.clone(), outs.clone());
-            runs.push((label.clone(), outs));
         }
         let mut plots = Vec::new();
         for (kind, file) in [
@@ -166,6 +217,8 @@ mod tests {
             assert!(p.exists());
             assert!(std::fs::read_to_string(p).unwrap().lines().count() >= 3);
         }
+        // the campaign store persists every run for later re-analysis
+        assert!(e.out_dir.join("index.json").exists());
     }
 
     #[test]
@@ -187,5 +240,51 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn swf_repetitions_are_identical_by_construction() {
+        // A fixed SWF file is the same dataset every repetition; the seeds
+        // differ but must not perturb a deterministic simulation.
+        let dir = tempfile::tempdir().unwrap();
+        let swf = dir.path().join("w.swf");
+        SETH.synthesize(&swf, 0.0005, 3).unwrap();
+        let mut e = Experiment::new("fixed", &swf, SETH.sys_config());
+        e.out_dir = dir.path().join("out");
+        e.add_dispatcher("FIFO-FF");
+        e.repetitions = 2;
+        let res = e.run_simulation().unwrap();
+        let outs = &res.runs[0].1;
+        assert_eq!(outs[0].jobs, outs[1].jobs);
+        assert_ne!(outs[0].seed, outs[1].seed, "each repetition still gets its own seed");
+    }
+
+    #[test]
+    fn trace_repetitions_vary_and_same_seeds_match() {
+        // Regression for "repetitions measure nothing": with a trace-backed
+        // workload each repetition samples its own realization, so two reps
+        // differ — while re-running the experiment (same seeds) reproduces
+        // the first result exactly.
+        let dir = tempfile::tempdir().unwrap();
+        let mut e = Experiment::from_trace("reps", &SETH, 0.0005);
+        e.out_dir = dir.path().join("out");
+        e.add_dispatcher("FIFO-FF");
+        e.repetitions = 2;
+        let res = e.run_simulation().unwrap();
+        let outs = &res.runs[0].1;
+        assert_eq!(outs.len(), 2);
+        assert_ne!(
+            outs[0].jobs, outs[1].jobs,
+            "repetitions with different seeds must observe different realizations"
+        );
+
+        // same seeds, fresh output directory → byte-equal records
+        let mut e2 = Experiment::from_trace("reps", &SETH, 0.0005);
+        e2.out_dir = dir.path().join("out2");
+        e2.add_dispatcher("FIFO-FF");
+        e2.repetitions = 2;
+        let res2 = e2.run_simulation().unwrap();
+        assert_eq!(res.runs[0].1[0].jobs, res2.runs[0].1[0].jobs);
+        assert_eq!(res.runs[0].1[1].jobs, res2.runs[0].1[1].jobs);
     }
 }

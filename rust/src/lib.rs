@@ -23,6 +23,9 @@
 //! * [`plotdata`] — the results-visualization tool: emits the data series behind
 //!   every figure in the paper (Figs 10–17).
 //! * [`experiment`] — the experimentation tool (dispatcher cross-products).
+//! * [`campaign`] — the campaign engine: declarative scenario matrices
+//!   (workloads × systems × dispatchers × scenarios × seeds) run in
+//!   parallel with a persistent, resumable results store.
 //! * [`generator`] — the synthetic workload generator (§7.3).
 //! * [`traces`] — deterministic synthesizers for Seth/RICC/MetaCentrum-like
 //!   traces (substitute for the online SWF archives; see DESIGN.md).
@@ -46,6 +49,7 @@
 pub mod addons;
 pub mod baselines;
 pub mod benchkit;
+pub mod campaign;
 pub mod config;
 pub mod dispatch;
 pub mod experiment;
@@ -69,6 +73,7 @@ pub mod workload;
 /// Convenience re-exports covering the public API surface used by examples.
 pub mod prelude {
     pub use crate::addons::{AdditionalData, PowerModel};
+    pub use crate::campaign::{Campaign, CampaignSpec, ScenarioSpec};
     pub use crate::config::SysConfig;
     pub use crate::dispatch::{
         BestFit, ConservativeBackfilling, Dispatcher, EasyBackfilling, FifoScheduler,

@@ -173,6 +173,30 @@ pub fn read_job_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<JobRecord>> {
     Ok(out)
 }
 
+/// Parse a perf-record CSV produced by [`OutputCollector`] (counterpart of
+/// [`read_job_csv`]; the campaign store reloads saved runs through both).
+pub fn read_perf_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<PerfRecord>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(f.len() == 7, "bad perf csv line {}", i + 1);
+        out.push(PerfRecord {
+            t: f[0].parse()?,
+            dispatch_ns: f[1].parse()?,
+            other_ns: f[2].parse()?,
+            queue_len: f[3].parse()?,
+            running: f[4].parse()?,
+            started: f[5].parse()?,
+            rss_kb: f[6].parse()?,
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +262,47 @@ mod tests {
         };
         assert_eq!(r.to_csv(), "100,5000,300,7,3,2,18000");
         assert_eq!(PerfRecord::CSV_HEADER.split(',').count(), r.to_csv().split(',').count());
+    }
+
+    #[test]
+    fn perf_csv_roundtrip() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("perf.csv");
+        let recs = [
+            PerfRecord {
+                t: 10,
+                dispatch_ns: 5000,
+                other_ns: 300,
+                queue_len: 7,
+                running: 3,
+                started: 2,
+                rss_kb: 18000,
+            },
+            PerfRecord {
+                t: 20,
+                dispatch_ns: 1,
+                other_ns: 2,
+                queue_len: 0,
+                running: 0,
+                started: 0,
+                rss_kb: 0,
+            },
+        ];
+        let mut c = OutputCollector::null().with_perf_file(&p).unwrap();
+        for r in recs {
+            c.record_perf(r);
+        }
+        c.finish().unwrap();
+        let back = read_perf_csv(&p).unwrap();
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn read_perf_csv_rejects_malformed() {
+        let dir = tempfile::tempdir().unwrap();
+        let p = dir.path().join("bad.csv");
+        std::fs::write(&p, format!("{}\n1,2,3\n", PerfRecord::CSV_HEADER)).unwrap();
+        assert!(read_perf_csv(&p).is_err());
     }
 
     #[test]

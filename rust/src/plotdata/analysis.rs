@@ -61,22 +61,23 @@ pub fn utilization_timeline(records: &[JobRecord]) -> Vec<(u64, u64)> {
 }
 
 /// Average busy slots weighted by interval length (the area under
-/// [`utilization_timeline`] divided by the horizon).
+/// [`utilization_timeline`] divided by the horizon). An empty or degenerate
+/// timeline (no records, or a single instant) yields 0 rather than
+/// panicking — empty runs are legal campaign results.
 pub fn avg_utilization_slots(records: &[JobRecord]) -> f64 {
     let tl = utilization_timeline(records);
-    if tl.len() < 2 {
+    let (Some(first), Some(last)) = (tl.first(), tl.last()) else {
+        return 0.0;
+    };
+    let span = last.0 - first.0;
+    if span == 0 {
         return 0.0;
     }
     let mut area = 0u128;
     for w in tl.windows(2) {
         area += (w[1].0 - w[0].0) as u128 * w[0].1 as u128;
     }
-    let span = tl.last().unwrap().0 - tl[0].0;
-    if span == 0 {
-        0.0
-    } else {
-        area as f64 / span as f64
-    }
+    area as f64 / span as f64
 }
 
 /// Weekly submission profile: 7×24 normalized weights (Fig 14's structure,
@@ -215,5 +216,30 @@ mod tests {
         let s = summary_line(&recs);
         assert!(s.contains("1 jobs"));
         assert!(s.contains("slowdown"));
+    }
+
+    #[test]
+    fn empty_run_yields_empty_zero_series_everywhere() {
+        // A campaign cell can legitimately complete zero jobs (e.g. a
+        // rejecting dispatcher); every analysis must degrade gracefully.
+        let none: Vec<JobRecord> = Vec::new();
+        assert!(utilization_timeline(&none).is_empty());
+        assert_eq!(avg_utilization_slots(&none), 0.0);
+        assert!(per_user(&none, |_| 0).is_empty());
+        for (_, stats) in wait_by_size(&none) {
+            assert_eq!(stats.n, 0);
+        }
+        let profile = weekly_profile(&[]);
+        assert!(profile.iter().flatten().all(|&w| w == 0.0));
+        let s = summary_line(&none);
+        assert!(s.contains("0 jobs"), "{s}");
+    }
+
+    #[test]
+    fn single_instant_timeline_is_zero_not_panic() {
+        // One zero-duration job: the timeline collapses to a single instant
+        // (start == end merge into one delta), span 0.
+        let recs = vec![rec(1, 5, 5, 2, 0)];
+        assert_eq!(avg_utilization_slots(&recs), 0.0);
     }
 }

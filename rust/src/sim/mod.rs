@@ -56,6 +56,14 @@ pub struct SimOptions {
     pub factory: FactoryConfig,
     /// Additional-data providers (power, failures, …).
     pub addons: Vec<Box<dyn AdditionalData>>,
+    /// Per-run seed. The discrete-event core itself is deterministic; the
+    /// seed identifies the run (recorded in [`SimOutput::seed`]) and is
+    /// published to dispatchers/addons as `extra["run.seed"]` so
+    /// seed-sensitive components (randomized tie-breaks, stochastic addons)
+    /// can key off it. Campaign repetitions derive one seed per run — trace
+    /// workload *realizations* are resampled from the repetition seed, which
+    /// is what makes repetitions measure something (see campaign::matrix).
+    pub seed: u64,
     /// Where records go.
     pub output: OutputCollector,
     /// Measure per-time-point wall time (Figs 12–13). Costs ~4 clock reads
@@ -71,6 +79,7 @@ impl Default for SimOptions {
             reject_unrunnable: true,
             factory: FactoryConfig::default(),
             addons: Vec::new(),
+            seed: 0,
             output: OutputCollector::in_memory(true, true),
             time_dispatch: true,
         }
@@ -82,6 +91,8 @@ impl Default for SimOptions {
 pub struct SimOutput {
     /// `SCHED-ALLOC` label of the dispatcher used.
     pub dispatcher: String,
+    /// Seed this run was configured with ([`SimOptions::seed`]).
+    pub seed: u64,
     pub jobs_completed: u64,
     pub jobs_rejected: u64,
     /// Malformed workload lines skipped by the reader.
@@ -310,7 +321,15 @@ impl Simulator {
     pub fn run(&mut self) -> anyhow::Result<SimOutput> {
         let wall0 = Instant::now();
         let cpu0 = process_cpu_ms();
-        let mut out = SimOutput { dispatcher: self.dispatcher.label(), ..Default::default() };
+        let mut out = SimOutput {
+            dispatcher: self.dispatcher.label(),
+            seed: self.opts.seed,
+            ..Default::default()
+        };
+        // Expose the run seed to dispatchers and addons alongside their
+        // published metrics (f64: informational, the manifest keeps the
+        // exact 64-bit value).
+        self.extra.insert("run.seed".to_string(), self.opts.seed as f64);
         let mut mem = MemProbe::new();
         let mut first_submit: Option<u64> = None;
         let mut last_point: Option<u64> = None;
@@ -842,6 +861,16 @@ mod tests {
         let r2 = out.jobs.iter().find(|r| r.id == 2).unwrap();
         assert_eq!(r2.start, 30, "job 2 must wait out the deferred failure");
         assert_eq!(r2.end, 40);
+    }
+
+    #[test]
+    fn seed_recorded_and_published() {
+        let jobs = vec![job(1, 0, 10, 1)];
+        let opts = SimOptions { seed: 42, ..Default::default() };
+        let mut sim = Simulator::from_jobs(jobs, sys(1, 1), fifo_ff(), opts);
+        let out = sim.run().unwrap();
+        assert_eq!(out.seed, 42);
+        assert_eq!(out.final_extra["run.seed"], 42.0);
     }
 
     #[test]

@@ -8,7 +8,10 @@ use crate::config::SysConfig;
 use crate::workload::{FactoryConfig, Job, JobFactory, Reader, SwfReader};
 
 /// Abstract job source consumed by the simulator in submission order.
-pub trait JobSource {
+///
+/// `Send` so a boxed source (and with it a whole `Simulator`) can be built
+/// and driven inside campaign worker threads.
+pub trait JobSource: Send {
     /// Next job, `None` at end of workload.
     fn next_job(&mut self) -> Option<Job>;
     /// Malformed records skipped so far (SWF preprocessing).

@@ -214,6 +214,31 @@ impl TraceSpec {
     }
 }
 
+impl TraceSpec {
+    /// Synthesize (idempotently) the seed-tagged *realization*
+    /// `<name>-x<scale bits>-seed<seed>.swf` of this trace into `dir` and
+    /// return its path. Distinct seeds yield distinct realizations of the
+    /// same statistical workload — the campaign engine keys realizations on
+    /// the repetition seed so repetitions actually vary while every
+    /// dispatcher within a repetition sees identical input. The scale is
+    /// encoded as its exact f64 bit pattern: two scales that merely *round*
+    /// to the same value must never share a cached realization file.
+    pub fn realization<P: AsRef<Path>>(
+        &self,
+        dir: P,
+        scale: f64,
+        seed: u64,
+    ) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let file = format!("{}-x{:016x}-seed{}.swf", self.name, scale.to_bits(), seed);
+        let path = dir.as_ref().join(file);
+        if !path.exists() {
+            self.synthesize(&path, scale, seed)?;
+        }
+        Ok(path)
+    }
+}
+
 /// Synthesize a trace and its config into a directory (idempotent: skips
 /// files that already exist). Returns `(swf path, config path)`.
 pub fn materialize<P: AsRef<Path>>(
@@ -326,6 +351,22 @@ mod tests {
         assert_eq!(swf1, swf2);
         assert_eq!(std::fs::metadata(&swf2).unwrap().modified().unwrap(), mtime);
         assert!(cfg1.exists());
+    }
+
+    #[test]
+    fn realizations_keyed_by_seed() {
+        let dir = tempfile::tempdir().unwrap();
+        let a = SETH.realization(dir.path(), 0.0005, 1).unwrap();
+        let b = SETH.realization(dir.path(), 0.0005, 2).unwrap();
+        let a2 = SETH.realization(dir.path(), 0.0005, 1).unwrap();
+        assert_eq!(a, a2, "same seed resolves to the same file");
+        assert_ne!(a, b);
+        let read = |p: &std::path::PathBuf| std::fs::read_to_string(p).unwrap();
+        assert_ne!(read(&a), read(&b), "different seeds differ");
+        // idempotent: the second call must not rewrite
+        let mtime = std::fs::metadata(&a).unwrap().modified().unwrap();
+        SETH.realization(dir.path(), 0.0005, 1).unwrap();
+        assert_eq!(std::fs::metadata(&a).unwrap().modified().unwrap(), mtime);
     }
 
     #[test]

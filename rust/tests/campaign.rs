@@ -1,0 +1,129 @@
+//! Campaign-engine determinism and resume contracts (ISSUE 2 acceptance):
+//! a campaign of ≥ 2 workloads × 2 dispatchers × 2 seeds run with 4 worker
+//! threads yields byte-identical `index.json` and plot CSVs to the serial
+//! run, and re-invoking a finished campaign skips every run.
+
+use accasim::campaign::{run_dir, Campaign, CampaignSpec, PowerSpec, ScenarioSpec};
+use accasim::testutil as tempfile;
+use std::path::Path;
+
+/// ≥ 2 workloads (a trace synthesizer + a fixed SWF) × 1 system ×
+/// 2 dispatchers × 2 scenarios × 2 seeds = 16 runs.
+fn acceptance_spec(swf: &Path) -> CampaignSpec {
+    let mut spec = CampaignSpec::new("acceptance");
+    spec.add_trace("seth", 0.0005)
+        .add_swf(swf)
+        .add_system_trace("seth")
+        .add_dispatcher("FIFO-FF")
+        .add_dispatcher("SJF-FF")
+        .add_scenario(ScenarioSpec {
+            name: "power".to_string(),
+            power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 3600 }),
+            // node 0 down for ~3h early in the (scaled) Seth span, so the
+            // scenario actually perturbs scheduling in those runs
+            failures: vec![(0, 1_025_830_000, 1_025_840_000)],
+        });
+    spec.seeds = vec![1, 2];
+    spec
+}
+
+fn read(p: &Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+#[test]
+fn parallel_run_is_byte_identical_to_serial_and_resumes() {
+    let tmp = tempfile::tempdir().unwrap();
+    let swf = tmp.path().join("fixed.swf");
+    accasim::traces::RICC.synthesize(&swf, 0.0002, 7).unwrap(); // ~90 jobs
+
+    let serial_out = tmp.path().join("serial");
+    let parallel_out = tmp.path().join("parallel");
+    let serial =
+        Campaign::new(acceptance_spec(&swf), &serial_out).jobs(1).run().unwrap();
+    let parallel =
+        Campaign::new(acceptance_spec(&swf), &parallel_out).jobs(4).run().unwrap();
+    assert_eq!(serial.records.len(), 16);
+    assert_eq!(serial.executed, 16);
+    assert_eq!(parallel.executed, 16);
+
+    // campaign-level artifacts: byte-identical
+    assert_eq!(
+        read(&serial.index),
+        read(&parallel.index),
+        "index.json must not depend on worker count"
+    );
+    for file in ["plots/fig10_slowdown.csv", "plots/fig11_queue.csv", "summary.csv"] {
+        assert_eq!(
+            read(&serial_out.join(file)),
+            read(&parallel_out.join(file)),
+            "{file} must not depend on worker count"
+        );
+    }
+    // per-run decision records: byte-identical too
+    for rec in &serial.records {
+        assert_eq!(
+            read(&run_dir(&serial_out, &rec.run_id).join("jobs.csv")),
+            read(&run_dir(&parallel_out, &rec.run_id).join("jobs.csv")),
+            "{}: jobs.csv must not depend on worker count",
+            rec.run_id
+        );
+    }
+
+    // re-invoking the finished campaign skips every run and leaves the
+    // artifacts unchanged
+    let before = read(&parallel.index);
+    let again =
+        Campaign::new(acceptance_spec(&swf), &parallel_out).jobs(4).run().unwrap();
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.skipped, 16);
+    assert_eq!(read(&again.index), before);
+}
+
+#[test]
+fn partial_store_resumes_only_missing_runs() {
+    let tmp = tempfile::tempdir().unwrap();
+    let mut spec = CampaignSpec::new("partial");
+    spec.add_trace("seth", 0.0005)
+        .add_system_trace("seth")
+        .add_dispatcher("FIFO-FF")
+        .add_dispatcher("SJF-FF");
+    spec.seeds = vec![1, 2];
+    let out = tmp.path().join("out");
+    let first = Campaign::new(spec.clone(), &out).jobs(2).run().unwrap();
+    assert_eq!(first.executed, 4);
+    let index_before = read(&first.index);
+
+    // deleting one manifest (simulating a crash mid-run) re-runs only it
+    let victim = &first.records[2];
+    std::fs::remove_file(run_dir(&out, &victim.run_id).join("run.json")).unwrap();
+    let resumed = Campaign::new(spec, &out).jobs(2).run().unwrap();
+    assert_eq!(resumed.executed, 1);
+    assert_eq!(resumed.skipped, 3);
+    assert_eq!(read(&resumed.index), index_before, "re-run reproduces the same results");
+}
+
+#[test]
+fn scenarios_shape_results() {
+    // A failure window covering the workload's early hours must change
+    // scheduling relative to baseline, and the power scenario must publish
+    // energy into the manifests.
+    let tmp = tempfile::tempdir().unwrap();
+    let mut spec = CampaignSpec::new("scenarios");
+    spec.add_trace("seth", 0.0005).add_system_trace("seth").add_dispatcher("FIFO-FF");
+    spec.add_scenario(ScenarioSpec {
+        name: "power".to_string(),
+        power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 3600 }),
+        failures: Vec::new(),
+    });
+    spec.seeds = vec![1];
+    let report = Campaign::new(spec, tmp.path().join("out")).run().unwrap();
+    assert_eq!(report.records.len(), 2);
+    let baseline = &report.records[0];
+    let power = &report.records[1];
+    assert_eq!(baseline.scenario, "baseline");
+    assert!(!baseline.extra.contains_key("power.energy_kj"));
+    assert!(power.extra.get("power.energy_kj").copied().unwrap_or(0.0) > 0.0);
+    // the addon is observation-only: decisions stay identical
+    assert_eq!(baseline.slowdown_sum, power.slowdown_sum);
+}

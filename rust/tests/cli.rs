@@ -162,6 +162,53 @@ fn experiment_runs_cross_product() {
 }
 
 #[test]
+fn campaign_run_executes_resumes_and_reports_status() {
+    let dir = tempfile::tempdir().unwrap();
+    let spec = dir.path().join("study.json");
+    std::fs::write(
+        &spec,
+        r#"{
+            "name": "clicamp",
+            "workloads": [{"trace": "seth", "scale": 0.0005}],
+            "systems": [{"trace": "seth"}],
+            "dispatchers": ["FIFO-FF", "SJF-FF"],
+            "seeds": [1, 2]
+        }"#,
+    )
+    .unwrap();
+    let out_dir = dir.path().join("camp");
+    let run = |args: &[&str]| {
+        let out = bin().args(args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let base = ["campaign", "run", spec.to_str().unwrap(), "--out", out_dir.to_str().unwrap()];
+    let first = run(&[&base[..], &["--jobs", "2"][..]].concat());
+    assert!(first.contains("4 run(s) executed, 0 skipped"), "{first}");
+    assert!(first.contains("FIFO-FF") && first.contains("SJF-FF"), "{first}");
+    assert!(out_dir.join("index.json").exists());
+    assert!(out_dir.join("plots/fig10_slowdown.csv").exists());
+    assert!(out_dir.join("summary.csv").exists());
+    // resume: nothing left to execute
+    let second = run(&base);
+    assert!(second.contains("0 run(s) executed, 4 skipped"), "{second}");
+    let status = run(&["campaign", "status", spec.to_str().unwrap(), "--out",
+        out_dir.to_str().unwrap()]);
+    assert!(status.contains("4/4"), "{status}");
+}
+
+#[test]
+fn campaign_rejects_bad_spec() {
+    let dir = tempfile::tempdir().unwrap();
+    let spec = dir.path().join("bad.json");
+    std::fs::write(&spec, r#"{"name": "x", "workloads": [], "systems": [],
+        "dispatchers": []}"#).unwrap();
+    let out = bin().args(["campaign", "run", spec.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("workloads"));
+}
+
+#[test]
 fn generate_produces_valid_swf() {
     let (dir, swf, cfg) = fixtures();
     let gen = dir.path().join("gen.swf");
