@@ -1,0 +1,72 @@
+//! Campaign-comparator cost: pairing + bootstrap over synthetic stores of
+//! growing size (cells × dispatchers × seeds) and resample counts. The
+//! comparator runs after every campaign and inside CI, so its cost on a
+//! realistic store (~hundreds of runs) should stay well under a second.
+//!
+//! `cargo bench --bench campaign_compare`
+
+use accasim::benchkit::Bencher;
+use accasim::campaign::{CompareOptions, Comparison, RunRecord};
+use accasim::rng::Pcg64;
+
+/// A synthetic store: `cells × dispatchers × seeds` manifests with noisy
+/// per-dispatcher metric offsets (deterministic via [`Pcg64`]).
+fn synthetic_records(cells: usize, dispatchers: usize, seeds: u64) -> Vec<RunRecord> {
+    let mut rng = Pcg64::new(42);
+    let mut records = Vec::new();
+    for c in 0..cells {
+        for d in 0..dispatchers {
+            for seed in 0..seeds {
+                records.push(RunRecord {
+                    workload: format!("w{c}"),
+                    system: "sys".to_string(),
+                    scenario: "baseline".to_string(),
+                    dispatcher: format!("D{d:02}-FF"),
+                    seed,
+                    jobs_completed: 100,
+                    slowdown_sum: 100.0 * (2.0 + d as f64 * 0.1 + rng.f64()),
+                    wait_sum: (1000.0 * (1.0 + rng.f64())) as u64,
+                    makespan: 10_000 + rng.range_u64(0, 500),
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    records
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new("campaign_compare");
+    for (cells, dispatchers, seeds) in [(1usize, 4usize, 10u64), (4, 8, 10), (8, 8, 30)] {
+        let records = synthetic_records(cells, dispatchers, seeds);
+        b.bench(&format!("pair_c{cells}_d{dispatchers}_s{seeds}"), || {
+            let cmp = Comparison::from_records(
+                "bench",
+                7,
+                &records,
+                CompareOptions { resamples: 2000, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(cmp.overall.len(), dispatchers);
+            cmp.deltas.len()
+        });
+    }
+    // resample scaling on a fixed store
+    let records = synthetic_records(4, 4, 20);
+    for resamples in [200usize, 2000, 20_000] {
+        b.bench(&format!("bootstrap_r{resamples}"), || {
+            Comparison::from_records(
+                "bench",
+                7,
+                &records,
+                CompareOptions { resamples, ..Default::default() },
+            )
+            .unwrap()
+            .deltas
+            .len()
+        });
+    }
+    let csv = b.write_csv()?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

@@ -5,12 +5,16 @@
 //! 2. execute it on a worker pool (`--jobs N`; parallel and serial runs
 //!    produce byte-identical campaign artifacts),
 //! 3. print the cross-scenario comparison; re-running the example resumes
-//!    from the results store and executes nothing.
+//!    from the results store and executes nothing,
+//! 4. run the campaign comparator: paired per-seed deltas vs the FIFO
+//!    baseline with bootstrap confidence intervals, written into
+//!    `<out>/comparisons/` (also available as
+//!    `accasim campaign compare <out>/campaign.json --out <out>`).
 //!
 //! Run: `cargo run --release --example campaign_study -- [--scale 0.001]
 //!       [--jobs 4] [--out results/campaign_study]`
 
-use accasim::campaign::{Campaign, CampaignSpec, PowerSpec, ScenarioSpec};
+use accasim::campaign::{Campaign, CampaignSpec, CompareOptions, PowerSpec, ScenarioSpec};
 use accasim::stats::mean;
 use accasim::util::args::Args;
 use std::collections::BTreeMap;
@@ -82,6 +86,23 @@ fn main() -> anyhow::Result<()> {
             if kj.is_empty() { 0.0 } else { mean(&kj) }
         );
     }
+    // 4. paired per-seed statistics: which dispatcher actually wins, and is
+    //    the difference more than seed noise?
+    let cmp = report.compare(CompareOptions {
+        baseline: Some("FIFO-FF".to_string()),
+        ..Default::default()
+    })?;
+    println!("\noverall ranking vs baseline {} (1 = best):", cmp.baseline);
+    for (i, (dispatcher, rank)) in cmp.overall.iter().enumerate() {
+        println!("  {}. {dispatcher:<10} mean rank {rank:.3}", i + 1);
+    }
+    for w in &cmp.warnings {
+        println!("warning: {w}");
+    }
+    for p in cmp.write(&out_dir)? {
+        println!("comparison: {}", p.display());
+    }
+
     println!("\nindex: {}", report.index.display());
     for p in &report.plots {
         println!("plot: {}", p.display());

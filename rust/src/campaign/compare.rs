@@ -1,0 +1,936 @@
+//! The campaign comparator: paired per-seed dispatcher statistics on top of
+//! the results store (DESIGN.md §Comparisons).
+//!
+//! A finished campaign is a matrix of runs; *comparing* dispatchers means
+//! more than eyeballing `summary.csv`. For every (workload × system ×
+//! scenario) cell this module pairs runs **by repetition seed** across
+//! dispatchers — the seed fixed the workload realization, so within a seed
+//! the dispatchers saw identical inputs and their metric difference is pure
+//! dispatching effect — and produces, per metric:
+//!
+//! * the per-seed paired deltas and their mean,
+//! * a percentile-bootstrap confidence interval of the mean delta
+//!   ([`crate::stats::bootstrap_mean_ci`], seeded from the spec hash via
+//!   the same SplitMix64 plumbing as the run seeds — never from wall
+//!   clock, so reports are byte-identical across re-invocations),
+//! * win/loss/tie counts and a Wilcoxon signed-rank p-value,
+//! * a per-cell rank table (average rank across seeds, ties averaged) and
+//!   an overall ranking across all cells.
+//!
+//! Runs missing on one side of a pair (a crashed repetition, a metric only
+//! some scenarios produce) drop that seed from the pair set and are counted
+//! as warnings in the report — never a panic. Everything is computed from
+//! the store (`index.json`), so a comparison can be (re)run long after the
+//! campaign, without the original workload inputs.
+
+use super::matrix::mix64;
+use super::store::{self, RunRecord};
+use crate::stats::{bootstrap_mean_ci, mean, wilcoxon_signed_rank, win_loss_tie, BoxStats, Ci};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+/// A per-run scalar metric the comparator can pair across dispatchers.
+/// All metrics are **lower-is-better**, so a negative paired delta
+/// (candidate − baseline) means the candidate dispatcher improved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Metric {
+    /// Mean job slowdown.
+    Slowdown,
+    /// Mean job waiting time (seconds).
+    Wait,
+    /// Makespan (seconds).
+    Makespan,
+    /// Total energy (kJ) published by the power addon; only present in
+    /// runs whose scenario attached a power model.
+    Energy,
+}
+
+impl Metric {
+    /// Every metric, in report order.
+    pub fn all() -> &'static [Metric] {
+        &[Metric::Slowdown, Metric::Wait, Metric::Makespan, Metric::Energy]
+    }
+
+    /// Stable key used in CSV/CLI (`slowdown`, `wait`, `makespan`,
+    /// `energy`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Metric::Slowdown => "slowdown",
+            Metric::Wait => "wait",
+            Metric::Makespan => "makespan",
+            Metric::Energy => "energy",
+        }
+    }
+
+    /// Parse a metric key (the inverse of [`Metric::key`]).
+    pub fn parse(s: &str) -> anyhow::Result<Metric> {
+        Metric::all()
+            .iter()
+            .copied()
+            .find(|m| m.key() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown metric {s:?} (slowdown|wait|makespan|energy)"))
+    }
+
+    /// Extract the metric from a stored run; `None` when the run did not
+    /// produce it — energy without the power addon, or any job metric of a
+    /// run that completed zero jobs (a bulk-rejected run reports
+    /// slowdown/wait/makespan 0, which would otherwise *win* every
+    /// lower-is-better comparison; it must drop from the pair set as
+    /// missing data instead).
+    pub fn extract(&self, rec: &RunRecord) -> Option<f64> {
+        match self {
+            Metric::Energy => return rec.extra.get("power.energy_kj").copied(),
+            Metric::Slowdown | Metric::Wait | Metric::Makespan => {}
+        }
+        if rec.jobs_completed == 0 {
+            return None;
+        }
+        match self {
+            Metric::Slowdown => Some(rec.avg_slowdown()),
+            Metric::Wait => Some(rec.avg_wait()),
+            Metric::Makespan => Some(rec.makespan as f64),
+            Metric::Energy => unreachable!("handled above"),
+        }
+    }
+}
+
+/// Options of a comparison run.
+#[derive(Debug, Clone)]
+pub struct CompareOptions {
+    /// Baseline dispatcher label; `None` selects the lexicographically
+    /// first dispatcher in the store (stable no matter how run manifests
+    /// are ordered on disk).
+    pub baseline: Option<String>,
+    /// Metrics to pair, in report order.
+    pub metrics: Vec<Metric>,
+    /// Bootstrap resamples per confidence interval.
+    pub resamples: usize,
+    /// Two-sided interval level (`0.05` → 95 % CI).
+    pub alpha: f64,
+}
+
+impl Default for CompareOptions {
+    fn default() -> Self {
+        CompareOptions {
+            baseline: None,
+            metrics: Metric::all().to_vec(),
+            resamples: 2000,
+            alpha: 0.05,
+        }
+    }
+}
+
+/// One paired baseline-vs-candidate comparison inside a cell.
+#[derive(Debug, Clone)]
+pub struct PairedDelta {
+    /// Workload axis label of the cell.
+    pub workload: String,
+    /// System axis label of the cell.
+    pub system: String,
+    /// Scenario name of the cell.
+    pub scenario: String,
+    /// Metric being paired.
+    pub metric: Metric,
+    /// Candidate dispatcher label.
+    pub dispatcher: String,
+    /// Baseline dispatcher label.
+    pub baseline: String,
+    /// Repetition seeds both sides produced the metric for, ascending.
+    pub seeds: Vec<u64>,
+    /// Per-seed deltas `candidate − baseline`, in [`PairedDelta::seeds`]
+    /// order (negative = candidate better; all metrics are lower-is-better).
+    pub deltas: Vec<f64>,
+    /// Mean of the baseline's metric over the paired seeds.
+    pub mean_baseline: f64,
+    /// Mean of the candidate's metric over the paired seeds.
+    pub mean_dispatcher: f64,
+    /// Mean paired delta.
+    pub mean_delta: f64,
+    /// Bootstrap confidence interval of the mean delta.
+    pub ci: Ci,
+    /// Seeds where the candidate was strictly better (delta < 0).
+    pub wins: usize,
+    /// Seeds where the candidate was strictly worse.
+    pub losses: usize,
+    /// Seeds with identical metric values.
+    pub ties: usize,
+    /// Two-sided Wilcoxon signed-rank p-value of the deltas.
+    pub p_wilcoxon: f64,
+}
+
+impl PairedDelta {
+    /// Cell-qualified series label,
+    /// `workload:system:scenario:metric:candidate-vs-baseline` — unique
+    /// within a comparison (used by `delta_dist.csv` and
+    /// [`Comparison::delta_boxes`]).
+    pub fn label(&self) -> String {
+        format!(
+            "{}:{}:{}:{}:{}-vs-{}",
+            self.workload,
+            self.system,
+            self.scenario,
+            self.metric.key(),
+            self.dispatcher,
+            self.baseline
+        )
+    }
+}
+
+/// One dispatcher's average rank inside a (cell × metric) table.
+#[derive(Debug, Clone)]
+pub struct CellRank {
+    /// Workload axis label of the cell.
+    pub workload: String,
+    /// System axis label of the cell.
+    pub system: String,
+    /// Scenario name of the cell.
+    pub scenario: String,
+    /// Metric the ranking is over.
+    pub metric: Metric,
+    /// Dispatcher label.
+    pub dispatcher: String,
+    /// Average rank across seeds (1 = best; ties averaged).
+    pub mean_rank: f64,
+    /// Seeds the dispatcher was ranked in.
+    pub n_seeds: usize,
+}
+
+/// A finished comparison: everything `campaign compare` writes, as data.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    /// Campaign name from the store.
+    pub campaign: String,
+    /// Spec hash the stored runs were derived from (also the bootstrap
+    /// seed root).
+    pub spec_hash: u64,
+    /// Resolved baseline dispatcher label.
+    pub baseline: String,
+    /// Options the comparison ran with.
+    pub options: CompareOptions,
+    /// Paired deltas, ordered by (cell, metric, dispatcher).
+    pub deltas: Vec<PairedDelta>,
+    /// Per-cell rank tables, ordered by (cell, metric, dispatcher).
+    pub ranks: Vec<CellRank>,
+    /// Overall ranking: `(dispatcher, mean of per-cell mean ranks)`,
+    /// best first.
+    pub overall: Vec<(String, f64)>,
+    /// Pairing warnings (missing repetitions, partially-present metrics).
+    pub warnings: Vec<String>,
+}
+
+/// Cell key: one (workload, system, scenario) coordinate of the matrix.
+type CellKey = (String, String, String);
+
+/// Records of one cell, grouped dispatcher → seed → record.
+type CellRuns<'a> = BTreeMap<&'a str, BTreeMap<u64, &'a RunRecord>>;
+
+impl Comparison {
+    /// Compare stored run manifests. `campaign`/`spec_hash` identify the
+    /// store (see [`store::load_index`]); `records` may arrive in any
+    /// order — pairing is by repetition seed, never by position.
+    ///
+    /// Errors when fewer than two dispatchers are present (nothing to
+    /// pair) or when `options.baseline` names an unknown dispatcher.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use accasim::campaign::{Comparison, CompareOptions, RunRecord};
+    ///
+    /// // two dispatchers × two repetition seeds of one cell
+    /// let run = |dispatcher: &str, seed: u64, slowdown_sum: f64| RunRecord {
+    ///     workload: "w".into(), system: "s".into(), scenario: "baseline".into(),
+    ///     dispatcher: dispatcher.into(), seed, jobs_completed: 10,
+    ///     slowdown_sum, ..Default::default()
+    /// };
+    /// let records = vec![
+    ///     run("FIFO-FF", 1, 30.0), run("FIFO-FF", 2, 40.0),
+    ///     run("SJF-FF", 1, 20.0), run("SJF-FF", 2, 25.0),
+    /// ];
+    /// let cmp = Comparison::from_records(
+    ///     "demo", 7, &records, CompareOptions::default()).unwrap();
+    /// assert_eq!(cmp.baseline, "FIFO-FF");
+    /// // SJF-FF wins both seeds on slowdown: deltas (2.0-3.0, 2.5-4.0)
+    /// let d = &cmp.deltas[0];
+    /// assert_eq!((d.wins, d.losses, d.ties), (2, 0, 0));
+    /// assert_eq!(cmp.overall[0].0, "SJF-FF");
+    /// ```
+    pub fn from_records(
+        campaign: &str,
+        spec_hash: u64,
+        records: &[RunRecord],
+        options: CompareOptions,
+    ) -> anyhow::Result<Comparison> {
+        anyhow::ensure!(!records.is_empty(), "campaign {campaign:?} has no stored runs");
+        anyhow::ensure!(!options.metrics.is_empty(), "no metrics selected");
+
+        // Group by cell; everything downstream iterates BTreeMaps, so the
+        // result is independent of the order records arrived in.
+        let mut cells: BTreeMap<CellKey, CellRuns> = BTreeMap::new();
+        let mut dispatchers: BTreeSet<&str> = BTreeSet::new();
+        for rec in records {
+            dispatchers.insert(&rec.dispatcher);
+            let key =
+                (rec.workload.clone(), rec.system.clone(), rec.scenario.clone());
+            let prev = cells
+                .entry(key)
+                .or_default()
+                .entry(&rec.dispatcher)
+                .or_default()
+                .insert(rec.seed, rec);
+            anyhow::ensure!(
+                prev.is_none(),
+                "duplicate stored run for {}/{}/{} dispatcher {} seed {}",
+                rec.workload,
+                rec.system,
+                rec.scenario,
+                rec.dispatcher,
+                rec.seed
+            );
+        }
+        anyhow::ensure!(
+            dispatchers.len() >= 2,
+            "campaign {campaign:?} has a single dispatcher ({}); \
+             comparing needs at least two",
+            dispatchers.iter().copied().collect::<Vec<_>>().join(", ")
+        );
+        let baseline = match &options.baseline {
+            Some(b) => {
+                anyhow::ensure!(
+                    dispatchers.contains(b.as_str()),
+                    "baseline {b:?} is not in the store (have: {})",
+                    dispatchers.iter().copied().collect::<Vec<_>>().join(", ")
+                );
+                b.clone()
+            }
+            // deterministic default: lexicographically first label
+            None => dispatchers.iter().next().unwrap().to_string(),
+        };
+
+        let mut deltas = Vec::new();
+        let mut ranks = Vec::new();
+        let mut warnings = Vec::new();
+        // overall ranking accumulates each dispatcher's per-(cell × metric)
+        // mean ranks
+        let mut overall_acc: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+
+        for ((workload, system, scenario), cell) in &cells {
+            let cell_name = format!("{workload}/{system}/{scenario}");
+            // union of repetition seeds any dispatcher of the cell ran
+            let all_seeds: BTreeSet<u64> =
+                cell.values().flat_map(|by_seed| by_seed.keys().copied()).collect();
+            // structural warnings (reported once per cell, not per metric):
+            // a dispatcher missing repetitions other dispatchers of the
+            // cell have, or absent from the cell entirely
+            for &disp in &dispatchers {
+                let Some(by_seed) = cell.get(disp) else {
+                    warnings.push(format!(
+                        "{cell_name}: dispatcher {disp} has no stored runs in this cell; \
+                         it is absent from its pairings and ranks"
+                    ));
+                    continue;
+                };
+                let missing: Vec<u64> =
+                    all_seeds.iter().copied().filter(|s| !by_seed.contains_key(s)).collect();
+                if !missing.is_empty() {
+                    warnings.push(format!(
+                        "{cell_name}: dispatcher {disp} is missing seed(s) {missing:?}; \
+                         those seeds are dropped from its pairings"
+                    ));
+                }
+            }
+
+            for &metric in &options.metrics {
+                // per-dispatcher seed → value maps for this metric
+                let mut values: BTreeMap<&str, BTreeMap<u64, f64>> = BTreeMap::new();
+                let mut lacking = 0usize;
+                for (disp, by_seed) in cell {
+                    for (&seed, rec) in by_seed {
+                        match metric.extract(rec) {
+                            Some(v) => {
+                                values.entry(disp).or_default().insert(seed, v);
+                            }
+                            None => lacking += 1,
+                        }
+                    }
+                }
+                if values.len() < 2 {
+                    // metric absent from (almost) the whole cell — e.g.
+                    // energy in a scenario without the power addon. Only
+                    // partial absence is worth a warning.
+                    if lacking > 0 && !values.is_empty() {
+                        warnings.push(format!(
+                            "{cell_name}: metric {} present on too few dispatchers to pair \
+                             ({} run(s) lack it)",
+                            metric.key(),
+                            lacking
+                        ));
+                    }
+                    continue;
+                }
+                if lacking > 0 {
+                    warnings.push(format!(
+                        "{cell_name}: {} run(s) lack metric {}; affected seeds are dropped \
+                         from its pairings",
+                        lacking,
+                        metric.key()
+                    ));
+                }
+
+                // paired deltas: every non-baseline dispatcher vs baseline
+                if let Some(base_vals) = values.get(baseline.as_str()) {
+                    for (disp, disp_vals) in &values {
+                        if *disp == baseline {
+                            continue;
+                        }
+                        let seeds: Vec<u64> = disp_vals
+                            .keys()
+                            .copied()
+                            .filter(|s| base_vals.contains_key(s))
+                            .collect();
+                        if seeds.is_empty() {
+                            warnings.push(format!(
+                                "{cell_name}: no paired seeds for {disp} vs {baseline} on \
+                                 metric {}",
+                                metric.key()
+                            ));
+                            continue;
+                        }
+                        let base: Vec<f64> = seeds.iter().map(|s| base_vals[s]).collect();
+                        let cand: Vec<f64> = seeds.iter().map(|s| disp_vals[s]).collect();
+                        let ds: Vec<f64> =
+                            cand.iter().zip(&base).map(|(c, b)| c - b).collect();
+                        let (wins, losses, ties) = win_loss_tie(&ds);
+                        // per-pairing bootstrap seed: the spec identity
+                        // mixed with the pairing's coordinates (same FNV +
+                        // SplitMix64 plumbing as the run seeds)
+                        let pairing =
+                            format!("{cell_name}|{}|{baseline}|{disp}", metric.key());
+                        let seed =
+                            mix64(spec_hash ^ crate::util::fnv1a64(pairing.as_bytes()));
+                        deltas.push(PairedDelta {
+                            workload: workload.clone(),
+                            system: system.clone(),
+                            scenario: scenario.clone(),
+                            metric,
+                            dispatcher: disp.to_string(),
+                            baseline: baseline.clone(),
+                            mean_baseline: mean(&base),
+                            mean_dispatcher: mean(&cand),
+                            mean_delta: mean(&ds),
+                            ci: bootstrap_mean_ci(&ds, options.resamples, options.alpha, seed),
+                            wins,
+                            losses,
+                            ties,
+                            p_wilcoxon: wilcoxon_signed_rank(&ds).p,
+                            seeds,
+                            deltas: ds,
+                        });
+                    }
+                } else {
+                    warnings.push(format!(
+                        "{cell_name}: baseline {baseline} produced no {} values; \
+                         no deltas for this cell",
+                        metric.key()
+                    ));
+                }
+
+                // rank table: per seed, rank the dispatchers that have a
+                // value, ties averaged; then average each dispatcher's
+                // ranks over its seeds
+                let mut rank_sum: BTreeMap<&str, (f64, usize)> = BTreeMap::new();
+                for &seed in &all_seeds {
+                    let present: Vec<(&str, f64)> = values
+                        .iter()
+                        .filter_map(|(d, vs)| vs.get(&seed).map(|v| (*d, *v)))
+                        .collect();
+                    if present.len() < 2 {
+                        continue;
+                    }
+                    let vals: Vec<f64> = present.iter().map(|p| p.1).collect();
+                    let rs = crate::stats::average_ranks(&vals);
+                    for ((d, _), r) in present.iter().zip(rs) {
+                        let e = rank_sum.entry(d).or_insert((0.0, 0));
+                        e.0 += r;
+                        e.1 += 1;
+                    }
+                }
+                for (disp, (sum, n)) in rank_sum {
+                    let mean_rank = sum / n as f64;
+                    overall_acc.entry(disp).or_default().push(mean_rank);
+                    ranks.push(CellRank {
+                        workload: workload.clone(),
+                        system: system.clone(),
+                        scenario: scenario.clone(),
+                        metric,
+                        dispatcher: disp.to_string(),
+                        mean_rank,
+                        n_seeds: n,
+                    });
+                }
+            }
+        }
+
+        let mut overall: Vec<(String, f64)> = overall_acc
+            .into_iter()
+            .map(|(d, rs)| (d.to_string(), mean(&rs)))
+            .collect();
+        overall.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+
+        Ok(Comparison {
+            campaign: campaign.to_string(),
+            spec_hash,
+            baseline,
+            options,
+            deltas,
+            ranks,
+            overall,
+            warnings,
+        })
+    }
+
+    /// Compare a finished campaign store: loads `index.json` from
+    /// `out_dir` and pairs its manifests.
+    pub fn from_store<P: AsRef<Path>>(
+        out_dir: P,
+        options: CompareOptions,
+    ) -> anyhow::Result<Comparison> {
+        let idx = store::load_index(out_dir)?;
+        Comparison::from_records(&idx.campaign, idx.spec_hash, &idx.records, options)
+    }
+
+    /// Header of [`Comparison::deltas_csv`].
+    pub const DELTAS_CSV_HEADER: &'static str = "workload,system,scenario,metric,dispatcher,\
+         baseline,n_pairs,mean_baseline,mean_dispatcher,mean_delta,ci_lo,ci_hi,wins,losses,\
+         ties,p_wilcoxon";
+
+    /// The paired-delta table as CSV.
+    pub fn deltas_csv(&self) -> String {
+        let mut out = String::from(Self::DELTAS_CSV_HEADER);
+        out.push('\n');
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.6}\n",
+                d.workload,
+                d.system,
+                d.scenario,
+                d.metric.key(),
+                d.dispatcher,
+                d.baseline,
+                d.seeds.len(),
+                d.mean_baseline,
+                d.mean_dispatcher,
+                d.mean_delta,
+                d.ci.lo,
+                d.ci.hi,
+                d.wins,
+                d.losses,
+                d.ties,
+                d.p_wilcoxon
+            ));
+        }
+        out
+    }
+
+    /// The rank tables as CSV: per-cell rows first, then the overall
+    /// ranking as pseudo-cell `*,*,*,overall`.
+    pub fn ranks_csv(&self) -> String {
+        let mut out = String::from("workload,system,scenario,metric,dispatcher,mean_rank,n\n");
+        for r in &self.ranks {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.4},{}\n",
+                r.workload, r.system, r.scenario, r.metric.key(), r.dispatcher, r.mean_rank,
+                r.n_seeds
+            ));
+        }
+        for (disp, rank) in &self.overall {
+            let n = self.ranks.iter().filter(|r| r.dispatcher == *disp).count();
+            out.push_str(&format!("*,*,*,overall,{disp},{rank:.4},{n}\n"));
+        }
+        out
+    }
+
+    /// Human-readable Markdown report (deterministic: no timestamps, no
+    /// machine identifiers).
+    pub fn report_md(&self) -> String {
+        let o = &self.options;
+        let mut md = String::new();
+        md.push_str(&format!("# Campaign comparison — {}\n\n", self.campaign));
+        md.push_str(&format!(
+            "- spec hash: `{:016x}`\n- baseline dispatcher: **{}**\n- metrics: {}\n\
+             - bootstrap: {} resamples, {:.0} % confidence\n- pairing warnings: {}\n\n",
+            self.spec_hash,
+            self.baseline,
+            o.metrics.iter().map(|m| m.key()).collect::<Vec<_>>().join(", "),
+            o.resamples,
+            (1.0 - o.alpha) * 100.0,
+            self.warnings.len()
+        ));
+
+        md.push_str("## Overall ranking\n\n");
+        md.push_str("Mean of per-(cell × metric) average ranks; 1 = best, lower is better.\n\n");
+        md.push_str("| # | dispatcher | mean rank |\n|---|---|---|\n");
+        for (i, (disp, rank)) in self.overall.iter().enumerate() {
+            md.push_str(&format!("| {} | {disp} | {rank:.3} |\n", i + 1));
+        }
+        md.push('\n');
+
+        // group deltas and ranks per cell for the per-cell sections
+        let mut cells: BTreeSet<CellKey> = BTreeSet::new();
+        for d in &self.deltas {
+            cells.insert((d.workload.clone(), d.system.clone(), d.scenario.clone()));
+        }
+        for r in &self.ranks {
+            cells.insert((r.workload.clone(), r.system.clone(), r.scenario.clone()));
+        }
+        for (workload, system, scenario) in &cells {
+            md.push_str(&format!("## Cell {workload} × {system} × {scenario}\n\n"));
+            md.push_str(&format!(
+                "Paired per-seed deltas vs **{}** (negative = better):\n\n",
+                self.baseline
+            ));
+            md.push_str(
+                "| metric | dispatcher | pairs | Δ mean | CI | W/L/T | p |\n\
+                 |---|---|---|---|---|---|---|\n",
+            );
+            for d in self.deltas.iter().filter(|d| {
+                d.workload == *workload && d.system == *system && d.scenario == *scenario
+            }) {
+                let sig = if d.ci.excludes_zero() { " ✳" } else { "" };
+                md.push_str(&format!(
+                    "| {} | {} | {} | {:+.4}{sig} | [{:+.4}, {:+.4}] | {}/{}/{} | {:.4} |\n",
+                    d.metric.key(),
+                    d.dispatcher,
+                    d.seeds.len(),
+                    d.mean_delta,
+                    d.ci.lo,
+                    d.ci.hi,
+                    d.wins,
+                    d.losses,
+                    d.ties,
+                    d.p_wilcoxon
+                ));
+            }
+            md.push_str("\nAverage rank across seeds (1 = best):\n\n");
+            md.push_str("| metric | dispatcher | mean rank | seeds |\n|---|---|---|---|\n");
+            for r in self.ranks.iter().filter(|r| {
+                r.workload == *workload && r.system == *system && r.scenario == *scenario
+            }) {
+                md.push_str(&format!(
+                    "| {} | {} | {:.3} | {} |\n",
+                    r.metric.key(),
+                    r.dispatcher,
+                    r.mean_rank,
+                    r.n_seeds
+                ));
+            }
+            md.push('\n');
+        }
+
+        if !self.warnings.is_empty() {
+            md.push_str("## Warnings\n\n");
+            for w in &self.warnings {
+                md.push_str(&format!("- {w}\n"));
+            }
+            md.push('\n');
+        }
+        md.push_str("✳ = bootstrap confidence interval excludes zero.\n");
+        md
+    }
+
+    /// Write the comparison into `<out_dir>/comparisons/`:
+    /// `deltas.csv`, `ranks.csv`, `report.md` and the fig-style
+    /// `delta_dist.csv` (per-pairing delta distributions through
+    /// [`crate::plotdata::PlotFactory`], like the fig10–13 contract).
+    /// Returns the written paths.
+    pub fn write<P: AsRef<Path>>(&self, out_dir: P) -> anyhow::Result<Vec<PathBuf>> {
+        let dir = out_dir.as_ref().join("comparisons");
+        std::fs::create_dir_all(&dir)?;
+        let mut written = Vec::new();
+        for (name, text) in [
+            ("deltas.csv", self.deltas_csv()),
+            ("ranks.csv", self.ranks_csv()),
+            ("report.md", self.report_md()),
+        ] {
+            let p = dir.join(name);
+            std::fs::write(&p, text)?;
+            written.push(p);
+        }
+        let mut pf = crate::plotdata::PlotFactory::new();
+        for d in &self.deltas {
+            pf.add_deltas(d.label(), d.deltas.clone());
+        }
+        let p = dir.join("delta_dist.csv");
+        pf.produce_plot(crate::plotdata::PlotKind::DeltaDistribution, &p)?;
+        written.push(p);
+        Ok(written)
+    }
+
+    /// Delta distributions as box statistics per cell-qualified pairing
+    /// label ([`PairedDelta::label`], exactly what `delta_dist.csv`
+    /// tabulates), for programmatic consumers.
+    pub fn delta_boxes(&self) -> Vec<(String, BoxStats)> {
+        self.deltas.iter().map(|d| (d.label(), BoxStats::from(&d.deltas))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic cell record; `avg_slowdown() = slowdown_sum / 10`.
+    fn rec(workload: &str, scenario: &str, dispatcher: &str, seed: u64, sd: f64) -> RunRecord {
+        RunRecord {
+            workload: workload.to_string(),
+            system: "sys".to_string(),
+            scenario: scenario.to_string(),
+            dispatcher: dispatcher.to_string(),
+            seed,
+            jobs_completed: 10,
+            slowdown_sum: sd * 10.0,
+            wait_sum: (sd * 100.0) as u64,
+            makespan: 1000 + seed,
+            ..Default::default()
+        }
+    }
+
+    fn demo_records() -> Vec<RunRecord> {
+        vec![
+            rec("w", "baseline", "FIFO-FF", 1, 3.0),
+            rec("w", "baseline", "FIFO-FF", 2, 4.0),
+            rec("w", "baseline", "SJF-FF", 1, 2.0),
+            rec("w", "baseline", "SJF-FF", 2, 2.5),
+        ]
+    }
+
+    #[test]
+    fn pairs_by_seed_not_position() {
+        let opts = || CompareOptions { metrics: vec![Metric::Slowdown], ..Default::default() };
+        let a = Comparison::from_records("c", 5, &demo_records(), opts()).unwrap();
+        let mut shuffled = demo_records();
+        shuffled.reverse();
+        shuffled.swap(0, 1);
+        let b = Comparison::from_records("c", 5, &shuffled, opts()).unwrap();
+        assert_eq!(a.deltas_csv(), b.deltas_csv());
+        assert_eq!(a.ranks_csv(), b.ranks_csv());
+        assert_eq!(a.report_md(), b.report_md());
+        let d = &a.deltas[0];
+        assert_eq!(d.seeds, vec![1, 2]);
+        assert_eq!(d.deltas, vec![-1.0, -1.5]);
+        assert_eq!((d.wins, d.losses, d.ties), (2, 0, 0));
+    }
+
+    #[test]
+    fn baseline_defaults_to_lexicographic_first_and_is_overridable() {
+        let a =
+            Comparison::from_records("c", 5, &demo_records(), CompareOptions::default()).unwrap();
+        assert_eq!(a.baseline, "FIFO-FF");
+        let b = Comparison::from_records(
+            "c",
+            5,
+            &demo_records(),
+            CompareOptions { baseline: Some("SJF-FF".to_string()), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(b.baseline, "SJF-FF");
+        // deltas flip sign relative to the default baseline
+        let da = a.deltas.iter().find(|d| d.metric == Metric::Slowdown).unwrap();
+        let db = b.deltas.iter().find(|d| d.metric == Metric::Slowdown).unwrap();
+        assert_eq!(da.mean_delta, -db.mean_delta);
+        let err = Comparison::from_records(
+            "c",
+            5,
+            &demo_records(),
+            CompareOptions { baseline: Some("NOPE".to_string()), ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("NOPE"), "{err}");
+    }
+
+    #[test]
+    fn missing_repetition_drops_seed_with_warning() {
+        let mut records = demo_records();
+        records.push(rec("w", "baseline", "EBF-FF", 1, 1.5)); // seed 2 missing
+        let cmp = Comparison::from_records(
+            "c",
+            5,
+            &records,
+            CompareOptions {
+                // pin the baseline: with EBF-FF present it would otherwise
+                // become the lexicographic default itself
+                baseline: Some("FIFO-FF".to_string()),
+                metrics: vec![Metric::Slowdown],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let d = cmp.deltas.iter().find(|d| d.dispatcher == "EBF-FF").unwrap();
+        assert_eq!(d.seeds, vec![1], "only the common seed pairs");
+        assert!(
+            cmp.warnings.iter().any(|w| w.contains("EBF-FF") && w.contains("[2]")),
+            "{:?}",
+            cmp.warnings
+        );
+        // the complete pairing is untouched
+        let full = cmp.deltas.iter().find(|d| d.dispatcher == "SJF-FF").unwrap();
+        assert_eq!(full.seeds.len(), 2);
+    }
+
+    #[test]
+    fn zero_completion_runs_drop_from_pairing_instead_of_winning() {
+        let mut records = demo_records();
+        // FIFO-FF seed 1 bulk-rejected everything: its job metrics read 0,
+        // which must count as missing data, not as the best score
+        records[0].jobs_completed = 0;
+        records[0].slowdown_sum = 0.0;
+        let cmp = Comparison::from_records(
+            "c",
+            5,
+            &records,
+            CompareOptions { metrics: vec![Metric::Slowdown], ..Default::default() },
+        )
+        .unwrap();
+        let d = &cmp.deltas[0];
+        assert_eq!(d.seeds, vec![2], "seed 1 pairs nothing against the dead run");
+        assert_eq!((d.wins, d.losses, d.ties), (1, 0, 0));
+        assert!(
+            cmp.warnings.iter().any(|w| w.contains("lack metric slowdown")),
+            "{:?}",
+            cmp.warnings
+        );
+        // the seed-1 rank table degenerates to a single survivor and is
+        // skipped, so FIFO-FF is ranked in one seed only
+        let fifo = cmp.ranks.iter().find(|r| r.dispatcher == "FIFO-FF").unwrap();
+        assert_eq!(fifo.n_seeds, 1);
+    }
+
+    #[test]
+    fn dispatcher_absent_from_a_whole_cell_is_warned() {
+        let mut records = demo_records();
+        // a second cell where SJF-FF never ran at all
+        records.push(rec("w2", "baseline", "FIFO-FF", 1, 5.0));
+        records.push(rec("w2", "baseline", "FIFO-FF", 2, 6.0));
+        let cmp =
+            Comparison::from_records("c", 5, &records, CompareOptions::default()).unwrap();
+        assert!(
+            cmp.warnings.iter().any(|w| w.contains("w2/sys/baseline")
+                && w.contains("SJF-FF")
+                && w.contains("no stored runs")),
+            "{:?}",
+            cmp.warnings
+        );
+        // the intact cell still pairs normally
+        assert!(cmp.deltas.iter().any(|d| d.workload == "w"));
+        assert!(cmp.deltas.iter().all(|d| d.workload != "w2"));
+    }
+
+    #[test]
+    fn single_dispatcher_is_a_clear_error() {
+        let records =
+            vec![rec("w", "baseline", "FIFO-FF", 1, 3.0), rec("w", "baseline", "FIFO-FF", 2, 4.0)];
+        let err = Comparison::from_records("c", 5, &records, CompareOptions::default())
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("single dispatcher") && msg.contains("FIFO-FF"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_runs_are_rejected() {
+        let mut records = demo_records();
+        records.push(rec("w", "baseline", "FIFO-FF", 1, 9.9));
+        let err = Comparison::from_records("c", 5, &records, CompareOptions::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn energy_skipped_silently_when_absent_warned_when_partial() {
+        // no energy anywhere: no energy deltas, no warning
+        let cmp =
+            Comparison::from_records("c", 5, &demo_records(), CompareOptions::default()).unwrap();
+        assert!(cmp.deltas.iter().all(|d| d.metric != Metric::Energy));
+        assert!(cmp.warnings.is_empty(), "{:?}", cmp.warnings);
+        // energy on both dispatchers but one seed each missing it: pairs
+        // shrink and a warning appears
+        let mut records = demo_records();
+        for r in &mut records {
+            if r.seed == 1 {
+                r.extra.insert("power.energy_kj".to_string(), 100.0 + r.slowdown_sum);
+            }
+        }
+        let cmp = Comparison::from_records("c", 5, &records, CompareOptions::default()).unwrap();
+        let e = cmp.deltas.iter().find(|d| d.metric == Metric::Energy).unwrap();
+        assert_eq!(e.seeds, vec![1]);
+        assert!(cmp.warnings.iter().any(|w| w.contains("energy")), "{:?}", cmp.warnings);
+    }
+
+    #[test]
+    fn bootstrap_is_reproducible_and_seeded_per_pairing() {
+        let a =
+            Comparison::from_records("c", 5, &demo_records(), CompareOptions::default()).unwrap();
+        let b =
+            Comparison::from_records("c", 5, &demo_records(), CompareOptions::default()).unwrap();
+        assert_eq!(a.deltas_csv(), b.deltas_csv());
+        // a different spec hash reseeds the bootstrap
+        let c =
+            Comparison::from_records("c", 6, &demo_records(), CompareOptions::default()).unwrap();
+        let (sa, sc) = (&a.deltas[0], &c.deltas[0]);
+        assert_eq!(sa.mean_delta, sc.mean_delta, "point estimates are hash-independent");
+        // CIs for 2-element delta vectors: resampled means come from the
+        // seeded stream, so they may legitimately coincide; compare the
+        // whole CSV only for equality above, not inequality here.
+    }
+
+    #[test]
+    fn rank_tables_rank_lower_is_better() {
+        let cmp = Comparison::from_records(
+            "c",
+            5,
+            &demo_records(),
+            CompareOptions { metrics: vec![Metric::Slowdown], ..Default::default() },
+        )
+        .unwrap();
+        let sjf = cmp.ranks.iter().find(|r| r.dispatcher == "SJF-FF").unwrap();
+        let fifo = cmp.ranks.iter().find(|r| r.dispatcher == "FIFO-FF").unwrap();
+        assert_eq!(sjf.mean_rank, 1.0, "SJF wins every seed");
+        assert_eq!(fifo.mean_rank, 2.0);
+        assert_eq!(cmp.overall[0].0, "SJF-FF");
+        assert_eq!(cmp.overall[1].0, "FIFO-FF");
+    }
+
+    #[test]
+    fn multi_cell_report_sections_and_write() {
+        use crate::testutil as tempfile;
+        let mut records = demo_records();
+        records.extend([
+            rec("w2", "power", "FIFO-FF", 1, 5.0),
+            rec("w2", "power", "FIFO-FF", 2, 6.0),
+            rec("w2", "power", "SJF-FF", 1, 5.5),
+            rec("w2", "power", "SJF-FF", 2, 6.5),
+        ]);
+        let cmp = Comparison::from_records("c", 5, &records, CompareOptions::default()).unwrap();
+        let md = cmp.report_md();
+        assert!(md.contains("## Cell w × sys × baseline"));
+        assert!(md.contains("## Cell w2 × sys × power"));
+        assert!(md.contains("Overall ranking"));
+        let tmp = tempfile::tempdir().unwrap();
+        let written = cmp.write(tmp.path()).unwrap();
+        assert_eq!(written.len(), 4);
+        for p in &written {
+            assert!(p.exists(), "{}", p.display());
+        }
+        let deltas = std::fs::read_to_string(tmp.path().join("comparisons/deltas.csv")).unwrap();
+        assert!(deltas.starts_with(Comparison::DELTAS_CSV_HEADER));
+        let dist =
+            std::fs::read_to_string(tmp.path().join("comparisons/delta_dist.csv")).unwrap();
+        assert!(dist.contains("SJF-FF-vs-FIFO-FF"), "{dist}");
+    }
+
+    #[test]
+    fn metric_parse_roundtrip() {
+        for &m in Metric::all() {
+            assert_eq!(Metric::parse(m.key()).unwrap(), m);
+        }
+        assert!(Metric::parse("nope").is_err());
+    }
+}

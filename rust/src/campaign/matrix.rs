@@ -17,10 +17,15 @@ pub struct RunSpec {
     pub index: usize,
     /// Filesystem-safe unique id, e.g. `r0003-seth-s500u-seth-SJF-FF-baseline-s2`.
     pub run_id: String,
+    /// Workload axis entry this run simulates.
     pub workload: WorkloadSpec,
+    /// System axis label.
     pub system: String,
+    /// Resolved system configuration.
     pub sys: SysConfig,
+    /// Dispatcher label (`SCHED-ALLOC`).
     pub dispatcher: String,
+    /// Addon scenario applied to this run.
     pub scenario: ScenarioSpec,
     /// User-level repetition seed (selects the workload realization for
     /// trace workloads; identical across dispatchers so they stay comparable
@@ -34,12 +39,16 @@ pub struct RunSpec {
 /// The expanded matrix plus the spec hash it was derived from.
 #[derive(Debug, Clone)]
 pub struct RunMatrix {
+    /// Identity of the spec the matrix was expanded from.
     pub spec_hash: u64,
+    /// Flat cross-product in fixed expansion order.
     pub runs: Vec<RunSpec>,
 }
 
-/// SplitMix64 finalizer: full-avalanche mixing for seed derivation.
-fn mix64(mut x: u64) -> u64 {
+/// SplitMix64 finalizer: full-avalanche mixing for seed derivation (also
+/// the comparator's bootstrap-seed mixer, so statistical resampling shares
+/// the run-seed plumbing).
+pub(crate) fn mix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

@@ -17,16 +17,21 @@
 //! * [`store`] — per-run directories (`jobs.csv`, `perf.csv`, `run.json`)
 //!   plus the campaign `index.json`; presence of a valid `run.json` is what
 //!   makes a re-invocation skip a run (resume).
+//! * [`compare`] — the comparator: paired per-seed dispatcher deltas with
+//!   bootstrap confidence intervals, win/loss/tie counts and rank tables,
+//!   computed from the store (`campaign compare` on the CLI).
 //!
 //! The experimentation tool ([`crate::experiment::Experiment`]) is now a
 //! thin 1-workload × 1-system campaign, so both fronts share one engine.
 
+pub mod compare;
 pub mod matrix;
 pub mod runner;
 pub mod spec;
 pub mod store;
 
+pub use compare::{CompareOptions, Comparison, Metric};
 pub use matrix::{derive_run_seed, expand, RunMatrix, RunSpec};
 pub use runner::{Campaign, CampaignReport, CampaignStatus};
 pub use spec::{CampaignSpec, PowerSpec, ScenarioSpec, SystemSource, SystemSpec, WorkloadSpec};
-pub use store::{read_run_output, run_dir, RunRecord};
+pub use store::{load_index, read_run_output, run_dir, CampaignIndex, RunRecord};

@@ -52,10 +52,31 @@ pub struct CampaignReport {
     pub index: PathBuf,
 }
 
+impl CampaignReport {
+    /// Compare the dispatchers of this (just-run or resumed) campaign:
+    /// paired per-seed deltas, bootstrap confidence intervals and rank
+    /// tables over the stored manifests (see [`super::compare`]). Call
+    /// [`super::Comparison::write`] on the result to emit
+    /// `comparisons/{deltas.csv,ranks.csv,report.md,delta_dist.csv}` into
+    /// the store.
+    pub fn compare(
+        &self,
+        options: super::CompareOptions,
+    ) -> anyhow::Result<super::Comparison> {
+        let out_dir = self
+            .index
+            .parent()
+            .ok_or_else(|| anyhow::anyhow!("index path {} has no parent", self.index.display()))?;
+        super::Comparison::from_store(out_dir, options)
+    }
+}
+
 /// Progress snapshot from [`Campaign::status`].
 #[derive(Debug)]
 pub struct CampaignStatus {
+    /// Total runs in the matrix.
     pub total: usize,
+    /// Runs the store already holds valid results for.
     pub done: usize,
     /// Run ids still pending, in matrix order.
     pub pending: Vec<String>,
@@ -378,6 +399,23 @@ mod tests {
         edited.seeds = vec![1, 2, 3]; // hash changes → derived seeds change
         let campaign = Campaign::new(edited, &out);
         assert_eq!(campaign.status().unwrap().done, 0);
+    }
+
+    #[test]
+    fn report_compare_pairs_the_stored_dispatchers() {
+        let tmp = tempfile::tempdir().unwrap();
+        let mut spec = tiny_spec();
+        spec.add_dispatcher("SJF-FF");
+        let report = Campaign::new(spec, tmp.path().join("out")).run().unwrap();
+        let cmp = report.compare(Default::default()).unwrap();
+        assert_eq!(cmp.baseline, "FIFO-FF");
+        assert!(!cmp.deltas.is_empty());
+        assert!(cmp.deltas.iter().all(|d| d.seeds == [1, 2]), "both seeds pair");
+        let written = cmp.write(tmp.path().join("out")).unwrap();
+        assert!(written.iter().any(|p| p.ends_with("report.md")));
+        for p in &written {
+            assert!(p.exists(), "{}", p.display());
+        }
     }
 
     #[test]

@@ -32,7 +32,12 @@ pub enum WorkloadSpec {
     Swf(PathBuf),
     /// A named trace synthesizer (`seth`/`ricc`/`mc`) at a scale; each seed
     /// produces its own realization.
-    Trace { name: String, scale: f64 },
+    Trace {
+        /// Trace spec name (resolved via [`crate::traces::spec_by_name`]).
+        name: String,
+        /// Fraction of the archived trace's job count, in `(0, 1]`.
+        scale: f64,
+    },
 }
 
 impl WorkloadSpec {
@@ -87,15 +92,20 @@ impl WorkloadSpec {
 /// or borrowed from a trace spec.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemSpec {
+    /// Axis label (sanitized into run ids; must be unique per campaign).
     pub name: String,
+    /// Where the concrete configuration comes from.
     pub source: SystemSource,
 }
 
 /// Where a [`SystemSpec`] gets its configuration from.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SystemSource {
+    /// A configuration embedded in the spec.
     Inline(SysConfig),
+    /// A JSON configuration file, read at resolve time.
     Path(PathBuf),
+    /// The system configuration of a named trace spec (`seth`/`ricc`/`mc`).
     Trace(String),
 }
 
@@ -155,7 +165,9 @@ impl SystemSpec {
 /// Parameters of a [`PowerModel`] addon in a scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PowerSpec {
+    /// Idle power draw of a node in watts.
     pub idle_w: f64,
+    /// Fully-loaded power draw of a node in watts.
     pub max_w: f64,
     /// Integration cadence in simulation seconds (0 = job events only).
     pub cadence: u64,
@@ -166,7 +178,9 @@ pub struct PowerSpec {
 /// runner can rebuild fresh provider instances inside each worker thread.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioSpec {
+    /// Scenario name (unique per campaign; part of every run id).
     pub name: String,
+    /// Optional power/energy model.
     pub power: Option<PowerSpec>,
     /// `(node, fail_at, repair_at)` failure windows.
     pub failures: Vec<(u32, u64, u64)>,
@@ -258,13 +272,39 @@ impl ScenarioSpec {
 }
 
 /// A declarative scenario matrix: the full study a campaign executes.
+///
+/// The JSON format is documented field-by-field in `docs/campaign-spec.md`
+/// at the repository root (every field of workloads / systems / dispatchers
+/// / scenarios / repetitions, the identity rules, and resume semantics).
+///
+/// # Examples
+///
+/// ```
+/// use accasim::campaign::CampaignSpec;
+///
+/// let mut spec = CampaignSpec::new("study");
+/// spec.add_trace("seth", 0.01)
+///     .add_system_trace("seth")
+///     .gen_dispatchers(&["FIFO", "SJF"], &["FF", "BF"]);
+/// spec.seeds = vec![1, 2, 3];
+/// spec.validate().unwrap();
+/// // 1 workload × 1 system × 4 dispatchers × 1 scenario × 3 seeds
+/// assert_eq!(spec.run_count(), 12);
+/// // a spec is plain data: JSON out, JSON in, identical identity
+/// let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+/// assert_eq!(back.spec_hash().unwrap(), spec.spec_hash().unwrap());
+/// ```
 #[derive(Debug, Clone)]
 pub struct CampaignSpec {
+    /// Campaign name (names the default output directory `results/<name>`).
     pub name: String,
+    /// Workload axis.
     pub workloads: Vec<WorkloadSpec>,
+    /// System axis.
     pub systems: Vec<SystemSpec>,
     /// `SCHED-ALLOC` dispatcher labels.
     pub dispatchers: Vec<String>,
+    /// Addon scenario axis (always non-empty; defaults to `baseline`).
     pub scenarios: Vec<ScenarioSpec>,
     /// Repetition seeds. Each seed is a *repetition* of the whole matrix:
     /// trace workloads synthesize one realization per seed, and the seed is
@@ -456,16 +496,11 @@ impl CampaignSpec {
         Ok(spec.to_json_value().to_string_compact())
     }
 
-    /// FNV-1a 64 over [`CampaignSpec::canonical_json`]: the stable identity
-    /// every per-run derived seed is keyed on.
+    /// FNV-1a 64 over [`CampaignSpec::canonical_json`]
+    /// ([`crate::util::fnv1a64`]): the stable identity every per-run
+    /// derived seed is keyed on.
     pub fn spec_hash(&self) -> anyhow::Result<u64> {
-        let canon = self.canonical_json()?;
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        for &b in canon.as_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        Ok(h)
+        Ok(crate::util::fnv1a64(self.canonical_json()?.as_bytes()))
     }
 
     /// Parse a spec from JSON text.

@@ -16,35 +16,59 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Manifest of one completed run.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunRecord {
+    /// Filesystem-safe run id (also the run's directory name).
     pub run_id: String,
+    /// Position in the flat campaign matrix.
     pub index: usize,
+    /// Workload axis label.
     pub workload: String,
+    /// System axis label.
     pub system: String,
+    /// Dispatcher label (`SCHED-ALLOC`).
     pub dispatcher: String,
+    /// Addon scenario name.
     pub scenario: String,
+    /// Repetition seed (the `seeds` axis entry).
     pub seed: u64,
+    /// Derived per-run seed (`derive_run_seed(spec_hash, index)`).
     pub run_seed: u64,
     // --- result: deterministic simulation outcomes -----------------------
+    /// Jobs that ran to completion.
     pub jobs_completed: u64,
+    /// Jobs bulk-rejected when the event queue drained.
     pub jobs_rejected: u64,
+    /// Malformed workload lines skipped by the reader.
     pub lines_skipped: u64,
+    /// Simulation time of the first submission.
     pub first_submit: u64,
+    /// Simulation time of the last completion.
     pub last_completion: u64,
+    /// `last_completion - first_submit`.
     pub makespan: u64,
+    /// Simulation time points processed.
     pub time_points: u64,
+    /// Peak queue length observed.
     pub max_queue: usize,
+    /// Sum of per-job slowdowns (mean = [`RunRecord::avg_slowdown`]).
     pub slowdown_sum: f64,
+    /// Sum of per-job waiting times in seconds.
     pub wait_sum: u64,
     /// Addon metrics at the final time point (deterministic).
     pub extra: BTreeMap<String, f64>,
     // --- measure: run-to-run noise (never in index.json) ------------------
+    /// Wall-clock seconds of the simulation.
     pub wall_s: f64,
+    /// CPU milliseconds of the simulation.
     pub cpu_ms: u64,
+    /// Wall-clock nanoseconds spent in dispatch decisions.
     pub dispatch_ns: u64,
+    /// Wall-clock nanoseconds spent outside dispatch decisions.
     pub other_ns: u64,
+    /// Mean RSS sample in KB.
     pub avg_rss_kb: u64,
+    /// Peak RSS in KB.
     pub max_rss_kb: u64,
 }
 
@@ -289,6 +313,51 @@ pub fn write_index(
     Ok(path)
 }
 
+/// A campaign-level `index.json` loaded back from a store directory:
+/// identity plus the deterministic portion of every run manifest, in matrix
+/// order. Measure fields of the records read as 0 (they are deliberately
+/// absent from the index — see the module docs).
+#[derive(Debug, Clone)]
+pub struct CampaignIndex {
+    /// Campaign name as recorded at write time.
+    pub campaign: String,
+    /// Spec hash the stored runs were derived from.
+    pub spec_hash: u64,
+    /// Stored run manifests in matrix order.
+    pub records: Vec<RunRecord>,
+}
+
+/// Load a campaign's `index.json` (the comparator's input). Errors out with
+/// a pointer to `campaign run` when the store has no index yet.
+pub fn load_index<P: AsRef<Path>>(out_dir: P) -> anyhow::Result<CampaignIndex> {
+    let path = out_dir.as_ref().join("index.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "reading {}: {e} — no finished campaign here; execute `campaign run` first",
+            path.display()
+        )
+    })?;
+    let v = Json::parse(&text)?;
+    let campaign = v
+        .get("campaign")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow::anyhow!("index.json missing \"campaign\""))?
+        .to_string();
+    let hash_str = v
+        .get("spec_hash")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow::anyhow!("index.json missing \"spec_hash\""))?;
+    let spec_hash = u64::from_str_radix(hash_str, 16)
+        .map_err(|e| anyhow::anyhow!("index.json bad spec_hash {hash_str:?}: {e}"))?;
+    let runs = v
+        .get("runs")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("index.json missing \"runs\""))?;
+    let records =
+        runs.iter().map(RunRecord::from_json).collect::<anyhow::Result<Vec<RunRecord>>>()?;
+    Ok(CampaignIndex { campaign, spec_hash, records })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,5 +473,31 @@ mod tests {
         let c = write_index(tmp.path(), "c", 7, &[fast.clone(), zero.clone()]).unwrap();
         let text = std::fs::read_to_string(&c).unwrap();
         assert!(text.find("r0000-x").unwrap() < text.find(&fast.run_id).unwrap());
+    }
+
+    #[test]
+    fn index_roundtrips_through_load_index() {
+        let tmp = tempfile::tempdir().unwrap();
+        let run = demo_run();
+        let rec = RunRecord::from_output(&run, &demo_output());
+        write_index(tmp.path(), "camp", 0xdead_beef, std::slice::from_ref(&rec)).unwrap();
+        let idx = load_index(tmp.path()).unwrap();
+        assert_eq!(idx.campaign, "camp");
+        assert_eq!(idx.spec_hash, 0xdead_beef);
+        assert_eq!(idx.records.len(), 1);
+        let back = &idx.records[0];
+        assert_eq!(back.run_id, rec.run_id);
+        assert_eq!(back.slowdown_sum, rec.slowdown_sum);
+        assert_eq!(back.extra["power.energy_kj"], 1.5);
+        // measure fields are not in the index; they read back as zero
+        assert_eq!(back.wall_s, 0.0);
+        assert_eq!(back.cpu_ms, 0);
+    }
+
+    #[test]
+    fn load_index_errors_point_at_campaign_run() {
+        let tmp = tempfile::tempdir().unwrap();
+        let err = load_index(tmp.path()).unwrap_err();
+        assert!(err.to_string().contains("campaign run"), "{err}");
     }
 }

@@ -44,6 +44,10 @@ COMMANDS:
            execute a scenario matrix; completed runs are skipped (resume)
   campaign status <spec.json> [--out DIR]
            show how much of the matrix the results store already holds
+  campaign compare <spec.json> [--out DIR] [--baseline DISPATCHER]
+           [--metric slowdown,wait,...] [--resamples 2000] [--alpha 0.05]
+           paired per-seed dispatcher statistics from a finished store;
+           writes comparisons/{deltas.csv,ranks.csv,report.md,delta_dist.csv}
   generate <seed.swf> --sys <cfg.json> [--jobs 50000] [--out generated.swf]
            [--core-gflops 1.667] [--rng-seed 42]
   traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
@@ -224,7 +228,7 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
         .positionals
         .get(1)
         .cloned()
-        .ok_or_else(|| anyhow::anyhow!("campaign wants `run` or `status`\n{USAGE}"))?;
+        .ok_or_else(|| anyhow::anyhow!("campaign wants `run`, `status` or `compare`\n{USAGE}"))?;
     let spec_path = args
         .positionals
         .get(2)
@@ -286,7 +290,58 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
                 println!("… and {} more", st.pending.len() - 20);
             }
         }
-        other => anyhow::bail!("unknown campaign action {other:?} (run|status)\n{USAGE}"),
+        "compare" => {
+            use accasim::campaign::{CompareOptions, Comparison, Metric};
+            let mut opts = CompareOptions {
+                baseline: args.get_opt("baseline"),
+                resamples: args.get_parse("resamples", 2000)?,
+                alpha: args.get_parse("alpha", 0.05)?,
+                ..Default::default()
+            };
+            if let Some(list) = args.get_opt("metric") {
+                opts.metrics =
+                    list.split(',').map(|m| Metric::parse(m.trim())).collect::<Result<_, _>>()?;
+            }
+            args.reject_unknown()?;
+            anyhow::ensure!(
+                opts.alpha > 0.0 && opts.alpha < 1.0,
+                "--alpha {} outside (0, 1)",
+                opts.alpha
+            );
+            // the spec names the store and guards against comparing a store
+            // built from a different (edited) spec
+            let idx = accasim::campaign::load_index(&out_dir)?;
+            let expected = spec.spec_hash()?;
+            anyhow::ensure!(
+                idx.spec_hash == expected,
+                "store {} was built from spec hash {:016x}, but {} hashes to {expected:016x}; \
+                 re-run the campaign before comparing",
+                out_dir.display(),
+                idx.spec_hash,
+                spec_path.display()
+            );
+            let cmp = Comparison::from_records(&idx.campaign, idx.spec_hash, &idx.records, opts)?;
+            let written = cmp.write(&out_dir)?;
+            println!(
+                "campaign {}: compared {} dispatcher pairing(s) against baseline {} \
+                 ({} warning(s))",
+                cmp.campaign,
+                cmp.deltas.len(),
+                cmp.baseline,
+                cmp.warnings.len()
+            );
+            println!("{:<4} {:<12} {:>10}", "rank", "dispatcher", "mean rank");
+            for (i, (disp, rank)) in cmp.overall.iter().enumerate() {
+                println!("{:<4} {disp:<12} {rank:>10.3}", i + 1);
+            }
+            for w in &cmp.warnings {
+                eprintln!("warning: {w}");
+            }
+            for p in &written {
+                println!("wrote: {}", p.display());
+            }
+        }
+        other => anyhow::bail!("unknown campaign action {other:?} (run|status|compare)\n{USAGE}"),
     }
     Ok(())
 }

@@ -13,7 +13,9 @@
 //! repetitions remain identical by construction.)
 
 use crate::addons::AdditionalData;
-use crate::campaign::{Campaign, CampaignReport, CampaignSpec, WorkloadSpec};
+use crate::campaign::{
+    Campaign, CampaignReport, CampaignSpec, CompareOptions, Comparison, WorkloadSpec,
+};
 use crate::config::SysConfig;
 use crate::plotdata::{PlotFactory, PlotKind};
 use crate::sim::SimOutput;
@@ -27,6 +29,21 @@ use std::path::{Path, PathBuf};
 pub type AddonFactory = Box<dyn Fn() -> Vec<Box<dyn AdditionalData>> + Send + Sync>;
 
 /// An experiment over one workload × one system × many dispatchers.
+///
+/// # Examples
+///
+/// ```
+/// use accasim::config::SysConfig;
+/// use accasim::experiment::Experiment;
+///
+/// let sys = SysConfig::homogeneous("demo", 4, &[("core", 8)], 0);
+/// let mut e = Experiment::new("demo", "data/workload.swf", sys);
+/// e.gen_dispatchers(&["FIFO", "SJF"], &["FF", "BF"]);
+/// e.repetitions = 3;
+/// assert_eq!(e.dispatchers().len(), 4);
+/// // the experiment is a thin 1×1 campaign under the hood
+/// assert_eq!(e.to_campaign_spec().run_count(), 12);
+/// ```
 pub struct Experiment {
     name: String,
     workload: WorkloadSpec,
@@ -44,6 +61,7 @@ pub struct Experiment {
 
 /// Results: per dispatcher label, one [`SimOutput`] per repetition.
 pub struct ExperimentResults {
+    /// Per dispatcher label (registration order), one output per repetition.
     pub runs: Vec<(String, Vec<SimOutput>)>,
     /// Paths of the plot CSVs written (fig10–fig13 equivalents).
     pub plots: Vec<PathBuf>,
@@ -167,6 +185,19 @@ impl Experiment {
         }
         Ok(ExperimentResults { runs, plots })
     }
+
+    /// Compare this experiment's dispatchers with paired per-seed
+    /// statistics — a passthrough to the campaign comparator over the
+    /// experiment's own store ([`Experiment::out_dir`]), since the
+    /// experiment *is* a 1-workload × 1-system campaign. Produces one cell
+    /// plus the overall ranking; call [`Comparison::write`] to emit
+    /// `comparisons/` artifacts next to the fig CSVs.
+    ///
+    /// Requires a prior [`Experiment::run_simulation`] (the store must
+    /// exist) and at least two registered dispatchers.
+    pub fn compare(&self, options: CompareOptions) -> anyhow::Result<Comparison> {
+        Comparison::from_store(&self.out_dir, options)
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +271,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn compare_is_a_passthrough_over_the_experiment_store() {
+        let dir = tempfile::tempdir().unwrap();
+        let mut e = Experiment::from_trace("cmp", &SETH, 0.0005);
+        e.out_dir = dir.path().join("out");
+        e.gen_dispatchers(&["FIFO", "SJF"], &["FF"]);
+        e.repetitions = 2;
+        // comparing before running is an error pointing at the missing store
+        assert!(e.compare(Default::default()).is_err());
+        e.run_simulation().unwrap();
+        let cmp = e.compare(Default::default()).unwrap();
+        assert_eq!(cmp.baseline, "FIFO-FF");
+        // one workload × one system × baseline scenario = one cell
+        assert!(cmp.deltas.iter().all(|d| d.scenario == "baseline"));
+        assert!(cmp.deltas.iter().all(|d| d.seeds == [0, 1]), "repetition seeds 0..reps pair");
+        assert_eq!(cmp.overall.len(), 2);
     }
 
     #[test]

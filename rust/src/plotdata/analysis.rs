@@ -9,9 +9,13 @@ use std::collections::BTreeMap;
 /// Per-user aggregate over job records.
 #[derive(Debug, Clone, PartialEq)]
 pub struct UserStats {
+    /// Jobs the user completed.
     pub jobs: u64,
+    /// Summed waiting time in seconds.
     pub total_wait: u64,
+    /// Mean slowdown over the user's jobs.
     pub avg_slowdown: f64,
+    /// Slot-seconds consumed (`(end - start) × slots`).
     pub core_seconds: u64,
 }
 

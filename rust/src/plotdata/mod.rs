@@ -27,6 +27,10 @@ pub enum PlotKind {
     CpuTime,
     /// Fig 13: average dispatch CPU time vs queue size per dispatcher.
     Scalability,
+    /// Campaign-comparator delta distributions: box statistics of paired
+    /// per-seed metric deltas per pairing label (series registered via
+    /// [`PlotFactory::add_deltas`]; same CSV shape as Figs 10–11).
+    DeltaDistribution,
 }
 
 /// A labeled collection of simulation results to compare (one entry per
@@ -34,9 +38,14 @@ pub enum PlotKind {
 #[derive(Default)]
 pub struct PlotFactory {
     runs: Vec<(String, Vec<SimOutput>)>,
+    /// Pre-computed delta series (label → paired per-seed deltas) for
+    /// `PlotKind::DeltaDistribution`; unlike `runs` these carry no
+    /// simulation output, just the comparator's numbers.
+    deltas: Vec<(String, Vec<f64>)>,
 }
 
 impl PlotFactory {
+    /// An empty factory.
     pub fn new() -> Self {
         Self::default()
     }
@@ -50,6 +59,19 @@ impl PlotFactory {
     /// Labels in insertion order.
     pub fn labels(&self) -> Vec<&str> {
         self.runs.iter().map(|(l, _)| l.as_str()).collect()
+    }
+
+    /// Register one comparator delta series (the
+    /// [`PlotKind::DeltaDistribution`] hook used by
+    /// [`crate::campaign::Comparison::write`]).
+    pub fn add_deltas(&mut self, label: impl Into<String>, deltas: Vec<f64>) {
+        self.deltas.push((label.into(), deltas));
+    }
+
+    /// Delta-distribution series: box stats of each registered delta
+    /// series, in insertion order.
+    pub fn delta_boxes(&self) -> Vec<(String, BoxStats)> {
+        self.deltas.iter().map(|(label, xs)| (label.clone(), BoxStats::from(xs))).collect()
     }
 
     /// Fig 10 series: slowdown box stats per dispatcher.
@@ -125,12 +147,12 @@ impl PlotFactory {
     pub fn produce_plot<P: AsRef<Path>>(&self, kind: PlotKind, path: P) -> anyhow::Result<()> {
         let mut out = String::new();
         match kind {
-            PlotKind::Slowdown | PlotKind::QueueSize => {
+            PlotKind::Slowdown | PlotKind::QueueSize | PlotKind::DeltaDistribution => {
                 out.push_str(&format!("label,{}\n", BoxStats::CSV_HEADER));
-                let boxes = if kind == PlotKind::Slowdown {
-                    self.slowdown_boxes()
-                } else {
-                    self.queue_boxes()
+                let boxes = match kind {
+                    PlotKind::Slowdown => self.slowdown_boxes(),
+                    PlotKind::QueueSize => self.queue_boxes(),
+                    _ => self.delta_boxes(),
                 };
                 for (label, b) in boxes {
                     out.push_str(&format!("{label},{}\n", b.to_csv()));
@@ -346,6 +368,24 @@ mod tests {
             assert!(text.lines().count() >= 2, "{name} has data rows");
             assert!(text.contains("FIFO-FF"));
         }
+    }
+
+    #[test]
+    fn delta_distribution_plot() {
+        let dir = tempfile::tempdir().unwrap();
+        let mut pf = PlotFactory::new();
+        pf.add_deltas("slowdown:SJF-FF-vs-FIFO-FF", vec![-1.0, -1.5, 0.5]);
+        pf.add_deltas("wait:SJF-FF-vs-FIFO-FF", vec![-10.0, -12.0]);
+        let boxes = pf.delta_boxes();
+        assert_eq!(boxes.len(), 2);
+        assert_eq!(boxes[0].1.n, 3);
+        assert!((boxes[0].1.median + 1.0).abs() < 1e-12);
+        let p = dir.path().join("deltas.csv");
+        pf.produce_plot(PlotKind::DeltaDistribution, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with(&format!("label,{}\n", BoxStats::CSV_HEADER)));
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.contains("wait:SJF-FF-vs-FIFO-FF"));
     }
 
     #[test]

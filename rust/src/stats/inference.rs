@@ -1,0 +1,292 @@
+//! Paired-comparison inference: seeded bootstrap confidence intervals,
+//! the Wilcoxon signed-rank test and rank aggregation.
+//!
+//! These are the numerical primitives behind the campaign comparator
+//! ([`crate::campaign::compare`], DESIGN.md §Comparisons). Everything here
+//! is deterministic: resampling draws from a [`crate::rng::Pcg64`] seeded by
+//! the caller, never from wall clock or OS entropy, so a comparison report
+//! is byte-identical across re-invocations and thread counts.
+
+use crate::rng::Pcg64;
+
+/// A two-sided confidence interval `[lo, hi]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ci {
+    /// Lower bound.
+    pub lo: f64,
+    /// Upper bound.
+    pub hi: f64,
+}
+
+impl Ci {
+    /// Whether the interval excludes zero (the paired delta is
+    /// distinguishable from "no difference" at the interval's level).
+    pub fn excludes_zero(&self) -> bool {
+        self.lo > 0.0 || self.hi < 0.0
+    }
+}
+
+/// Percentile-bootstrap confidence interval for the mean of `xs`.
+///
+/// Draws `resamples` bootstrap samples (with replacement) from `xs`, takes
+/// the mean of each, and returns the `alpha/2` and `1 - alpha/2` quantiles
+/// of those means (`alpha = 0.05` → a 95 % interval). Resampling uses a
+/// [`Pcg64`] constructed from `seed`, so identical inputs yield identical
+/// intervals on every platform.
+///
+/// Degenerate inputs keep the function total: an empty slice yields
+/// `[0, 0]`, a single observation yields `[x, x]`.
+///
+/// # Examples
+///
+/// ```
+/// use accasim::stats::bootstrap_mean_ci;
+///
+/// let deltas = [-1.2, -0.8, -1.1, -0.9, -1.0, -1.3, -0.7, -1.05];
+/// let ci = bootstrap_mean_ci(&deltas, 1000, 0.05, 42);
+/// assert!(ci.lo <= ci.hi);
+/// assert!(ci.excludes_zero(), "a consistently negative delta excludes 0");
+/// // deterministic: the same seed reproduces the same interval
+/// assert_eq!(ci, bootstrap_mean_ci(&deltas, 1000, 0.05, 42));
+/// ```
+pub fn bootstrap_mean_ci(xs: &[f64], resamples: usize, alpha: f64, seed: u64) -> Ci {
+    if xs.is_empty() {
+        return Ci { lo: 0.0, hi: 0.0 };
+    }
+    if xs.len() == 1 {
+        return Ci { lo: xs[0], hi: xs[0] };
+    }
+    let mut rng = Pcg64::new(seed);
+    let n = xs.len();
+    let mut means = Vec::with_capacity(resamples.max(1));
+    for _ in 0..resamples.max(1) {
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += xs[rng.range_u64(0, n as u64 - 1) as usize];
+        }
+        means.push(sum / n as f64);
+    }
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let a = alpha.clamp(0.0, 1.0);
+    Ci {
+        lo: super::quantile_sorted(&means, a / 2.0),
+        hi: super::quantile_sorted(&means, 1.0 - a / 2.0),
+    }
+}
+
+/// Fractional ranks of `values` in ascending order, ties averaged
+/// (the "average rank" convention shared by the Wilcoxon test and the
+/// campaign rank tables). Ranks are 1-based: the smallest value gets rank 1.
+///
+/// # Examples
+///
+/// ```
+/// use accasim::stats::average_ranks;
+///
+/// assert_eq!(average_ranks(&[3.0, 1.0, 2.0]), vec![3.0, 1.0, 2.0]);
+/// // a two-way tie for ranks 1 and 2 averages to 1.5
+/// assert_eq!(average_ranks(&[5.0, 2.0, 2.0]), vec![3.0, 1.5, 1.5]);
+/// ```
+pub fn average_ranks(values: &[f64]) -> Vec<f64> {
+    let mut order: Vec<usize> = (0..values.len()).collect();
+    order.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    let mut ranks = vec![0.0; values.len()];
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && values[order[j + 1]] == values[order[i]] {
+            j += 1;
+        }
+        // positions i..=j share one value; their ranks average
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &idx in &order[i..=j] {
+            ranks[idx] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Result of a two-sided Wilcoxon signed-rank test over paired deltas.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Wilcoxon {
+    /// Sum of ranks of the positive deltas.
+    pub w_plus: f64,
+    /// Sum of ranks of the negative deltas.
+    pub w_minus: f64,
+    /// Pairs used (zero deltas are dropped, per the Wilcoxon convention).
+    pub n_used: usize,
+    /// Two-sided p-value from the tie-corrected normal approximation
+    /// (1.0 when no non-zero pair exists).
+    pub p: f64,
+}
+
+/// Two-sided Wilcoxon signed-rank test on paired deltas (`a_i - b_i`).
+///
+/// Zero deltas are discarded; the remaining absolute deltas are ranked with
+/// ties averaged, and the smaller of the signed rank sums is compared
+/// against the tie-corrected normal approximation. The normal approximation
+/// is the standard choice for n ≳ 10 and errs conservative below that —
+/// adequate for deciding whether a dispatcher improvement is noise.
+pub fn wilcoxon_signed_rank(deltas: &[f64]) -> Wilcoxon {
+    let nonzero: Vec<f64> = deltas.iter().copied().filter(|d| *d != 0.0).collect();
+    let n = nonzero.len();
+    if n == 0 {
+        return Wilcoxon { w_plus: 0.0, w_minus: 0.0, n_used: 0, p: 1.0 };
+    }
+    let abs: Vec<f64> = nonzero.iter().map(|d| d.abs()).collect();
+    let ranks = average_ranks(&abs);
+    let mut w_plus = 0.0;
+    let mut w_minus = 0.0;
+    for (d, r) in nonzero.iter().zip(&ranks) {
+        if *d > 0.0 {
+            w_plus += r;
+        } else {
+            w_minus += r;
+        }
+    }
+    let nf = n as f64;
+    let mean = nf * (nf + 1.0) / 4.0;
+    let mut var = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0;
+    // tie correction: subtract t³-t over tie groups of the absolute deltas
+    let mut sorted_abs = abs.clone();
+    sorted_abs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut i = 0;
+    while i < sorted_abs.len() {
+        let mut j = i;
+        while j + 1 < sorted_abs.len() && sorted_abs[j + 1] == sorted_abs[i] {
+            j += 1;
+        }
+        let t = (j - i + 1) as f64;
+        var -= t * (t * t - 1.0) / 48.0;
+        i = j + 1;
+    }
+    let p = if var <= 0.0 {
+        1.0 // every |delta| identical and tied: no evidence either way
+    } else {
+        let w = w_plus.min(w_minus);
+        // continuity-corrected z; two-sided tail of the standard normal
+        let z = (w - mean + 0.5) / var.sqrt();
+        (2.0 * normal_cdf(z)).min(1.0)
+    };
+    Wilcoxon { w_plus, w_minus, n_used: n, p }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun 7.1.26 erf approximation
+/// (|error| < 1.5e-7 — far below what a p-value report needs).
+fn normal_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = 1.0 - poly * (-x * x).exp();
+    let erf = if x < 0.0 { -erf } else { erf };
+    0.5 * (1.0 + erf)
+}
+
+/// Win/loss/tie counts of paired deltas from the *candidate's* point of
+/// view, for metrics where **lower is better**: a negative delta
+/// (candidate < baseline) is a win.
+pub fn win_loss_tie(deltas: &[f64]) -> (usize, usize, usize) {
+    let wins = deltas.iter().filter(|d| **d < 0.0).count();
+    let losses = deltas.iter().filter(|d| **d > 0.0).count();
+    (wins, losses, deltas.len() - wins - losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_ci_brackets_the_mean_and_is_deterministic() {
+        let xs: Vec<f64> = (0..50).map(|i| (i % 7) as f64 - 3.0).collect();
+        let m = crate::stats::mean(&xs);
+        let ci = bootstrap_mean_ci(&xs, 2000, 0.05, 7);
+        assert!(ci.lo <= m && m <= ci.hi, "{ci:?} vs mean {m}");
+        assert_eq!(ci, bootstrap_mean_ci(&xs, 2000, 0.05, 7));
+        assert_ne!(ci, bootstrap_mean_ci(&xs, 2000, 0.05, 8), "seed matters");
+    }
+
+    #[test]
+    fn bootstrap_ci_narrows_with_alpha() {
+        let xs: Vec<f64> = (0..40).map(|i| (i as f64).sin()).collect();
+        let wide = bootstrap_mean_ci(&xs, 2000, 0.01, 3);
+        let narrow = bootstrap_mean_ci(&xs, 2000, 0.20, 3);
+        assert!(narrow.hi - narrow.lo < wide.hi - wide.lo);
+    }
+
+    #[test]
+    fn bootstrap_ci_degenerate_inputs() {
+        assert_eq!(bootstrap_mean_ci(&[], 100, 0.05, 1), Ci { lo: 0.0, hi: 0.0 });
+        let one = bootstrap_mean_ci(&[2.5], 100, 0.05, 1);
+        assert_eq!((one.lo, one.hi), (2.5, 2.5));
+        assert!(!one.excludes_zero() || one.lo > 0.0);
+    }
+
+    #[test]
+    fn ci_excludes_zero() {
+        assert!(Ci { lo: 0.1, hi: 2.0 }.excludes_zero());
+        assert!(Ci { lo: -2.0, hi: -0.1 }.excludes_zero());
+        assert!(!Ci { lo: -1.0, hi: 1.0 }.excludes_zero());
+    }
+
+    #[test]
+    fn average_ranks_handles_ties() {
+        assert_eq!(average_ranks(&[10.0, 20.0, 30.0]), vec![1.0, 2.0, 3.0]);
+        assert_eq!(average_ranks(&[1.0, 1.0, 1.0]), vec![2.0, 2.0, 2.0]);
+        assert_eq!(average_ranks(&[]), Vec::<f64>::new());
+        // rank sum is preserved under ties: n(n+1)/2
+        let r = average_ranks(&[4.0, 4.0, 1.0, 9.0, 4.0]);
+        assert!((r.iter().sum::<f64>() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wilcoxon_detects_a_consistent_shift() {
+        let deltas: Vec<f64> = (1..=20).map(|i| -(i as f64) / 10.0 - 0.5).collect();
+        let w = wilcoxon_signed_rank(&deltas);
+        assert_eq!(w.n_used, 20);
+        assert_eq!(w.w_plus, 0.0);
+        assert!(w.p < 0.01, "p={}", w.p);
+    }
+
+    #[test]
+    fn wilcoxon_sees_no_evidence_in_symmetric_noise() {
+        let deltas: Vec<f64> =
+            (0..30).map(|i| if i % 2 == 0 { 1.0 + i as f64 } else { -1.0 - i as f64 }).collect();
+        let w = wilcoxon_signed_rank(&deltas);
+        assert!(w.p > 0.3, "p={}", w.p);
+    }
+
+    #[test]
+    fn wilcoxon_drops_zeros_and_handles_empty() {
+        let w = wilcoxon_signed_rank(&[0.0, 0.0, -1.0, 2.0]);
+        assert_eq!(w.n_used, 2);
+        let none = wilcoxon_signed_rank(&[]);
+        assert_eq!((none.n_used, none.p), (0, 1.0));
+        let zeros = wilcoxon_signed_rank(&[0.0, 0.0]);
+        assert_eq!((zeros.n_used, zeros.p), (0, 1.0));
+    }
+
+    #[test]
+    fn wilcoxon_all_tied_magnitudes_is_total() {
+        // every |delta| equal: variance collapses only if all share one tie
+        // group; the test must not divide by zero
+        let w = wilcoxon_signed_rank(&[1.0, 1.0, -1.0, 1.0]);
+        assert!(w.p > 0.0 && w.p <= 1.0);
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!(normal_cdf(-1.96) < 0.026);
+        assert!(normal_cdf(1.96) > 0.974);
+        assert!((normal_cdf(-3.0) + normal_cdf(3.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn win_loss_tie_counts() {
+        assert_eq!(win_loss_tie(&[-1.0, -0.5, 0.0, 2.0]), (2, 1, 1));
+        assert_eq!(win_loss_tie(&[]), (0, 0, 0));
+    }
+}

@@ -1,6 +1,24 @@
-//! Descriptive statistics used by the plot factory and benchmark tables:
-//! means/σ, quantiles, box-and-whisker five-number summaries, histograms
-//! and ECDFs.
+//! Statistics for the plot factory, the benchmark tables and the campaign
+//! comparator.
+//!
+//! Two layers live here:
+//!
+//! * **Descriptive** (this module): means/σ, quantiles, box-and-whisker
+//!   five-number summaries ([`BoxStats`], the statistic behind Figures
+//!   10–11), histograms and ECDFs, and the two-sample Kolmogorov–Smirnov
+//!   statistic used by the workload-comparison figures.
+//! * **Inference** ([`inference`]): seeded bootstrap confidence intervals,
+//!   the Wilcoxon signed-rank test and rank aggregation — the paired
+//!   per-seed machinery behind `campaign compare` (DESIGN.md §Comparisons).
+//!
+//! Everything is deterministic and dependency-free; randomized procedures
+//! (the bootstrap) take an explicit seed.
+
+pub mod inference;
+
+pub use inference::{
+    average_ranks, bootstrap_mean_ci, wilcoxon_signed_rank, win_loss_tie, Ci, Wilcoxon,
+};
 
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -41,14 +59,23 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
 /// Figures 10–11). Whiskers use the 1.5×IQR convention clamped to data.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BoxStats {
+    /// Smallest observation.
     pub min: f64,
+    /// Lowest observation within 1.5×IQR below Q1.
     pub whisker_lo: f64,
+    /// First quartile.
     pub q1: f64,
+    /// Second quartile.
     pub median: f64,
+    /// Third quartile.
     pub q3: f64,
+    /// Highest observation within 1.5×IQR above Q3.
     pub whisker_hi: f64,
+    /// Largest observation.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Number of observations.
     pub n: usize,
 }
 
@@ -94,6 +121,7 @@ impl BoxStats {
     /// CSV header matching [`BoxStats::to_csv`].
     pub const CSV_HEADER: &'static str = "n,min,whisker_lo,q1,median,q3,whisker_hi,max,mean";
 
+    /// One CSV row matching [`BoxStats::CSV_HEADER`].
     pub fn to_csv(&self) -> String {
         format!(
             "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}",
@@ -114,12 +142,16 @@ impl BoxStats {
 /// clamp to the edge buckets.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Inclusive lower edge of the first bucket.
     pub lo: f64,
+    /// Exclusive upper edge of the last bucket.
     pub hi: f64,
+    /// Per-bucket observation counts.
     pub counts: Vec<u64>,
 }
 
 impl Histogram {
+    /// An empty histogram over `[lo, hi)` with `bins` buckets.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins] }

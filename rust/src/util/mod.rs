@@ -1,7 +1,32 @@
 //! In-repo substrates replacing ecosystem crates unavailable in the offline
-//! build: a JSON parser/serializer ([`json`]) and a CLI argument parser
-//! ([`args`]).
+//! build: a JSON parser/serializer ([`json`]), a CLI argument parser
+//! ([`args`]), and the FNV-1a hash shared by spec identity and the
+//! comparator's bootstrap seeding.
 
 pub mod args;
 pub mod idhash;
 pub mod json;
+
+/// FNV-1a 64 over raw bytes: the stable content hash behind
+/// [`crate::campaign::CampaignSpec::spec_hash`] and the campaign
+/// comparator's per-pairing bootstrap seeds. One implementation for both,
+/// so "seeded from the spec identity" can never silently diverge.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(super::fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

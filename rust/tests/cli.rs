@@ -198,6 +198,81 @@ fn campaign_run_executes_resumes_and_reports_status() {
 }
 
 #[test]
+fn campaign_compare_writes_report_and_requires_a_store() {
+    let dir = tempfile::tempdir().unwrap();
+    let spec = dir.path().join("study.json");
+    std::fs::write(
+        &spec,
+        r#"{
+            "name": "clicmp",
+            "workloads": [{"trace": "seth", "scale": 0.0005}],
+            "systems": [{"trace": "seth"}],
+            "dispatchers": ["FIFO-FF", "SJF-FF"],
+            "seeds": [1, 2]
+        }"#,
+    )
+    .unwrap();
+    let out_dir = dir.path().join("camp");
+    let spec_s = spec.to_str().unwrap();
+    let out_s = out_dir.to_str().unwrap();
+
+    // comparing before running points at `campaign run`
+    let early = bin().args(["campaign", "compare", spec_s, "--out", out_s]).output().unwrap();
+    assert!(!early.status.success());
+    assert!(String::from_utf8_lossy(&early.stderr).contains("campaign run"));
+
+    let run = bin().args(["campaign", "run", spec_s, "--out", out_s]).output().unwrap();
+    assert!(run.status.success(), "{}", String::from_utf8_lossy(&run.stderr));
+    let cmp = bin()
+        .args(["campaign", "compare", spec_s, "--out", out_s, "--baseline", "FIFO-FF"])
+        .output()
+        .unwrap();
+    assert!(cmp.status.success(), "{}", String::from_utf8_lossy(&cmp.stderr));
+    let stdout = String::from_utf8_lossy(&cmp.stdout);
+    assert!(stdout.contains("baseline FIFO-FF"), "{stdout}");
+    assert!(stdout.contains("SJF-FF"), "{stdout}");
+    for f in ["deltas.csv", "ranks.csv", "report.md", "delta_dist.csv"] {
+        assert!(out_dir.join("comparisons").join(f).exists(), "{f}");
+    }
+    // an unknown metric is rejected with the valid choices
+    let bad = bin()
+        .args(["campaign", "compare", spec_s, "--out", out_s, "--metric", "frobness"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("slowdown"));
+}
+
+#[test]
+fn campaign_compare_rejects_spec_drift() {
+    let dir = tempfile::tempdir().unwrap();
+    let spec = dir.path().join("study.json");
+    let body = |seeds: &str| {
+        format!(
+            r#"{{"name": "drift",
+                "workloads": [{{"trace": "seth", "scale": 0.0005}}],
+                "systems": [{{"trace": "seth"}}],
+                "dispatchers": ["FIFO-FF", "SJF-FF"],
+                "seeds": {seeds}}}"#
+        )
+    };
+    std::fs::write(&spec, body("[1]")).unwrap();
+    let out_dir = dir.path().join("camp");
+    let (spec_s, out_s) = (spec.to_str().unwrap().to_string(), out_dir.to_str().unwrap());
+    let run = bin().args(["campaign", "run", &spec_s, "--out", out_s]).output().unwrap();
+    assert!(run.status.success(), "{}", String::from_utf8_lossy(&run.stderr));
+    // editing the spec (different seeds) invalidates the stored comparison
+    std::fs::write(&spec, body("[1, 2]")).unwrap();
+    let cmp = bin().args(["campaign", "compare", &spec_s, "--out", out_s]).output().unwrap();
+    assert!(!cmp.status.success());
+    assert!(
+        String::from_utf8_lossy(&cmp.stderr).contains("re-run the campaign"),
+        "{}",
+        String::from_utf8_lossy(&cmp.stderr)
+    );
+}
+
+#[test]
 fn campaign_rejects_bad_spec() {
     let dir = tempfile::tempdir().unwrap();
     let spec = dir.path().join("bad.json");

@@ -1,0 +1,179 @@
+//! Campaign-comparator contracts (ISSUE 3 acceptance): pairing is by
+//! repetition seed (not store order), missing repetitions degrade to
+//! warnings, comparison artifacts are byte-identical across worker counts
+//! and re-invocations, and a single-dispatcher store is a clear error.
+
+use accasim::campaign::{
+    load_index, run_dir, Campaign, CampaignSpec, CompareOptions, Comparison, Metric, PowerSpec,
+    ScenarioSpec,
+};
+use accasim::testutil as tempfile;
+use accasim::util::json::Json;
+use std::path::Path;
+
+/// 1 trace workload × 1 system × 2 dispatchers × 2 scenarios (baseline +
+/// power) × 3 seeds = 12 runs.
+fn spec() -> CampaignSpec {
+    let mut spec = CampaignSpec::new("cmp");
+    spec.add_trace("seth", 0.0005)
+        .add_system_trace("seth")
+        .add_dispatcher("FIFO-FF")
+        .add_dispatcher("SJF-FF")
+        .add_scenario(ScenarioSpec {
+            name: "power".to_string(),
+            power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 3600 }),
+            failures: Vec::new(),
+        });
+    spec.seeds = vec![1, 2, 3];
+    spec
+}
+
+fn read(p: &Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+const FILES: [&str; 4] =
+    ["comparisons/deltas.csv", "comparisons/ranks.csv", "comparisons/report.md",
+     "comparisons/delta_dist.csv"];
+
+#[test]
+fn comparison_is_byte_identical_across_worker_counts_and_reinvocation() {
+    let tmp = tempfile::tempdir().unwrap();
+    let serial_out = tmp.path().join("serial");
+    let parallel_out = tmp.path().join("parallel");
+    Campaign::new(spec(), &serial_out).jobs(1).run().unwrap();
+    Campaign::new(spec(), &parallel_out).jobs(4).run().unwrap();
+
+    let serial = Comparison::from_store(&serial_out, CompareOptions::default()).unwrap();
+    let parallel = Comparison::from_store(&parallel_out, CompareOptions::default()).unwrap();
+    serial.write(&serial_out).unwrap();
+    parallel.write(&parallel_out).unwrap();
+    for file in FILES {
+        assert_eq!(
+            read(&serial_out.join(file)),
+            read(&parallel_out.join(file)),
+            "{file} must not depend on the campaign's worker count"
+        );
+    }
+
+    // re-invoking the comparator reproduces the same bytes
+    let before: Vec<String> = FILES.iter().map(|f| read(&serial_out.join(f))).collect();
+    Comparison::from_store(&serial_out, CompareOptions::default())
+        .unwrap()
+        .write(&serial_out)
+        .unwrap();
+    for (file, text) in FILES.iter().zip(&before) {
+        assert_eq!(&read(&serial_out.join(file)), text, "{file} must be reproducible");
+    }
+
+    // the content is what the acceptance criteria ask for: per-seed paired
+    // deltas + bootstrap CIs per cell, energy only where the addon ran
+    let deltas = &before[0];
+    assert!(deltas.starts_with(Comparison::DELTAS_CSV_HEADER));
+    for metric in ["slowdown", "wait", "makespan"] {
+        assert!(deltas.contains(&format!(",baseline,{metric},SJF-FF,FIFO-FF,3,")), "{deltas}");
+        assert!(deltas.contains(&format!(",power,{metric},SJF-FF,FIFO-FF,3,")), "{deltas}");
+    }
+    assert!(deltas.contains(",power,energy,"), "power scenario pairs energy:\n{deltas}");
+    assert!(!deltas.contains(",baseline,energy,"), "no energy without the addon:\n{deltas}");
+    assert!(serial.warnings.is_empty(), "{:?}", serial.warnings);
+}
+
+#[test]
+fn pairing_is_by_seed_not_store_order() {
+    let tmp = tempfile::tempdir().unwrap();
+    let out = tmp.path().join("out");
+    Campaign::new(spec(), &out).jobs(2).run().unwrap();
+    let reference = Comparison::from_store(&out, CompareOptions::default()).unwrap();
+
+    // shuffle the stored run order on disk: reverse `runs` inside
+    // index.json (write_index would re-sort, so edit the document itself)
+    let index_path = out.join("index.json");
+    let doc = Json::parse(&read(&index_path)).unwrap();
+    let Json::Obj(mut m) = doc else { panic!("index.json is an object") };
+    let Some(Json::Arr(runs)) = m.remove("runs") else { panic!("index.json has runs") };
+    assert!(runs.len() >= 2);
+    m.insert("runs".to_string(), Json::Arr(runs.into_iter().rev().collect()));
+    std::fs::write(&index_path, Json::Obj(m).to_string_pretty()).unwrap();
+
+    let shuffled = Comparison::from_store(&out, CompareOptions::default()).unwrap();
+    assert_eq!(reference.deltas_csv(), shuffled.deltas_csv());
+    assert_eq!(reference.ranks_csv(), shuffled.ranks_csv());
+    assert_eq!(reference.report_md(), shuffled.report_md());
+}
+
+#[test]
+fn missing_repetition_drops_the_seed_with_a_warning_not_a_panic() {
+    let tmp = tempfile::tempdir().unwrap();
+    let out = tmp.path().join("out");
+    let report = Campaign::new(spec(), &out).jobs(2).run().unwrap();
+
+    // drop one SJF-FF repetition from the store and rebuild the index from
+    // the remaining manifests (as a sharded/partial re-aggregation would)
+    let victim = report
+        .records
+        .iter()
+        .find(|r| r.dispatcher == "SJF-FF" && r.scenario == "baseline" && r.seed == 2)
+        .unwrap();
+    std::fs::remove_dir_all(run_dir(&out, &victim.run_id)).unwrap();
+    let kept: Vec<_> =
+        report.records.iter().filter(|r| r.run_id != victim.run_id).cloned().collect();
+    let idx = load_index(&out).unwrap();
+    accasim::campaign::store::write_index(&out, &idx.campaign, idx.spec_hash, &kept).unwrap();
+
+    let cmp = Comparison::from_store(&out, CompareOptions::default()).unwrap();
+    assert!(
+        cmp.warnings.iter().any(|w| w.contains("SJF-FF") && w.contains("[2]")),
+        "missing repetition must be reported: {:?}",
+        cmp.warnings
+    );
+    let d = cmp
+        .deltas
+        .iter()
+        .find(|d| d.scenario == "baseline" && d.metric == Metric::Slowdown)
+        .unwrap();
+    assert_eq!(d.seeds, vec![1, 3], "seed 2 drops from the baseline-cell pairing");
+    let full = cmp
+        .deltas
+        .iter()
+        .find(|d| d.scenario == "power" && d.metric == Metric::Slowdown)
+        .unwrap();
+    assert_eq!(full.seeds, vec![1, 2, 3], "the intact cell keeps all pairs");
+    assert!(cmp.report_md().contains("SJF-FF is missing seed(s) [2]"));
+}
+
+#[test]
+fn single_dispatcher_store_is_a_clear_error() {
+    let tmp = tempfile::tempdir().unwrap();
+    let out = tmp.path().join("out");
+    let mut solo = CampaignSpec::new("solo");
+    solo.add_trace("seth", 0.0005).add_system_trace("seth").add_dispatcher("FIFO-FF");
+    Campaign::new(solo, &out).run().unwrap();
+    let err = Comparison::from_store(&out, CompareOptions::default()).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("single dispatcher"), "{msg}");
+    assert!(msg.contains("FIFO-FF"), "names the lone dispatcher: {msg}");
+}
+
+#[test]
+fn baseline_and_metric_selection() {
+    let tmp = tempfile::tempdir().unwrap();
+    let out = tmp.path().join("out");
+    Campaign::new(spec(), &out).jobs(2).run().unwrap();
+    let cmp = Comparison::from_store(
+        &out,
+        CompareOptions {
+            baseline: Some("SJF-FF".to_string()),
+            metrics: vec![Metric::Wait],
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(cmp.baseline, "SJF-FF");
+    assert!(cmp.deltas.iter().all(|d| d.metric == Metric::Wait));
+    assert!(cmp.deltas.iter().all(|d| d.dispatcher == "FIFO-FF"));
+    // CIs are bona fide intervals around the point estimate
+    for d in &cmp.deltas {
+        assert!(d.ci.lo <= d.mean_delta && d.mean_delta <= d.ci.hi, "{d:?}");
+    }
+}
