@@ -1,0 +1,98 @@
+//! Scenario-engine overhead: wall time of one simulation of the same
+//! workload under no scenario vs. each perturbation kind in isolation.
+//! The transforms and providers run on the simulator's hot path (source
+//! iteration, per-time-point addon updates, addon wake events), so the
+//! vocabulary must stay cheap relative to the baseline simulation.
+//!
+//! `cargo bench --bench scenario_overhead`
+
+use accasim::benchkit::Bencher;
+use accasim::campaign::ScenarioSpec;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::scenario::{Perturbation, WarpedSource};
+use accasim::sim::{SimOptions, Simulator, SwfSource};
+use accasim::testutil;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new("scenario_overhead");
+    let dir = testutil::tempdir()?;
+    let swf = dir.path().join("seth.swf");
+    accasim::traces::SETH.synthesize(&swf, 0.002, 1)?; // ~400 jobs
+    let sys = accasim::traces::SETH.sys_config();
+    let nodes = sys.total_nodes();
+    // the scaled Seth slice submits within roughly a week of its start;
+    // anchor the windows on the first submission so every kind does work
+    let t0 = {
+        use accasim::workload::Reader;
+        let mut r = accasim::workload::SwfReader::open(&swf)?;
+        r.next_record().unwrap()?.submit_time as u64
+    };
+    let week = 7 * 86_400;
+
+    let scenarios: Vec<(&str, ScenarioSpec)> = vec![
+        ("baseline", ScenarioSpec::named("baseline")),
+        (
+            "arrival_surge",
+            ScenarioSpec::named("surge").with_perturbation(Perturbation::ArrivalSurge {
+                from: t0,
+                until: t0 + week,
+                factor: 4.0,
+            }),
+        ),
+        (
+            "maintenance",
+            ScenarioSpec::named("maint").with_perturbation(Perturbation::Maintenance {
+                from: t0,
+                until: t0 + week,
+                every: 43_200,
+                duration: 7_200,
+                width: 2,
+            }),
+        ),
+        (
+            "failure_storm",
+            ScenarioSpec::named("storm").with_perturbation(Perturbation::FailureStorm {
+                from: t0,
+                until: t0 + week,
+                storms: 4,
+                width: 4,
+                repair: 14_400,
+            }),
+        ),
+        (
+            "power_cap",
+            ScenarioSpec::named("daycap").with_perturbation(Perturbation::PowerCap {
+                steps: vec![(t0, 1e9), (t0 + 28_800, 1e5), (t0 + 61_200, 1e9)],
+                watts_per_slot: 20.0,
+            }),
+        ),
+    ];
+
+    for (label, scenario) in &scenarios {
+        b.bench(label, || {
+            let compiled = scenario.compile(42, nodes).unwrap();
+            let opts = SimOptions {
+                addons: compiled.addons,
+                output: OutputCollector::null(),
+                seed: 42,
+                ..Default::default()
+            };
+            let source =
+                SwfSource::open(&swf, &sys, opts.factory.clone()).unwrap();
+            let source = WarpedSource::wrap(Box::new(source), compiled.warps);
+            let mut sim = Simulator::with_source(
+                source,
+                sys.clone(),
+                dispatcher_from_label("FIFO-FF").unwrap(),
+                opts,
+            );
+            let out = sim.run().unwrap();
+            assert!(out.jobs_completed > 0);
+            out.jobs_completed
+        });
+    }
+    let csv = b.write_csv()?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

@@ -37,9 +37,8 @@ fn main() -> anyhow::Result<()> {
         .add_dispatcher("SJF-FF")
         .add_dispatcher("EBF-BF")
         .add_scenario(ScenarioSpec {
-            name: "power".to_string(),
             power: Some(PowerSpec { idle_w: 95.0, max_w: 220.0, cadence: 3600 }),
-            failures: Vec::new(),
+            ..ScenarioSpec::named("power")
         });
     spec.seeds = vec![1, 2];
     println!(

@@ -31,7 +31,12 @@ pub enum AddonAction {
 pub enum AddonAck {
     /// Result of [`AddonAction::DisableNode`]: whether the node actually
     /// went out of service (busy nodes refuse until they drain).
-    NodeDown { node: u32, down: bool },
+    NodeDown {
+        /// The node the disable request named.
+        node: u32,
+        /// `true` when the node went down; `false` when it refused (busy).
+        down: bool,
+    },
 }
 
 /// Abstract additional-data provider, mirroring AccaSim's `AdditionalData`
@@ -76,7 +81,9 @@ pub trait AdditionalData: Send {
 /// dispatcher (e.g. [5, 6] in the paper) would consume.
 #[derive(Debug)]
 pub struct PowerModel {
+    /// Idle power draw per node (watts).
     pub idle_w: f64,
+    /// Fully-loaded power draw per node (watts).
     pub max_w: f64,
     /// Integration cadence in simulation seconds: the model asks to be woken
     /// this often, bounding the trapezoidal error across long gaps between
@@ -88,6 +95,8 @@ pub struct PowerModel {
 }
 
 impl PowerModel {
+    /// Linear model between `idle_w` and `max_w` per node, integrating at
+    /// the default 60 s cadence.
     pub fn new(idle_w: f64, max_w: f64) -> Self {
         PowerModel { idle_w, max_w, cadence: 60, last_t: None, last_power: 0.0, energy_j: 0.0 }
     }
@@ -157,15 +166,34 @@ impl AdditionalData for PowerModel {
 /// (the node drained), so deferred failures are retried rather than lost.
 #[derive(Debug)]
 pub struct FailureInjector {
-    /// `(node, fail_at, repair_at)` triples.
-    pub plan: Vec<(u32, u64, u64)>,
+    /// Failure windows `(down_at, up_at)` grouped per node at construction
+    /// — scenario-generated plans (maintenance sweeps, storms) can reach
+    /// five figures of entries, so `update` must not rescan the flat plan
+    /// once per node per time point.
+    windows: std::collections::BTreeMap<u32, Vec<(u64, u64)>>,
+    /// All window boundaries, sorted and deduplicated (timer candidates).
+    boundaries: Vec<u64>,
     /// Nodes confirmed down by the event manager.
     failed: Vec<u32>,
 }
 
 impl FailureInjector {
+    /// Injector over a `(node, fail_at, repair_at)` plan. Windows of one
+    /// node union (the node is down while *any* window covers the current
+    /// time) — which is what lets the scenario engine merge hand-listed
+    /// failures, maintenance sweeps and storm draws into one plan.
     pub fn new(plan: Vec<(u32, u64, u64)>) -> Self {
-        FailureInjector { plan, failed: Vec::new() }
+        let mut windows: std::collections::BTreeMap<u32, Vec<(u64, u64)>> =
+            std::collections::BTreeMap::new();
+        let mut boundaries: Vec<u64> = Vec::with_capacity(plan.len() * 2);
+        for &(node, fail_at, repair_at) in &plan {
+            windows.entry(node).or_default().push((fail_at, repair_at));
+            boundaries.push(fail_at);
+            boundaries.push(repair_at);
+        }
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        FailureInjector { windows, boundaries, failed: Vec::new() }
     }
 
     /// Nodes currently failed (acknowledged down).
@@ -187,17 +215,11 @@ impl AdditionalData for FailureInjector {
         _running: usize,
     ) -> Vec<AddonAction> {
         let mut actions = Vec::new();
-        let mut seen: Vec<u32> = Vec::new();
-        for &(node, _, _) in &self.plan {
-            if seen.contains(&node) {
-                continue;
-            }
-            seen.push(node);
+        for (&node, windows) in &self.windows {
             // A node is down iff *any* of its windows covers `t`, so
             // overlapping plan entries union instead of flapping the node
             // in and out of service on alternating updates.
-            let should_be_down =
-                self.plan.iter().any(|&(n, f, r)| n == node && t >= f && t < r);
+            let should_be_down = windows.iter().any(|&(f, r)| t >= f && t < r);
             let is_down = self.failed.contains(&node);
             if should_be_down && !is_down {
                 // (Re-)request the failure; only an acknowledged DisableNode
@@ -219,8 +241,10 @@ impl AdditionalData for FailureInjector {
     }
 
     fn next_event(&self, now: u64) -> Option<u64> {
-        // earliest plan boundary strictly in the future
-        self.plan.iter().flat_map(|&(_, f, r)| [f, r]).filter(|&t| t > now).min()
+        // earliest plan boundary strictly in the future (boundaries are
+        // sorted at construction)
+        let i = self.boundaries.partition_point(|&t| t <= now);
+        self.boundaries.get(i).copied()
     }
 
     fn acknowledge(&mut self, ack: &AddonAck) {

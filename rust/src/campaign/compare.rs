@@ -25,7 +25,9 @@
 
 use super::matrix::mix64;
 use super::store::{self, RunRecord};
-use crate::stats::{bootstrap_mean_ci, mean, wilcoxon_signed_rank, win_loss_tie, BoxStats, Ci};
+use crate::stats::{
+    bootstrap_mean_ci, cliffs_delta, mean, wilcoxon_signed_rank, win_loss_tie, BoxStats, Ci,
+};
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
@@ -156,6 +158,14 @@ pub struct PairedDelta {
     pub ties: usize,
     /// Two-sided Wilcoxon signed-rank p-value of the deltas.
     pub p_wilcoxon: f64,
+    /// Cliff's delta between the candidate's and the baseline's paired
+    /// values ([`crate::stats::cliffs_delta`]; negative = candidate
+    /// better, all metrics lower-is-better).
+    pub cliffs_delta: f64,
+    /// Matched-pairs rank-biserial correlation of the paired deltas
+    /// ([`crate::stats::rank_biserial`]; the effect size companion to
+    /// `p_wilcoxon`).
+    pub rank_biserial: f64,
 }
 
 impl PairedDelta {
@@ -401,6 +411,16 @@ impl Comparison {
                         let ds: Vec<f64> =
                             cand.iter().zip(&base).map(|(c, b)| c - b).collect();
                         let (wins, losses, ties) = win_loss_tie(&ds);
+                        // one ranking pass yields both the p-value and its
+                        // effect-size companion (stats::rank_biserial is
+                        // the same formula over these sums)
+                        let wilcoxon = wilcoxon_signed_rank(&ds);
+                        let rank_total = wilcoxon.w_plus + wilcoxon.w_minus;
+                        let rank_biserial = if rank_total == 0.0 {
+                            0.0
+                        } else {
+                            (wilcoxon.w_plus - wilcoxon.w_minus) / rank_total
+                        };
                         // per-pairing bootstrap seed: the spec identity
                         // mixed with the pairing's coordinates (same FNV +
                         // SplitMix64 plumbing as the run seeds)
@@ -422,7 +442,9 @@ impl Comparison {
                             wins,
                             losses,
                             ties,
-                            p_wilcoxon: wilcoxon_signed_rank(&ds).p,
+                            p_wilcoxon: wilcoxon.p,
+                            cliffs_delta: cliffs_delta(&cand, &base),
+                            rank_biserial,
                             seeds,
                             deltas: ds,
                         });
@@ -502,7 +524,7 @@ impl Comparison {
     /// Header of [`Comparison::deltas_csv`].
     pub const DELTAS_CSV_HEADER: &'static str = "workload,system,scenario,metric,dispatcher,\
          baseline,n_pairs,mean_baseline,mean_dispatcher,mean_delta,ci_lo,ci_hi,wins,losses,\
-         ties,p_wilcoxon";
+         ties,p_wilcoxon,cliffs_delta,rank_biserial";
 
     /// The paired-delta table as CSV.
     pub fn deltas_csv(&self) -> String {
@@ -510,7 +532,8 @@ impl Comparison {
         out.push('\n');
         for d in &self.deltas {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.6}\n",
+                "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},\
+                 {:.6}\n",
                 d.workload,
                 d.system,
                 d.scenario,
@@ -526,7 +549,9 @@ impl Comparison {
                 d.wins,
                 d.losses,
                 d.ties,
-                d.p_wilcoxon
+                d.p_wilcoxon,
+                d.cliffs_delta,
+                d.rank_biserial
             ));
         }
         out
@@ -590,15 +615,16 @@ impl Comparison {
                 self.baseline
             ));
             md.push_str(
-                "| metric | dispatcher | pairs | Δ mean | CI | W/L/T | p |\n\
-                 |---|---|---|---|---|---|---|\n",
+                "| metric | dispatcher | pairs | Δ mean | CI | W/L/T | p | Cliff δ | r_rb |\n\
+                 |---|---|---|---|---|---|---|---|---|\n",
             );
             for d in self.deltas.iter().filter(|d| {
                 d.workload == *workload && d.system == *system && d.scenario == *scenario
             }) {
                 let sig = if d.ci.excludes_zero() { " ✳" } else { "" };
                 md.push_str(&format!(
-                    "| {} | {} | {} | {:+.4}{sig} | [{:+.4}, {:+.4}] | {}/{}/{} | {:.4} |\n",
+                    "| {} | {} | {} | {:+.4}{sig} | [{:+.4}, {:+.4}] | {}/{}/{} | {:.4} | \
+                     {:+.3} | {:+.3} |\n",
                     d.metric.key(),
                     d.dispatcher,
                     d.seeds.len(),
@@ -608,7 +634,9 @@ impl Comparison {
                     d.wins,
                     d.losses,
                     d.ties,
-                    d.p_wilcoxon
+                    d.p_wilcoxon,
+                    d.cliffs_delta,
+                    d.rank_biserial
                 ));
             }
             md.push_str("\nAverage rank across seeds (1 = best):\n\n");
@@ -634,7 +662,11 @@ impl Comparison {
             }
             md.push('\n');
         }
-        md.push_str("✳ = bootstrap confidence interval excludes zero.\n");
+        md.push_str(
+            "✳ = bootstrap confidence interval excludes zero. Cliff δ = Cliff's delta \
+             between the paired samples; r_rb = matched-pairs rank-biserial correlation \
+             (both in [-1, 1]; negative = candidate better on a lower-is-better metric).\n",
+        );
         md
     }
 
@@ -924,6 +956,27 @@ mod tests {
         let dist =
             std::fs::read_to_string(tmp.path().join("comparisons/delta_dist.csv")).unwrap();
         assert!(dist.contains("SJF-FF-vs-FIFO-FF"), "{dist}");
+    }
+
+    #[test]
+    fn effect_sizes_reported_next_to_p_values() {
+        let cmp = Comparison::from_records(
+            "c",
+            5,
+            &demo_records(),
+            CompareOptions { metrics: vec![Metric::Slowdown], ..Default::default() },
+        )
+        .unwrap();
+        let d = &cmp.deltas[0];
+        // SJF-FF dominates FIFO-FF on every cross pair and every paired
+        // delta is negative: both effect sizes saturate at −1
+        assert_eq!(d.cliffs_delta, -1.0);
+        assert_eq!(d.rank_biserial, -1.0);
+        let csv = cmp.deltas_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("p_wilcoxon,cliffs_delta,rank_biserial"), "{header}");
+        assert!(csv.lines().nth(1).unwrap().ends_with("-1.000000,-1.000000"), "{csv}");
+        assert!(cmp.report_md().contains("Cliff δ"), "report lacks the effect-size column");
     }
 
     #[test]

@@ -34,6 +34,12 @@ pub struct RunSpec {
     /// Derived per-run seed `mix(spec_hash, index)`, plumbed into
     /// [`crate::sim::SimOptions::seed`] and recorded in the manifest.
     pub run_seed: u64,
+    /// Derived scenario seed ([`derive_scenario_seed`]): a function of
+    /// (spec hash, scenario name, *repetition* seed) — deliberately **not**
+    /// of the run index — so every dispatcher of a repetition compiles the
+    /// identical stochastic scenario (same failure storm), keeping the
+    /// comparator's per-seed pairing a pure dispatching effect.
+    pub scenario_seed: u64,
 }
 
 /// The expanded matrix plus the spec hash it was derived from.
@@ -45,20 +51,23 @@ pub struct RunMatrix {
     pub runs: Vec<RunSpec>,
 }
 
-/// SplitMix64 finalizer: full-avalanche mixing for seed derivation (also
-/// the comparator's bootstrap-seed mixer, so statistical resampling shares
-/// the run-seed plumbing).
-pub(crate) fn mix64(mut x: u64) -> u64 {
-    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    x ^ (x >> 31)
-}
+// SplitMix64 finalizer for seed derivation; hosted in `util` next to the
+// FNV-1a spec hash so every identity-derived key shares one mixer.
+pub(crate) use crate::util::mix64;
 
 /// The per-run seed: a pure function of the spec identity and the run's
 /// matrix position — never of wall clock or execution order.
 pub fn derive_run_seed(spec_hash: u64, index: usize) -> u64 {
     mix64(spec_hash ^ mix64(index as u64))
+}
+
+/// The scenario seed feeding stochastic perturbations (failure storms): a
+/// pure function of the spec identity, the scenario name and the
+/// *repetition* seed. Every dispatcher of a repetition shares it (their
+/// paired comparison must face the same storm), while different repetition
+/// seeds — and different scenarios of one repetition — draw independently.
+pub fn derive_scenario_seed(spec_hash: u64, scenario: &str, rep_seed: u64) -> u64 {
+    mix64(mix64(spec_hash ^ crate::util::fnv1a64(scenario.as_bytes())) ^ mix64(rep_seed))
 }
 
 /// Expand a validated spec into the flat run matrix.
@@ -94,6 +103,11 @@ pub fn expand(spec: &CampaignSpec) -> anyhow::Result<RunMatrix> {
                             scenario: scenario.clone(),
                             seed,
                             run_seed: derive_run_seed(spec_hash, index),
+                            scenario_seed: derive_scenario_seed(
+                                spec_hash,
+                                &scenario.name,
+                                seed,
+                            ),
                         });
                     }
                 }
@@ -160,6 +174,22 @@ mod tests {
         other.seeds = vec![1, 2, 3];
         let c = expand(&other).unwrap();
         assert_ne!(a.runs[0].run_seed, c.runs[0].run_seed);
+    }
+
+    #[test]
+    fn scenario_seeds_shared_across_dispatchers_within_a_repetition() {
+        let m = expand(&demo()).unwrap();
+        // FIFO-FF seed 1 and SJF-FF seed 1: same scenario seed (the paired
+        // comparison must face the same storm)…
+        assert_eq!(m.runs[0].scenario_seed, m.runs[2].scenario_seed);
+        assert_eq!(m.runs[1].scenario_seed, m.runs[3].scenario_seed);
+        // …while different repetition seeds draw differently
+        assert_ne!(m.runs[0].scenario_seed, m.runs[1].scenario_seed);
+        // and a different scenario name would draw differently too
+        assert_ne!(
+            derive_scenario_seed(m.spec_hash, "a", 1),
+            derive_scenario_seed(m.spec_hash, "b", 1)
+        );
     }
 
     #[test]

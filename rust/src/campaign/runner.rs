@@ -21,7 +21,8 @@ use crate::addons::AdditionalData;
 use crate::dispatch::dispatcher_from_label;
 use crate::output::OutputCollector;
 use crate::plotdata::{PlotFactory, PlotKind};
-use crate::sim::{SimOptions, SimOutput, Simulator};
+use crate::scenario::WarpedSource;
+use crate::sim::{SimOptions, SimOutput, Simulator, SwfSource};
 use crate::traces::spec_by_name;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -143,14 +144,18 @@ impl<'a> Campaign<'a> {
         }
     }
 
-    /// Execute one run and persist it. Dispatcher, addons and simulator are
-    /// all constructed inside the calling worker thread; only plain spec
-    /// data crosses the thread boundary.
+    /// Execute one run and persist it. Dispatcher, compiled scenario
+    /// (workload transforms + addons) and simulator are all constructed
+    /// inside the calling worker thread; only plain spec data crosses the
+    /// thread boundary. Stochastic perturbations compile from the run's
+    /// scenario seed (repetition-keyed — see
+    /// [`super::matrix::derive_scenario_seed`]).
     fn exec_run(&self, run: &RunSpec, workload: &Path) -> anyhow::Result<()> {
         let dispatcher = dispatcher_from_label(&run.dispatcher)?;
+        let compiled = run.scenario.compile(run.scenario_seed, run.sys.total_nodes())?;
         let addons = match self.addon_factory {
             Some(f) => f(),
-            None => run.scenario.build_addons(),
+            None => compiled.addons,
         };
         let opts = SimOptions {
             seed: run.run_seed,
@@ -158,7 +163,9 @@ impl<'a> Campaign<'a> {
             output: OutputCollector::in_memory(true, true),
             ..Default::default()
         };
-        let mut sim = Simulator::new(workload, run.sys.clone(), dispatcher, opts)?;
+        let source = SwfSource::open(workload, &run.sys, opts.factory.clone())?;
+        let source = WarpedSource::wrap(Box::new(source), compiled.warps);
+        let mut sim = Simulator::with_source(source, run.sys.clone(), dispatcher, opts);
         let out = sim.run()?;
         store::write_run(&store::run_dir(&self.out_dir, &run.run_id), run, &out)?;
         Ok(())

@@ -10,6 +10,9 @@
 
 use crate::addons::{AdditionalData, FailureInjector, PowerModel};
 use crate::config::SysConfig;
+use crate::scenario::{
+    maintenance_plan, storm_plan, CompiledScenario, Perturbation, PowerCapSchedule, SubmitWarp,
+};
 use crate::traces::spec_by_name;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -173,38 +176,143 @@ pub struct PowerSpec {
     pub cadence: u64,
 }
 
-/// One addon scenario: a named bundle of additional-data providers every run
-/// of the scenario is perturbed/observed by. Scenarios are *data*, so the
-/// runner can rebuild fresh provider instances inside each worker thread.
+/// One addon scenario: a named bundle of perturbations every run of the
+/// scenario is subjected to / observed by. Scenarios are *data*, so the
+/// runner can rebuild fresh transform and provider instances inside each
+/// worker thread.
+///
+/// The scenario vocabulary proper lives in [`crate::scenario`]: the
+/// `perturbations` list carries the four declarative kinds (arrival
+/// surge, rolling maintenance, failure storm, power-cap schedule). The
+/// older `power`/`failures` fields are kept as sugar — a power model and a
+/// hand-listed failure plan are common enough to deserve first-class
+/// spelling — and compile through the same machinery.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioSpec {
     /// Scenario name (unique per campaign; part of every run id).
     pub name: String,
-    /// Optional power/energy model.
+    /// Optional power/energy model (sugar for an always-on observer).
     pub power: Option<PowerSpec>,
-    /// `(node, fail_at, repair_at)` failure windows.
+    /// `(node, fail_at, repair_at)` failure windows (sugar for a fixed,
+    /// hand-listed failure plan).
     pub failures: Vec<(u32, u64, u64)>,
+    /// Declarative perturbations ([`Perturbation`]); compiled per run into
+    /// workload transforms and additional-data providers.
+    pub perturbations: Vec<Perturbation>,
 }
 
 impl ScenarioSpec {
-    /// The addon-free scenario every campaign has by default.
+    /// The perturbation-free scenario every campaign has by default.
     pub fn baseline() -> Self {
-        ScenarioSpec { name: "baseline".to_string(), power: None, failures: Vec::new() }
+        Self::named("baseline")
     }
 
-    /// Instantiate fresh provider instances for one run.
-    pub fn build_addons(&self) -> Vec<Box<dyn AdditionalData>> {
+    /// An empty scenario with the given name (extend with the `power` /
+    /// `failures` sugar fields or [`ScenarioSpec::with_perturbation`]).
+    pub fn named(name: &str) -> Self {
+        ScenarioSpec {
+            name: name.to_string(),
+            power: None,
+            failures: Vec::new(),
+            perturbations: Vec::new(),
+        }
+    }
+
+    /// Append one perturbation (builder style).
+    pub fn with_perturbation(mut self, p: Perturbation) -> Self {
+        self.perturbations.push(p);
+        self
+    }
+
+    /// Structural validation of the scenario's own data (failure-window
+    /// ordering, perturbation parameters). Part of
+    /// [`CampaignSpec::validate`], so a bad scenario is rejected before
+    /// any run executes.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for &(_, fail_at, repair_at) in &self.failures {
+            anyhow::ensure!(
+                fail_at < repair_at,
+                "scenario {:?}: failure window [{fail_at}, {repair_at}) is empty",
+                self.name
+            );
+        }
+        for p in &self.perturbations {
+            p.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
+        }
+        Ok(())
+    }
+
+    /// Lower the scenario into executable form for one run: submit-time
+    /// warps plus fresh additional-data providers.
+    ///
+    /// `scenario_seed` feeds the stochastic perturbations (failure
+    /// storms). In a campaign it is derived from the *repetition* seed
+    /// ([`super::matrix::derive_scenario_seed`]) — identical across the
+    /// dispatchers of a repetition, so their paired comparison sees the
+    /// same storm — and standalone `simulate --scenario` passes
+    /// [`crate::sim::SimOptions::seed`] directly. `nodes` is the system
+    /// size; maintenance sweeps and storm anchors wrap around it, and a
+    /// hand-listed failure plan naming a node beyond it is rejected here.
+    pub fn compile(&self, scenario_seed: u64, nodes: u64) -> anyhow::Result<CompiledScenario> {
+        anyhow::ensure!(nodes > 0, "scenario {:?}: system has no nodes", self.name);
+        self.validate()?;
+        let mut warps: Vec<SubmitWarp> = Vec::new();
         let mut addons: Vec<Box<dyn AdditionalData>> = Vec::new();
         if let Some(p) = &self.power {
             addons.push(Box::new(PowerModel::new(p.idle_w, p.max_w).with_cadence(p.cadence)));
         }
-        if !self.failures.is_empty() {
-            addons.push(Box::new(FailureInjector::new(self.failures.clone())));
+        // Every failure-plan source — the `failures` sugar, maintenance
+        // windows, storm draws — merges into ONE injector: overlapping
+        // windows on a node union instead of flapping it, and the
+        // published `failures.down_nodes` counts all of them.
+        let mut plan = self.failures.clone();
+        for (idx, p) in self.perturbations.iter().enumerate() {
+            match p {
+                Perturbation::ArrivalSurge { from, until, factor } => {
+                    warps.push(SubmitWarp { from: *from, until: *until, factor: *factor });
+                }
+                Perturbation::Maintenance { from, until, every, duration, width } => {
+                    plan.extend(maintenance_plan(
+                        *from, *until, *every, *duration, *width, nodes,
+                    ));
+                }
+                Perturbation::FailureStorm { from, until, storms, width, repair } => {
+                    // one independent stream per storm perturbation, all
+                    // keyed off the scenario seed
+                    let seed = super::matrix::mix64(
+                        scenario_seed
+                            ^ crate::util::fnv1a64(format!("storm#{idx}").as_bytes()),
+                    );
+                    plan.extend(storm_plan(
+                        *from, *until, *storms, *width, *repair, nodes, seed,
+                    ));
+                }
+                Perturbation::PowerCap { steps, watts_per_slot } => {
+                    addons.push(Box::new(PowerCapSchedule::new(
+                        steps.clone(),
+                        *watts_per_slot,
+                    )));
+                }
+            }
         }
-        addons
+        for &(node, _, _) in &plan {
+            anyhow::ensure!(
+                (node as u64) < nodes,
+                "scenario {:?}: failure plan names node {node}, but the system has only \
+                 {nodes} nodes (0-based)",
+                self.name
+            );
+        }
+        if !plan.is_empty() {
+            addons.push(Box::new(FailureInjector::new(plan)));
+        }
+        Ok(CompiledScenario { warps, addons })
     }
 
-    fn to_json(&self) -> Json {
+    /// Serialize to the spec's JSON object form (`perturbations` is only
+    /// emitted when non-empty, so pre-vocabulary specs keep their
+    /// identity hash).
+    pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("name".to_string(), Json::Str(self.name.clone()));
         if let Some(p) = &self.power {
@@ -228,10 +336,18 @@ impl ScenarioSpec {
                 .collect();
             m.insert("failures".to_string(), Json::Arr(rows));
         }
+        if !self.perturbations.is_empty() {
+            m.insert(
+                "perturbations".to_string(),
+                Json::Arr(self.perturbations.iter().map(|p| p.to_json()).collect()),
+            );
+        }
         Json::Obj(m)
     }
 
-    fn from_json(v: &Json) -> anyhow::Result<Self> {
+    /// Parse the spec's JSON object form (the inverse of
+    /// [`ScenarioSpec::to_json`]); validates on the way in.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
         let name = v
             .get("name")
             .and_then(|s| s.as_str())
@@ -267,7 +383,18 @@ impl ScenarioSpec {
                 failures.push((f[0] as u32, f[1], f[2]));
             }
         }
-        Ok(ScenarioSpec { name, power, failures })
+        let mut perturbations = Vec::new();
+        if let Some(rows) = v.get("perturbations").and_then(|p| p.as_arr()) {
+            for row in rows {
+                perturbations.push(
+                    Perturbation::from_json(row)
+                        .map_err(|e| anyhow::anyhow!("scenario {name:?}: {e}"))?,
+                );
+            }
+        }
+        let spec = ScenarioSpec { name, power, failures, perturbations };
+        spec.validate()?;
+        Ok(spec)
     }
 }
 
@@ -415,6 +542,9 @@ impl CampaignSpec {
             "campaign {:?} has duplicate scenario names",
             self.name
         );
+        for s in &self.scenarios {
+            s.validate()?;
+        }
         // Labels become run-id / manifest components: collisions (two SWFs
         // with the same file stem, two entries of the same trace whose
         // scales round to the same label) would make results
@@ -564,9 +694,9 @@ mod tests {
             .add_system_trace("seth")
             .gen_dispatchers(&["FIFO", "SJF"], &["FF"])
             .add_scenario(ScenarioSpec {
-                name: "power".to_string(),
                 power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 300 }),
                 failures: vec![(0, 100, 2000)],
+                ..ScenarioSpec::named("power")
             });
         spec.seeds = vec![1, 2];
         spec
@@ -647,13 +777,105 @@ mod tests {
     }
 
     #[test]
-    fn scenario_builds_declared_addons() {
+    fn scenario_compiles_declared_addons() {
         let spec = demo();
-        assert_eq!(spec.scenarios[0].build_addons().len(), 0);
-        let addons = spec.scenarios[1].build_addons();
-        assert_eq!(addons.len(), 2);
-        assert_eq!(addons[0].name(), "power");
-        assert_eq!(addons[1].name(), "failures");
+        let baseline = spec.scenarios[0].compile(0, 8).unwrap();
+        assert_eq!(baseline.addons.len(), 0);
+        assert!(baseline.warps.is_empty());
+        let compiled = spec.scenarios[1].compile(0, 8).unwrap();
+        assert_eq!(compiled.addons.len(), 2);
+        assert_eq!(compiled.addons[0].name(), "power");
+        assert_eq!(compiled.addons[1].name(), "failures");
+    }
+
+    #[test]
+    fn scenario_with_perturbations_roundtrips_and_hashes() {
+        use crate::scenario::Perturbation;
+        let mut spec = demo();
+        let plain_hash = spec.spec_hash().unwrap();
+        spec.add_scenario(
+            ScenarioSpec::named("storm-day")
+                .with_perturbation(Perturbation::ArrivalSurge {
+                    from: 0,
+                    until: 40_000,
+                    factor: 3.0,
+                })
+                .with_perturbation(Perturbation::Maintenance {
+                    from: 3600,
+                    until: 90_000,
+                    every: 43_200,
+                    duration: 7200,
+                    width: 2,
+                })
+                .with_perturbation(Perturbation::FailureStorm {
+                    from: 0,
+                    until: 50_000,
+                    storms: 2,
+                    width: 3,
+                    repair: 1800,
+                })
+                .with_perturbation(Perturbation::PowerCap {
+                    steps: vec![(0, 1e6), (28_800, 400.0)],
+                    watts_per_slot: 20.0,
+                }),
+        );
+        spec.validate().unwrap();
+        let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.scenarios, spec.scenarios);
+        assert_eq!(back.spec_hash().unwrap(), spec.spec_hash().unwrap());
+        // perturbations are part of the spec identity
+        assert_ne!(spec.spec_hash().unwrap(), plain_hash);
+    }
+
+    #[test]
+    fn perturbation_free_scenarios_keep_their_legacy_hash_shape() {
+        // `perturbations` is only serialized when non-empty, so a spec
+        // written before the vocabulary existed parses and hashes the same
+        let spec = demo();
+        assert!(!spec.to_json().contains("perturbations"));
+    }
+
+    #[test]
+    fn scenario_compile_merges_failure_sources_and_checks_nodes() {
+        use crate::scenario::Perturbation;
+        let sc = ScenarioSpec {
+            failures: vec![(0, 100, 2000)],
+            ..ScenarioSpec::named("mixed")
+        }
+        .with_perturbation(Perturbation::Maintenance {
+            from: 0,
+            until: 1000,
+            every: 1000,
+            duration: 100,
+            width: 1,
+        });
+        // sugar plan + maintenance plan merge into one injector
+        let compiled = sc.compile(7, 4).unwrap();
+        assert_eq!(compiled.addons.len(), 1);
+        assert_eq!(compiled.addons[0].name(), "failures");
+        // a hand-listed plan naming a node beyond the system errors out
+        let oob = ScenarioSpec { failures: vec![(9, 0, 10)], ..ScenarioSpec::named("oob") };
+        let err = oob.compile(7, 4).unwrap_err();
+        assert!(err.to_string().contains("node 9"), "{err}");
+        assert!(oob.compile(7, 0).is_err(), "zero-node system is rejected");
+    }
+
+    #[test]
+    fn storm_compilation_keys_off_the_scenario_seed() {
+        use crate::scenario::Perturbation;
+        let sc = ScenarioSpec::named("storm").with_perturbation(Perturbation::FailureStorm {
+            from: 1000,
+            until: 1_000_000,
+            storms: 2,
+            width: 2,
+            repair: 600,
+        });
+        // the injector's earliest timer is the earliest storm boundary — a
+        // deterministic observable of the drawn plan
+        let first_timer =
+            |seed: u64| sc.compile(seed, 16).unwrap().addons[0].next_event(0).unwrap();
+        assert_eq!(first_timer(1), first_timer(1), "same seed, same storm");
+        assert_ne!(first_timer(1), first_timer(2), "different seed, different storm");
     }
 
     #[test]

@@ -38,6 +38,12 @@ COMMANDS:
            [--out-jobs jobs.csv] [--out-perf perf.csv]
            [--power IDLE_W,MAX_W] [--power-cadence SECS]
            [--fail NODE:FAIL_AT:REPAIR_AT[,...]] [--mem-sample-secs SECS]
+           [--scenario scenario.json] [--seed N]
+           --scenario applies a campaign scenario object (power/failures
+           sugar + perturbations: arrival_surge, maintenance,
+           failure_storm, power_cap; see docs/campaign-spec.md); --seed
+           feeds its stochastic perturbations and seed-sensitive
+           dispatchers (FIFO_RND/SJF_RND/LJF_RND)
   experiment <workload.swf> --sys <cfg.json> [--name NAME]
            [--schedulers FIFO,SJF,LJF,EBF] [--allocators FF,BF] [--reps 1]
   campaign run <spec.json> [--out DIR] [--jobs N]
@@ -149,6 +155,8 @@ fn parse_addons(args: &Args, nodes: u64) -> anyhow::Result<Vec<Box<dyn Additiona
 }
 
 fn simulate(args: &Args) -> anyhow::Result<()> {
+    use accasim::scenario::WarpedSource;
+    use accasim::sim::SwfSource;
     let workload = need_workload(args)?;
     let sys = need_sys(args)?;
     let d = dispatcher_from_label(&args.get("dispatcher", "FIFO-FF"))?;
@@ -159,12 +167,36 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(p) = args.get_opt("out-perf") {
         output = output.with_perf_file(p)?;
     }
-    let addons = parse_addons(args, sys.total_nodes())?;
+    let seed: u64 = args.get_parse("seed", 0)?;
+    let mut addons = parse_addons(args, sys.total_nodes())?;
+    // A full scenario object (the campaign `scenarios` entry format):
+    // power/failures sugar plus the perturbation vocabulary, compiled
+    // against this system and the run seed.
+    let mut warps = Vec::new();
+    if let Some(p) = args.get_opt("scenario") {
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| anyhow::anyhow!("reading scenario {p}: {e}"))?;
+        let scenario = accasim::campaign::ScenarioSpec::from_json(
+            &accasim::util::json::Json::parse(&text)?,
+        )?;
+        let compiled = scenario.compile(seed, sys.total_nodes())?;
+        warps = compiled.warps;
+        addons.extend(compiled.addons);
+    }
     let mem_sample_secs: u64 = args.get_parse("mem-sample-secs", 300)?;
     args.reject_unknown()?;
-    let opts = SimOptions { output, addons, mem_sample_secs, ..Default::default() };
-    let mut sim = Simulator::new(&workload, sys, d, opts)?;
+    let opts = SimOptions { output, addons, mem_sample_secs, seed, ..Default::default() };
+    let source = SwfSource::open(&workload, &sys, opts.factory.clone())?;
+    let source = WarpedSource::wrap(Box::new(source), warps);
+    let mut sim = Simulator::with_source(source, sys, d, opts);
     let out = sim.run()?;
+    if out.lines_skipped > 0 {
+        eprintln!(
+            "warning: {} malformed workload line(s) skipped while reading {}",
+            out.lines_skipped,
+            workload.display()
+        );
+    }
     println!("dispatcher        : {}", out.dispatcher);
     println!("jobs completed    : {}", out.jobs_completed);
     println!("jobs rejected     : {}", out.jobs_rejected);
@@ -266,6 +298,18 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
                     recs.len(),
                     mean(&sd),
                     mean(&wt)
+                );
+            }
+            // Surface workload preprocessing: malformed SWF lines are
+            // skipped (§6.2) and recorded per run in run.json; a non-zero
+            // total deserves a visible warning, not a silent drop.
+            let skipped_lines: u64 = report.records.iter().map(|r| r.lines_skipped).sum();
+            if skipped_lines > 0 {
+                let affected =
+                    report.records.iter().filter(|r| r.lines_skipped > 0).count();
+                eprintln!(
+                    "warning: {skipped_lines} malformed workload line(s) skipped across \
+                     {affected} run(s); per-run counts are recorded in run.json"
                 );
             }
             println!("index: {}", report.index.display());

@@ -153,9 +153,11 @@ impl Dispatcher {
 }
 
 /// Construct a dispatcher from `"FIFO-FF"`-style labels. Supported
-/// schedulers: FIFO, SJF, LJF, EBF, EBF_SJF, EBF_LJF, CBF, REJECT;
-/// allocators: FF, BF, WF. (XlaFit requires an engine; build it
-/// explicitly.)
+/// schedulers: FIFO, SJF, LJF (plus the seed-sensitive `_RND`
+/// randomized-tie-break variants), EBF, EBF_SJF, EBF_LJF, CBF, PCAP
+/// (power-capped FIFO driven by the `power.cap_w` metric a power-cap
+/// schedule scenario publishes), REJECT; allocators: FF, BF, WF. (XlaFit
+/// requires an engine; build it explicitly.)
 pub fn dispatcher_from_label(label: &str) -> anyhow::Result<Dispatcher> {
     let (s, a) = label
         .split_once('-')
@@ -164,10 +166,21 @@ pub fn dispatcher_from_label(label: &str) -> anyhow::Result<Dispatcher> {
         "FIFO" => Box::new(FifoScheduler::new()),
         "SJF" => Box::new(SjfScheduler::new()),
         "LJF" => Box::new(LjfScheduler::new()),
+        "FIFO_RND" => Box::new(SortingScheduler::with_random_ties(SortPolicy::Fifo)),
+        "SJF_RND" => Box::new(SortingScheduler::with_random_ties(SortPolicy::Sjf)),
+        "LJF_RND" => Box::new(SortingScheduler::with_random_ties(SortPolicy::Ljf)),
         "EBF" => Box::new(EasyBackfilling::new()),
         "EBF_SJF" => Box::new(EasyBackfilling::with_priority(SortPolicy::Sjf)),
         "EBF_LJF" => Box::new(EasyBackfilling::with_priority(SortPolicy::Ljf)),
         "CBF" => Box::new(ConservativeBackfilling::new()),
+        // Uncapped until a power-cap schedule publishes `power.cap_w`; the
+        // 20 W/slot marginal estimate is likewise overridden by the
+        // published `power.watts_per_slot`.
+        "PCAP" => Box::new(PowerCapped::new(
+            Box::new(FifoScheduler::new()),
+            f64::INFINITY,
+            20.0,
+        )),
         "REJECT" => Box::new(RejectScheduler::new()),
         other => anyhow::bail!("unknown scheduler {other:?}"),
     };
@@ -211,7 +224,18 @@ mod tests {
 
     #[test]
     fn extension_dispatchers_constructible() {
-        for label in ["CBF-FF", "CBF-BF", "EBF_SJF-FF", "EBF_LJF-BF", "FIFO-WF", "SJF-WF"] {
+        for label in [
+            "CBF-FF",
+            "CBF-BF",
+            "EBF_SJF-FF",
+            "EBF_LJF-BF",
+            "FIFO-WF",
+            "SJF-WF",
+            "FIFO_RND-FF",
+            "SJF_RND-BF",
+            "LJF_RND-FF",
+            "PCAP-FF",
+        ] {
             let d = dispatcher_from_label(label).unwrap();
             assert_eq!(d.label(), label.to_string());
         }

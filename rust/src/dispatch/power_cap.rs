@@ -7,16 +7,24 @@
 //! [`crate::addons::PowerModel`], each candidate job's marginal draw is
 //! estimated from its slot count, and starts that would exceed the budget
 //! are deferred (the inner decision is truncated, preserving its order).
+//!
+//! The budget can be *time-varying*: when a
+//! [`crate::scenario::PowerCapSchedule`] addon publishes `power.cap_w`
+//! (and optionally `power.watts_per_slot`), those published values
+//! override the static fields at every dispatch cycle — the scenario's
+//! daytime cap drives the dispatcher without rebuilding it.
 
 use super::{Allocator, Decision, Scheduler, SystemView};
 use crate::resources::ResourceManager;
 
-/// A scheduler decorator enforcing a power budget.
+/// A scheduler decorator enforcing a (possibly time-varying) power budget.
 pub struct PowerCapped {
     inner: Box<dyn Scheduler>,
-    /// System power budget in watts.
+    /// Static system power budget in watts; overridden by a published
+    /// `power.cap_w` metric when present.
     pub budget_w: f64,
-    /// Estimated marginal draw of one running slot (W).
+    /// Estimated marginal draw of one running slot (W); overridden by a
+    /// published `power.watts_per_slot` metric when present.
     pub watts_per_slot: f64,
     /// Starts deferred by the cap so far (observability).
     pub deferred: u64,
@@ -41,12 +49,16 @@ impl Scheduler for PowerCapped {
     ) -> Decision {
         let mut inner = self.inner.schedule(view, rm, alloc);
         let mut draw = view.extra.get("power.system_w").copied().unwrap_or(0.0);
+        // a power-cap schedule scenario publishes the budget of the moment
+        let budget = view.extra.get("power.cap_w").copied().unwrap_or(self.budget_w);
+        let watts_per_slot =
+            view.extra.get("power.watts_per_slot").copied().unwrap_or(self.watts_per_slot);
         let mut kept = Vec::new();
         let mut dropped = Vec::new();
         for (id, a) in inner.started.drain(..) {
             let slots: u64 = a.slices.iter().map(|&(_, s)| s as u64).sum();
-            let marginal = slots as f64 * self.watts_per_slot;
-            if draw + marginal <= self.budget_w {
+            let marginal = slots as f64 * watts_per_slot;
+            if draw + marginal <= budget {
                 draw += marginal;
                 kept.push((id, a));
             } else {
@@ -136,6 +148,60 @@ mod tests {
         let view = SystemView { now: 0, queue: vec![&j1, &j2], running: vec![], extra: &empty };
         let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
         assert_eq!(d.started.len(), 1);
+    }
+
+    #[test]
+    fn published_cap_overrides_the_static_budget() {
+        let (mut rm, mut extra) = setup();
+        // static budget is unlimited, but the published cap of the moment
+        // (500 W over a 400 W draw at 20 W/slot) admits only one 4-slot job
+        extra.insert("power.cap_w".to_string(), 500.0);
+        extra.insert("power.watts_per_slot".to_string(), 20.0);
+        let mut s = PowerCapped::new(Box::new(FifoScheduler::new()), f64::INFINITY, 999.0);
+        let j1 = job(1, 4);
+        let j2 = job(2, 4);
+        let view = SystemView { now: 0, queue: vec![&j1, &j2], running: vec![], extra: &extra };
+        let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
+        assert_eq!(d.started.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(s.deferred, 1);
+    }
+
+    #[test]
+    fn scheduled_cap_defers_then_releases() {
+        // End to end: a PCAP dispatcher under a power-cap schedule. The cap
+        // active from t=0 admits one job at a time; the schedule lifts it
+        // at t=1000 (an addon timer event), after which the queue drains in
+        // parallel — the raise must fire even with no job event pending.
+        use crate::dispatch::Dispatcher;
+        use crate::output::OutputCollector;
+        use crate::scenario::PowerCapSchedule;
+        use crate::sim::{SimOptions, Simulator};
+        let sys = SysConfig::homogeneous("t", 4, &[("core", 4)], 0);
+        let jobs: Vec<Job> = (1..=2)
+            .map(|i| Job { duration: 2000, req_time: 2000, ..job(i, 4) })
+            .collect();
+        let capped = Dispatcher::new(
+            Box::new(PowerCapped::new(Box::new(FifoScheduler::new()), f64::INFINITY, 20.0)),
+            Box::new(FirstFit::new()),
+        );
+        let opts = SimOptions {
+            addons: vec![Box::new(PowerCapSchedule::new(
+                // 4 slots × 20 W = 80 W per job: cap 100 admits one job,
+                // cap 1000 admits the rest
+                vec![(0, 100.0), (1000, 1000.0)],
+                20.0,
+            ))],
+            mem_sample_secs: 0,
+            output: OutputCollector::in_memory(true, false),
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs, sys, capped, opts);
+        let out = sim.run().unwrap();
+        assert_eq!(out.jobs_completed, 2);
+        let mut starts: Vec<u64> = out.jobs.iter().map(|r| r.start).collect();
+        starts.sort_unstable();
+        assert_eq!(starts[0], 0, "first job starts under the low cap");
+        assert_eq!(starts[1], 1000, "second start waits for the cap raise timer");
     }
 
     #[test]

@@ -19,34 +19,75 @@ pub enum SortPolicy {
 /// A scheduler that orders the queue by a key and then starts jobs greedily
 /// until the first job that does not fit (no skipping — skipping ahead is
 /// exactly what distinguishes backfilling).
+///
+/// With [`SortingScheduler::with_random_ties`] the secondary sort key —
+/// normally arrival order — becomes a seeded per-job hash, so jobs tied on
+/// the primary key (equal `req_time` for SJF/LJF, equal submission second
+/// for FIFO) start in a seed-dependent order. The seed is the run seed
+/// published as `extra["run.seed"]` ([`crate::sim::SimOptions::seed`]):
+/// identical seeds reproduce identical schedules, and campaign repetition
+/// seeds exercise genuine dispatcher nondeterminism instead of replaying
+/// one arbitrary tie order.
 pub struct SortingScheduler {
     policy: SortPolicy,
     name: &'static str,
+    /// Tie-break among equal primary keys by a seeded hash instead of
+    /// arrival order.
+    random_ties: bool,
     /// scratch: indices into the queue
     order: Vec<u32>,
 }
 
 impl SortingScheduler {
+    /// Deterministic scheduler with arrival-order tie-breaking (the
+    /// classic FIFO/SJF/LJF).
     pub fn with_policy(policy: SortPolicy) -> Self {
         let name = match policy {
             SortPolicy::Fifo => "FIFO",
             SortPolicy::Sjf => "SJF",
             SortPolicy::Ljf => "LJF",
         };
-        SortingScheduler { policy, name, order: Vec::new() }
+        SortingScheduler { policy, name, random_ties: false, order: Vec::new() }
     }
 
-    fn sort(&mut self, queue: &[&Job]) {
+    /// Seed-sensitive variant: ties on the primary key break by a hash of
+    /// `(run seed, job id)` (labels `FIFO_RND`/`SJF_RND`/`LJF_RND`).
+    pub fn with_random_ties(policy: SortPolicy) -> Self {
+        let name = match policy {
+            SortPolicy::Fifo => "FIFO_RND",
+            SortPolicy::Sjf => "SJF_RND",
+            SortPolicy::Ljf => "LJF_RND",
+        };
+        SortingScheduler { policy, name, random_ties: true, order: Vec::new() }
+    }
+
+    fn sort(&mut self, queue: &[&Job], seed: u64) {
         self.order.clear();
         self.order.extend(0..queue.len() as u32);
+        // Secondary key: arrival order, or a seeded full-avalanche hash of
+        // the job id (stable within a run, independent of queue position).
+        let random = self.random_ties;
+        let tie = move |i: u32| -> u64 {
+            if random {
+                crate::util::mix64(seed ^ queue[i as usize].id)
+            } else {
+                i as u64
+            }
+        };
         match self.policy {
-            SortPolicy::Fifo => {}
-            SortPolicy::Sjf => self
-                .order
-                .sort_by_key(|&i| (queue[i as usize].req_time, i)),
+            SortPolicy::Fifo => {
+                if self.random_ties {
+                    // FIFO's primary key is the submission time itself;
+                    // jobs submitted at the same second shuffle.
+                    self.order.sort_by_key(|&i| (queue[i as usize].submit, tie(i)));
+                }
+            }
+            SortPolicy::Sjf => {
+                self.order.sort_by_key(|&i| (queue[i as usize].req_time, tie(i)))
+            }
             SortPolicy::Ljf => self
                 .order
-                .sort_by_key(|&i| (std::cmp::Reverse(queue[i as usize].req_time), i)),
+                .sort_by_key(|&i| (std::cmp::Reverse(queue[i as usize].req_time), tie(i))),
         }
     }
 }
@@ -63,7 +104,12 @@ impl Scheduler for SortingScheduler {
         alloc: &mut dyn Allocator,
     ) -> Decision {
         let mut decision = Decision::default();
-        self.sort(&view.queue);
+        // `run.seed` is published by the event manager before the first
+        // dispatch; the f64 round-trip is exact (campaign seeds are
+        // validated ≤ 2^53 and derived seeds reach dispatchers via this
+        // same channel only for tie-breaking, where truncation is benign).
+        let seed = view.extra.get("run.seed").map(|s| *s as u64).unwrap_or(0);
+        self.sort(&view.queue, seed);
         for &i in &self.order {
             let job = view.queue[i as usize];
             match alloc.place(job, rm) {
@@ -271,6 +317,88 @@ mod tests {
             d.started.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
             vec![10, 11]
         );
+    }
+
+    #[test]
+    fn random_ties_are_seeded_and_deterministic() {
+        let extra_for = |seed: f64| {
+            let mut m = BTreeMap::new();
+            m.insert("run.seed".to_string(), seed);
+            m
+        };
+        // 12 jobs tied on req_time; capacity for all, so the decision
+        // order *is* the sort order
+        let jobs: Vec<Job> = (1..=12).map(|i| job(i, 1, 5)).collect();
+        let order_with = |seed: f64| {
+            let mut rm = ResourceManager::from_config(&SysConfig::homogeneous(
+                "t",
+                12,
+                &[("core", 4)],
+                0,
+            ));
+            let mut s = SortingScheduler::with_random_ties(SortPolicy::Sjf);
+            let extra = extra_for(seed);
+            let queue: Vec<&Job> = jobs.iter().collect();
+            let view = SystemView { now: 0, queue, running: Vec::new(), extra: &extra };
+            let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
+            d.started.iter().map(|(id, _)| *id).collect::<Vec<_>>()
+        };
+        let a = order_with(1.0);
+        assert_eq!(a, order_with(1.0), "same seed must replay identically");
+        assert_ne!(a, order_with(2.0), "different seeds must break ties differently");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (1..=12).collect::<Vec<_>>(), "a permutation, nothing dropped");
+    }
+
+    #[test]
+    fn random_ties_respect_the_primary_key() {
+        // two duration classes: every short job must still precede every
+        // long one under SJF_RND; only the order *within* a class shuffles
+        let mut rm = ResourceManager::from_config(&SysConfig::homogeneous(
+            "t",
+            8,
+            &[("core", 4)],
+            0,
+        ));
+        let jobs: Vec<Job> =
+            (1..=4).map(|i| job(i, 1, 5)).chain((5..=8).map(|i| job(i, 1, 500))).collect();
+        let mut extra = BTreeMap::new();
+        extra.insert("run.seed".to_string(), 7.0);
+        let queue: Vec<&Job> = jobs.iter().collect();
+        let view = SystemView { now: 0, queue, running: Vec::new(), extra: &extra };
+        let mut s = SortingScheduler::with_random_ties(SortPolicy::Sjf);
+        let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
+        let ids: Vec<u64> = d.started.iter().map(|(id, _)| *id).collect();
+        assert!(ids[..4].iter().all(|&id| id <= 4), "short jobs first: {ids:?}");
+        assert!(ids[4..].iter().all(|&id| id >= 5), "long jobs last: {ids:?}");
+        assert_eq!(s.name(), "SJF_RND");
+    }
+
+    #[test]
+    fn fifo_random_ties_shuffle_only_equal_submit_seconds() {
+        let mut rm = rm();
+        let extra = {
+            let mut m = BTreeMap::new();
+            m.insert("run.seed".to_string(), 3.0);
+            m
+        };
+        let early = job(9, 1, 10);
+        let mut late_a = job(1, 1, 10);
+        late_a.submit = 100;
+        let mut late_b = job(2, 1, 10);
+        late_b.submit = 100;
+        let mut s = SortingScheduler::with_random_ties(SortPolicy::Fifo);
+        let view = SystemView {
+            now: 100,
+            queue: vec![&early, &late_a, &late_b],
+            running: Vec::new(),
+            extra: &extra,
+        };
+        let d = s.schedule(&view, &mut rm, &mut FirstFit::new());
+        let ids: Vec<u64> = d.started.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids[0], 9, "earlier submission always goes first");
+        assert_eq!(s.name(), "FIFO_RND");
     }
 
     #[test]

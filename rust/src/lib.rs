@@ -17,6 +17,10 @@
 //! * [`dispatch`] — schedulers (FIFO, SJF, LJF, EBF) and allocators (FF, BF,
 //!   and the XLA-accelerated [`dispatch::XlaFit`]).
 //! * [`addons`] — the *additional data* interface (power/energy, failures).
+//! * [`scenario`] — the scenario engine: a declarative perturbation
+//!   vocabulary (arrival surges, rolling maintenance, failure storms,
+//!   power-cap schedules) compiled into workload transforms and
+//!   additional-data providers.
 //! * [`monitor`] — system status, utilization visualization, CPU/memory probes.
 //! * [`output`] — dispatching-decision and simulator-performance records.
 //! * [`stats`] — descriptive statistics used by the plot factory, plus the
@@ -51,14 +55,13 @@
 
 // Public-API documentation is enforced (`cargo doc` runs with
 // `-D warnings` in CI, and every public item must carry a doc comment).
-// The flagship user-facing modules — `campaign`, `experiment`, `plotdata`,
-// `stats` — are fully documented; the simulator-internal modules below are
-// deliberately allowlisted item-by-item (`#[allow(missing_docs)]`) until
-// they get their own documentation pass, so new flagship items can never
-// regress silently.
+// The flagship user-facing modules — `campaign`, `scenario`, `experiment`,
+// `plotdata`, `stats`, `addons`, `workload` — are fully documented; the
+// simulator-internal modules below are deliberately allowlisted
+// item-by-item (`#[allow(missing_docs)]`) until they get their own
+// documentation pass, so new flagship items can never regress silently.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)] // internal: additional-data providers, documented at module level
 pub mod addons;
 #[allow(missing_docs)] // internal: Table-1 baseline harness
 pub mod baselines;
@@ -83,6 +86,7 @@ pub mod resources;
 pub mod rng;
 #[allow(missing_docs)] // internal: PJRT bridge
 pub mod runtime;
+pub mod scenario;
 #[allow(missing_docs)] // internal: discrete-event core
 pub mod sim;
 pub mod stats;
@@ -96,7 +100,6 @@ pub mod testutil;
 pub mod traces;
 #[allow(missing_docs)] // internal: json/args/idhash helpers
 pub mod util;
-#[allow(missing_docs)] // internal: job model and SWF I/O
 pub mod workload;
 
 /// Convenience re-exports covering the public API surface used by examples.
@@ -114,6 +117,7 @@ pub mod prelude {
     pub use crate::generator::WorkloadGenerator;
     pub use crate::plotdata::PlotFactory;
     pub use crate::resources::ResourceManager;
+    pub use crate::scenario::Perturbation;
     pub use crate::sim::{SimOptions, SimOutput, Simulator};
     pub use crate::workload::{Job, JobState, SwfReader, SwfWriter};
 }

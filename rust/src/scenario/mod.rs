@@ -1,0 +1,59 @@
+//! The scenario engine: a declarative perturbation vocabulary for
+//! campaign studies.
+//!
+//! AccaSim's pitch is representing "various real HPC systems" — but the
+//! interesting operating conditions a real center sees are not just a
+//! workload file and a static system: submission bursts, rolling
+//! maintenance, correlated failure storms, daytime power caps. This module
+//! turns those into *data*: a [`Perturbation`] is a JSON-serializable
+//! description that a campaign scenario
+//! ([`crate::campaign::spec::ScenarioSpec`]) carries in its
+//! `perturbations` list, participating in the spec identity hash exactly
+//! like every other axis.
+//!
+//! Compilation ([`ScenarioSpec::compile`]) lowers the vocabulary onto the
+//! two hooks the simulator already has:
+//!
+//! * **workload transforms** — monotone rewrites of the job stream before
+//!   simulation ([`SubmitWarp`] / [`WarpedSource`], used by arrival
+//!   surges);
+//! * **additional-data providers** — timer-driven
+//!   [`crate::addons::AdditionalData`] instances on the unified event
+//!   queue (maintenance and storm plans feed the acknowledged-`DisableNode`
+//!   machinery of [`crate::addons::FailureInjector`]; power-cap schedules
+//!   feed [`PowerCapSchedule`], which drives the `PCAP` dispatcher).
+//!
+//! Determinism contract (DESIGN.md §Scenarios): compilation is a pure
+//! function of `(scenario data, scenario seed, node count)`. The scenario
+//! seed is derived from the campaign's *repetition* seed — never from the
+//! per-run index — so every dispatcher of a repetition faces the identical
+//! perturbation (paired comparisons stay valid) while different repetition
+//! seeds draw different storms.
+//!
+//! [`ScenarioSpec::compile`]: crate::campaign::spec::ScenarioSpec::compile
+
+mod perturbation;
+mod schedule;
+mod transform;
+
+pub use perturbation::{maintenance_plan, storm_plan, Perturbation};
+pub use schedule::PowerCapSchedule;
+pub use transform::{SubmitWarp, WarpedSource};
+
+use crate::addons::AdditionalData;
+
+/// A scenario lowered into executable form for one run: the workload
+/// transforms to wrap the job source with, and fresh addon instances to
+/// hand to [`crate::sim::SimOptions::addons`].
+///
+/// Produced by [`crate::campaign::spec::ScenarioSpec::compile`]; consumed
+/// by the campaign runner (in-worker, per run) and by CLI `simulate
+/// --scenario`.
+pub struct CompiledScenario {
+    /// Submit-time warps, applied to the job stream in order (see
+    /// [`WarpedSource::wrap`]).
+    pub warps: Vec<SubmitWarp>,
+    /// Additional-data providers (power model, failure plans, cap
+    /// schedules), freshly instantiated for one run.
+    pub addons: Vec<Box<dyn AdditionalData>>,
+}

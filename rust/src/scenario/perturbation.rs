@@ -1,0 +1,482 @@
+//! The declarative perturbation vocabulary: JSON-serializable descriptions
+//! of the operating conditions a campaign scenario imposes on a run.
+//!
+//! Each [`Perturbation`] is plain data — it carries *parameters*, never
+//! code — so it participates in the campaign spec identity hash and can be
+//! compiled into fresh transform/provider instances inside every worker
+//! thread (see [`crate::campaign::spec::ScenarioSpec::compile`]).
+
+use crate::rng::Pcg64;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One declarative perturbation of a scenario.
+///
+/// Serialized as a JSON object tagged by `"kind"`; see
+/// `docs/campaign-spec.md` for the field-by-field reference. Time fields
+/// are absolute simulation seconds (the same clock as `SwfFields::submit`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Perturbation {
+    /// **Arrival surge** (`"kind": "arrival_surge"`): submissions inside
+    /// `[from, until)` are compressed toward `from` by `factor` (≥ 1),
+    /// turning a stretch of the trace into a burst. Applied as a workload
+    /// transform — the submit-time warp is monotone, so the job stream
+    /// stays sorted and the perturbed stream is a valid workload.
+    ArrivalSurge {
+        /// Window start (inclusive, simulation seconds).
+        from: u64,
+        /// Window end (exclusive).
+        until: u64,
+        /// Compression factor ≥ 1: a job submitted `d` seconds into the
+        /// window is re-submitted at `from + d / factor`.
+        factor: f64,
+    },
+    /// **Rolling maintenance** (`"kind": "maintenance"`): drain-and-repair
+    /// windows of `duration` seconds, one every `every` seconds starting at
+    /// `from` and stopping at `until`, each taking `width` consecutive
+    /// nodes out of service. Successive windows sweep across the node
+    /// range (window *k* starts at node `k·width mod nodes`), like a
+    /// center rolling firmware updates through its racks. Compiles into an
+    /// acknowledged `DisableNode` plan, so busy nodes drain before going
+    /// down (DESIGN.md §Events).
+    Maintenance {
+        /// First window start (simulation seconds).
+        from: u64,
+        /// No window starts at or after this time.
+        until: u64,
+        /// Window period (seconds between successive window starts, ≥ 1).
+        every: u64,
+        /// Length of each window (seconds, ≥ 1).
+        duration: u64,
+        /// Consecutive nodes per window (≥ 1; wraps around the machine).
+        width: u32,
+    },
+    /// **Failure storm** (`"kind": "failure_storm"`): `storms` correlated
+    /// failure events drawn uniformly in `[from, until)`, each knocking
+    /// out `width` consecutive nodes (random anchor) for `repair` seconds.
+    /// Draws come from the scenario seed derived from the campaign's
+    /// repetition seed, so every dispatcher of a repetition faces the
+    /// *same* storm (paired comparisons stay valid) while different
+    /// repetition seeds sample different storms — repetitions measure
+    /// distributional behavior, not a fixed script.
+    FailureStorm {
+        /// Earliest storm time (inclusive).
+        from: u64,
+        /// Latest storm time (exclusive).
+        until: u64,
+        /// Number of storm events (≥ 1).
+        storms: u32,
+        /// Consecutive nodes failing together per storm (≥ 1; wraps).
+        width: u32,
+        /// Seconds until the affected nodes repair (≥ 1).
+        repair: u64,
+    },
+    /// **Power-cap schedule** (`"kind": "power_cap"`): a time-varying
+    /// system power budget, e.g. a daytime cap. Compiles into an addon
+    /// publishing `power.cap_w` (the step active at the current time) and
+    /// `power.watts_per_slot`, which the `PCAP` dispatcher
+    /// ([`crate::dispatch::PowerCapped`]) enforces. Before the first step
+    /// no cap is published and the dispatcher's static budget applies.
+    PowerCap {
+        /// `(at, cap_w)` steps, strictly increasing in `at`; each cap
+        /// holds from its `at` until the next step.
+        steps: Vec<(u64, f64)>,
+        /// Estimated marginal draw of one running slot (W), published as
+        /// `power.watts_per_slot`.
+        watts_per_slot: f64,
+    },
+}
+
+impl Perturbation {
+    /// The JSON `"kind"` tag of this perturbation.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Perturbation::ArrivalSurge { .. } => "arrival_surge",
+            Perturbation::Maintenance { .. } => "maintenance",
+            Perturbation::FailureStorm { .. } => "failure_storm",
+            Perturbation::PowerCap { .. } => "power_cap",
+        }
+    }
+
+    /// Structural validation (window ordering, positive parameters,
+    /// bounded plan sizes). Called from campaign spec validation, so a bad
+    /// perturbation is rejected before any run executes.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            Perturbation::ArrivalSurge { from, until, factor } => {
+                anyhow::ensure!(from < until, "arrival_surge: from {from} >= until {until}");
+                anyhow::ensure!(
+                    factor.is_finite() && *factor >= 1.0,
+                    "arrival_surge: factor {factor} must be a finite number >= 1 \
+                     (factors below 1 would stretch the window past `until` and \
+                     un-sort the job stream)"
+                );
+            }
+            Perturbation::Maintenance { from, until, every, duration, width } => {
+                anyhow::ensure!(from < until, "maintenance: from {from} >= until {until}");
+                anyhow::ensure!(*every >= 1, "maintenance: every must be >= 1 second");
+                anyhow::ensure!(*duration >= 1, "maintenance: duration must be >= 1 second");
+                anyhow::ensure!(*width >= 1, "maintenance: width must be >= 1 node");
+                let windows = (until - from).div_ceil(*every);
+                anyhow::ensure!(
+                    windows * (*width as u64) <= 100_000,
+                    "maintenance: {windows} windows x {width} nodes expands to more than \
+                     100000 plan entries; widen `every` or shrink the [from, until) span"
+                );
+            }
+            Perturbation::FailureStorm { from, until, storms, width, repair } => {
+                anyhow::ensure!(from < until, "failure_storm: from {from} >= until {until}");
+                anyhow::ensure!(*storms >= 1, "failure_storm: storms must be >= 1");
+                anyhow::ensure!(*width >= 1, "failure_storm: width must be >= 1 node");
+                anyhow::ensure!(*repair >= 1, "failure_storm: repair must be >= 1 second");
+                anyhow::ensure!(
+                    (*storms as u64) * (*width as u64) <= 100_000,
+                    "failure_storm: {storms} storms x {width} nodes expands to more than \
+                     100000 plan entries"
+                );
+            }
+            Perturbation::PowerCap { steps, watts_per_slot } => {
+                anyhow::ensure!(!steps.is_empty(), "power_cap: steps must be non-empty");
+                for w in steps.windows(2) {
+                    anyhow::ensure!(
+                        w[0].0 < w[1].0,
+                        "power_cap: step times must be strictly increasing \
+                         ({} then {})",
+                        w[0].0,
+                        w[1].0
+                    );
+                }
+                for &(at, cap) in steps {
+                    anyhow::ensure!(
+                        cap.is_finite() && cap > 0.0,
+                        "power_cap: cap {cap} at t={at} must be a finite positive wattage"
+                    );
+                }
+                anyhow::ensure!(
+                    watts_per_slot.is_finite() && *watts_per_slot > 0.0,
+                    "power_cap: watts_per_slot {watts_per_slot} must be finite and positive"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the tagged JSON object form.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind().to_string()));
+        let num = |x: u64| Json::Num(x as f64);
+        match self {
+            Perturbation::ArrivalSurge { from, until, factor } => {
+                m.insert("from".to_string(), num(*from));
+                m.insert("until".to_string(), num(*until));
+                m.insert("factor".to_string(), Json::Num(*factor));
+            }
+            Perturbation::Maintenance { from, until, every, duration, width } => {
+                m.insert("from".to_string(), num(*from));
+                m.insert("until".to_string(), num(*until));
+                m.insert("every".to_string(), num(*every));
+                m.insert("duration".to_string(), num(*duration));
+                m.insert("width".to_string(), num(*width as u64));
+            }
+            Perturbation::FailureStorm { from, until, storms, width, repair } => {
+                m.insert("from".to_string(), num(*from));
+                m.insert("until".to_string(), num(*until));
+                m.insert("storms".to_string(), num(*storms as u64));
+                m.insert("width".to_string(), num(*width as u64));
+                m.insert("repair".to_string(), num(*repair));
+            }
+            Perturbation::PowerCap { steps, watts_per_slot } => {
+                m.insert(
+                    "steps".to_string(),
+                    Json::Arr(
+                        steps
+                            .iter()
+                            .map(|&(at, w)| Json::Arr(vec![num(at), Json::Num(w)]))
+                            .collect(),
+                    ),
+                );
+                m.insert("watts_per_slot".to_string(), Json::Num(*watts_per_slot));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse the tagged JSON object form (the inverse of
+    /// [`Perturbation::to_json`]); validates on the way in.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow::anyhow!("perturbation entry needs a \"kind\" tag"))?;
+        let u = |key: &str| -> anyhow::Result<u64> {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("perturbation {kind:?} needs integer {key:?}"))
+        };
+        let f = |key: &str| -> anyhow::Result<f64> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("perturbation {kind:?} needs number {key:?}"))
+        };
+        // node/storm counts are u32 in the vocabulary; an oversized JSON
+        // value must error, not silently truncate into a different scenario
+        let u32_ = |key: &str| -> anyhow::Result<u32> {
+            let x = u(key)?;
+            u32::try_from(x).map_err(|_| {
+                anyhow::anyhow!("perturbation {kind:?}: {key} = {x} exceeds u32 range")
+            })
+        };
+        let p = match kind {
+            "arrival_surge" => Perturbation::ArrivalSurge {
+                from: u("from")?,
+                until: u("until")?,
+                factor: f("factor")?,
+            },
+            "maintenance" => Perturbation::Maintenance {
+                from: u("from")?,
+                until: u("until")?,
+                every: u("every")?,
+                duration: u("duration")?,
+                width: u32_("width")?,
+            },
+            "failure_storm" => Perturbation::FailureStorm {
+                from: u("from")?,
+                until: u("until")?,
+                storms: u32_("storms")?,
+                width: u32_("width")?,
+                repair: u("repair")?,
+            },
+            "power_cap" => {
+                let steps = v
+                    .get("steps")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("power_cap needs a \"steps\" array"))?
+                    .iter()
+                    .map(|row| {
+                        let pair = row.as_arr().unwrap_or(&[]);
+                        match (
+                            pair.first().and_then(|x| x.as_u64()),
+                            pair.get(1).and_then(|x| x.as_f64()),
+                        ) {
+                            (Some(at), Some(w)) if pair.len() == 2 => Ok((at, w)),
+                            _ => anyhow::bail!(
+                                "power_cap steps are [at_seconds, cap_w] pairs, got {}",
+                                row.to_string_compact()
+                            ),
+                        }
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                Perturbation::PowerCap {
+                    steps,
+                    watts_per_slot: v
+                        .get("watts_per_slot")
+                        .and_then(|x| x.as_f64())
+                        .unwrap_or(20.0),
+                }
+            }
+            other => anyhow::bail!(
+                "unknown perturbation kind {other:?} \
+                 (arrival_surge|maintenance|failure_storm|power_cap)"
+            ),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Expand a [`Perturbation::Maintenance`] into `(node, down_at, up_at)`
+/// plan triples for a machine of `nodes` nodes. Window *k* starts at
+/// `from + k·every` and covers nodes `k·width .. k·width+width` (mod
+/// `nodes`), sweeping the whole machine over successive windows.
+pub fn maintenance_plan(
+    from: u64,
+    until: u64,
+    every: u64,
+    duration: u64,
+    width: u32,
+    nodes: u64,
+) -> Vec<(u32, u64, u64)> {
+    let mut plan = Vec::new();
+    if nodes == 0 || every == 0 {
+        return plan;
+    }
+    let mut k = 0u64;
+    loop {
+        let start = from + k * every;
+        if start >= until {
+            break;
+        }
+        for i in 0..width as u64 {
+            let node = ((k * width as u64 + i) % nodes) as u32;
+            plan.push((node, start, start + duration));
+        }
+        k += 1;
+    }
+    plan
+}
+
+/// Draw a [`Perturbation::FailureStorm`] plan from `seed`: `storms`
+/// events at uniform times in `[from, until)`, each failing `width`
+/// consecutive nodes from a uniform anchor (wrapping mod `nodes`) for
+/// `repair` seconds. A fixed seed reproduces the identical plan on every
+/// platform ([`Pcg64`] is dependency-free and portable).
+pub fn storm_plan(
+    from: u64,
+    until: u64,
+    storms: u32,
+    width: u32,
+    repair: u64,
+    nodes: u64,
+    seed: u64,
+) -> Vec<(u32, u64, u64)> {
+    let mut plan = Vec::new();
+    if nodes == 0 || from >= until {
+        return plan;
+    }
+    let mut rng = Pcg64::new(seed);
+    for _ in 0..storms {
+        let at = rng.range_u64(from, until - 1);
+        let anchor = rng.range_u64(0, nodes - 1);
+        for i in 0..width as u64 {
+            plan.push((((anchor + i) % nodes) as u32, at, at + repair));
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds() -> Vec<Perturbation> {
+        vec![
+            Perturbation::ArrivalSurge { from: 100, until: 5000, factor: 4.0 },
+            Perturbation::Maintenance {
+                from: 3600,
+                until: 90_000,
+                every: 43_200,
+                duration: 7200,
+                width: 2,
+            },
+            Perturbation::FailureStorm {
+                from: 0,
+                until: 50_000,
+                storms: 3,
+                width: 4,
+                repair: 3600,
+            },
+            Perturbation::PowerCap {
+                steps: vec![(0, 1e6), (28_800, 500.0), (61_200, 1e6)],
+                watts_per_slot: 25.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_kind_roundtrips_through_json() {
+        for p in kinds() {
+            let text = p.to_json().to_string_compact();
+            let back = Perturbation::from_json(&Json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{}: {e}", p.kind()));
+            assert_eq!(back, p, "{text}");
+            // and the serialization is stable (hash-input stability)
+            assert_eq!(back.to_json().to_string_compact(), text);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        let bad = [
+            Perturbation::ArrivalSurge { from: 10, until: 10, factor: 2.0 },
+            Perturbation::ArrivalSurge { from: 0, until: 10, factor: 0.5 },
+            Perturbation::Maintenance { from: 0, until: 10, every: 0, duration: 1, width: 1 },
+            Perturbation::Maintenance {
+                from: 0,
+                until: 1_000_000,
+                every: 1,
+                duration: 1,
+                width: 1,
+            },
+            Perturbation::FailureStorm { from: 5, until: 5, storms: 1, width: 1, repair: 1 },
+            Perturbation::FailureStorm { from: 0, until: 10, storms: 0, width: 1, repair: 1 },
+            Perturbation::PowerCap { steps: vec![], watts_per_slot: 20.0 },
+            Perturbation::PowerCap { steps: vec![(5, 100.0), (5, 200.0)], watts_per_slot: 20.0 },
+            Perturbation::PowerCap { steps: vec![(0, -5.0)], watts_per_slot: 20.0 },
+            Perturbation::PowerCap { steps: vec![(0, 100.0)], watts_per_slot: 0.0 },
+        ];
+        for p in bad {
+            assert!(p.validate().is_err(), "{p:?} should be rejected");
+        }
+        for p in kinds() {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn oversized_u32_fields_error_instead_of_truncating() {
+        // 2^32 + 1 would wrap to width 1 under a bare `as u32` cast
+        let text = r#"{"kind": "failure_storm", "from": 0, "until": 10,
+                       "storms": 1, "width": 4294967297, "repair": 1}"#;
+        let err = Perturbation::from_json(&Json::parse(text).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("u32"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let err =
+            Perturbation::from_json(&Json::parse(r#"{"kind":"quake"}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("quake"), "{err}");
+        assert!(
+            Perturbation::from_json(&Json::parse(r#"{"from":1}"#).unwrap()).is_err(),
+            "missing kind tag must error"
+        );
+    }
+
+    #[test]
+    fn maintenance_sweeps_across_the_node_range() {
+        // 3 windows of width 2 over 4 nodes: [0,1], [2,3], [0,1] (wrap)
+        let plan = maintenance_plan(0, 3000, 1000, 500, 2, 4);
+        assert_eq!(
+            plan,
+            vec![
+                (0, 0, 500),
+                (1, 0, 500),
+                (2, 1000, 1500),
+                (3, 1000, 1500),
+                (0, 2000, 2500),
+                (1, 2000, 2500),
+            ]
+        );
+        // `until` bounds window *starts*, not repairs
+        let tail = maintenance_plan(0, 1001, 1000, 5000, 1, 8);
+        assert_eq!(tail.last(), Some(&(1, 1000, 6000)));
+    }
+
+    #[test]
+    fn storm_plan_is_seed_deterministic_and_correlated() {
+        let a = storm_plan(0, 10_000, 3, 4, 600, 16, 42);
+        let b = storm_plan(0, 10_000, 3, 4, 600, 16, 42);
+        assert_eq!(a, b, "same seed, same storm");
+        let c = storm_plan(0, 10_000, 3, 4, 600, 16, 43);
+        assert_ne!(a, c, "different seed, different storm");
+        assert_eq!(a.len(), 12);
+        // correlation: each storm's 4 nodes share one failure window
+        for storm in a.chunks(4) {
+            let (_, down, up) = storm[0];
+            assert!(storm.iter().all(|&(_, d, u)| d == down && u == up));
+            assert_eq!(up - down, 600);
+            assert!(down < 10_000);
+            // consecutive (mod 16) nodes
+            for w in storm.windows(2) {
+                assert_eq!((w[0].0 + 1) % 16, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn kind_tags_are_stable() {
+        let tags: Vec<&str> = kinds().iter().map(|p| p.kind()).collect();
+        assert_eq!(tags, vec!["arrival_surge", "maintenance", "failure_storm", "power_cap"]);
+    }
+}

@@ -1,0 +1,123 @@
+//! The power-cap schedule provider: a time-varying system power budget
+//! published through the additional-data interface.
+//!
+//! This is the compiled form of
+//! [`crate::scenario::Perturbation::PowerCap`]: a step function of
+//! simulation time published as `power.cap_w` (plus the per-slot marginal
+//! estimate `power.watts_per_slot`), which the `PCAP` dispatcher
+//! ([`crate::dispatch::PowerCapped`]) reads at every dispatch cycle. Step
+//! boundaries are declared as addon timers, so a cap change fires at its
+//! exact time even across a stretch of the workload with no job events —
+//! and a cap *raise* can un-stick a queue the previous cap stalled
+//! ([`crate::addons::AdditionalData::may_restore_capacity`]).
+
+use crate::addons::{AddonAction, AdditionalData};
+use crate::resources::ResourceManager;
+
+/// Publishes a time-varying power cap for the `PCAP` dispatcher.
+#[derive(Debug)]
+pub struct PowerCapSchedule {
+    /// `(at, cap_w)` steps, strictly increasing in `at`.
+    steps: Vec<(u64, f64)>,
+    /// Estimated marginal draw of one running slot (W).
+    watts_per_slot: f64,
+}
+
+impl PowerCapSchedule {
+    /// Build a schedule from `(at, cap_w)` steps (each cap holds from its
+    /// `at` until the next step; before the first step no cap is
+    /// published). Steps are sorted on construction.
+    pub fn new(mut steps: Vec<(u64, f64)>, watts_per_slot: f64) -> Self {
+        steps.sort_by_key(|&(at, _)| at);
+        PowerCapSchedule { steps, watts_per_slot }
+    }
+
+    /// The cap active at time `t`, `None` before the first step.
+    pub fn cap_at(&self, t: u64) -> Option<f64> {
+        self.steps.iter().rev().find(|&&(at, _)| at <= t).map(|&(_, cap)| cap)
+    }
+}
+
+impl AdditionalData for PowerCapSchedule {
+    fn name(&self) -> &'static str {
+        "power_cap"
+    }
+
+    fn update(
+        &mut self,
+        t: u64,
+        _rm: &ResourceManager,
+        _queued: usize,
+        _running: usize,
+    ) -> Vec<AddonAction> {
+        let mut actions =
+            vec![AddonAction::Publish("power.watts_per_slot".into(), self.watts_per_slot)];
+        if let Some(cap) = self.cap_at(t) {
+            actions.push(AddonAction::Publish("power.cap_w".into(), cap));
+        }
+        actions
+    }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        self.steps.iter().map(|&(at, _)| at).find(|&at| at > now)
+    }
+
+    fn may_restore_capacity(&self) -> bool {
+        // a later, higher cap can free a queue the current cap stalls
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SysConfig;
+
+    fn rm() -> ResourceManager {
+        ResourceManager::from_config(&SysConfig::homogeneous("t", 2, &[("core", 4)], 0))
+    }
+
+    #[test]
+    fn steps_hold_until_the_next_boundary() {
+        let s = PowerCapSchedule::new(vec![(100, 800.0), (500, 300.0)], 20.0);
+        assert_eq!(s.cap_at(0), None);
+        assert_eq!(s.cap_at(99), None);
+        assert_eq!(s.cap_at(100), Some(800.0));
+        assert_eq!(s.cap_at(499), Some(800.0));
+        assert_eq!(s.cap_at(500), Some(300.0));
+        assert_eq!(s.cap_at(1_000_000), Some(300.0));
+    }
+
+    #[test]
+    fn publishes_cap_and_marginal_estimate() {
+        let rm = rm();
+        let mut s = PowerCapSchedule::new(vec![(100, 800.0)], 25.0);
+        let before = s.update(0, &rm, 0, 0);
+        assert!(before
+            .iter()
+            .any(|a| matches!(a, AddonAction::Publish(k, v) if k == "power.watts_per_slot" && *v == 25.0)));
+        assert!(
+            !before.iter().any(|a| matches!(a, AddonAction::Publish(k, _) if k == "power.cap_w")),
+            "no cap before the first step"
+        );
+        let after = s.update(100, &rm, 0, 0);
+        assert!(after
+            .iter()
+            .any(|a| matches!(a, AddonAction::Publish(k, v) if k == "power.cap_w" && *v == 800.0)));
+    }
+
+    #[test]
+    fn declares_boundary_timers_and_restores_capacity() {
+        let s = PowerCapSchedule::new(vec![(100, 800.0), (500, 300.0)], 20.0);
+        assert_eq!(s.next_event(0), Some(100));
+        assert_eq!(s.next_event(100), Some(500));
+        assert_eq!(s.next_event(500), None);
+        assert!(s.may_restore_capacity());
+    }
+
+    #[test]
+    fn unsorted_steps_are_sorted_on_construction() {
+        let s = PowerCapSchedule::new(vec![(500, 300.0), (100, 800.0)], 20.0);
+        assert_eq!(s.cap_at(200), Some(800.0));
+    }
+}

@@ -1,0 +1,136 @@
+//! Workload transforms: deterministic, order-preserving rewrites of the
+//! job stream applied *before* simulation.
+//!
+//! A transform is the first of the two hooks a scenario compiles into (the
+//! second being additional-data providers): it perturbs what the simulator
+//! is asked to schedule, not how the system behaves while scheduling it.
+//! Transforms must be monotone in submission time so the incremental
+//! loader's sorted-stream assumption keeps holding on the perturbed
+//! workload.
+
+use crate::sim::JobSource;
+use crate::workload::Job;
+
+/// A monotone submit-time warp: submissions inside `[from, until)` are
+/// compressed toward `from` by `factor`, creating an arrival burst.
+///
+/// Monotonicity: within the window the map is increasing; a warped submit
+/// never exceeds `until`, and times outside the window are untouched — so
+/// a sorted job stream stays sorted (the compiled form of
+/// [`crate::scenario::Perturbation::ArrivalSurge`], which validates
+/// `factor >= 1`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubmitWarp {
+    /// Window start (inclusive).
+    pub from: u64,
+    /// Window end (exclusive).
+    pub until: u64,
+    /// Compression factor (≥ 1).
+    pub factor: f64,
+}
+
+impl SubmitWarp {
+    /// Warp one submission time.
+    #[inline]
+    pub fn warp(&self, submit: u64) -> u64 {
+        if submit < self.from || submit >= self.until {
+            return submit;
+        }
+        self.from + ((submit - self.from) as f64 / self.factor).floor() as u64
+    }
+}
+
+/// A [`JobSource`] decorator applying a pipeline of [`SubmitWarp`]s to
+/// every job it yields. Skipped-line accounting passes through.
+pub struct WarpedSource {
+    inner: Box<dyn JobSource>,
+    warps: Vec<SubmitWarp>,
+}
+
+impl WarpedSource {
+    /// Wrap `inner` with `warps` (applied in order). An empty warp list
+    /// returns `inner` unchanged, so the unperturbed path pays nothing.
+    pub fn wrap(inner: Box<dyn JobSource>, warps: Vec<SubmitWarp>) -> Box<dyn JobSource> {
+        if warps.is_empty() {
+            inner
+        } else {
+            Box::new(WarpedSource { inner, warps })
+        }
+    }
+}
+
+impl JobSource for WarpedSource {
+    fn next_job(&mut self) -> Option<Job> {
+        let mut job = self.inner.next_job()?;
+        for w in &self.warps {
+            job.submit = w.warp(job.submit);
+        }
+        Some(job)
+    }
+
+    fn lines_skipped(&self) -> u64 {
+        self.inner.lines_skipped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MemorySource;
+
+    fn job(id: u64, submit: u64) -> Job {
+        Job {
+            id,
+            submit,
+            duration: 10,
+            req_time: 10,
+            slots: 1,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+        }
+    }
+
+    #[test]
+    fn warp_compresses_only_inside_the_window() {
+        let w = SubmitWarp { from: 100, until: 500, factor: 4.0 };
+        assert_eq!(w.warp(0), 0);
+        assert_eq!(w.warp(99), 99);
+        assert_eq!(w.warp(100), 100);
+        assert_eq!(w.warp(300), 150); // 100 + 200/4
+        assert_eq!(w.warp(499), 199);
+        assert_eq!(w.warp(500), 500);
+        assert_eq!(w.warp(1000), 1000);
+    }
+
+    #[test]
+    fn warp_is_monotone() {
+        let w = SubmitWarp { from: 50, until: 5000, factor: 7.5 };
+        let mut prev = 0;
+        for t in 0..6000 {
+            let wt = w.warp(t);
+            assert!(wt >= prev, "warp not monotone at t={t}: {wt} < {prev}");
+            prev = wt;
+        }
+    }
+
+    #[test]
+    fn warped_source_rewrites_the_stream() {
+        let jobs = vec![job(1, 10), job(2, 120), job(3, 480), job(4, 700)];
+        let warps = vec![SubmitWarp { from: 100, until: 500, factor: 2.0 }];
+        let mut src = WarpedSource::wrap(Box::new(MemorySource::new(jobs)), warps);
+        let submits: Vec<u64> =
+            std::iter::from_fn(|| src.next_job()).map(|j| j.submit).collect();
+        assert_eq!(submits, vec![10, 110, 290, 700]);
+    }
+
+    #[test]
+    fn empty_warp_list_is_identity() {
+        let jobs = vec![job(1, 10), job(2, 120)];
+        let mut src = WarpedSource::wrap(Box::new(MemorySource::new(jobs)), Vec::new());
+        let submits: Vec<u64> =
+            std::iter::from_fn(|| src.next_job()).map(|j| j.submit).collect();
+        assert_eq!(submits, vec![10, 120]);
+    }
+}

@@ -194,6 +194,63 @@ pub fn win_loss_tie(deltas: &[f64]) -> (usize, usize, usize) {
     (wins, losses, deltas.len() - wins - losses)
 }
 
+/// Cliff's delta between two samples: `(#(a>b) − #(a<b)) / (n·m)` over all
+/// cross pairs, in `[-1, 1]`.
+///
+/// A nonparametric effect size to read next to a p-value: it measures *how
+/// often* one group dominates the other, not just whether the difference
+/// is distinguishable from noise. For the comparator's lower-is-better
+/// metrics, `cliffs_delta(candidate, baseline) < 0` means the candidate
+/// tends to produce smaller (better) values; |δ| ≳ 0.33 / 0.47 are the
+/// conventional "medium" / "large" thresholds. Empty inputs yield 0.
+///
+/// # Examples
+///
+/// ```
+/// use accasim::stats::cliffs_delta;
+///
+/// // candidate strictly dominates the baseline on every cross pair
+/// assert_eq!(cliffs_delta(&[1.0, 2.0], &[3.0, 4.0]), -1.0);
+/// // identical samples: no tendency either way
+/// assert_eq!(cliffs_delta(&[5.0, 7.0], &[5.0, 7.0]), 0.0);
+/// ```
+pub fn cliffs_delta(a: &[f64], b: &[f64]) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let mut gt = 0i64;
+    let mut lt = 0i64;
+    for &x in a {
+        for &y in b {
+            if x > y {
+                gt += 1;
+            } else if x < y {
+                lt += 1;
+            }
+        }
+    }
+    (gt - lt) as f64 / (a.len() * b.len()) as f64
+}
+
+/// Matched-pairs rank-biserial correlation of paired deltas:
+/// `(W⁺ − W⁻) / (W⁺ + W⁻)` over the Wilcoxon signed ranks, in `[-1, 1]`.
+///
+/// The effect size naturally paired with [`wilcoxon_signed_rank`]: it
+/// weighs each pair by the magnitude rank of its delta, so it answers "how
+/// one-sided are the paired differences" on the same scale the test ranks
+/// them. Sign convention follows the deltas (negative = the candidate's
+/// values are smaller, i.e. better for lower-is-better metrics). All-zero
+/// (or empty) deltas yield 0.
+pub fn rank_biserial(deltas: &[f64]) -> f64 {
+    let w = wilcoxon_signed_rank(deltas);
+    let total = w.w_plus + w.w_minus;
+    if total == 0.0 {
+        0.0
+    } else {
+        (w.w_plus - w.w_minus) / total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,5 +345,33 @@ mod tests {
     fn win_loss_tie_counts() {
         assert_eq!(win_loss_tie(&[-1.0, -0.5, 0.0, 2.0]), (2, 1, 1));
         assert_eq!(win_loss_tie(&[]), (0, 0, 0));
+    }
+
+    #[test]
+    fn cliffs_delta_bounds_and_signs() {
+        assert_eq!(cliffs_delta(&[1.0, 2.0], &[10.0, 20.0]), -1.0);
+        assert_eq!(cliffs_delta(&[10.0, 20.0], &[1.0, 2.0]), 1.0);
+        assert_eq!(cliffs_delta(&[1.0, 3.0], &[1.0, 3.0]), 0.0);
+        // partial overlap: 3 of 4 cross pairs favor b → δ = (1 - 3) / 4
+        assert_eq!(cliffs_delta(&[1.0, 4.0], &[2.0, 3.0]), -0.5);
+        assert_eq!(cliffs_delta(&[], &[1.0]), 0.0);
+        assert_eq!(cliffs_delta(&[1.0], &[]), 0.0);
+        let d = cliffs_delta(&[1.0, 2.0, 3.0], &[2.5]);
+        assert!((-1.0..=1.0).contains(&d));
+    }
+
+    #[test]
+    fn rank_biserial_matches_wilcoxon_ranks() {
+        // all-negative deltas: perfectly one-sided
+        assert_eq!(rank_biserial(&[-1.0, -2.0, -3.0]), -1.0);
+        assert_eq!(rank_biserial(&[1.0, 2.0, 3.0]), 1.0);
+        // ranks 1..4: one positive delta of the largest magnitude
+        // → (4 − 6) / 10
+        let r = rank_biserial(&[-1.0, -2.0, -3.0, 4.0]);
+        assert!((r - (-0.2)).abs() < 1e-12, "r={r}");
+        // zeros drop (Wilcoxon convention); all-zero input is total
+        assert_eq!(rank_biserial(&[0.0, 0.0]), 0.0);
+        assert_eq!(rank_biserial(&[]), 0.0);
+        assert_eq!(rank_biserial(&[0.0, -5.0]), -1.0);
     }
 }

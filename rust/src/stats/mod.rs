@@ -17,7 +17,8 @@
 pub mod inference;
 
 pub use inference::{
-    average_ranks, bootstrap_mean_ci, wilcoxon_signed_rank, win_loss_tie, Ci, Wilcoxon,
+    average_ranks, bootstrap_mean_ci, cliffs_delta, rank_biserial, wilcoxon_signed_rank,
+    win_loss_tie, Ci, Wilcoxon,
 };
 
 /// Mean of a slice (0 for empty).

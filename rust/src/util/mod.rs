@@ -20,6 +20,17 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// SplitMix64 finalizer: full-avalanche 64-bit mixing. One implementation
+/// for everything that derives keys from the spec identity — run seeds and
+/// scenario seeds ([`crate::campaign::matrix`]), the comparator's
+/// bootstrap seeds, and the `_RND` schedulers' tie-break hashes.
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
 #[cfg(test)]
 mod tests {
     #[test]

@@ -23,6 +23,7 @@ pub enum LintIssue {
 }
 
 impl LintIssue {
+    /// Human-readable category label (also the report's grouping key).
     pub fn describe(&self) -> &'static str {
         match self {
             LintIssue::Malformed => "unparseable line",
@@ -38,12 +39,15 @@ impl LintIssue {
 /// Lint report over a workload source.
 #[derive(Debug, Default)]
 pub struct LintReport {
+    /// Parseable records examined.
     pub records: u64,
     /// Issue → occurrence count.
     pub issues: std::collections::BTreeMap<&'static str, u64>,
     /// First few offending job numbers per issue (for digging in).
     pub examples: std::collections::BTreeMap<&'static str, Vec<i64>>,
+    /// Earliest submission time seen (0 for an empty workload).
     pub first_submit: i64,
+    /// Latest submission time seen.
     pub last_submit: i64,
 }
 

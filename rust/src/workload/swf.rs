@@ -29,23 +29,41 @@ pub const SWF_FIELD_COUNT: usize = 18;
 /// `-1` meaning unknown.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct SwfFields {
+    /// Field 1: job number (unique per trace).
     pub job_number: i64,
+    /// Field 2: submission time (seconds since trace start).
     pub submit_time: i64,
+    /// Field 3: recorded waiting time (seconds).
     pub wait_time: i64,
+    /// Field 4: actual run time (seconds).
     pub run_time: i64,
+    /// Field 5: processors actually allocated.
     pub allocated_procs: i64,
+    /// Field 6: average CPU time per processor (seconds).
     pub avg_cpu_time: i64,
+    /// Field 7: memory actually used (KB per processor).
     pub used_memory: i64,
+    /// Field 8: processors requested.
     pub requested_procs: i64,
+    /// Field 9: wall time requested (seconds — the dispatcher's estimate).
     pub requested_time: i64,
+    /// Field 10: memory requested (KB per processor).
     pub requested_memory: i64,
+    /// Field 11: completion status code.
     pub status: i64,
+    /// Field 12: submitting user id.
     pub user_id: i64,
+    /// Field 13: submitting group id.
     pub group_id: i64,
+    /// Field 14: executable/application id.
     pub app_id: i64,
+    /// Field 15: queue id.
     pub queue_id: i64,
+    /// Field 16: partition id.
     pub partition_id: i64,
+    /// Field 17: job this one waits on (workflow dependency).
     pub preceding_job: i64,
+    /// Field 18: think time after the preceding job (seconds).
     pub think_time: i64,
 }
 

@@ -17,11 +17,11 @@ fn acceptance_spec(swf: &Path) -> CampaignSpec {
         .add_dispatcher("FIFO-FF")
         .add_dispatcher("SJF-FF")
         .add_scenario(ScenarioSpec {
-            name: "power".to_string(),
             power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 3600 }),
             // node 0 down for ~3h early in the (scaled) Seth span, so the
             // scenario actually perturbs scheduling in those runs
             failures: vec![(0, 1_025_830_000, 1_025_840_000)],
+            ..ScenarioSpec::named("power")
         });
     spec.seeds = vec![1, 2];
     spec
@@ -112,9 +112,8 @@ fn scenarios_shape_results() {
     let mut spec = CampaignSpec::new("scenarios");
     spec.add_trace("seth", 0.0005).add_system_trace("seth").add_dispatcher("FIFO-FF");
     spec.add_scenario(ScenarioSpec {
-        name: "power".to_string(),
         power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 3600 }),
-        failures: Vec::new(),
+        ..ScenarioSpec::named("power")
     });
     spec.seeds = vec![1];
     let report = Campaign::new(spec, tmp.path().join("out")).run().unwrap();

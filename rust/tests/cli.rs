@@ -273,6 +273,52 @@ fn campaign_compare_rejects_spec_drift() {
 }
 
 #[test]
+fn campaign_run_warns_about_skipped_workload_lines() {
+    let dir = tempfile::tempdir().unwrap();
+    let swf = dir.path().join("broken.swf");
+    std::fs::write(
+        &swf,
+        "1 0 -1 60 1 -1 -1 1 120 -1 1 1 1 1 1 1 -1 -1\n\
+         not a data line at all\n\
+         2 5 -1 30 1 -1 -1 1 60 -1 1 1 1 1 1 1 -1 -1\n",
+    )
+    .unwrap();
+    let cfg = dir.path().join("sys.json");
+    accasim::config::SysConfig::homogeneous("tiny", 2, &[("core", 2)], 0)
+        .write_json_file(&cfg)
+        .unwrap();
+    let spec = dir.path().join("study.json");
+    std::fs::write(
+        &spec,
+        format!(
+            r#"{{
+                "name": "skipwarn",
+                "workloads": [{{"swf": {:?}}}],
+                "systems": [{{"name": "tiny", "path": {:?}}}],
+                "dispatchers": ["FIFO-FF"]
+            }}"#,
+            swf.to_str().unwrap(),
+            cfg.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    let out_dir = dir.path().join("camp");
+    let out = bin()
+        .args(["campaign", "run", spec.to_str().unwrap(), "--out", out_dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("1 malformed workload line(s) skipped across 1 run(s)"),
+        "missing skip warning:\n{stderr}"
+    );
+    // …and the count is recorded in the run manifest
+    let idx = accasim::campaign::load_index(&out_dir).unwrap();
+    assert_eq!(idx.records[0].lines_skipped, 1);
+}
+
+#[test]
 fn campaign_rejects_bad_spec() {
     let dir = tempfile::tempdir().unwrap();
     let spec = dir.path().join("bad.json");

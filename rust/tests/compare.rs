@@ -20,9 +20,8 @@ fn spec() -> CampaignSpec {
         .add_dispatcher("FIFO-FF")
         .add_dispatcher("SJF-FF")
         .add_scenario(ScenarioSpec {
-            name: "power".to_string(),
             power: Some(PowerSpec { idle_w: 80.0, max_w: 350.0, cadence: 3600 }),
-            failures: Vec::new(),
+            ..ScenarioSpec::named("power")
         });
     spec.seeds = vec![1, 2, 3];
     spec
