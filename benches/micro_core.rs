@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         user: 0,
         app: 0,
         status: 1,
+        shape: accasim::resources::ShapeId::UNSET,
     };
     b.bench("rm_allocate_release_10k", || {
         for _ in 0..10_000 {
@@ -100,6 +101,7 @@ fn main() -> anyhow::Result<()> {
         user: 3,
         app: 1,
         status: 1,
+        shape: accasim::resources::ShapeId::UNSET,
     };
     b.bench("event_queue_heap_submit_100k", || {
         let mut q = EventQueue::new();

@@ -27,6 +27,7 @@ fn arb_job(rng: &mut Pcg64, id: u64) -> Job {
         user: 0,
         app: 0,
         status: 1,
+        shape: accasim::resources::ShapeId::UNSET,
     }
 }
 
@@ -67,19 +68,40 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let probe = arb_job(&mut rng, 1);
-    b.bench("node_order/FF/480n", || {
-        FirstFit::new().node_order(std::hint::black_box(&probe), &rm).len()
+    // naive path (shape never interned): the pre-index full scan
+    let mut order = Vec::new();
+    let mut ff = FirstFit::new();
+    b.bench("node_order/FF-naive/480n", || {
+        ff.node_order(std::hint::black_box(&probe), &rm, &mut order);
+        order.len()
     });
-    b.bench("node_order/BF/480n", || {
-        BestFit::new().node_order(std::hint::black_box(&probe), &rm).len()
+    let mut bf = BestFit::new();
+    b.bench("node_order/BF-naive/480n", || {
+        bf.node_order(std::hint::black_box(&probe), &rm, &mut order);
+        order.len()
     });
+    // indexed path: the same probe with its shape interned — the dispatch
+    // hot path after this PR (availability index, DESIGN.md §Perf)
+    let mut probe_interned = probe.clone();
+    probe_interned.shape = rm.intern_shape(&probe_interned.per_slot);
+    b.bench("node_order/FF-indexed/480n", || {
+        ff.node_order(std::hint::black_box(&probe_interned), &rm, &mut order);
+        order.len()
+    });
+    b.bench("node_order/BF-indexed/480n", || {
+        bf.node_order(std::hint::black_box(&probe_interned), &rm, &mut order);
+        order.len()
+    });
+    b.bench("can_host/indexed/480n", || rm.can_host(std::hint::black_box(&probe_interned)));
+    b.bench("can_host/naive/480n", || rm.can_host(std::hint::black_box(&probe)));
 
     // PJRT fit_score path (XlaFit), when artifacts are available
     if std::path::Path::new("artifacts/fit_score.hlo.txt").exists() {
         let engine = Arc::new(Engine::with_artifacts("artifacts")?);
         let mut xf = XlaFit::new(engine)?;
         b.bench("node_order/XlaFit/480n", || {
-            xf.node_order(std::hint::black_box(&probe), &rm).len()
+            xf.node_order(std::hint::black_box(&probe), &rm, &mut order);
+            order.len()
         });
     } else {
         println!("    (skipping XlaFit bench: run `make artifacts`)");

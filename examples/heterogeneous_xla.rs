@@ -53,6 +53,7 @@ fn workload(n: usize, seed: u64) -> Vec<Job> {
                 user: rng.next_u32() % 20,
                 app: rng.next_u32() % 10,
                 status: 1,
+                shape: accasim::resources::ShapeId::UNSET,
             }
         })
         .collect()

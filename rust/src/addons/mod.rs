@@ -286,6 +286,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         }
     }
 

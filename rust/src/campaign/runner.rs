@@ -90,17 +90,34 @@ pub struct Campaign<'a> {
     out_dir: PathBuf,
     jobs: usize,
     addon_factory: Option<AddonFactoryRef<'a>>,
+    shape_index: bool,
 }
 
 impl<'a> Campaign<'a> {
     /// Bind a spec to an output directory (created on [`Campaign::run`]).
     pub fn new<P: AsRef<Path>>(spec: CampaignSpec, out_dir: P) -> Self {
-        Campaign { spec, out_dir: out_dir.as_ref().to_path_buf(), jobs: 1, addon_factory: None }
+        Campaign {
+            spec,
+            out_dir: out_dir.as_ref().to_path_buf(),
+            jobs: 1,
+            addon_factory: None,
+            shape_index: true,
+        }
     }
 
     /// Worker-thread count (default 1 = serial).
     pub fn jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Toggle the availability index ([`SimOptions::use_shape_index`]) for
+    /// every run. Like the worker count, this is an execution knob outside
+    /// the spec identity: results are identical either way by construction
+    /// — `rust/tests/availability_index.rs` runs the same campaign with the
+    /// index on and off and asserts byte-identical stores.
+    pub fn shape_index(mut self, on: bool) -> Self {
+        self.shape_index = on;
         self
     }
 
@@ -161,6 +178,7 @@ impl<'a> Campaign<'a> {
             seed: run.run_seed,
             addons,
             output: OutputCollector::in_memory(true, true),
+            use_shape_index: self.shape_index,
             ..Default::default()
         };
         let source = SwfSource::open(workload, &run.sys, opts.factory.clone())?;

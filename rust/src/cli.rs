@@ -59,6 +59,12 @@ COMMANDS:
   traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
   table1   [--scale 0.05] [--dir data] [--reps 3] [--out results/table1.csv]
   table2   [--scale 0.05] [--dir data] [--reps 1] [--out results/table2.csv]
+  perf-smoke [--nodes 2048] [--jobs 50000] [--dispatcher FIFO-FF]
+           [--seed 1] [--out results/BENCH_5.json]
+           large-system dispatch-hot-path smoke: simulate a synthetic
+           oversubscribed workload and write machine-readable timings
+           (wall_s, dispatch_ns, time_points, max_rss_kb) for the perf
+           trajectory tracked in CI
   status   <workload.swf> --sys <cfg.json> [--dispatcher FIFO-FF]
   validate <workload.swf>                  lint a workload dataset
   analyze  <jobs.csv>                      analyze saved job records
@@ -78,6 +84,7 @@ pub fn run() -> anyhow::Result<()> {
         "traces" => cmd_traces(&args),
         "table1" => table1(&args),
         "table2" => table2(&args),
+        "perf-smoke" => perf_smoke(&args),
         "status" => status(&args),
         "validate" => validate(&args),
         "analyze" => analyze(&args),
@@ -589,6 +596,125 @@ fn table1(args: &Args) -> anyhow::Result<()> {
     }
     std::fs::write(&out, csv)?;
     println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Synthesize the perf-smoke workload: `jobs` jobs against a `nodes`-node
+/// system, ~15% oversubscribed so a queue forms and the dispatcher's
+/// blocked-head path is exercised, drawing from a handful of request
+/// shapes (the regime the shape-interned availability index is built for —
+/// real SWF workloads cluster the same way, DESIGN.md §Perf).
+fn perf_smoke_jobs(
+    nodes: u64,
+    cores_per_node: u64,
+    jobs: u64,
+    seed: u64,
+) -> Vec<accasim::workload::Job> {
+    use accasim::rng::Pcg64;
+    let mut rng = Pcg64::new(seed ^ 0x5E1F_50B5);
+    let mem_shapes = [256u64, 512, 1024, 2048];
+    let total_cores = (nodes * cores_per_node) as f64;
+    // E[slots] ≈ 0.5·1 + 0.5·mean(2,4,8,16,32,64) ≈ 11; E[dur] = 3630 s
+    let mean_work = 11.0 * 3630.0;
+    let gap = mean_work / (total_cores * 1.15);
+    let mut t = 0.0f64;
+    (1..=jobs)
+        .map(|id| {
+            t += rng.exponential(1.0 / gap);
+            let slots = if rng.f64() < 0.5 {
+                1
+            } else {
+                1u32 << rng.range_u64(1, 6) // 2..=64, powers of two
+            };
+            let duration = rng.range_u64(60, 7200);
+            accasim::workload::Job {
+                id,
+                submit: t as u64,
+                duration,
+                req_time: duration * 2,
+                slots,
+                per_slot: vec![
+                    1,
+                    mem_shapes[rng.range_u64(0, mem_shapes.len() as u64 - 1) as usize],
+                ],
+                user: (id % 97) as u32,
+                app: (id % 13) as u32,
+                status: 1,
+                shape: accasim::resources::ShapeId::UNSET,
+            }
+        })
+        .collect()
+}
+
+/// Perf smoke: one large-system simulation with machine-readable output —
+/// the CI-tracked perf trajectory point (`results/BENCH_5.json`).
+fn perf_smoke(args: &Args) -> anyhow::Result<()> {
+    use accasim::util::json::Json;
+    let nodes: u64 = args.get_parse("nodes", 2048)?;
+    let jobs: u64 = args.get_parse("jobs", 50_000)?;
+    let seed: u64 = args.get_parse("seed", 1)?;
+    let dispatcher = args.get("dispatcher", "FIFO-FF");
+    let out_path = PathBuf::from(args.get("out", "results/BENCH_5.json"));
+    args.reject_unknown()?;
+    anyhow::ensure!(nodes > 0 && jobs > 0, "perf-smoke wants positive --nodes/--jobs");
+
+    const CORES: u64 = 16;
+    let sys = SysConfig::homogeneous("perfsmoke", nodes, &[("core", CORES), ("mem", 65_536)], 0);
+    let workload = perf_smoke_jobs(nodes, CORES, jobs, seed);
+    let d = dispatcher_from_label(&dispatcher)?;
+    let opts = SimOptions {
+        output: OutputCollector::null(),
+        mem_sample_secs: 300,
+        seed,
+        ..Default::default()
+    };
+    let mut sim = Simulator::from_jobs(workload, sys, d, opts);
+    let o = sim.run()?;
+
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str("perf_smoke".to_string()));
+    m.insert("dispatcher".to_string(), Json::Str(o.dispatcher.clone()));
+    m.insert("nodes".to_string(), Json::Num(nodes as f64));
+    m.insert("jobs".to_string(), Json::Num(jobs as f64));
+    m.insert("seed".to_string(), Json::Num(seed as f64));
+    m.insert("jobs_completed".to_string(), Json::Num(o.jobs_completed as f64));
+    m.insert("jobs_rejected".to_string(), Json::Num(o.jobs_rejected as f64));
+    m.insert("makespan_s".to_string(), Json::Num(o.makespan as f64));
+    m.insert("max_queue".to_string(), Json::Num(o.max_queue as f64));
+    m.insert("time_points".to_string(), Json::Num(o.time_points as f64));
+    m.insert("wall_s".to_string(), Json::Num(o.wall_s));
+    m.insert("cpu_ms".to_string(), Json::Num(o.cpu_ms as f64));
+    m.insert("dispatch_ns".to_string(), Json::Num(o.dispatch_ns as f64));
+    m.insert("other_ns".to_string(), Json::Num(o.other_ns as f64));
+    m.insert(
+        "dispatch_ns_per_point".to_string(),
+        Json::Num(if o.time_points == 0 {
+            0.0
+        } else {
+            o.dispatch_ns as f64 / o.time_points as f64
+        }),
+    );
+    m.insert("avg_rss_kb".to_string(), Json::Num(o.avg_rss_kb as f64));
+    m.insert("max_rss_kb".to_string(), Json::Num(o.max_rss_kb as f64));
+    if let Some(parent) = out_path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out_path, Json::Obj(m).to_string_pretty())?;
+    println!(
+        "perf-smoke {dispatcher}: {} nodes × {} jobs → {} completed in {:.2}s wall \
+         (dispatch {:.1} ms over {} points, {:.0} ns/point, peak RSS {} KB)",
+        nodes,
+        jobs,
+        o.jobs_completed,
+        o.wall_s,
+        o.dispatch_ns as f64 / 1e6,
+        o.time_points,
+        if o.time_points == 0 { 0.0 } else { o.dispatch_ns as f64 / o.time_points as f64 },
+        o.max_rss_kb
+    );
+    println!("wrote {}", out_path.display());
     Ok(())
 }
 

@@ -4,10 +4,28 @@ use super::Allocator;
 use crate::resources::{hostable_slots_in, Allocation, ResourceManager};
 use crate::workload::Job;
 
+/// Write `job`'s feasible nodes (hostable > 0) into `out` in ascending
+/// node order — the shared front half of every shipped `node_order`.
+/// Interned shapes enumerate the availability index's precomputed set
+/// (no per-node division loop); hand-built jobs take the naive scan.
+/// Both produce identical output (DESIGN.md §Perf).
+fn feasible_nodes(job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
+    out.clear();
+    if let Some(sid) = rm.shape_for(job) {
+        rm.shaped_feasible_nodes(sid, out);
+        return;
+    }
+    for n in 0..rm.num_nodes() {
+        if rm.hostable_slots(n, &job.per_slot) > 0 {
+            out.push(n as u32);
+        }
+    }
+}
+
 /// First-Fit: place slots on the first available nodes in index order.
 #[derive(Debug, Default)]
 pub struct FirstFit {
-    order_buf: Vec<u32>,
+    scratch: Vec<u32>,
 }
 
 impl FirstFit {
@@ -21,14 +39,12 @@ impl Allocator for FirstFit {
         "FF"
     }
 
-    fn node_order(&mut self, job: &Job, rm: &ResourceManager) -> Vec<u32> {
-        self.order_buf.clear();
-        for n in 0..rm.num_nodes() {
-            if rm.hostable_slots(n, &job.per_slot) > 0 {
-                self.order_buf.push(n as u32);
-            }
-        }
-        self.order_buf.clone()
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
+        feasible_nodes(job, rm, out);
+    }
+
+    fn place_scratch(&mut self) -> &mut Vec<u32> {
+        &mut self.scratch
     }
 }
 
@@ -39,6 +55,7 @@ impl Allocator for FirstFit {
 #[derive(Debug, Default)]
 pub struct BestFit {
     scored: Vec<(u32, u32)>, // (busy_slots, node)
+    scratch: Vec<u32>,
 }
 
 impl BestFit {
@@ -52,16 +69,18 @@ impl Allocator for BestFit {
         "BF"
     }
 
-    fn node_order(&mut self, job: &Job, rm: &ResourceManager) -> Vec<u32> {
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
+        feasible_nodes(job, rm, out);
         self.scored.clear();
-        for n in 0..rm.num_nodes() {
-            if rm.hostable_slots(n, &job.per_slot) > 0 {
-                self.scored.push((rm.node_busy_slots(n), n as u32));
-            }
-        }
+        self.scored.extend(out.iter().map(|&n| (rm.node_busy_slots(n as usize), n)));
         // busiest first, then lowest index
         self.scored.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
-        self.scored.iter().map(|&(_, n)| n).collect()
+        out.clear();
+        out.extend(self.scored.iter().map(|&(_, n)| n));
+    }
+
+    fn place_scratch(&mut self) -> &mut Vec<u32> {
+        &mut self.scratch
     }
 }
 
@@ -71,6 +90,7 @@ impl Allocator for BestFit {
 #[derive(Debug, Default)]
 pub struct WorstFit {
     scored: Vec<(u32, u32)>,
+    scratch: Vec<u32>,
 }
 
 impl WorstFit {
@@ -84,16 +104,18 @@ impl Allocator for WorstFit {
         "WF"
     }
 
-    fn node_order(&mut self, job: &Job, rm: &ResourceManager) -> Vec<u32> {
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
+        feasible_nodes(job, rm, out);
         self.scored.clear();
-        for n in 0..rm.num_nodes() {
-            if rm.hostable_slots(n, &job.per_slot) > 0 {
-                self.scored.push((rm.node_busy_slots(n), n as u32));
-            }
-        }
+        self.scored.extend(out.iter().map(|&n| (rm.node_busy_slots(n as usize), n)));
         // least busy first, then lowest index
         self.scored.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
-        self.scored.iter().map(|&(_, n)| n).collect()
+        out.clear();
+        out.extend(self.scored.iter().map(|&(_, n)| n));
+    }
+
+    fn place_scratch(&mut self) -> &mut Vec<u32> {
+        &mut self.scratch
     }
 }
 
@@ -151,6 +173,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         }
     }
 
@@ -195,7 +218,8 @@ mod tests {
     fn best_fit_tie_breaks_on_index() {
         let rm = rm();
         let mut bf = BestFit::new();
-        let order = bf.node_order(&job(1, 1), &rm);
+        let mut order = Vec::new();
+        bf.node_order(&job(1, 1), &rm, &mut order);
         assert_eq!(order, vec![0, 1, 2, 3]);
     }
 
@@ -207,9 +231,35 @@ mod tests {
         rm.allocate(&job(1, 3), Allocation { slices: vec![(3, 3)] }).unwrap();
         rm.allocate(&job(2, 1), Allocation { slices: vec![(1, 1)] }).unwrap();
         let mut bf = BestFit::new();
-        let order = bf.node_order(&job(3, 1), &rm);
+        let mut order = Vec::new();
+        bf.node_order(&job(3, 1), &rm, &mut order);
         assert_eq!(order[0], 3); // busiest
         assert_eq!(order[1], 1);
+    }
+
+    #[test]
+    fn interned_and_naive_paths_agree_for_all_allocators() {
+        let mut rm = rm();
+        // diversify busy counts so BF/WF sort orders are non-trivial
+        rm.allocate(&job(1, 3), Allocation { slices: vec![(3, 3)] }).unwrap();
+        rm.allocate(&job(2, 1), Allocation { slices: vec![(1, 1)] }).unwrap();
+        let naive = job(3, 5);
+        let mut fast = naive.clone();
+        fast.shape = rm.intern_shape(&fast.per_slot);
+        let allocators: [&mut dyn Allocator; 3] =
+            [&mut FirstFit::new(), &mut BestFit::new(), &mut WorstFit::new()];
+        for alloc in allocators {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            alloc.node_order(&naive, &rm, &mut a);
+            alloc.node_order(&fast, &rm, &mut b);
+            assert_eq!(a, b, "{}: indexed order must match the naive scan", alloc.name());
+            assert_eq!(
+                alloc.place(&naive, &rm),
+                alloc.place(&fast, &rm),
+                "{}: placements must match",
+                alloc.name()
+            );
+        }
     }
 
     #[test]

@@ -213,6 +213,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         }
     }
 
@@ -306,6 +307,7 @@ mod tests {
                 user: 0,
                 app: 0,
                 status: 1,
+                shape: crate::resources::ShapeId::UNSET,
             });
         }
         let run = |d: Dispatcher| {

@@ -25,6 +25,8 @@ pub struct EasyBackfilling {
     priority: super::schedulers::SortPolicy,
     /// Scratch: priority order of queue indices.
     order: Vec<u32>,
+    /// Scratch: allocator node order for the past-reservation backfill path.
+    node_buf: Vec<u32>,
 }
 
 impl EasyBackfilling {
@@ -159,8 +161,8 @@ impl Scheduler for EasyBackfilling {
                 self.min_matrix.clear();
                 self.min_matrix
                     .extend(free_now.iter().zip(&free_after).map(|(a, b)| (*a).min(*b)));
-                let node_order = alloc.node_order(job, rm);
-                if let Some(a) = place_in_matrix(&node_order, &self.min_matrix, types, job) {
+                alloc.node_order(job, rm, &mut self.node_buf);
+                if let Some(a) = place_in_matrix(&self.node_buf, &self.min_matrix, types, job) {
                     rm.allocate(job, a.clone()).expect("min-matrix placement fits live state");
                     decision.started.push((job.id, a));
                 }
@@ -193,6 +195,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         }
     }
 

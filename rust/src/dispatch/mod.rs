@@ -99,26 +99,51 @@ pub trait Allocator {
     /// allocators (the XLA kernel) compute all scores here.
     fn begin_round(&mut self, _queue: &[&Job], _rm: &ResourceManager) {}
 
-    /// Node visit order for placing `job` (most preferred first). Only nodes
-    /// that can host at least one slot need appear.
-    fn node_order(&mut self, job: &Job, rm: &ResourceManager) -> Vec<u32>;
+    /// Node visit order for placing `job` (most preferred first), written
+    /// into the caller-provided `out` buffer (cleared first) — the dispatch
+    /// hot path calls this once per placement attempt, so it must not
+    /// allocate. Only nodes that can host at least one slot need appear.
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>);
+
+    /// Per-instance scratch buffer loaned to the default
+    /// [`Allocator::place`] for its [`Allocator::node_order`] call, so
+    /// placement allocates nothing after warm-up.
+    fn place_scratch(&mut self) -> &mut Vec<u32>;
 
     /// Greedy placement of all slots following [`Allocator::node_order`].
     /// Returns `None` when the job cannot fully fit right now.
+    ///
+    /// For interned job shapes the full-fit check is a single indexed
+    /// comparison (`Σ hostable ≥ slots`), so a blocked queue head costs
+    /// O(1) per cycle instead of a node scan. The check is exact for every
+    /// shipped allocator because all of them enumerate *all* feasible nodes:
+    /// greedy placement over that order succeeds iff the total suffices.
     fn place(&mut self, job: &Job, rm: &ResourceManager) -> Option<Allocation> {
-        let order = self.node_order(job, rm);
+        let shape = rm.shape_for(job);
+        if let Some(sid) = shape {
+            if rm.shaped_total_hostable(sid) < job.slots as u128 {
+                return None;
+            }
+        }
+        let mut order = std::mem::take(self.place_scratch());
+        self.node_order(job, rm, &mut order);
         let mut remaining = job.slots as u64;
         let mut slices = Vec::new();
-        for n in order {
+        for &n in &order {
             if remaining == 0 {
                 break;
             }
-            let h = rm.hostable_slots(n as usize, &job.per_slot).min(remaining);
+            let h = match shape {
+                Some(sid) => rm.shaped_hostable_slots(sid, n as usize),
+                None => rm.hostable_slots(n as usize, &job.per_slot),
+            }
+            .min(remaining);
             if h > 0 {
                 slices.push((n, h as u32));
                 remaining -= h;
             }
         }
+        *self.place_scratch() = order;
         if remaining == 0 {
             Some(Allocation { slices })
         } else {

@@ -256,6 +256,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         }
     }
 

@@ -21,6 +21,7 @@ pub struct XlaFit {
     free: Vec<f32>,
     busy: Vec<f32>,
     scored: Vec<(f32, u32)>,
+    scratch: Vec<u32>,
 }
 
 impl XlaFit {
@@ -36,6 +37,7 @@ impl XlaFit {
             free: vec![0.0; shapes::FIT_N * shapes::FIT_R],
             busy: vec![0.0; shapes::FIT_N],
             scored: Vec::new(),
+            scratch: Vec::new(),
         })
     }
 
@@ -93,7 +95,7 @@ impl Allocator for XlaFit {
         "XF"
     }
 
-    fn node_order(&mut self, job: &Job, rm: &ResourceManager) -> Vec<u32> {
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
         assert!(
             rm.num_types() <= shapes::FIT_R,
             "XlaFit supports up to {} resource types (system has {})",
@@ -112,7 +114,12 @@ impl Allocator for XlaFit {
         // Best-Fit order: busiest first, node index ascending on ties.
         self.scored
             .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
-        self.scored.iter().map(|&(_, n)| n).collect()
+        out.clear();
+        out.extend(self.scored.iter().map(|&(_, n)| n));
+    }
+
+    fn place_scratch(&mut self) -> &mut Vec<u32> {
+        &mut self.scratch
     }
 }
 

@@ -119,8 +119,9 @@ impl SystemStatus {
             .iter()
             .enumerate()
             .map(|(r, name)| {
-                let cap: u64 = (0..rm.num_nodes()).map(|n| rm.node_capacity(n)[r]).sum();
-                let free: u64 = (0..rm.num_nodes()).map(|n| rm.node_free(n)[r]).sum();
+                // O(1): the manager tracks per-type totals incrementally
+                let cap = rm.type_capacity_total(r);
+                let free = rm.type_free_total(r);
                 (name.clone(), cap - free, cap)
             })
             .collect();
@@ -230,6 +231,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         };
         rm.allocate(&j, Allocation { slices: vec![(0, 4)] }).unwrap();
         let viz = render_utilization(&rm, 4);

@@ -1,0 +1,311 @@
+//! The availability index: per-shape hostable-slot counts maintained
+//! incrementally instead of recomputed per query (DESIGN.md §Perf).
+//!
+//! The pre-index hot path re-divided the free vector for every (job, node)
+//! pair on every dispatch cycle — O(queue × nodes × types) per cycle. The
+//! index keeps, for every interned shape (see [`super::shapes`]):
+//!
+//! * `hostable[n]` — slots of that shape node `n` can host *right now*
+//!   (0 for out-of-service nodes),
+//! * `total` — the system-wide sum (so `can_host` is one comparison),
+//! * `ever_total` — the capacity-based sum computed once at intern time
+//!   (so `can_ever_host` is one comparison; node capacity never changes).
+//!
+//! **Lazy journal synchronisation.** Mutations (`allocate`, `release`,
+//! `set_node_down`, `set_node_up`) do *not* update shape entries eagerly —
+//! with many interned shapes that would trade one scan for another. They
+//! only append the touched node ids to a shared journal (O(slices) per
+//! mutation). A shape pays for updates only when it is *queried*: it
+//! replays the journal entries since its last query, recomputing exactly
+//! the touched nodes (O(touched × types)). Shapes that are never queried
+//! again (e.g. of jobs rejected at submission) never pay anything, and
+//! their per-node vector is never even materialised — memory stays
+//! O(queried shapes × nodes).
+//!
+//! The journal is bounded: past `4 × nodes` entries it is compacted, and
+//! shapes whose cursor did not keep up are marked stale and fully rebuilt
+//! (O(nodes × types)) on their next query — amortised against the ≥
+//! `4 × nodes` touches that forced the compaction.
+//!
+//! Correctness invariant (enforced by `rust/tests/availability_index.rs`
+//! against a full-scan oracle): after synchronisation,
+//! `hostable[n] == hostable_slots_in(free[n], shape)` for up nodes and `0`
+//! for down nodes, and `total` is their exact sum. Queries therefore return
+//! byte-for-byte the same answers as the pre-index code path — speed must
+//! not change results.
+
+use super::hostable_slots_in;
+
+/// Cursor value marking a shape that must be fully rebuilt on next query.
+const STALE: usize = usize::MAX;
+
+/// Borrowed resource-manager state the index recomputes hostable counts
+/// from: the flat free matrix, the out-of-service flags and the row width.
+#[derive(Clone, Copy)]
+pub struct NodeState<'a> {
+    /// Flat `nodes × types` free matrix.
+    pub free: &'a [u64],
+    /// Per-node out-of-service flags (down nodes host nothing).
+    pub down: &'a [bool],
+    /// Number of resource types (row width of `free`).
+    pub types: usize,
+}
+
+impl NodeState<'_> {
+    #[inline]
+    fn hostable_at(&self, shape: &[u64], n: usize) -> u64 {
+        if self.down[n] {
+            0
+        } else {
+            hostable_slots_in(&self.free[n * self.types..(n + 1) * self.types], shape)
+        }
+    }
+
+    #[inline]
+    fn nodes(&self) -> usize {
+        self.down.len()
+    }
+}
+
+/// Per-shape incremental availability state.
+#[derive(Debug, Clone)]
+struct ShapeState {
+    /// Hostable slots per node; empty until the shape is first queried.
+    hostable: Vec<u64>,
+    /// Exact sum of `hostable` (u128: immune to pathological capacities).
+    total: u128,
+    /// Capacity-based sum (ignores current use and node outages), fixed at
+    /// intern time — the `can_ever_host` answer.
+    ever_total: u128,
+    /// Journal position this shape is synchronised to; `STALE` forces a
+    /// full rebuild.
+    cursor: usize,
+}
+
+/// Incremental per-shape availability over the free matrix.
+///
+/// Owned by [`super::ResourceManager`] (behind a `RefCell`, since queries
+/// synchronise lazily through `&self` methods of the manager). All methods
+/// take the manager's current state as a [`NodeState`] plus the shape's
+/// `per_slot` vector, so the index holds no duplicated matrices.
+#[derive(Debug, Clone, Default)]
+pub struct AvailabilityIndex {
+    /// Node ids whose free vector or service state changed, in order.
+    journal: Vec<u32>,
+    /// Journal length that triggers compaction.
+    limit: usize,
+    /// Dense per-shape states, indexed like the shape table.
+    shapes: Vec<ShapeState>,
+}
+
+impl AvailabilityIndex {
+    /// An empty index for a system of `nodes` nodes.
+    pub fn new(nodes: usize) -> Self {
+        AvailabilityIndex {
+            journal: Vec::new(),
+            limit: (4 * nodes).max(64),
+            shapes: Vec::new(),
+        }
+    }
+
+    /// Register the next shape (dense: the caller interns shapes in id
+    /// order). `ever_total` is the capacity-based hostable sum; the current
+    /// per-node vector is built lazily on first query.
+    pub fn register_shape(&mut self, ever_total: u128) -> usize {
+        self.shapes.push(ShapeState {
+            hostable: Vec::new(),
+            total: 0,
+            ever_total,
+            cursor: STALE,
+        });
+        self.shapes.len() - 1
+    }
+
+    /// Number of registered shapes.
+    pub fn len(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// Whether no shape is registered.
+    pub fn is_empty(&self) -> bool {
+        self.shapes.is_empty()
+    }
+
+    /// Record that `node`'s free vector or service state changed.
+    /// O(1) amortised; compaction past the journal bound marks lagging
+    /// shapes stale instead of replaying on their behalf.
+    pub fn note_touch(&mut self, node: u32) {
+        if self.journal.len() >= self.limit {
+            let len = self.journal.len();
+            for st in &mut self.shapes {
+                // Fully-synchronised shapes survive the compaction with an
+                // empty journal; everyone else rebuilds on next query.
+                st.cursor = if st.cursor == len { 0 } else { STALE };
+            }
+            self.journal.clear();
+        }
+        self.journal.push(node);
+    }
+
+    /// Capacity-based hostable total of a shape (O(1), never stale —
+    /// capacity is immutable after construction).
+    #[inline]
+    pub fn ever_total(&self, sid: usize) -> u128 {
+        self.shapes[sid].ever_total
+    }
+
+    /// Bring shape `sid` up to date with the journal.
+    fn sync(&mut self, sid: usize, st: &NodeState, shape: &[u64]) {
+        let entry = &mut self.shapes[sid];
+        if entry.cursor == STALE {
+            let nodes = st.nodes();
+            entry.hostable.clear();
+            entry.hostable.reserve(nodes);
+            let mut total = 0u128;
+            for n in 0..nodes {
+                let h = st.hostable_at(shape, n);
+                entry.hostable.push(h);
+                total += h as u128;
+            }
+            entry.total = total;
+        } else {
+            for &n in &self.journal[entry.cursor..] {
+                let n = n as usize;
+                let h = st.hostable_at(shape, n);
+                // duplicates in the journal are harmless: recomputation is
+                // idempotent and the total tracks the stored delta
+                entry.total = entry.total + h as u128 - entry.hostable[n] as u128;
+                entry.hostable[n] = h;
+            }
+        }
+        entry.cursor = self.journal.len();
+    }
+
+    /// Current system-wide hostable total of shape `sid`.
+    #[inline]
+    pub fn total(&mut self, sid: usize, st: &NodeState, shape: &[u64]) -> u128 {
+        self.sync(sid, st, shape);
+        self.shapes[sid].total
+    }
+
+    /// Current hostable slots of shape `sid` on one node.
+    #[inline]
+    pub fn hostable(&mut self, sid: usize, node: usize, st: &NodeState, shape: &[u64]) -> u64 {
+        self.sync(sid, st, shape);
+        self.shapes[sid].hostable[node]
+    }
+
+    /// Append the feasible nodes of shape `sid` (hostable > 0) to `out`, in
+    /// ascending node order — exactly the pre-index First-Fit visit order.
+    pub fn feasible_into(
+        &mut self,
+        sid: usize,
+        st: &NodeState,
+        shape: &[u64],
+        out: &mut Vec<u32>,
+    ) {
+        self.sync(sid, st, shape);
+        for (n, &h) in self.shapes[sid].hostable.iter().enumerate() {
+            if h > 0 {
+                out.push(n as u32);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 nodes × 2 types harness with hand-managed free/down state.
+    struct Harness {
+        free: Vec<u64>,
+        down: Vec<bool>,
+        idx: AvailabilityIndex,
+    }
+
+    impl Harness {
+        fn new() -> Self {
+            Harness {
+                free: vec![4, 100, 2, 50],
+                down: vec![false, false],
+                idx: AvailabilityIndex::new(2),
+            }
+        }
+
+        fn total(&mut self, sid: usize, shape: &[u64]) -> u128 {
+            let st = NodeState { free: &self.free, down: &self.down, types: 2 };
+            self.idx.total(sid, &st, shape)
+        }
+
+        fn hostable(&mut self, sid: usize, node: usize, shape: &[u64]) -> u64 {
+            let st = NodeState { free: &self.free, down: &self.down, types: 2 };
+            self.idx.hostable(sid, node, &st, shape)
+        }
+
+        fn feasible(&mut self, sid: usize, shape: &[u64]) -> Vec<u32> {
+            let st = NodeState { free: &self.free, down: &self.down, types: 2 };
+            let mut out = Vec::new();
+            self.idx.feasible_into(sid, &st, shape, &mut out);
+            out
+        }
+    }
+
+    #[test]
+    fn lazy_build_then_incremental_replay() {
+        let mut h = Harness::new();
+        let shape = [1u64, 30];
+        let sid = h.idx.register_shape(4);
+        assert_eq!(h.total(sid, &shape), 3 + 1);
+        assert_eq!(h.hostable(sid, 0, &shape), 3);
+
+        // consume node 0 fully and journal the touch
+        h.free[0] = 0;
+        h.free[1] = 10;
+        h.idx.note_touch(0);
+        assert_eq!(h.hostable(sid, 0, &shape), 0);
+        assert_eq!(h.total(sid, &shape), 1);
+    }
+
+    #[test]
+    fn down_nodes_host_nothing() {
+        let mut h = Harness::new();
+        let shape = [1u64, 1];
+        let sid = h.idx.register_shape(0);
+        assert_eq!(h.total(sid, &shape), 4 + 2);
+        h.down[1] = true;
+        h.idx.note_touch(1);
+        assert_eq!(h.total(sid, &shape), 4);
+        assert_eq!(h.feasible(sid, &shape), vec![0]);
+    }
+
+    #[test]
+    fn compaction_marks_laggards_stale_but_answers_stay_exact() {
+        let mut h = Harness::new();
+        let shape = [1u64, 1];
+        let sid = h.idx.register_shape(0);
+        assert_eq!(h.total(sid, &shape), 6);
+        // flood the journal past its bound (limit is max(64, 4 * nodes))
+        for i in 0..200u32 {
+            h.free[0] = (i % 5) as u64;
+            h.idx.note_touch(0);
+        }
+        // after compactions the shape must still answer exactly
+        assert_eq!(h.total(sid, &shape), (h.free[0].min(h.free[1]) + 2) as u128);
+        assert_eq!(h.hostable(sid, 1, &shape), 2);
+    }
+
+    #[test]
+    fn unqueried_shapes_never_materialize() {
+        let mut h = Harness::new();
+        let dead = h.idx.register_shape(42);
+        let live = h.idx.register_shape(0);
+        for _ in 0..100 {
+            h.idx.note_touch(1);
+        }
+        let shape = [1u64, 1];
+        assert_eq!(h.total(live, &shape), 6);
+        assert_eq!(h.idx.ever_total(dead), 42);
+        assert!(h.idx.shapes[dead].hostable.is_empty(), "dead shape stays unbuilt");
+    }
+}

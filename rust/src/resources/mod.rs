@@ -3,11 +3,24 @@
 //! Defines the synthetic resources from a [`SysConfig`] and mimics their
 //! allocation and release at job start and completion times. Resources are
 //! held as two flat `nodes × resource-types` matrices (capacity and free) for
-//! cache-friendly scans — the allocator hot path walks these matrices for
-//! every dispatching decision, so layout matters (see DESIGN.md §Perf).
+//! cache-friendly scans, and availability queries for *interned* job shapes
+//! ([`shapes`]) are answered from an incrementally-maintained index
+//! ([`index`]) instead of rescanned — `can_host`/`can_ever_host` are O(1)
+//! comparisons and allocator node orders enumerate precomputed feasible
+//! sets (see DESIGN.md §Perf). Jobs whose shape was never interned (built
+//! by hand in tests/benches) transparently use the pre-index full-scan
+//! path; both paths return identical answers by construction, enforced by
+//! `rust/tests/availability_index.rs`.
+
+pub mod index;
+pub mod shapes;
+
+pub use index::{AvailabilityIndex, NodeState};
+pub use shapes::{ShapeId, ShapeTable};
 
 use crate::config::SysConfig;
 use crate::workload::{Job, JobId};
+use std::cell::RefCell;
 use std::collections::HashMap;
 
 /// Where a job's slots were placed: `(node index, slot count)` slices.
@@ -42,6 +55,17 @@ pub struct ResourceManager {
     down: Vec<bool>,
     nodes: usize,
     types: usize,
+    /// Interned job shapes (dense ids carried on [`Job::shape`]).
+    shapes: ShapeTable,
+    /// Per-shape incremental availability; `RefCell` because queries
+    /// synchronise lazily through `&self` methods (never reentrant: each
+    /// query takes one short `borrow_mut`).
+    index: RefCell<AvailabilityIndex>,
+    /// Per-type capacity totals, fixed at construction.
+    type_capacity: Vec<u64>,
+    /// Per-type free totals, tracked incrementally by allocate/release (so
+    /// [`ResourceManager::utilization`] never rescans the node matrix).
+    type_free: Vec<u64>,
 }
 
 impl ResourceManager {
@@ -67,6 +91,9 @@ impl ResourceManager {
             }
         }
         let nodes = node_group.len();
+        let type_capacity: Vec<u64> = (0..types)
+            .map(|r| (0..nodes).map(|n| capacity[n * types + r]).sum())
+            .collect();
         ResourceManager {
             resource_types,
             node_group,
@@ -78,6 +105,10 @@ impl ResourceManager {
             down: vec![false; nodes],
             nodes,
             types,
+            shapes: ShapeTable::default(),
+            index: RefCell::new(AvailabilityIndex::new(nodes)),
+            type_free: type_capacity.clone(),
+            type_capacity,
         }
     }
 
@@ -140,19 +171,89 @@ impl ResourceManager {
         hostable_slots_in(self.node_free(node), per_slot)
     }
 
+    /// Intern a `per_slot` vector, registering it with the availability
+    /// index. Idempotent; the first intern of a new shape computes its
+    /// capacity-based hostable total once (O(nodes × types)), after which
+    /// `can_ever_host` for that shape is O(1). The simulator calls this at
+    /// job submission and stores the id on [`Job::shape`].
+    pub fn intern_shape(&mut self, per_slot: &[u64]) -> ShapeId {
+        if let Some(id) = self.shapes.lookup(per_slot) {
+            return id;
+        }
+        let ever: u128 = (0..self.nodes)
+            .map(|n| hostable_slots_in(self.node_capacity(n), per_slot) as u128)
+            .sum();
+        let id = self.shapes.intern(per_slot);
+        let idx = self.index.get_mut().register_shape(ever);
+        debug_assert_eq!(Some(idx), id.index(), "shape table and index must stay dense");
+        id
+    }
+
+    /// Resolve a job's interned shape against *this* manager's table.
+    /// Returns `None` for [`ShapeId::UNSET`] and for stale/foreign ids
+    /// whose stored vector does not match the job's `per_slot` (such jobs
+    /// fall back to the naive full-scan path).
+    #[inline]
+    pub fn shape_for(&self, job: &Job) -> Option<ShapeId> {
+        (self.shapes.get(job.shape)? == job.per_slot.as_slice()).then_some(job.shape)
+    }
+
+    /// The borrowed state view the availability index recomputes from.
+    #[inline]
+    fn node_state(&self) -> NodeState<'_> {
+        NodeState { free: &self.free, down: &self.down, types: self.types }
+    }
+
+    /// Hostable slots of an interned shape on one node, from the index.
+    /// Identical to [`ResourceManager::hostable_slots`] on the shape's
+    /// vector, without the per-type division scan.
+    #[inline]
+    pub fn shaped_hostable_slots(&self, sid: ShapeId, node: usize) -> u64 {
+        let i = sid.index().expect("shaped query with ShapeId::UNSET");
+        let shape = self.shapes.get(sid).expect("shape id from this manager");
+        self.index.borrow_mut().hostable(i, node, &self.node_state(), shape)
+    }
+
+    /// Append the feasible nodes (hostable > 0) of an interned shape to
+    /// `out`, in ascending node order — the First-Fit visit order.
+    pub fn shaped_feasible_nodes(&self, sid: ShapeId, out: &mut Vec<u32>) {
+        let i = sid.index().expect("shaped query with ShapeId::UNSET");
+        let shape = self.shapes.get(sid).expect("shape id from this manager");
+        self.index.borrow_mut().feasible_into(i, &self.node_state(), shape, out);
+    }
+
+    /// Current system-wide hostable total of an interned shape — the O(1)
+    /// full-fit check behind [`Allocator::place`]'s blocked-head fast path
+    /// (`place` resolves the shape once and reuses it, instead of
+    /// re-resolving through [`ResourceManager::can_host`]).
+    ///
+    /// [`Allocator::place`]: crate::dispatch::Allocator::place
+    pub fn shaped_total_hostable(&self, sid: ShapeId) -> u128 {
+        let i = sid.index().expect("shaped query with ShapeId::UNSET");
+        let shape = self.shapes.get(sid).expect("shape id from this manager");
+        self.index.borrow_mut().total(i, &self.node_state(), shape)
+    }
+
+    /// Number of shapes interned so far.
+    pub fn shape_count(&self) -> usize {
+        self.shapes.len()
+    }
+
     /// Take a node out of service. Only honored when the node is idle (no
     /// running slots); returns whether the node is now down.
     pub fn set_node_down(&mut self, node: usize) -> bool {
-        if node < self.nodes && self.node_busy_slots[node] == 0 {
+        if node < self.nodes && self.node_busy_slots[node] == 0 && !self.down[node] {
             self.down[node] = true;
+            self.index.get_mut().note_touch(node as u32);
         }
         node < self.nodes && self.down[node]
     }
 
     /// Return a node to service.
     pub fn set_node_up(&mut self, node: usize) {
-        if node < self.nodes {
+        if node < self.nodes && self.down[node] {
             self.down[node] = false;
+            self.index.get_mut().note_touch(node as u32);
         }
     }
 
@@ -167,7 +268,16 @@ impl ResourceManager {
     }
 
     /// Whether `job` could start right now (enough free resources somewhere).
+    /// O(1) for interned shapes (one indexed total comparison); full scan
+    /// otherwise. Both paths evaluate the same predicate:
+    /// `Σ_n hostable(n) ≥ slots`.
     pub fn can_host(&self, job: &Job) -> bool {
+        if let Some(sid) = self.shape_for(job) {
+            let i = sid.index().expect("resolved shape is set");
+            let shape = self.shapes.get(sid).expect("resolved shape exists");
+            let total = self.index.borrow_mut().total(i, &self.node_state(), shape);
+            return total >= job.slots as u128;
+        }
         let mut remaining = job.slots as u64;
         for n in 0..self.nodes {
             let h = self.hostable_slots(n, &job.per_slot);
@@ -179,8 +289,14 @@ impl ResourceManager {
         false
     }
 
-    /// Whether `job` could *ever* run on this system when idle.
+    /// Whether `job` could *ever* run on this system when idle. O(1) for
+    /// interned shapes (node capacity never changes, so the total is fixed
+    /// at intern time); full capacity scan otherwise.
     pub fn can_ever_host(&self, job: &Job) -> bool {
+        if let Some(sid) = self.shape_for(job) {
+            let i = sid.index().expect("resolved shape is set");
+            return self.index.borrow().ever_total(i) >= job.slots as u128;
+        }
         let mut remaining = job.slots as u64;
         for n in 0..self.nodes {
             let h = hostable_slots_in(self.node_capacity(n), &job.per_slot);
@@ -225,8 +341,10 @@ impl ResourceManager {
             let base = node as usize * self.types;
             for (r, q) in job.per_slot.iter().enumerate() {
                 self.free[base + r] -= q * slots as u64;
+                self.type_free[r] -= q * slots as u64;
             }
             self.node_busy_slots[node as usize] += slots;
+            self.index.get_mut().note_touch(node);
         }
         self.allocations.insert(job.id, alloc);
         Ok(())
@@ -242,12 +360,14 @@ impl ResourceManager {
             let base = node as usize * self.types;
             for (r, q) in job.per_slot.iter().enumerate() {
                 self.free[base + r] += q * slots as u64;
+                self.type_free[r] += q * slots as u64;
                 debug_assert!(
                     self.free[base + r] <= self.capacity[base + r],
                     "release overflows capacity"
                 );
             }
             self.node_busy_slots[node as usize] -= slots;
+            self.index.get_mut().note_touch(node);
         }
         Ok(())
     }
@@ -262,14 +382,27 @@ impl ResourceManager {
         self.allocations.len()
     }
 
-    /// System-wide utilization of a resource type in `[0, 1]`.
+    /// Total capacity of a resource type across the system (cached at
+    /// construction; O(1)).
+    #[inline]
+    pub fn type_capacity_total(&self, rtype_idx: usize) -> u64 {
+        self.type_capacity[rtype_idx]
+    }
+
+    /// Total free units of a resource type across the system (tracked
+    /// incrementally by allocate/release; O(1)).
+    #[inline]
+    pub fn type_free_total(&self, rtype_idx: usize) -> u64 {
+        self.type_free[rtype_idx]
+    }
+
+    /// System-wide utilization of a resource type in `[0, 1]`. O(1): reads
+    /// the cached per-type totals instead of rescanning all nodes (the
+    /// totals are exact integer sums, so the quotient is bit-identical to
+    /// the former full scan).
     pub fn utilization(&self, rtype_idx: usize) -> f64 {
-        let mut cap = 0u64;
-        let mut free = 0u64;
-        for n in 0..self.nodes {
-            cap += self.capacity[n * self.types + rtype_idx];
-            free += self.free[n * self.types + rtype_idx];
-        }
+        let cap = self.type_capacity[rtype_idx];
+        let free = self.type_free[rtype_idx];
         if cap == 0 {
             0.0
         } else {
@@ -401,6 +534,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: ShapeId::UNSET,
         }
     }
 
@@ -557,8 +691,106 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: ShapeId::UNSET,
         };
         assert_eq!(rm.hostable_slots(0, &gj.per_slot), 0);
         assert_eq!(rm.hostable_slots(2, &gj.per_slot), 1);
+    }
+
+    /// Attach an interned shape to a hand-built job.
+    fn interned(rm: &mut ResourceManager, mut j: Job) -> Job {
+        j.shape = rm.intern_shape(&j.per_slot);
+        j
+    }
+
+    #[test]
+    fn interned_queries_agree_with_naive_scans() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let plain = job(1, 9, 1, 30);
+        let fast = interned(&mut rm, plain.clone());
+        assert_eq!(rm.shape_for(&fast), Some(fast.shape));
+        assert_eq!(rm.shape_for(&plain), None);
+        assert_eq!(rm.can_host(&fast), rm.can_host(&plain));
+        assert_eq!(rm.can_ever_host(&fast), rm.can_ever_host(&plain));
+        for n in 0..rm.num_nodes() {
+            assert_eq!(
+                rm.shaped_hostable_slots(fast.shape, n),
+                rm.hostable_slots(n, &plain.per_slot)
+            );
+        }
+
+        // consume node 0, then re-check every query against the scans
+        let big = interned(&mut rm, job(2, 3, 1, 30));
+        rm.allocate(&big, Allocation { slices: vec![(0, 3)] }).unwrap();
+        for n in 0..rm.num_nodes() {
+            assert_eq!(
+                rm.shaped_hostable_slots(fast.shape, n),
+                rm.hostable_slots(n, &plain.per_slot)
+            );
+        }
+        let mut feasible = Vec::new();
+        rm.shaped_feasible_nodes(fast.shape, &mut feasible);
+        assert_eq!(feasible, vec![1, 2], "node 0 has no memory left for 30 MB slots");
+        assert!(!rm.can_host(&fast), "only 6 slots remain hostable");
+        assert!(rm.can_ever_host(&fast), "capacity-based answer ignores current use");
+    }
+
+    #[test]
+    fn stale_shape_ids_fall_back_to_the_naive_path() {
+        let mut rm_a = ResourceManager::from_config(&sys());
+        let mut rm_b = ResourceManager::from_config(&sys());
+        // different intern orders: id 0 means different vectors in A and B
+        rm_a.intern_shape(&[1, 30]);
+        rm_b.intern_shape(&[2, 40]);
+        let j = interned(&mut rm_a, job(1, 3, 1, 30));
+        assert_eq!(rm_a.shape_for(&j), Some(j.shape));
+        assert_eq!(rm_b.shape_for(&j), None, "foreign id with mismatched vector");
+        // the fallback still answers correctly
+        assert!(rm_b.can_host(&j));
+    }
+
+    #[test]
+    fn interning_is_idempotent_per_manager() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let a = rm.intern_shape(&[1, 30]);
+        let b = rm.intern_shape(&[1, 30]);
+        let c = rm.intern_shape(&[1, 40]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(rm.shape_count(), 2);
+    }
+
+    #[test]
+    fn down_nodes_drop_out_of_the_shaped_index() {
+        let mut rm = ResourceManager::from_config(&sys());
+        let j = interned(&mut rm, job(1, 1, 1, 10));
+        let mut feasible = Vec::new();
+        rm.shaped_feasible_nodes(j.shape, &mut feasible);
+        assert_eq!(feasible, vec![0, 1, 2]);
+        assert!(rm.set_node_down(1));
+        feasible.clear();
+        rm.shaped_feasible_nodes(j.shape, &mut feasible);
+        assert_eq!(feasible, vec![0, 2]);
+        assert_eq!(rm.shaped_hostable_slots(j.shape, 1), 0);
+        rm.set_node_up(1);
+        assert_eq!(rm.shaped_hostable_slots(j.shape, 1), 4);
+    }
+
+    #[test]
+    fn type_totals_track_allocate_release() {
+        let mut rm = ResourceManager::from_config(&sys());
+        assert_eq!(rm.type_capacity_total(0), 12);
+        assert_eq!(rm.type_capacity_total(1), 300);
+        assert_eq!(rm.type_free_total(0), 12);
+        let j = job(1, 6, 1, 10);
+        rm.allocate(&j, Allocation { slices: vec![(0, 4), (1, 2)] }).unwrap();
+        assert_eq!(rm.type_free_total(0), 6);
+        assert_eq!(rm.type_free_total(1), 240);
+        assert!((rm.utilization(0) - 0.5).abs() < 1e-12);
+        assert!((rm.utilization(1) - 0.2).abs() < 1e-12);
+        rm.release(&j).unwrap();
+        assert_eq!(rm.type_free_total(0), 12);
+        assert_eq!(rm.type_free_total(1), 300);
+        assert_eq!(rm.utilization(0), 0.0);
     }
 }

@@ -1,0 +1,149 @@
+//! Shape interning: dense ids for `per_slot` request vectors.
+//!
+//! A job's resource request is a small `per_slot` vector (one entry per
+//! resource type). Real SWF workloads reuse a bounded set of such vectors —
+//! every serial one-core job, every "16 cores × 2 GB" job and so on share
+//! one *shape* — so the dispatch hot path can key availability data on a
+//! dense [`ShapeId`] instead of re-deriving it from the raw vector for
+//! every (job, node) pair (DESIGN.md §Perf).
+//!
+//! Interning happens once, at job load: the simulator calls
+//! [`crate::resources::ResourceManager::intern_shape`] when a job is
+//! submitted and stores the id on [`crate::workload::Job::shape`]. Jobs
+//! built by hand (tests, benches) default to [`ShapeId::UNSET`] and every
+//! query transparently falls back to the pre-index full-scan path.
+//!
+//! Ids are only meaningful to the [`ShapeTable`] that issued them. A stale
+//! id — e.g. a job cloned across two resource managers that interned in
+//! different orders — is detected by comparing the job's `per_slot` vector
+//! against the table entry and demoted to the naive path, never misused.
+
+use std::collections::HashMap;
+
+/// Dense handle of an interned `per_slot` vector.
+///
+/// Obtained from [`crate::resources::ResourceManager::intern_shape`];
+/// [`ShapeId::UNSET`] marks a job whose shape was never interned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeId(u32);
+
+impl ShapeId {
+    /// The "not interned" sentinel carried by hand-built jobs.
+    pub const UNSET: ShapeId = ShapeId(u32::MAX);
+
+    /// Whether this id refers to an interned shape (it may still belong to
+    /// a *different* table; resolution validates the vector contents).
+    #[inline]
+    pub fn is_set(self) -> bool {
+        self != ShapeId::UNSET
+    }
+
+    /// Dense table index, `None` for [`ShapeId::UNSET`].
+    #[inline]
+    pub(crate) fn index(self) -> Option<usize> {
+        self.is_set().then_some(self.0 as usize)
+    }
+
+    /// Construct from a dense table index (internal; the table guards the
+    /// `u32::MAX` sentinel).
+    #[inline]
+    pub(crate) fn from_index(i: usize) -> ShapeId {
+        debug_assert!(i < u32::MAX as usize, "shape table overflow");
+        ShapeId(i as u32)
+    }
+}
+
+impl Default for ShapeId {
+    fn default() -> Self {
+        ShapeId::UNSET
+    }
+}
+
+/// The intern table: `per_slot` vector ⇄ dense [`ShapeId`].
+///
+/// Owned by the resource manager; the availability index
+/// ([`crate::resources::index::AvailabilityIndex`]) is keyed by the same
+/// dense indices.
+#[derive(Debug, Clone, Default)]
+pub struct ShapeTable {
+    /// Reverse lookup used at intern time (once per submitted job).
+    ids: HashMap<Box<[u64]>, u32>,
+    /// Dense storage, indexed by `ShapeId`.
+    shapes: Vec<Box<[u64]>>,
+}
+
+impl ShapeTable {
+    /// Id of an already-interned vector, if any.
+    #[inline]
+    pub fn lookup(&self, per_slot: &[u64]) -> Option<ShapeId> {
+        self.ids.get(per_slot).map(|&i| ShapeId(i))
+    }
+
+    /// Intern a vector, returning the existing id when it is known.
+    pub fn intern(&mut self, per_slot: &[u64]) -> ShapeId {
+        if let Some(id) = self.lookup(per_slot) {
+            return id;
+        }
+        assert!(self.shapes.len() < u32::MAX as usize, "shape table overflow");
+        let id = self.shapes.len() as u32;
+        let boxed: Box<[u64]> = per_slot.into();
+        self.ids.insert(boxed.clone(), id);
+        self.shapes.push(boxed);
+        ShapeId(id)
+    }
+
+    /// The vector behind an id, `None` for [`ShapeId::UNSET`] or a foreign
+    /// id past the end of this table.
+    #[inline]
+    pub fn get(&self, id: ShapeId) -> Option<&[u64]> {
+        self.shapes.get(id.index()?).map(|b| &**b)
+    }
+
+    /// Number of interned shapes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// Whether no shape has been interned yet.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.shapes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_dense() {
+        let mut t = ShapeTable::default();
+        let a = t.intern(&[1, 256]);
+        let b = t.intern(&[1, 512]);
+        let a2 = t.intern(&[1, 256]);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(a), Some(&[1u64, 256][..]));
+        assert_eq!(t.get(b), Some(&[1u64, 512][..]));
+    }
+
+    #[test]
+    fn unset_and_foreign_ids_resolve_to_none() {
+        let mut t = ShapeTable::default();
+        t.intern(&[1]);
+        assert_eq!(t.get(ShapeId::UNSET), None);
+        assert_eq!(t.get(ShapeId(7)), None);
+        assert!(!ShapeId::UNSET.is_set());
+        assert_eq!(ShapeId::default(), ShapeId::UNSET);
+    }
+
+    #[test]
+    fn distinct_lengths_are_distinct_shapes() {
+        let mut t = ShapeTable::default();
+        let a = t.intern(&[1]);
+        let b = t.intern(&[1, 0]);
+        assert_ne!(a, b);
+    }
+}

@@ -32,7 +32,7 @@ use crate::dispatch::{Dispatcher, RunningInfo, SystemView};
 use crate::monitor::{process_cpu_ms, MemProbe};
 use crate::output::{JobRecord, OutputCollector, PerfRecord};
 use crate::resources::ResourceManager;
-use crate::util::idhash::IdHashMap;
+use crate::util::idhash::{IdHashMap, IdHashSet};
 use crate::workload::{FactoryConfig, Job, JobId};
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
@@ -69,6 +69,13 @@ pub struct SimOptions {
     /// Measure per-time-point wall time (Figs 12–13). Costs ~4 clock reads
     /// per time point; pure-overhead runs (Table 1) switch it off.
     pub time_dispatch: bool,
+    /// Intern job shapes at submission so availability queries run against
+    /// the incremental index (DESIGN.md §Perf). On by default; switching it
+    /// off forces the pre-index full-scan path everywhere — results are
+    /// identical by construction (asserted in
+    /// `rust/tests/availability_index.rs`), only slower, so the toggle
+    /// exists for A/B measurements and the equivalence tests themselves.
+    pub use_shape_index: bool,
 }
 
 impl Default for SimOptions {
@@ -82,6 +89,7 @@ impl Default for SimOptions {
             seed: 0,
             output: OutputCollector::in_memory(true, true),
             time_dispatch: true,
+            use_shape_index: true,
         }
     }
 }
@@ -185,6 +193,52 @@ pub struct Simulator {
     /// Values published by addons for the dispatcher.
     extra: BTreeMap<String, f64>,
     source_done: bool,
+    // --- reusable per-cycle scratch (zero-allocation dispatch cycle) ---
+    /// Started/rejected ids for the one-pass queue removal.
+    retain_scratch: IdHashSet,
+    /// Completions drained at the current timestamp.
+    completed_buf: Vec<JobId>,
+    /// Submissions drained at the current timestamp.
+    submitted_buf: Vec<Job>,
+    /// Zero-duration completions materialized mid-time-point.
+    done_now_buf: Vec<JobId>,
+}
+
+/// Reusable allocations for the dispatcher's queue/running views.
+///
+/// The vectors are *always empty* between dispatch cycles; the only thing
+/// they carry across borrow scopes is heap capacity, so the per-cycle view
+/// construction stops allocating after warm-up.
+#[derive(Default)]
+struct ViewScratch {
+    queue: Vec<&'static Job>,
+    running: Vec<RunningInfo<'static>>,
+}
+
+impl ViewScratch {
+    /// Loan the buffers out for one dispatch cycle. Shortening `'static` to
+    /// the borrow's lifetime is plain covariance — no unsafe here.
+    fn take<'a>(&mut self) -> (Vec<&'a Job>, Vec<RunningInfo<'a>>) {
+        let queue: Vec<&'static Job> = std::mem::take(&mut self.queue);
+        let running: Vec<RunningInfo<'static>> = std::mem::take(&mut self.running);
+        (queue, running)
+    }
+
+    /// Return the buffers after the cycle. Both are emptied first, so
+    /// re-widening the lifetime parameter is sound: an empty `Vec` holds no
+    /// reference, only an allocation.
+    fn put<'a>(&mut self, mut queue: Vec<&'a Job>, mut running: Vec<RunningInfo<'a>>) {
+        queue.clear();
+        running.clear();
+        // SAFETY: both vectors are empty (cleared above); `Vec<&'a Job>`
+        // and `Vec<&'static Job>` (resp. `RunningInfo<_>`) are the same
+        // type up to lifetimes, so layout is identical, and no borrow
+        // outlives this call because no element exists.
+        self.queue = unsafe { std::mem::transmute::<Vec<&'a Job>, Vec<&'static Job>>(queue) };
+        self.running = unsafe {
+            std::mem::transmute::<Vec<RunningInfo<'a>>, Vec<RunningInfo<'static>>>(running)
+        };
+    }
 }
 
 impl Simulator {
@@ -230,6 +284,10 @@ impl Simulator {
             addon_wake: Vec::new(),
             extra: BTreeMap::new(),
             source_done: false,
+            retain_scratch: IdHashSet::default(),
+            completed_buf: Vec::new(),
+            submitted_buf: Vec::new(),
+            done_now_buf: Vec::new(),
         }
     }
 
@@ -306,9 +364,15 @@ impl Simulator {
         Ok(())
     }
 
-    /// Enqueue (or reject) a job whose submission time has arrived.
-    fn submit_job(&mut self, job: Job, first_submit: &mut Option<u64>, out: &mut SimOutput) {
+    /// Enqueue (or reject) a job whose submission time has arrived. This is
+    /// where shapes are interned (once per job, O(nodes × types) only the
+    /// first time a shape appears), so every later availability query on
+    /// the dispatch hot path is an index lookup.
+    fn submit_job(&mut self, mut job: Job, first_submit: &mut Option<u64>, out: &mut SimOutput) {
         first_submit.get_or_insert(job.submit);
+        if self.opts.use_shape_index {
+            job.shape = self.rm.intern_shape(&job.per_slot);
+        }
         if self.opts.reject_unrunnable && !self.rm.can_ever_host(&job) {
             out.jobs_rejected += 1;
             return;
@@ -347,6 +411,7 @@ impl Simulator {
             }
         }
         let timing = self.opts.time_dispatch;
+        let mut views = ViewScratch::default();
 
         loop {
             let Some(now) = self.events.next_time() else {
@@ -366,8 +431,9 @@ impl Simulator {
             self.refill(now);
 
             // --- drain every event at `now`: one timestamp = one point ---
-            let mut completed: Vec<JobId> = Vec::new();
-            let mut submitted: Vec<Job> = Vec::new();
+            // (reused buffers: emptied and returned at the end of the point)
+            let mut completed = std::mem::take(&mut self.completed_buf);
+            let mut submitted = std::mem::take(&mut self.submitted_buf);
             let mut addon_due = false;
             let mut mem_due = false;
             while let Some(ev) = self.events.pop_at(now) {
@@ -407,11 +473,14 @@ impl Simulator {
 
             // --- completions at `now` (release before submit/dispatch) ---
             self.complete_jobs(now, &completed, &mut out)?;
+            completed.clear();
+            self.completed_buf = completed;
 
             // --- submissions at `now` ---
-            for job in submitted {
+            for job in submitted.drain(..) {
                 self.submit_job(job, &mut first_submit, &mut out);
             }
+            self.submitted_buf = submitted;
 
             if !job_event && !addon_due {
                 // Observation-only timestamp (memory sample or stale wake):
@@ -465,16 +534,20 @@ impl Simulator {
             loop {
                 let t_disp0 = timing.then(Instant::now);
                 let decision = {
-                    let queue_jobs: Vec<&Job> =
-                        self.queue.iter().map(|id| &self.jobs[id]).collect();
-                    let running: Vec<RunningInfo> = self
-                        .starts
-                        .iter()
-                        .map(|(id, &start)| RunningInfo { job: &self.jobs[id], start })
-                        .collect();
+                    // view buffers are recycled across cycles (ViewScratch):
+                    // no per-cycle allocation once capacities warm up
+                    let (mut queue_jobs, mut running) = views.take();
+                    queue_jobs.extend(self.queue.iter().map(|id| &self.jobs[id]));
+                    running.extend(
+                        self.starts
+                            .iter()
+                            .map(|(id, &start)| RunningInfo { job: &self.jobs[id], start }),
+                    );
                     let view =
                         SystemView { now, queue: queue_jobs, running, extra: &self.extra };
-                    self.dispatcher.dispatch(&view, &mut self.rm)
+                    let decision = self.dispatcher.dispatch(&view, &mut self.rm);
+                    views.put(view.queue, view.running);
+                    decision
                 };
                 if let Some(t0) = t_disp0 {
                     dispatch_ns += t0.elapsed().as_nanos() as u64;
@@ -493,19 +566,20 @@ impl Simulator {
                     out.jobs_rejected += 1;
                 }
                 // Remove started + rejected ids from the queue in one pass
-                // (a per-id retain is O(k·|queue|) and showed up in profiles).
+                // (a per-id retain is O(k·|queue|) and showed up in
+                // profiles); the id set is a reusable scratch with the fast
+                // id hasher, so this allocates nothing after warm-up.
                 let removed = decision.started.len() + decision.rejected.len();
                 if removed > 0 {
                     if removed == self.queue.len() {
                         self.queue.clear();
                     } else {
-                        let started: std::collections::HashSet<JobId> = decision
-                            .started
-                            .iter()
-                            .map(|(id, _)| *id)
-                            .chain(decision.rejected.iter().copied())
-                            .collect();
-                        self.queue.retain(|q| !started.contains(q));
+                        self.retain_scratch.clear();
+                        self.retain_scratch
+                            .extend(decision.started.iter().map(|(id, _)| *id));
+                        self.retain_scratch.extend(decision.rejected.iter().copied());
+                        let remove = &self.retain_scratch;
+                        self.queue.retain(|q| !remove.contains(q));
                     }
                 }
 
@@ -514,7 +588,7 @@ impl Simulator {
                 }
                 // Events materialized at the current timestamp (zero-duration
                 // completions): drain, retire, and dispatch again.
-                let mut done_now: Vec<JobId> = Vec::new();
+                let mut done_now = std::mem::take(&mut self.done_now_buf);
                 while let Some(ev) = self.events.pop_at(now) {
                     match ev.payload {
                         EventPayload::Complete(id) => done_now.push(id),
@@ -536,6 +610,8 @@ impl Simulator {
                     }
                 }
                 self.complete_jobs(now, &done_now, &mut out)?;
+                done_now.clear();
+                self.done_now_buf = done_now;
             }
 
             // --- addon wake-ups toward the *next* time point -------------
@@ -623,6 +699,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         }
     }
 

@@ -97,6 +97,7 @@ mod tests {
             user: 0,
             app: 0,
             status: 1,
+            shape: crate::resources::ShapeId::UNSET,
         };
         let mut s = MemorySource::new(vec![mk(1, 50), mk(2, 10), mk(3, 30)]);
         let order: Vec<u64> = std::iter::from_fn(|| s.next_job()).map(|j| j.id).collect();

@@ -49,6 +49,7 @@ pub fn arb_job(rng: &mut Pcg64, id: u64, max_slots: u32, types: usize) -> crate:
         user: rng.next_u32() % 16,
         app: rng.next_u32() % 8,
         status: 1,
+        shape: crate::resources::ShapeId::UNSET,
     }
 }
 

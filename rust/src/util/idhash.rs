@@ -49,6 +49,10 @@ impl BuildHasher for BuildIdHasher {
 /// A `HashMap` keyed by `u64` ids with the fast hasher.
 pub type IdHashMap<V> = HashMap<u64, V, BuildIdHasher>;
 
+/// A `HashSet` of `u64` ids with the fast hasher (e.g. the simulator's
+/// reusable started/rejected removal scratch).
+pub type IdHashSet = std::collections::HashSet<u64, BuildIdHasher>;
+
 #[cfg(test)]
 mod tests {
     use super::*;

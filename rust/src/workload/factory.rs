@@ -158,6 +158,9 @@ impl JobFactory {
             user: f.user_id.max(0) as u32,
             app: f.app_id.max(0) as u32,
             status: f.status as i32,
+            // interned by the simulator at submission, against the run's
+            // resource manager (the factory has no shape table)
+            shape: crate::resources::ShapeId::UNSET,
         })
     }
 }

@@ -1,5 +1,7 @@
 //! The synthetic job model.
 
+use crate::resources::ShapeId;
+
 /// Identifier of a job inside one simulation (the SWF job number).
 pub type JobId = u64;
 
@@ -61,6 +63,15 @@ pub struct Job {
     pub app: u32,
     /// SWF status field (-1 when absent).
     pub status: i32,
+    /// Interned handle of `per_slot` in the resource manager's shape table
+    /// (DESIGN.md §Perf). The simulator interns it at submission so
+    /// availability queries on the dispatch hot path are index lookups
+    /// instead of per-node scans; hand-built jobs default to
+    /// [`ShapeId::UNSET`] and transparently use the full-scan path. Ids are
+    /// only meaningful to the [`crate::resources::ResourceManager`] that
+    /// issued them — stale ids are detected by vector comparison and
+    /// demoted to the naive path.
+    pub shape: ShapeId,
 }
 
 impl Job {
@@ -107,6 +118,7 @@ mod tests {
             user: 3,
             app: 9,
             status: 1,
+            shape: ShapeId::UNSET,
         }
     }
 

@@ -1,0 +1,373 @@
+//! Availability-index invariants (DESIGN.md §Perf).
+//!
+//! Two families of guarantees:
+//!
+//! 1. **Oracle equivalence** — after every allocate/release/down/up/intern
+//!    step of a randomized sequence, every indexed query (per-node
+//!    hostable, feasible enumeration, `can_host`, `can_ever_host`) must
+//!    equal a naive full scan recomputed from the free/capacity matrices.
+//! 2. **Byte identity** — simulations and whole campaigns executed with the
+//!    index disabled (`SimOptions::use_shape_index = false`, the pre-index
+//!    code path) must produce byte-identical outputs: speed must not
+//!    change results.
+
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::resources::{hostable_slots_in, Allocation, ResourceManager, ShapeId};
+use accasim::rng::Pcg64;
+use accasim::sim::{SimOptions, SimOutput, Simulator};
+use accasim::testkit::{arb_jobs, check};
+use accasim::testutil as tempfile;
+use accasim::workload::Job;
+
+fn probe(per_slot: &[u64], shape: ShapeId, slots: u32) -> Job {
+    Job {
+        id: 0,
+        submit: 0,
+        duration: 1,
+        req_time: 1,
+        slots,
+        per_slot: per_slot.to_vec(),
+        user: 0,
+        app: 0,
+        status: 1,
+        shape,
+    }
+}
+
+/// Naive oracle: hostable slots of `shape` on `node`, recomputed from the
+/// manager's public matrices (the pre-index code path).
+fn oracle_hostable(rm: &ResourceManager, node: usize, shape: &[u64]) -> u64 {
+    if rm.is_node_down(node) {
+        0
+    } else {
+        hostable_slots_in(rm.node_free(node), shape)
+    }
+}
+
+fn oracle_total(rm: &ResourceManager, shape: &[u64]) -> u128 {
+    (0..rm.num_nodes()).map(|n| oracle_hostable(rm, n, shape) as u128).sum()
+}
+
+fn oracle_ever_total(rm: &ResourceManager, shape: &[u64]) -> u128 {
+    (0..rm.num_nodes())
+        .map(|n| hostable_slots_in(rm.node_capacity(n), shape) as u128)
+        .sum()
+}
+
+/// Assert every indexed query on `rm` equals the full-scan oracle, for
+/// every interned shape.
+fn assert_index_matches_oracle(rm: &ResourceManager, shapes: &[(Vec<u64>, ShapeId)]) {
+    for (vec, sid) in shapes {
+        let total = oracle_total(rm, vec);
+        let mut oracle_feasible = Vec::new();
+        for n in 0..rm.num_nodes() {
+            let expect = oracle_hostable(rm, n, vec);
+            assert_eq!(
+                rm.shaped_hostable_slots(*sid, n),
+                expect,
+                "shape {vec:?} node {n}: index diverged from the full scan"
+            );
+            if expect > 0 {
+                oracle_feasible.push(n as u32);
+            }
+        }
+        let mut feasible = Vec::new();
+        rm.shaped_feasible_nodes(*sid, &mut feasible);
+        assert_eq!(feasible, oracle_feasible, "shape {vec:?}: feasible set diverged");
+
+        // can_host at the boundary: exactly `total` fits, `total + 1` not
+        for slots in [1u128, total.max(1), total + 1] {
+            let slots = slots.min(u32::MAX as u128) as u32;
+            let fast = probe(vec, *sid, slots);
+            assert_eq!(
+                rm.can_host(&fast),
+                total >= slots as u128 && slots > 0,
+                "shape {vec:?} slots {slots}: can_host diverged (total {total})"
+            );
+            assert_eq!(
+                rm.can_ever_host(&fast),
+                oracle_ever_total(rm, vec) >= slots as u128,
+                "shape {vec:?} slots {slots}: can_ever_host diverged"
+            );
+        }
+    }
+}
+
+/// Greedy first-fit allocation of `slots` slots of `shape`, straight from
+/// the oracle (independent of the allocators under test).
+fn oracle_place(rm: &ResourceManager, shape: &[u64], slots: u32) -> Option<Allocation> {
+    let mut remaining = slots as u64;
+    let mut slices = Vec::new();
+    for n in 0..rm.num_nodes() {
+        if remaining == 0 {
+            break;
+        }
+        let h = oracle_hostable(rm, n, shape).min(remaining);
+        if h > 0 {
+            slices.push((n as u32, h as u32));
+            remaining -= h;
+        }
+    }
+    (remaining == 0).then_some(Allocation { slices })
+}
+
+/// The tentpole property: drive randomized allocate/release/down/up/intern
+/// sequences (long enough to force journal compactions) and assert the
+/// index equals the naive full-scan oracle after every single step.
+#[test]
+fn prop_index_matches_full_scan_oracle() {
+    check("availability-index", 0x1DEC5, 30, |rng| {
+        let nodes = rng.range_u64(1, 10);
+        let sys = SysConfig::homogeneous(
+            "idx",
+            nodes,
+            &[("core", rng.range_u64(1, 8)), ("mem", rng.range_u64(4, 64))],
+            0,
+        );
+        let mut rm = ResourceManager::from_config(&sys);
+
+        let mut shapes: Vec<(Vec<u64>, ShapeId)> = Vec::new();
+        fn intern(
+            rm: &mut ResourceManager,
+            shapes: &mut Vec<(Vec<u64>, ShapeId)>,
+            rng: &mut Pcg64,
+        ) {
+            let vec = vec![rng.range_u64(0, 2), rng.range_u64(0, 16)];
+            let sid = rm.intern_shape(&vec);
+            if !shapes.iter().any(|(v, _)| *v == vec) {
+                shapes.push((vec, sid));
+            }
+        }
+        for _ in 0..rng.range_u64(1, 4) {
+            intern(&mut rm, &mut shapes, rng);
+        }
+
+        let mut live: Vec<Job> = Vec::new();
+        let mut next_id = 1u64;
+        // 150 ops × a few slices per allocate ≫ the 64-entry journal floor:
+        // compaction paths are exercised on small systems every case
+        for _ in 0..150 {
+            match rng.range_u64(0, 9) {
+                0..=3 => {
+                    // allocate a random job of a random interned shape
+                    let (vec, sid) = &shapes[rng.range_u64(0, shapes.len() as u64 - 1) as usize];
+                    let slots = rng.range_u64(1, 8) as u32;
+                    if let Some(alloc) = oracle_place(&rm, vec, slots) {
+                        let mut j = probe(vec, *sid, slots);
+                        j.id = next_id;
+                        next_id += 1;
+                        rm.allocate(&j, alloc).expect("oracle placement is valid");
+                        live.push(j);
+                    }
+                }
+                4..=6 => {
+                    if !live.is_empty() {
+                        let i = rng.range_u64(0, live.len() as u64 - 1) as usize;
+                        let j = live.swap_remove(i);
+                        rm.release(&j).expect("live job releases");
+                    }
+                }
+                7 => {
+                    rm.set_node_down(rng.range_u64(0, nodes - 1) as usize);
+                }
+                8 => {
+                    rm.set_node_up(rng.range_u64(0, nodes - 1) as usize);
+                }
+                _ => {
+                    // intern a fresh shape mid-sequence: it must observe the
+                    // *current* state on its first query
+                    intern(&mut rm, &mut shapes, rng);
+                }
+            }
+            assert_index_matches_oracle(&rm, &shapes);
+        }
+    });
+}
+
+fn run_with_index(
+    jobs: Vec<Job>,
+    sys: SysConfig,
+    label: &str,
+    use_shape_index: bool,
+) -> SimOutput {
+    let opts = SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        mem_sample_secs: 0,
+        use_shape_index,
+        ..Default::default()
+    };
+    let mut sim =
+        Simulator::from_jobs(jobs, sys, dispatcher_from_label(label).unwrap(), opts);
+    sim.run().expect("simulation completes")
+}
+
+/// Render the deterministic portion of a run: the full jobs.csv bytes plus
+/// the timing-free perf columns (dispatch/other ns and RSS are wall-clock
+/// noise and excluded by design — same rule as the campaign store's
+/// byte-identical index.json).
+fn deterministic_bytes(out: &SimOutput) -> String {
+    let mut s = String::from("jobs.csv\n");
+    for j in &out.jobs {
+        s.push_str(&j.to_csv());
+        s.push('\n');
+    }
+    s.push_str("perf(t,queue,running,started)\n");
+    for p in &out.perf {
+        s.push_str(&format!("{},{},{},{}\n", p.t, p.queue_len, p.running, p.started));
+    }
+    s.push_str(&format!(
+        "completed={} rejected={} makespan={} slowdown_sum={} wait_sum={} max_queue={}\n",
+        out.jobs_completed,
+        out.jobs_rejected,
+        out.makespan,
+        out.slowdown_sum,
+        out.wait_sum,
+        out.max_queue
+    ));
+    s
+}
+
+/// Byte identity across the index toggle, for every shipped scheduler ×
+/// allocator family (including the backfillers, whose shadow/profile math
+/// must keep seeing the exact same committed state).
+#[test]
+fn simulations_are_byte_identical_with_index_disabled() {
+    let mut rng = Pcg64::new(0xB17E);
+    let jobs = arb_jobs(&mut rng, 120, 12, 3);
+    let sys = SysConfig::homogeneous("ab", 6, &[("core", 8), ("gpu", 1), ("mem", 64)], 0);
+    for label in
+        ["FIFO-FF", "SJF-BF", "LJF-WF", "EBF-FF", "EBF_SJF-BF", "CBF-FF", "FIFO_RND-FF"]
+    {
+        let on = run_with_index(jobs.clone(), sys.clone(), label, true);
+        let off = run_with_index(jobs.clone(), sys.clone(), label, false);
+        assert_eq!(
+            deterministic_bytes(&on),
+            deterministic_bytes(&off),
+            "{label}: the availability index changed simulation results"
+        );
+        assert!(on.jobs_completed > 0, "{label}: degenerate case");
+    }
+}
+
+/// Same guarantee under capacity perturbations: failure windows drive
+/// set_node_down/up through the index's journal mid-simulation.
+#[test]
+fn failure_scenarios_are_byte_identical_with_index_disabled() {
+    use accasim::addons::FailureInjector;
+    let mut rng = Pcg64::new(0xFA11);
+    let jobs = arb_jobs(&mut rng, 80, 8, 2);
+    let sys = SysConfig::homogeneous("abf", 4, &[("core", 8), ("mem", 64)], 0);
+    let run = |use_shape_index: bool| {
+        let opts = SimOptions {
+            output: OutputCollector::in_memory(true, true),
+            addons: vec![Box::new(FailureInjector::new(vec![
+                (0, 100, 5_000),
+                (1, 2_000, 20_000),
+                (2, 100, 3_000),
+            ]))],
+            mem_sample_secs: 0,
+            use_shape_index,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(
+            jobs.clone(),
+            sys.clone(),
+            dispatcher_from_label("FIFO-FF").unwrap(),
+            opts,
+        );
+        sim.run().expect("simulation completes")
+    };
+    let (on, off) = (run(true), run(false));
+    assert_eq!(deterministic_bytes(&on), deterministic_bytes(&off));
+    assert_eq!(on.addon_wakes, off.addon_wakes);
+}
+
+/// Campaign-level byte identity: the same matrix executed with the index on
+/// and off must leave byte-identical stores — summary.csv, index.json, the
+/// fig10/fig11 plot CSVs and every per-run jobs.csv (perf.csv agrees on its
+/// deterministic columns; its ns/RSS fields are wall-clock noise).
+#[test]
+fn campaign_store_is_byte_identical_with_index_disabled() {
+    use accasim::campaign::{Campaign, CampaignSpec};
+    let tmp = tempfile::tempdir().unwrap();
+    let spec = || {
+        let mut s = CampaignSpec::new("abidx");
+        s.add_trace("seth", 0.0005).add_system_trace("seth");
+        s.add_dispatcher("FIFO-FF").add_dispatcher("SJF-BF");
+        s.seeds = vec![1, 2];
+        s
+    };
+    let dir_on = tmp.path().join("on");
+    let dir_off = tmp.path().join("off");
+    let rep_on = Campaign::new(spec(), &dir_on).shape_index(true).run().unwrap();
+    let rep_off = Campaign::new(spec(), &dir_off).shape_index(false).run().unwrap();
+    assert_eq!(rep_on.records.len(), 4);
+    assert_eq!(rep_on.records.len(), rep_off.records.len());
+
+    let read = |p: &std::path::Path| std::fs::read_to_string(p).unwrap();
+    for file in ["summary.csv", "index.json", "plots/fig10_slowdown.csv", "plots/fig11_queue.csv"]
+    {
+        assert_eq!(
+            read(&dir_on.join(file)),
+            read(&dir_off.join(file)),
+            "{file} must not depend on the availability index"
+        );
+    }
+    for rec in &rep_on.records {
+        let run = |d: &std::path::Path| d.join("runs").join(&rec.run_id);
+        assert_eq!(
+            read(&run(&dir_on).join("jobs.csv")),
+            read(&run(&dir_off).join("jobs.csv")),
+            "{}: jobs.csv must not depend on the availability index",
+            rec.run_id
+        );
+        let strip = |text: String| {
+            // keep the deterministic perf columns: t,queue_len,running,started
+            text.lines()
+                .skip(1)
+                .map(|l| {
+                    let f: Vec<&str> = l.split(',').collect();
+                    format!("{},{},{},{}", f[0], f[3], f[4], f[5])
+                })
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(
+            strip(read(&run(&dir_on).join("perf.csv"))),
+            strip(read(&run(&dir_off).join("perf.csv"))),
+            "{}: perf.csv deterministic columns diverged",
+            rec.run_id
+        );
+    }
+}
+
+/// The simulator interns shapes at submission: after a run the manager's
+/// table holds exactly the distinct per_slot vectors of the workload.
+#[test]
+fn simulator_interns_shapes_at_submission() {
+    let mk = |id: u64, mem: u64| Job {
+        id,
+        submit: 0,
+        duration: 5,
+        req_time: 5,
+        slots: 1,
+        per_slot: vec![1, mem],
+        user: 0,
+        app: 0,
+        status: 1,
+        shape: ShapeId::UNSET,
+    };
+    let jobs = vec![mk(1, 10), mk(2, 10), mk(3, 20), mk(4, 10), mk(5, 30)];
+    let sys = SysConfig::homogeneous("intern", 2, &[("core", 4), ("mem", 100)], 0);
+    let mut sim = Simulator::from_jobs(
+        jobs,
+        sys,
+        dispatcher_from_label("FIFO-FF").unwrap(),
+        SimOptions { mem_sample_secs: 0, ..Default::default() },
+    );
+    let out = sim.run().unwrap();
+    assert_eq!(out.jobs_completed, 5);
+    assert_eq!(sim.resource_manager().shape_count(), 3, "three distinct shapes");
+}

@@ -185,6 +185,7 @@ fn arb_job(rng: &mut Pcg64, id: u64) -> Job {
         user: 0,
         app: 0,
         status: 1,
+        shape: accasim::resources::ShapeId::UNSET,
     }
 }
 
@@ -205,8 +206,9 @@ fn xla_fit_orders_nodes_exactly_like_best_fit() {
             }
         }
         let job = arb_job(&mut rng, 1);
-        let order_bf = bf.node_order(&job, &rm);
-        let order_xf = xf.node_order(&job, &rm);
+        let (mut order_bf, mut order_xf) = (Vec::new(), Vec::new());
+        bf.node_order(&job, &rm, &mut order_bf);
+        xf.node_order(&job, &rm, &mut order_xf);
         assert_eq!(order_bf, order_xf, "case {case}: node orders diverge");
     }
 }
@@ -252,12 +254,14 @@ fn xla_fit_handles_chunked_node_counts() {
         user: 0,
         app: 0,
         status: 1,
+        shape: accasim::resources::ShapeId::UNSET,
     };
     rm.allocate(&j0, Allocation { slices: vec![(far as u32, 2)] }).unwrap();
     // a 1-core job fits everywhere, so the busiest (far) node must lead
     let job = Job { per_slot: vec![1, 0], slots: 1, ..j0.clone() };
-    let order_bf = bf.node_order(&job, &rm);
-    let order_xf = xf.node_order(&job, &rm);
+    let (mut order_bf, mut order_xf) = (Vec::new(), Vec::new());
+    bf.node_order(&job, &rm, &mut order_bf);
+    xf.node_order(&job, &rm, &mut order_xf);
     assert_eq!(order_bf, order_xf);
     assert_eq!(order_xf[0], far as u32);
 }
