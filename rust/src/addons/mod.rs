@@ -11,6 +11,8 @@
 //! the workload with no job events (DESIGN.md §Events).
 
 use crate::resources::ResourceManager;
+use crate::util::json::{f64_from_hex, f64_to_hex, Json};
+use std::collections::BTreeMap;
 
 /// Actions an additional-data provider may request from the event manager.
 #[derive(Debug, Clone, PartialEq)]
@@ -72,6 +74,23 @@ pub trait AdditionalData: Send {
     /// bulk-rejecting a stalled queue that could still be served.
     fn may_restore_capacity(&self) -> bool {
         false
+    }
+
+    /// Externalize mutable state for a snapshot (DESIGN.md §Event log &
+    /// replay). Stateless providers (pure functions of time, like the
+    /// power-cap schedule) keep the default `Json::Null`; stateful ones
+    /// (integrators, acknowledged-failure trackers) must serialize every
+    /// field that influences future behaviour — floats bit-exactly, via
+    /// [`crate::util::json::f64_to_hex`].
+    fn snapshot_state(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore state captured by [`Self::snapshot_state`]. The snapshot
+    /// layer matches providers by [`Self::name`] and construction order; a
+    /// provider handed `Json::Null` starts fresh (the stateless default).
+    fn restore_state(&mut self, _state: &Json) -> anyhow::Result<()> {
+        Ok(())
     }
 }
 
@@ -154,6 +173,36 @@ impl AdditionalData for PowerModel {
 
     fn next_event(&self, now: u64) -> Option<u64> {
         (self.cadence > 0).then_some(now + self.cadence)
+    }
+
+    fn snapshot_state(&self) -> Json {
+        let mut m = BTreeMap::new();
+        if let Some(t) = self.last_t {
+            m.insert("last_t".to_string(), Json::Num(t as f64));
+        }
+        m.insert("last_power".to_string(), Json::Str(f64_to_hex(self.last_power)));
+        m.insert("energy_j".to_string(), Json::Str(f64_to_hex(self.energy_j)));
+        Json::Obj(m)
+    }
+
+    fn restore_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        if matches!(state, Json::Null) {
+            return Ok(());
+        }
+        self.last_t = state.get("last_t").and_then(Json::as_u64);
+        self.last_power = f64_from_hex(
+            state
+                .get("last_power")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("power state missing last_power"))?,
+        )?;
+        self.energy_j = f64_from_hex(
+            state
+                .get("energy_j")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("power state missing energy_j"))?,
+        )?;
+        Ok(())
     }
 }
 
@@ -261,6 +310,36 @@ impl AdditionalData for FailureInjector {
 
     fn may_restore_capacity(&self) -> bool {
         true
+    }
+
+    fn snapshot_state(&self) -> Json {
+        // the plan itself is reconstructed from the scenario; only the
+        // acknowledged-down set is runtime state
+        let mut m = BTreeMap::new();
+        m.insert(
+            "failed".to_string(),
+            Json::Arr(self.failed.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    fn restore_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        if matches!(state, Json::Null) {
+            return Ok(());
+        }
+        let arr = state
+            .get("failed")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("failure state missing failed list"))?;
+        self.failed = arr
+            .iter()
+            .map(|v| {
+                v.as_u64()
+                    .map(|n| n as u32)
+                    .ok_or_else(|| anyhow::anyhow!("bad node id in failure state"))
+            })
+            .collect::<anyhow::Result<Vec<u32>>>()?;
+        Ok(())
     }
 }
 
@@ -398,6 +477,34 @@ mod tests {
         assert_eq!(fi.next_event(18), Some(20));
         assert_eq!(fi.next_event(20), None);
         assert!(fi.may_restore_capacity());
+    }
+
+    #[test]
+    fn power_state_roundtrips_bit_exactly() {
+        let rm = rm();
+        let mut pm = PowerModel::new(100.0, 300.0);
+        pm.update(0, &rm, 0, 0);
+        pm.update(7, &rm, 0, 0);
+        let state = pm.snapshot_state();
+        let mut fresh = PowerModel::new(100.0, 300.0);
+        fresh.restore_state(&state).unwrap();
+        // both copies must integrate identically from here on
+        pm.update(20, &rm, 0, 0);
+        fresh.update(20, &rm, 0, 0);
+        assert_eq!(pm.energy_j().to_bits(), fresh.energy_j().to_bits());
+    }
+
+    #[test]
+    fn failure_state_roundtrips_acked_set() {
+        let mut fi = FailureInjector::new(vec![(1, 5, 20), (0, 5, 20)]);
+        fi.acknowledge(&AddonAck::NodeDown { node: 1, down: true });
+        let state = fi.snapshot_state();
+        let mut fresh = FailureInjector::new(vec![(1, 5, 20), (0, 5, 20)]);
+        fresh.restore_state(&state).unwrap();
+        assert_eq!(fresh.failed_nodes(), &[1]);
+        // Json::Null (the stateless default) leaves state untouched
+        fresh.restore_state(&Json::Null).unwrap();
+        assert_eq!(fresh.failed_nodes(), &[1]);
     }
 
     #[test]

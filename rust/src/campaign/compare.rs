@@ -25,6 +25,7 @@
 
 use super::matrix::mix64;
 use super::store::{self, RunRecord};
+use crate::output::read_job_csv;
 use crate::stats::{
     bootstrap_mean_ci, cliffs_delta, mean, wilcoxon_signed_rank, win_loss_tie, BoxStats, Ci,
 };
@@ -205,6 +206,47 @@ pub struct CellRank {
     pub n_seeds: usize,
 }
 
+/// Per-job paired statistics of one (cell, dispatcher, seed) run pair:
+/// the summary-level [`PairedDelta`] says *whether* a dispatcher helped;
+/// this table says *which jobs* it helped, by pairing the two runs'
+/// stored `jobs.csv` rows on the job id (the seed fixed the workload, so
+/// job `i` is the same submission under both dispatchers).
+#[derive(Debug, Clone)]
+pub struct JobDelta {
+    /// Workload axis label of the cell.
+    pub workload: String,
+    /// System axis label of the cell.
+    pub system: String,
+    /// Scenario name of the cell.
+    pub scenario: String,
+    /// Candidate dispatcher label.
+    pub dispatcher: String,
+    /// Baseline dispatcher label.
+    pub baseline: String,
+    /// Repetition seed the pair shares.
+    pub seed: u64,
+    /// Jobs completed under both dispatchers (the paired population).
+    pub pairs: usize,
+    /// Jobs completed only under the baseline (rejected or unfinished
+    /// under the candidate).
+    pub only_baseline: usize,
+    /// Jobs completed only under the candidate.
+    pub only_dispatcher: usize,
+    /// Mean per-job waiting-time delta `candidate − baseline` (seconds;
+    /// negative = candidate better).
+    pub mean_dwait: f64,
+    /// Mean per-job slowdown delta.
+    pub mean_dslowdown: f64,
+    /// Median per-job slowdown delta (robust to the heavy slowdown tail).
+    pub median_dslowdown: f64,
+    /// Jobs whose slowdown strictly improved under the candidate.
+    pub improved: usize,
+    /// Jobs whose slowdown strictly worsened.
+    pub worsened: usize,
+    /// Jobs with identical slowdown under both dispatchers.
+    pub ties: usize,
+}
+
 /// A finished comparison: everything `campaign compare` writes, as data.
 #[derive(Debug, Clone)]
 pub struct Comparison {
@@ -226,6 +268,11 @@ pub struct Comparison {
     pub overall: Vec<(String, f64)>,
     /// Pairing warnings (missing repetitions, partially-present metrics).
     pub warnings: Vec<String>,
+    /// `(workload, system, scenario, dispatcher, seed)` → stored run id,
+    /// for consumers that need per-run artifacts back from the store (the
+    /// per-job delta table reads `runs/<id>/jobs.csv`). Records without a
+    /// run id — synthetic manifests that never hit the store — are absent.
+    pub run_ids: BTreeMap<(String, String, String, String, u64), String>,
 }
 
 /// Cell key: one (workload, system, scenario) coordinate of the matrix.
@@ -278,8 +325,21 @@ impl Comparison {
         // result is independent of the order records arrived in.
         let mut cells: BTreeMap<CellKey, CellRuns> = BTreeMap::new();
         let mut dispatchers: BTreeSet<&str> = BTreeSet::new();
+        let mut run_ids = BTreeMap::new();
         for rec in records {
             dispatchers.insert(&rec.dispatcher);
+            if !rec.run_id.is_empty() {
+                run_ids.insert(
+                    (
+                        rec.workload.clone(),
+                        rec.system.clone(),
+                        rec.scenario.clone(),
+                        rec.dispatcher.clone(),
+                        rec.seed,
+                    ),
+                    rec.run_id.clone(),
+                );
+            }
             let key =
                 (rec.workload.clone(), rec.system.clone(), rec.scenario.clone());
             let prev = cells
@@ -508,6 +568,7 @@ impl Comparison {
             ranks,
             overall,
             warnings,
+            run_ids,
         })
     }
 
@@ -670,19 +731,134 @@ impl Comparison {
         md
     }
 
+    /// Per-job paired statistics: for every (cell, seed) both the baseline
+    /// and a candidate dispatcher stored a run for, read the two
+    /// `runs/<id>/jobs.csv` files back from the store under `out_dir` and
+    /// pair their rows by job id. Pairs whose run directories are absent
+    /// (manifests that never hit the store) are skipped; a *present* run
+    /// id with an unreadable `jobs.csv` is a corrupt store and errors.
+    ///
+    /// Rows are ordered by (cell, dispatcher, seed) — deterministic like
+    /// every other comparator artifact.
+    pub fn job_deltas<P: AsRef<Path>>(&self, out_dir: P) -> anyhow::Result<Vec<JobDelta>> {
+        let out_dir = out_dir.as_ref();
+        let mut rows = Vec::new();
+        for ((workload, system, scenario, dispatcher, seed), rid) in &self.run_ids {
+            if *dispatcher == self.baseline {
+                continue;
+            }
+            let base_key = (
+                workload.clone(),
+                system.clone(),
+                scenario.clone(),
+                self.baseline.clone(),
+                *seed,
+            );
+            let Some(base_rid) = self.run_ids.get(&base_key) else { continue };
+            let cand_path = store::run_dir(out_dir, rid).join("jobs.csv");
+            let base_path = store::run_dir(out_dir, base_rid).join("jobs.csv");
+            if !cand_path.exists() || !base_path.exists() {
+                continue;
+            }
+            let base_jobs: BTreeMap<u64, crate::output::JobRecord> =
+                read_job_csv(&base_path)?.into_iter().map(|r| (r.id, r)).collect();
+            let cand_jobs: BTreeMap<u64, crate::output::JobRecord> =
+                read_job_csv(&cand_path)?.into_iter().map(|r| (r.id, r)).collect();
+            let mut dwaits = Vec::new();
+            let mut dslows = Vec::new();
+            let (mut improved, mut worsened, mut ties) = (0usize, 0usize, 0usize);
+            let mut only_dispatcher = 0usize;
+            for (id, cand) in &cand_jobs {
+                let Some(base) = base_jobs.get(id) else {
+                    only_dispatcher += 1;
+                    continue;
+                };
+                dwaits.push(cand.wait as f64 - base.wait as f64);
+                let ds = cand.slowdown - base.slowdown;
+                dslows.push(ds);
+                if ds < 0.0 {
+                    improved += 1;
+                } else if ds > 0.0 {
+                    worsened += 1;
+                } else {
+                    ties += 1;
+                }
+            }
+            let only_baseline =
+                base_jobs.keys().filter(|id| !cand_jobs.contains_key(id)).count();
+            rows.push(JobDelta {
+                workload: workload.clone(),
+                system: system.clone(),
+                scenario: scenario.clone(),
+                dispatcher: dispatcher.clone(),
+                baseline: self.baseline.clone(),
+                seed: *seed,
+                pairs: dslows.len(),
+                only_baseline,
+                only_dispatcher,
+                mean_dwait: if dwaits.is_empty() { 0.0 } else { mean(&dwaits) },
+                mean_dslowdown: if dslows.is_empty() { 0.0 } else { mean(&dslows) },
+                median_dslowdown: if dslows.is_empty() {
+                    0.0
+                } else {
+                    BoxStats::from(&dslows).median
+                },
+                improved,
+                worsened,
+                ties,
+            });
+        }
+        Ok(rows)
+    }
+
+    /// Header of [`Comparison::job_deltas_csv`].
+    pub const JOB_DELTAS_CSV_HEADER: &'static str = "workload,system,scenario,dispatcher,\
+         baseline,seed,pairs,only_baseline,only_dispatcher,mean_dwait,mean_dslowdown,\
+         median_dslowdown,improved,worsened,ties";
+
+    /// The per-job paired table as CSV (rows from [`Comparison::job_deltas`]).
+    pub fn job_deltas_csv(rows: &[JobDelta]) -> String {
+        let mut out = String::from(Self::JOB_DELTAS_CSV_HEADER);
+        out.push('\n');
+        for r in rows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{},{}\n",
+                r.workload,
+                r.system,
+                r.scenario,
+                r.dispatcher,
+                r.baseline,
+                r.seed,
+                r.pairs,
+                r.only_baseline,
+                r.only_dispatcher,
+                r.mean_dwait,
+                r.mean_dslowdown,
+                r.median_dslowdown,
+                r.improved,
+                r.worsened,
+                r.ties
+            ));
+        }
+        out
+    }
+
     /// Write the comparison into `<out_dir>/comparisons/`:
-    /// `deltas.csv`, `ranks.csv`, `report.md` and the fig-style
-    /// `delta_dist.csv` (per-pairing delta distributions through
-    /// [`crate::plotdata::PlotFactory`], like the fig10–13 contract).
-    /// Returns the written paths.
+    /// `deltas.csv`, `ranks.csv`, `report.md`, the per-job paired table
+    /// `job_deltas.csv` (built from the store's own `jobs.csv` files) and
+    /// the fig-style `delta_dist.csv` (per-pairing delta distributions
+    /// through [`crate::plotdata::PlotFactory`], like the fig10–13
+    /// contract). Returns the written paths.
     pub fn write<P: AsRef<Path>>(&self, out_dir: P) -> anyhow::Result<Vec<PathBuf>> {
-        let dir = out_dir.as_ref().join("comparisons");
+        let out_dir = out_dir.as_ref();
+        let dir = out_dir.join("comparisons");
         std::fs::create_dir_all(&dir)?;
         let mut written = Vec::new();
         for (name, text) in [
             ("deltas.csv", self.deltas_csv()),
             ("ranks.csv", self.ranks_csv()),
             ("report.md", self.report_md()),
+            ("job_deltas.csv", Self::job_deltas_csv(&self.job_deltas(out_dir)?)),
         ] {
             let p = dir.join(name);
             std::fs::write(&p, text)?;
@@ -696,6 +872,191 @@ impl Comparison {
         pf.produce_plot(crate::plotdata::PlotKind::DeltaDistribution, &p)?;
         written.push(p);
         Ok(written)
+    }
+
+    /// Self-contained HTML report: the Markdown report's content plus an
+    /// inline-SVG box plot per delta distribution. One file, no external
+    /// assets or scripts, deterministic byte-for-byte (no timestamps) —
+    /// made to be attached to a ticket or archived next to the store.
+    pub fn report_html(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;").replace('"', "&quot;")
+        }
+        /// One horizontal box plot of a delta distribution, with a marker
+        /// line at zero when zero is in range.
+        fn box_svg(b: &BoxStats) -> String {
+            const W: f64 = 360.0;
+            const H: f64 = 44.0;
+            let (mut lo, mut hi) = (b.min.min(0.0), b.max.max(0.0));
+            if hi - lo < 1e-12 {
+                lo -= 0.5;
+                hi += 0.5;
+            }
+            let x = |v: f64| 8.0 + (v - lo) / (hi - lo) * (W - 16.0);
+            let mid = H / 2.0;
+            let mut s = format!(
+                "<svg width=\"{W:.0}\" height=\"{H:.0}\" viewBox=\"0 0 {W:.0} {H:.0}\" \
+                 role=\"img\">"
+            );
+            // zero marker, whiskers, box, median — in paint order
+            s.push_str(&format!(
+                "<line x1=\"{0:.1}\" y1=\"2\" x2=\"{0:.1}\" y2=\"{1:.1}\" class=\"zero\"/>",
+                x(0.0),
+                H - 2.0
+            ));
+            s.push_str(&format!(
+                "<line x1=\"{:.1}\" y1=\"{mid:.1}\" x2=\"{:.1}\" y2=\"{mid:.1}\" \
+                 class=\"whisk\"/>",
+                x(b.whisker_lo),
+                x(b.whisker_hi)
+            ));
+            s.push_str(&format!(
+                "<rect x=\"{:.1}\" y=\"{:.1}\" width=\"{:.1}\" height=\"20\" class=\"box\"/>",
+                x(b.q1),
+                mid - 10.0,
+                (x(b.q3) - x(b.q1)).max(1.0)
+            ));
+            s.push_str(&format!(
+                "<line x1=\"{0:.1}\" y1=\"{1:.1}\" x2=\"{0:.1}\" y2=\"{2:.1}\" class=\"med\"/>",
+                x(b.median),
+                mid - 10.0,
+                mid + 10.0
+            ));
+            s.push_str("</svg>");
+            s
+        }
+
+        let o = &self.options;
+        let mut h = String::from(
+            "<!DOCTYPE html>\n<html lang=\"en\">\n<head>\n<meta charset=\"utf-8\">\n",
+        );
+        h.push_str(&format!("<title>Campaign comparison — {}</title>\n", esc(&self.campaign)));
+        h.push_str(
+            "<style>\nbody{font:14px/1.5 system-ui,sans-serif;max-width:72em;margin:2em auto;\
+             padding:0 1em;color:#222}\ntable{border-collapse:collapse;margin:1em 0}\n\
+             th,td{border:1px solid #ccc;padding:.25em .6em;text-align:right}\n\
+             th:first-child,td:first-child{text-align:left}\n\
+             .sig{background:#e6f4e6}\n.zero{stroke:#c33;stroke-dasharray:3 2}\n\
+             .whisk{stroke:#555}\n.box{fill:#cfe0f0;stroke:#369}\n.med{stroke:#036;\
+             stroke-width:2}\nfigure{margin:.5em 0}\nfigcaption{font-size:12px;color:#555}\n\
+             </style>\n</head>\n<body>\n",
+        );
+        h.push_str(&format!("<h1>Campaign comparison — {}</h1>\n", esc(&self.campaign)));
+        h.push_str(&format!(
+            "<ul>\n<li>spec hash: <code>{:016x}</code></li>\n<li>baseline dispatcher: \
+             <strong>{}</strong></li>\n<li>metrics: {}</li>\n<li>bootstrap: {} resamples, \
+             {:.0}&nbsp;% confidence</li>\n<li>pairing warnings: {}</li>\n</ul>\n",
+            self.spec_hash,
+            esc(&self.baseline),
+            o.metrics.iter().map(|m| m.key()).collect::<Vec<_>>().join(", "),
+            o.resamples,
+            (1.0 - o.alpha) * 100.0,
+            self.warnings.len()
+        ));
+
+        h.push_str("<h2>Overall ranking</h2>\n<p>Mean of per-(cell × metric) average ranks; \
+                    1 = best, lower is better.</p>\n<table>\n<tr><th>#</th><th>dispatcher</th>\
+                    <th>mean rank</th></tr>\n");
+        for (i, (disp, rank)) in self.overall.iter().enumerate() {
+            h.push_str(&format!(
+                "<tr><td>{}</td><td>{}</td><td>{rank:.3}</td></tr>\n",
+                i + 1,
+                esc(disp)
+            ));
+        }
+        h.push_str("</table>\n");
+
+        let mut cells: BTreeSet<CellKey> = BTreeSet::new();
+        for d in &self.deltas {
+            cells.insert((d.workload.clone(), d.system.clone(), d.scenario.clone()));
+        }
+        for r in &self.ranks {
+            cells.insert((r.workload.clone(), r.system.clone(), r.scenario.clone()));
+        }
+        for (workload, system, scenario) in &cells {
+            h.push_str(&format!(
+                "<h2>Cell {} × {} × {}</h2>\n",
+                esc(workload),
+                esc(system),
+                esc(scenario)
+            ));
+            h.push_str(&format!(
+                "<p>Paired per-seed deltas vs <strong>{}</strong> (negative = better; \
+                 highlighted rows: CI excludes zero):</p>\n",
+                esc(&self.baseline)
+            ));
+            h.push_str(
+                "<table>\n<tr><th>metric</th><th>dispatcher</th><th>pairs</th>\
+                 <th>Δ mean</th><th>CI</th><th>W/L/T</th><th>p</th><th>Cliff δ</th>\
+                 <th>r<sub>rb</sub></th><th>Δ distribution</th></tr>\n",
+            );
+            for d in self.deltas.iter().filter(|d| {
+                d.workload == *workload && d.system == *system && d.scenario == *scenario
+            }) {
+                let cls = if d.ci.excludes_zero() { " class=\"sig\"" } else { "" };
+                h.push_str(&format!(
+                    "<tr{cls}><td>{}</td><td>{}</td><td>{}</td><td>{:+.4}</td>\
+                     <td>[{:+.4}, {:+.4}]</td><td>{}/{}/{}</td><td>{:.4}</td>\
+                     <td>{:+.3}</td><td>{:+.3}</td><td>{}</td></tr>\n",
+                    d.metric.key(),
+                    esc(&d.dispatcher),
+                    d.seeds.len(),
+                    d.mean_delta,
+                    d.ci.lo,
+                    d.ci.hi,
+                    d.wins,
+                    d.losses,
+                    d.ties,
+                    d.p_wilcoxon,
+                    d.cliffs_delta,
+                    d.rank_biserial,
+                    box_svg(&BoxStats::from(&d.deltas))
+                ));
+            }
+            h.push_str("</table>\n<p>Average rank across seeds (1 = best):</p>\n");
+            h.push_str(
+                "<table>\n<tr><th>metric</th><th>dispatcher</th><th>mean rank</th>\
+                 <th>seeds</th></tr>\n",
+            );
+            for r in self.ranks.iter().filter(|r| {
+                r.workload == *workload && r.system == *system && r.scenario == *scenario
+            }) {
+                h.push_str(&format!(
+                    "<tr><td>{}</td><td>{}</td><td>{:.3}</td><td>{}</td></tr>\n",
+                    r.metric.key(),
+                    esc(&r.dispatcher),
+                    r.mean_rank,
+                    r.n_seeds
+                ));
+            }
+            h.push_str("</table>\n");
+        }
+
+        if !self.warnings.is_empty() {
+            h.push_str("<h2>Warnings</h2>\n<ul>\n");
+            for w in &self.warnings {
+                h.push_str(&format!("<li>{}</li>\n", esc(w)));
+            }
+            h.push_str("</ul>\n");
+        }
+        h.push_str(
+            "<p>Box plots show the paired per-seed delta distribution (box = quartiles, \
+             line = median, dashed red = zero). Cliff δ and r<sub>rb</sub> are the effect \
+             sizes next to the Wilcoxon p-value; all metrics are lower-is-better.</p>\n\
+             </body>\n</html>\n",
+        );
+        h
+    }
+
+    /// Write [`Comparison::report_html`] to
+    /// `<out_dir>/comparisons/report.html` and return its path
+    /// (`campaign compare --html`).
+    pub fn write_html<P: AsRef<Path>>(&self, out_dir: P) -> anyhow::Result<PathBuf> {
+        let dir = out_dir.as_ref().join("comparisons");
+        std::fs::create_dir_all(&dir)?;
+        let p = dir.join("report.html");
+        std::fs::write(&p, self.report_html())?;
+        Ok(p)
     }
 
     /// Delta distributions as box statistics per cell-qualified pairing
@@ -947,7 +1308,7 @@ mod tests {
         assert!(md.contains("Overall ranking"));
         let tmp = tempfile::tempdir().unwrap();
         let written = cmp.write(tmp.path()).unwrap();
-        assert_eq!(written.len(), 4);
+        assert_eq!(written.len(), 5);
         for p in &written {
             assert!(p.exists(), "{}", p.display());
         }
@@ -956,6 +1317,110 @@ mod tests {
         let dist =
             std::fs::read_to_string(tmp.path().join("comparisons/delta_dist.csv")).unwrap();
         assert!(dist.contains("SJF-FF-vs-FIFO-FF"), "{dist}");
+        // synthetic records never hit the store: the per-job table is
+        // written, but header-only
+        let jd = std::fs::read_to_string(tmp.path().join("comparisons/job_deltas.csv")).unwrap();
+        assert_eq!(jd.trim_end(), Comparison::JOB_DELTAS_CSV_HEADER);
+    }
+
+    /// A stored run directory with a hand-written `jobs.csv`, as
+    /// [`Comparison::job_deltas`] reads it back.
+    fn write_jobs(dir: &std::path::Path, rid: &str, rows: &[(u64, u64, f64)]) {
+        use crate::output::JobRecord;
+        let d = store::run_dir(dir, rid);
+        std::fs::create_dir_all(&d).unwrap();
+        let mut csv = String::from(JobRecord::CSV_HEADER);
+        csv.push('\n');
+        for &(id, wait, slowdown) in rows {
+            let rec = JobRecord {
+                id,
+                submit: 0,
+                start: wait,
+                end: wait + 10,
+                slots: 1,
+                wait,
+                slowdown,
+            };
+            csv.push_str(&rec.to_csv());
+            csv.push('\n');
+        }
+        std::fs::write(d.join("jobs.csv"), csv).unwrap();
+    }
+
+    #[test]
+    fn job_deltas_pair_stored_runs_by_job_id() {
+        use crate::testutil as tempfile;
+        let tmp = tempfile::tempdir().unwrap();
+        let mut records = demo_records();
+        for r in &mut records {
+            r.run_id = format!("{}-{}", r.dispatcher, r.seed);
+        }
+        // seed 1: job 1 improves, job 2 worsens, job 3 ties; job 4 only
+        // completes under the baseline, job 5 only under the candidate
+        write_jobs(
+            tmp.path(),
+            "FIFO-FF-1",
+            &[(1, 100, 5.0), (2, 10, 1.5), (3, 0, 1.0), (4, 20, 2.0)],
+        );
+        write_jobs(
+            tmp.path(),
+            "SJF-FF-1",
+            &[(1, 40, 2.0), (2, 30, 2.5), (3, 0, 1.0), (5, 5, 1.2)],
+        );
+        // seed 2 of SJF-FF was never stored: the pair is skipped, not a panic
+        write_jobs(tmp.path(), "FIFO-FF-2", &[(1, 50, 3.0)]);
+        let cmp = Comparison::from_records(
+            "c",
+            5,
+            &records,
+            CompareOptions { metrics: vec![Metric::Slowdown], ..Default::default() },
+        )
+        .unwrap();
+        let rows = cmp.job_deltas(tmp.path()).unwrap();
+        assert_eq!(rows.len(), 1, "only the fully-stored pair produces a row");
+        let r = &rows[0];
+        assert_eq!((r.dispatcher.as_str(), r.seed), ("SJF-FF", 1));
+        assert_eq!((r.pairs, r.only_baseline, r.only_dispatcher), (3, 1, 1));
+        assert_eq!((r.improved, r.worsened, r.ties), (1, 1, 1));
+        // dwait: (40−100, 30−10, 0−0) → mean −40/3; dslow: (−3, 1, 0) → mean −2/3
+        assert!((r.mean_dwait - (-40.0 / 3.0)).abs() < 1e-9, "{}", r.mean_dwait);
+        assert!((r.mean_dslowdown - (-2.0 / 3.0)).abs() < 1e-9, "{}", r.mean_dslowdown);
+        assert_eq!(r.median_dslowdown, 0.0);
+        let csv = Comparison::job_deltas_csv(&rows);
+        assert!(csv.starts_with(Comparison::JOB_DELTAS_CSV_HEADER));
+        assert!(csv.lines().nth(1).unwrap().starts_with("w,sys,baseline,SJF-FF,FIFO-FF,1,3,1,1,"));
+    }
+
+    #[test]
+    fn html_report_is_self_contained_and_deterministic() {
+        use crate::testutil as tempfile;
+        let cmp =
+            Comparison::from_records("c", 5, &demo_records(), CompareOptions::default()).unwrap();
+        let html = cmp.report_html();
+        assert_eq!(html, cmp.report_html(), "byte-identical across invocations");
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.contains("<svg"), "delta distributions render as inline SVG");
+        assert!(html.contains("SJF-FF"));
+        assert!(
+            !html.contains("src=") && !html.contains("href=") && !html.contains("<script"),
+            "no external assets or scripts"
+        );
+        let tmp = tempfile::tempdir().unwrap();
+        let p = cmp.write_html(tmp.path()).unwrap();
+        assert_eq!(p, tmp.path().join("comparisons/report.html"));
+        assert_eq!(std::fs::read_to_string(p).unwrap(), html);
+    }
+
+    #[test]
+    fn html_escapes_labels() {
+        let mut records = demo_records();
+        for r in &mut records {
+            r.workload = "w<b>&\"x\"".to_string();
+        }
+        let cmp = Comparison::from_records("c", 5, &records, CompareOptions::default()).unwrap();
+        let html = cmp.report_html();
+        assert!(html.contains("w&lt;b&gt;&amp;&quot;x&quot;"), "labels are escaped");
+        assert!(!html.contains("w<b>"), "raw label must not leak into markup");
     }
 
     #[test]

@@ -16,13 +16,13 @@
 
 use super::matrix::{expand, RunMatrix, RunSpec};
 use super::spec::{CampaignSpec, WorkloadSpec};
-use super::store::{self, RunRecord};
+use super::store::{self, RunRecord, RunSink};
 use crate::addons::AdditionalData;
-use crate::dispatch::dispatcher_from_label;
+use crate::dispatch::{dispatcher_from_label, Dispatcher};
 use crate::output::OutputCollector;
 use crate::plotdata::{PlotFactory, PlotKind};
 use crate::scenario::WarpedSource;
-use crate::sim::{SimOptions, SimOutput, Simulator, SwfSource};
+use crate::sim::{JobSource, SimCore, SimOptions, SimOutput, Step, SwfSource};
 use crate::traces::spec_by_name;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -91,6 +91,9 @@ pub struct Campaign<'a> {
     jobs: usize,
     addon_factory: Option<AddonFactoryRef<'a>>,
     shape_index: bool,
+    checkpoint_every: u64,
+    #[cfg(test)]
+    abort_after_points: Option<u64>,
 }
 
 impl<'a> Campaign<'a> {
@@ -102,12 +105,36 @@ impl<'a> Campaign<'a> {
             jobs: 1,
             addon_factory: None,
             shape_index: true,
+            checkpoint_every: 0,
+            #[cfg(test)]
+            abort_after_points: None,
         }
     }
 
     /// Worker-thread count (default 1 = serial).
     pub fn jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Snapshot each in-flight run to `checkpoint.json` in its run
+    /// directory every `n` simulation time points (0 = off, the default).
+    /// An interrupted campaign then resumes mid-run from the last
+    /// checkpoint instead of restarting the run — with byte-identical
+    /// `jobs.csv` output, since the restored core replays its event log
+    /// from the beginning (see DESIGN.md §Event log & replay). Costs the
+    /// retained event history in memory ([`SimOptions::retain_log`]) plus a
+    /// snapshot serialization every `n` points.
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.checkpoint_every = n;
+        self
+    }
+
+    /// Test hook: abort each run after this many time points, simulating a
+    /// crash mid-run (after checkpoints were written).
+    #[cfg(test)]
+    fn abort_after_points(mut self, n: u64) -> Self {
+        self.abort_after_points = Some(n);
         self
     }
 
@@ -161,13 +188,16 @@ impl<'a> Campaign<'a> {
         }
     }
 
-    /// Execute one run and persist it. Dispatcher, compiled scenario
-    /// (workload transforms + addons) and simulator are all constructed
-    /// inside the calling worker thread; only plain spec data crosses the
-    /// thread boundary. Stochastic perturbations compile from the run's
-    /// scenario seed (repetition-keyed — see
-    /// [`super::matrix::derive_scenario_seed`]).
-    fn exec_run(&self, run: &RunSpec, workload: &Path) -> anyhow::Result<()> {
+    /// Build one run's simulation inputs: dispatcher, compiled scenario
+    /// (workload transforms + addons), options and the (possibly warped)
+    /// job source. Callable repeatedly — a checkpoint restore needs a fresh
+    /// source replaying the workload from its beginning, and a failed
+    /// restore falls back to a fresh build.
+    fn build_run(
+        &self,
+        run: &RunSpec,
+        workload: &Path,
+    ) -> anyhow::Result<(Box<dyn JobSource>, Dispatcher, SimOptions)> {
         let dispatcher = dispatcher_from_label(&run.dispatcher)?;
         let compiled = run.scenario.compile(run.scenario_seed, run.sys.total_nodes())?;
         let addons = match self.addon_factory {
@@ -177,15 +207,86 @@ impl<'a> Campaign<'a> {
         let opts = SimOptions {
             seed: run.run_seed,
             addons,
-            output: OutputCollector::in_memory(true, true),
+            // The store sink consumes the event log; no in-memory records.
+            output: OutputCollector::null(),
             use_shape_index: self.shape_index,
+            retain_log: self.checkpoint_every > 0,
             ..Default::default()
         };
         let source = SwfSource::open(workload, &run.sys, opts.factory.clone())?;
         let source = WarpedSource::wrap(Box::new(source), compiled.warps);
-        let mut sim = Simulator::with_source(source, run.sys.clone(), dispatcher, opts);
-        let out = sim.run()?;
-        store::write_run(&store::run_dir(&self.out_dir, &run.run_id), run, &out)?;
+        Ok((source, dispatcher, opts))
+    }
+
+    /// Execute one run and persist it. Dispatcher, compiled scenario
+    /// (workload transforms + addons) and simulator are all constructed
+    /// inside the calling worker thread; only plain spec data crosses the
+    /// thread boundary. Stochastic perturbations compile from the run's
+    /// scenario seed (repetition-keyed — see
+    /// [`super::matrix::derive_scenario_seed`]).
+    ///
+    /// The run is driven through the incremental core ([`SimCore::step`])
+    /// with a [`RunSink`] consuming the event log, so `jobs.csv`/`perf.csv`
+    /// stream to disk row by row. With [`Campaign::checkpoint_every`] the
+    /// core is additionally snapshotted at a fixed cadence, and a prior
+    /// checkpoint (from an interrupted invocation) is restored instead of
+    /// restarting the run.
+    fn exec_run(&self, run: &RunSpec, workload: &Path) -> anyhow::Result<()> {
+        // Read any checkpoint *before* the sink wipes the run directory —
+        // the restored log replays the full prefix, so regenerating the
+        // CSVs from scratch is correct.
+        let checkpoint = store::run_dir(&self.out_dir, &run.run_id).join("checkpoint.json");
+        let resume_text = (self.checkpoint_every > 0)
+            .then(|| std::fs::read_to_string(&checkpoint).ok())
+            .flatten();
+
+        let mut sim = match resume_text {
+            Some(text) => {
+                let (source, dispatcher, opts) = self.build_run(run, workload)?;
+                match SimCore::restore(&text, source, run.sys.clone(), dispatcher, opts) {
+                    Ok(core) => core,
+                    // A stale or truncated checkpoint is not fatal: the run
+                    // restarts from the beginning.
+                    Err(_) => {
+                        let (source, dispatcher, opts) = self.build_run(run, workload)?;
+                        SimCore::with_source(source, run.sys.clone(), dispatcher, opts)
+                    }
+                }
+            }
+            None => {
+                let (source, dispatcher, opts) = self.build_run(run, workload)?;
+                SimCore::with_source(source, run.sys.clone(), dispatcher, opts)
+            }
+        };
+
+        let mut sink = RunSink::create(&self.out_dir, &run.run_id)?;
+        let consumer = sim.register_consumer();
+        let mut points = 0u64;
+        loop {
+            let step = sim.step()?;
+            sim.drain_events(consumer, |ev| sink.apply(ev))?;
+            match step {
+                Step::Advanced(_) => {
+                    points += 1;
+                    if self.checkpoint_every > 0 && points % self.checkpoint_every == 0 {
+                        // tmp + rename: a crash mid-write leaves the previous
+                        // checkpoint intact, never a truncated document
+                        let snap = sim.snapshot()?;
+                        let tmp = sink.dir().join("checkpoint.json.tmp");
+                        std::fs::write(&tmp, snap)?;
+                        std::fs::rename(&tmp, sink.dir().join("checkpoint.json"))?;
+                    }
+                    #[cfg(test)]
+                    if self.abort_after_points.is_some_and(|n| points >= n) {
+                        anyhow::bail!("aborted after {points} points (test hook)");
+                    }
+                }
+                Step::Idle | Step::Done => break,
+            }
+        }
+        let out = sim.finish()?;
+        let _ = std::fs::remove_file(sink.dir().join("checkpoint.json"));
+        sink.finish(run, &out)?;
         Ok(())
     }
 
@@ -440,6 +541,67 @@ mod tests {
         assert!(written.iter().any(|p| p.ends_with("report.md")));
         for p in &written {
             assert!(p.exists(), "{}", p.display());
+        }
+    }
+
+    #[test]
+    fn checkpointed_campaign_resumes_byte_identically() {
+        let tmp = tempfile::tempdir().unwrap();
+        // reference: one uninterrupted campaign, no checkpointing
+        let reference = Campaign::new(tiny_spec(), tmp.path().join("ref"));
+        let ref_report = reference.run().unwrap();
+        // the same campaign, checkpointed every 3 points and "crashed"
+        // after 10 — past at least three checkpoints
+        let out = tmp.path().join("out");
+        let crashing =
+            Campaign::new(tiny_spec(), &out).checkpoint_every(3).abort_after_points(10);
+        let err = crashing.run().unwrap_err();
+        assert!(err.to_string().contains("aborted"), "{err}");
+        for rec in &ref_report.records {
+            let dir = store::run_dir(&out, &rec.run_id);
+            assert!(dir.join("checkpoint.json").exists(), "{} has no checkpoint", rec.run_id);
+            assert!(store::load_run(&dir).is_none(), "aborted run must stay incomplete");
+        }
+        // resume: restores each run from its checkpoint and finishes it
+        let resumed = Campaign::new(tiny_spec(), &out).checkpoint_every(3).run().unwrap();
+        assert_eq!(resumed.executed, 2);
+        assert_eq!(resumed.skipped, 0);
+        for rec in &ref_report.records {
+            let ref_dir = store::run_dir(tmp.path().join("ref"), &rec.run_id);
+            let dir = store::run_dir(&out, &rec.run_id);
+            assert!(!dir.join("checkpoint.json").exists(), "checkpoint removed on completion");
+            // jobs.csv is fully deterministic: demand byte identity.
+            // (perf.csv carries measured nanoseconds/RSS and is only
+            // structurally deterministic; summary.csv below covers the
+            // derived statistics.)
+            assert_eq!(
+                std::fs::read(ref_dir.join("jobs.csv")).unwrap(),
+                std::fs::read(dir.join("jobs.csv")).unwrap(),
+                "{}: resumed jobs.csv diverges from the uninterrupted run",
+                rec.run_id
+            );
+        }
+        for f in ["summary.csv", "index.json"] {
+            assert_eq!(
+                std::fs::read(tmp.path().join("ref").join(f)).unwrap(),
+                std::fs::read(out.join(f)).unwrap(),
+                "resumed {f} diverges from the uninterrupted campaign"
+            );
+        }
+    }
+
+    #[test]
+    fn stale_checkpoint_falls_back_to_a_fresh_run() {
+        let tmp = tempfile::tempdir().unwrap();
+        let out = tmp.path().join("out");
+        let matrix = expand(&tiny_spec()).unwrap();
+        let dir = store::run_dir(&out, &matrix.runs[0].run_id);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("checkpoint.json"), "{ truncated garbage").unwrap();
+        let report = Campaign::new(tiny_spec(), &out).checkpoint_every(4).run().unwrap();
+        assert_eq!(report.executed, 2);
+        for rec in &report.records {
+            assert!(rec.jobs_completed > 0, "{}", rec.run_id);
         }
     }
 

@@ -10,9 +10,11 @@
 
 use super::matrix::RunSpec;
 use crate::output::{read_job_csv, read_perf_csv};
-use crate::sim::SimOutput;
+use crate::sim::{SimEvent, SimOutput};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 /// Manifest of one completed run.
@@ -255,6 +257,65 @@ pub fn write_run(dir: &Path, run: &RunSpec, out: &SimOutput) -> anyhow::Result<R
     Ok(record)
 }
 
+/// Streaming store writer: a [`SimEvent`] log consumer producing the same
+/// `jobs.csv`/`perf.csv` bytes as [`write_run`], row by row as the
+/// simulation advances instead of from in-memory record vectors at the end.
+///
+/// Used by the campaign runner's step-driven execution path: the simulator
+/// runs with a null in-memory collector, the sink holds a consumer cursor on
+/// the event log (see [`crate::sim::SimCore::drain_events`]), and `run.json`
+/// — the completion marker — is still written last, by [`RunSink::finish`].
+/// A sink that is dropped without `finish` leaves a partial run directory,
+/// which resume correctly treats as never-completed.
+pub struct RunSink {
+    dir: PathBuf,
+    jobs: BufWriter<File>,
+    perf: BufWriter<File>,
+}
+
+impl RunSink {
+    /// Create the run directory (wiping any stale partial contents) and
+    /// open `jobs.csv`/`perf.csv` with their headers written.
+    pub fn create(out_dir: &Path, run_id: &str) -> anyhow::Result<RunSink> {
+        let dir = run_dir(out_dir, run_id);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        std::fs::create_dir_all(&dir)?;
+        let mut jobs = BufWriter::new(File::create(dir.join("jobs.csv"))?);
+        writeln!(jobs, "{}", crate::output::JobRecord::CSV_HEADER)?;
+        let mut perf = BufWriter::new(File::create(dir.join("perf.csv"))?);
+        writeln!(perf, "{}", crate::output::PerfRecord::CSV_HEADER)?;
+        Ok(RunSink { dir, jobs, perf })
+    }
+
+    /// The run directory this sink writes into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Consume one log event: completions append a `jobs.csv` row, closed
+    /// time points a `perf.csv` row; queue transitions need no file.
+    pub fn apply(&mut self, ev: &SimEvent) -> anyhow::Result<()> {
+        match ev {
+            SimEvent::Completed(rec) => writeln!(self.jobs, "{}", rec.to_csv())?,
+            SimEvent::PointClosed(rec) => writeln!(self.perf, "{}", rec.to_csv())?,
+            SimEvent::Submitted { .. } | SimEvent::Started { .. } | SimEvent::Rejected { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Flush the CSV streams and write `run.json` last (the completion
+    /// marker), returning the run's manifest.
+    pub fn finish(mut self, run: &RunSpec, out: &SimOutput) -> anyhow::Result<RunRecord> {
+        self.jobs.flush()?;
+        self.perf.flush()?;
+        let record = RunRecord::from_output(run, out);
+        std::fs::write(self.dir.join("run.json"), record.to_json().to_string_pretty())?;
+        Ok(record)
+    }
+}
+
 /// Load a run's manifest; `None` when the run never completed (no readable
 /// `run.json`).
 pub fn load_run(dir: &Path) -> Option<RunRecord> {
@@ -421,6 +482,34 @@ mod tests {
         assert_eq!(back.avg_slowdown(), 1.75);
         assert_eq!(back.avg_wait(), 30.0);
         assert_eq!(back.extra["power.energy_kj"], 1.5);
+    }
+
+    #[test]
+    fn sink_bytes_match_write_run() {
+        let tmp = tempfile::tempdir().unwrap();
+        let run = demo_run();
+        let out = demo_output();
+        // batch path
+        let batch_dir = run_dir(tmp.path(), "batch");
+        let batch_rec = write_run(&batch_dir, &run, &out).unwrap();
+        // streaming path: replay the records as log events through a sink
+        let mut sink = RunSink::create(tmp.path(), "streamed").unwrap();
+        for j in &out.jobs {
+            sink.apply(&SimEvent::Completed(*j)).unwrap();
+        }
+        for p in &out.perf {
+            sink.apply(&SimEvent::PointClosed(*p)).unwrap();
+        }
+        sink.apply(&SimEvent::Submitted { t: 0, id: 9 }).unwrap(); // no file row
+        let streamed_dir = run_dir(tmp.path(), "streamed");
+        let streamed_rec = sink.finish(&run, &out).unwrap();
+        assert_eq!(batch_rec, streamed_rec);
+        for f in ["jobs.csv", "perf.csv"] {
+            let a = std::fs::read(batch_dir.join(f)).unwrap();
+            let b = std::fs::read(streamed_dir.join(f)).unwrap();
+            assert_eq!(a, b, "{f} bytes diverge between batch and streaming writers");
+        }
+        assert!(load_run(&streamed_dir).is_some(), "finish() wrote the completion marker");
     }
 
     #[test]

@@ -39,32 +39,52 @@ COMMANDS:
            [--power IDLE_W,MAX_W] [--power-cadence SECS]
            [--fail NODE:FAIL_AT:REPAIR_AT[,...]] [--mem-sample-secs SECS]
            [--scenario scenario.json] [--seed N]
+           [--checkpoint-every N] [--checkpoint FILE] [--restore FILE]
            --scenario applies a campaign scenario object (power/failures
            sugar + perturbations: arrival_surge, maintenance,
            failure_storm, power_cap; see docs/campaign-spec.md); --seed
            feeds its stochastic perturbations and seed-sensitive
-           dispatchers (FIFO_RND/SJF_RND/LJF_RND)
+           dispatchers (FIFO_RND/SJF_RND/LJF_RND).
+           --checkpoint-every N writes a resumable snapshot (default
+           checkpoint.json) after every N simulated time points;
+           --restore continues an interrupted run from such a snapshot
+           (same workload/system/scenario), with byte-identical outputs
+  fork <checkpoint.json> <workload.swf> --sys <cfg.json>
+           [--dispatcher FIFO-FF] [--scenario scenario.json] [--seed N]
+           [--out-jobs jobs.csv] [--out-perf perf.csv]
+           restore a snapshot into a NEW run and play it to completion —
+           the parent's checkpoint and outputs are untouched; pass a
+           different --dispatcher to explore a divergent future from the
+           shared prefix (dispatchers are stateless, so handover is exact)
   experiment <workload.swf> --sys <cfg.json> [--name NAME]
            [--schedulers FIFO,SJF,LJF,EBF] [--allocators FF,BF] [--reps 1]
-  campaign run <spec.json> [--out DIR] [--jobs N]
-           execute a scenario matrix; completed runs are skipped (resume)
+  campaign run <spec.json> [--out DIR] [--jobs N] [--checkpoint-every N]
+           execute a scenario matrix; completed runs are skipped (resume).
+           --checkpoint-every N snapshots each in-flight run every N time
+           points, so a killed campaign resumes mid-run, not per-run
   campaign status <spec.json> [--out DIR]
            show how much of the matrix the results store already holds
   campaign compare <spec.json> [--out DIR] [--baseline DISPATCHER]
            [--metric slowdown,wait,...] [--resamples 2000] [--alpha 0.05]
+           [--html]
            paired per-seed dispatcher statistics from a finished store;
-           writes comparisons/{deltas.csv,ranks.csv,report.md,delta_dist.csv}
+           writes comparisons/{deltas.csv,ranks.csv,report.md,
+           job_deltas.csv,delta_dist.csv} (+ report.html with --html)
   generate <seed.swf> --sys <cfg.json> [--jobs 50000] [--out generated.swf]
            [--core-gflops 1.667] [--rng-seed 42]
   traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
   table1   [--scale 0.05] [--dir data] [--reps 3] [--out results/table1.csv]
   table2   [--scale 0.05] [--dir data] [--reps 1] [--out results/table2.csv]
   perf-smoke [--nodes 2048] [--jobs 50000] [--dispatcher FIFO-FF]
-           [--seed 1] [--out results/BENCH_5.json]
+           [--seed 1] [--out results/BENCH_6.json]
            large-system dispatch-hot-path smoke: simulate a synthetic
            oversubscribed workload and write machine-readable timings
            (wall_s, dispatch_ns, time_points, max_rss_kb) for the perf
            trajectory tracked in CI
+  bench-check <prev.json> <curr.json> [--max-regress 0.25]
+           compare two perf-smoke outputs: exits non-zero when
+           dispatch_ns_per_point or max_rss_kb regressed by more than
+           the tolerance (a missing prev.json passes — first data point)
   status   <workload.swf> --sys <cfg.json> [--dispatcher FIFO-FF]
   validate <workload.swf>                  lint a workload dataset
   analyze  <jobs.csv>                      analyze saved job records
@@ -78,6 +98,8 @@ pub fn run() -> anyhow::Result<()> {
     };
     match cmd.as_str() {
         "simulate" => simulate(&args),
+        "fork" => fork_cmd(&args),
+        "bench-check" => bench_check(&args),
         "experiment" => experiment(&args),
         "campaign" => campaign(&args),
         "generate" => generate(&args),
@@ -161,10 +183,24 @@ fn parse_addons(args: &Args, nodes: u64) -> anyhow::Result<Vec<Box<dyn Additiona
     Ok(addons)
 }
 
-fn simulate(args: &Args) -> anyhow::Result<()> {
+/// Shared assembly for `simulate` and `fork`: output collector, addons,
+/// scenario compilation (the campaign `scenarios` entry format:
+/// power/failures sugar plus the perturbation vocabulary, compiled against
+/// this system and the run seed) and the warped job source. `retain_log`
+/// switches the core's event log to snapshot-grade full retention.
+#[allow(clippy::type_complexity)]
+fn sim_setup(
+    args: &Args,
+    workload: &std::path::Path,
+    retain_log: bool,
+) -> anyhow::Result<(
+    SysConfig,
+    accasim::dispatch::Dispatcher,
+    SimOptions,
+    Box<dyn accasim::sim::JobSource>,
+)> {
     use accasim::scenario::WarpedSource;
     use accasim::sim::SwfSource;
-    let workload = need_workload(args)?;
     let sys = need_sys(args)?;
     let d = dispatcher_from_label(&args.get("dispatcher", "FIFO-FF"))?;
     let mut output = OutputCollector::in_memory(true, true);
@@ -176,9 +212,6 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     }
     let seed: u64 = args.get_parse("seed", 0)?;
     let mut addons = parse_addons(args, sys.total_nodes())?;
-    // A full scenario object (the campaign `scenarios` entry format):
-    // power/failures sugar plus the perturbation vocabulary, compiled
-    // against this system and the run seed.
     let mut warps = Vec::new();
     if let Some(p) = args.get_opt("scenario") {
         let text = std::fs::read_to_string(&p)
@@ -191,19 +224,23 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         addons.extend(compiled.addons);
     }
     let mem_sample_secs: u64 = args.get_parse("mem-sample-secs", 300)?;
-    args.reject_unknown()?;
-    let opts = SimOptions { output, addons, mem_sample_secs, seed, ..Default::default() };
-    let source = SwfSource::open(&workload, &sys, opts.factory.clone())?;
+    let opts =
+        SimOptions { output, addons, mem_sample_secs, seed, retain_log, ..Default::default() };
+    let source = SwfSource::open(workload, &sys, opts.factory.clone())?;
     let source = WarpedSource::wrap(Box::new(source), warps);
-    let mut sim = Simulator::with_source(source, sys, d, opts);
-    let out = sim.run()?;
-    if out.lines_skipped > 0 {
-        eprintln!(
-            "warning: {} malformed workload line(s) skipped while reading {}",
-            out.lines_skipped,
-            workload.display()
-        );
-    }
+    Ok((sys, d, opts, source))
+}
+
+/// Crash-safe snapshot write: temp file, then atomic rename — an
+/// interrupted write never clobbers the previous good checkpoint.
+fn write_checkpoint(path: &std::path::Path, snap: &str) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, snap)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn print_sim_summary(out: &accasim::sim::SimOutput) {
     println!("dispatcher        : {}", out.dispatcher);
     println!("jobs completed    : {}", out.jobs_completed);
     println!("jobs rejected     : {}", out.jobs_rejected);
@@ -221,6 +258,165 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     for (k, v) in &out.final_extra {
         println!("{k:<18}: {v:.3}");
     }
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    use accasim::sim::Step;
+    let workload = need_workload(args)?;
+    let checkpoint_every: u64 = args.get_parse("checkpoint-every", 0)?;
+    let checkpoint = PathBuf::from(args.get("checkpoint", "checkpoint.json"));
+    anyhow::ensure!(
+        checkpoint_every > 0 || args.get_opt("checkpoint").is_none(),
+        "--checkpoint has no effect without --checkpoint-every N"
+    );
+    let restore_from = args.get_opt("restore");
+    let (sys, d, opts, source) = sim_setup(args, &workload, checkpoint_every > 0)?;
+    args.reject_unknown()?;
+    // A restored core replays the snapshot's event-log prefix into the
+    // fresh output collector above, so jobs.csv/perf.csv come out
+    // byte-identical to an uninterrupted run.
+    let mut sim = match &restore_from {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("reading snapshot {p}: {e}"))?;
+            Simulator::restore(&text, source, sys, d, opts)?
+        }
+        None => Simulator::with_source(source, sys, d, opts),
+    };
+    let out = if checkpoint_every > 0 {
+        let mut points = 0u64;
+        loop {
+            match sim.step()? {
+                Step::Advanced(_) => {
+                    points += 1;
+                    if points % checkpoint_every == 0 {
+                        write_checkpoint(&checkpoint, &sim.snapshot()?)?;
+                    }
+                }
+                Step::Idle | Step::Done => break,
+            }
+        }
+        sim.finish()?
+    } else {
+        sim.run()?
+    };
+    if out.lines_skipped > 0 {
+        eprintln!(
+            "warning: {} malformed workload line(s) skipped while reading {}",
+            out.lines_skipped,
+            workload.display()
+        );
+    }
+    if let Some(p) = &restore_from {
+        println!("restored from     : {p}");
+    }
+    print_sim_summary(&out);
+    if checkpoint_every > 0 {
+        println!("checkpoint        : {}", checkpoint.display());
+    }
+    Ok(())
+}
+
+/// `fork <checkpoint.json> <workload.swf>`: restore a snapshot into a
+/// brand-new core and play it to completion. The parent run's checkpoint
+/// and outputs are never touched; with a different `--dispatcher` this
+/// answers "what if X had taken over at the checkpoint?" on the exact
+/// shared prefix (dispatchers are stateless, so the handover is exact).
+fn fork_cmd(args: &Args) -> anyhow::Result<()> {
+    let snap_path = args
+        .positionals
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("missing <checkpoint.json> argument\n{USAGE}"))?;
+    let workload = args
+        .positionals
+        .get(2)
+        .map(PathBuf::from)
+        .ok_or_else(|| anyhow::anyhow!("missing <workload.swf> argument\n{USAGE}"))?;
+    let (sys, d, opts, source) = sim_setup(args, &workload, false)?;
+    args.reject_unknown()?;
+    let text = std::fs::read_to_string(&snap_path)
+        .map_err(|e| anyhow::anyhow!("reading snapshot {snap_path}: {e}"))?;
+    let mut sim = Simulator::restore(&text, source, sys, d, opts)?;
+    let out = sim.run()?;
+    println!("forked from       : {snap_path}");
+    print_sim_summary(&out);
+    Ok(())
+}
+
+/// `bench-check <prev.json> <curr.json>`: the perf-trajectory gate.
+/// Compares two `perf-smoke` outputs and fails when a tracked metric
+/// (`dispatch_ns_per_point`, `max_rss_kb`) regressed by more than
+/// `--max-regress` (a fraction; 0.25 = 25 %). A missing previous file
+/// passes — the first point of a trajectory has no baseline — and so do
+/// two files from different bench configurations (a stale CI cache after
+/// the bench parameters changed must not fail the build).
+fn bench_check(args: &Args) -> anyhow::Result<()> {
+    use accasim::util::json::Json;
+    let prev_path = args
+        .positionals
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("missing <prev.json> argument\n{USAGE}"))?;
+    let curr_path = args
+        .positionals
+        .get(2)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("missing <curr.json> argument\n{USAGE}"))?;
+    let max_regress: f64 = args.get_parse("max-regress", 0.25)?;
+    args.reject_unknown()?;
+    anyhow::ensure!(max_regress >= 0.0, "--max-regress must be >= 0, got {max_regress}");
+    if !std::path::Path::new(&prev_path).exists() {
+        println!(
+            "bench-check: no baseline at {prev_path}; {curr_path} becomes the first data point"
+        );
+        return Ok(());
+    }
+    let read = |p: &str| -> anyhow::Result<Json> {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("reading {p}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
+    };
+    let (prev, curr) = (read(&prev_path)?, read(&curr_path)?);
+    for key in ["bench", "dispatcher", "nodes", "jobs", "seed"] {
+        if prev.get(key) != curr.get(key) {
+            println!(
+                "bench-check: {key:?} differs between {prev_path} and {curr_path}; \
+                 configurations are not comparable — treating as a new baseline"
+            );
+            return Ok(());
+        }
+    }
+    let metric = |doc: &Json, p: &str, key: &str| -> anyhow::Result<f64> {
+        doc.get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{p}: missing numeric {key:?}"))
+    };
+    let mut failed = Vec::new();
+    for key in ["dispatch_ns_per_point", "max_rss_kb"] {
+        let (p, c) = (metric(&prev, &prev_path, key)?, metric(&curr, &curr_path, key)?);
+        let ratio = if p > 0.0 {
+            c / p
+        } else if c > 0.0 {
+            f64::INFINITY
+        } else {
+            1.0
+        };
+        let verdict = if ratio > 1.0 + max_regress {
+            failed.push(key);
+            "REGRESSED"
+        } else {
+            "ok"
+        };
+        println!("{key:<22} prev {p:>14.1}  curr {c:>14.1}  ratio {ratio:>6.3}  {verdict}");
+    }
+    anyhow::ensure!(
+        failed.is_empty(),
+        "perf regression beyond {:.0} % tolerance in: {}",
+        max_regress * 100.0,
+        failed.join(", ")
+    );
+    println!("bench-check: within {:.0} % tolerance of {prev_path}", max_regress * 100.0);
     Ok(())
 }
 
@@ -279,10 +475,14 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
     match action.as_str() {
         "run" => {
             let jobs: usize = args.get_parse("jobs", 1)?;
+            let checkpoint_every: u64 = args.get_parse("checkpoint-every", 0)?;
             args.reject_unknown()?;
             let total = spec.run_count();
             let name = spec.name.clone();
-            let report = Campaign::new(spec, &out_dir).jobs(jobs).run()?;
+            let report = Campaign::new(spec, &out_dir)
+                .jobs(jobs)
+                .checkpoint_every(checkpoint_every)
+                .run()?;
             println!(
                 "campaign {name}: {} run(s) executed, {} skipped (resume), {total} total",
                 report.executed, report.skipped
@@ -353,6 +553,7 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
                 opts.metrics =
                     list.split(',').map(|m| Metric::parse(m.trim())).collect::<Result<_, _>>()?;
             }
+            let html = args.flag("html");
             args.reject_unknown()?;
             anyhow::ensure!(
                 opts.alpha > 0.0 && opts.alpha < 1.0,
@@ -372,7 +573,10 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
                 spec_path.display()
             );
             let cmp = Comparison::from_records(&idx.campaign, idx.spec_hash, &idx.records, opts)?;
-            let written = cmp.write(&out_dir)?;
+            let mut written = cmp.write(&out_dir)?;
+            if html {
+                written.push(cmp.write_html(&out_dir)?);
+            }
             println!(
                 "campaign {}: compared {} dispatcher pairing(s) against baseline {} \
                  ({} warning(s))",
@@ -647,14 +851,15 @@ fn perf_smoke_jobs(
 }
 
 /// Perf smoke: one large-system simulation with machine-readable output —
-/// the CI-tracked perf trajectory point (`results/BENCH_5.json`).
+/// the CI-tracked perf trajectory point (`results/BENCH_6.json`, compared
+/// against the previous run by `bench-check`).
 fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     use accasim::util::json::Json;
     let nodes: u64 = args.get_parse("nodes", 2048)?;
     let jobs: u64 = args.get_parse("jobs", 50_000)?;
     let seed: u64 = args.get_parse("seed", 1)?;
     let dispatcher = args.get("dispatcher", "FIFO-FF");
-    let out_path = PathBuf::from(args.get("out", "results/BENCH_5.json"));
+    let out_path = PathBuf::from(args.get("out", "results/BENCH_6.json"));
     args.reject_unknown()?;
     anyhow::ensure!(nodes > 0 && jobs > 0, "perf-smoke wants positive --nodes/--jobs");
 

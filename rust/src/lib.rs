@@ -13,7 +13,9 @@
 //! * [`resources`] — the resource manager: per-node multi-resource accounting.
 //! * [`sim`] — the event manager / discrete-event core driving the
 //!   loaded → queued → running → completed lifecycle over a unified
-//!   time-indexed event queue (job, addon and probe events alike).
+//!   time-indexed event queue (job, addon and probe events alike); a
+//!   resumable state machine with an append-only event log,
+//!   snapshot/restore and fork (DESIGN.md §Event log & replay).
 //! * [`dispatch`] — schedulers (FIFO, SJF, LJF, EBF) and allocators (FF, BF,
 //!   and the XLA-accelerated [`dispatch::XlaFit`]).
 //! * [`addons`] — the *additional data* interface (power/energy, failures).
@@ -56,8 +58,8 @@
 // Public-API documentation is enforced (`cargo doc` runs with
 // `-D warnings` in CI, and every public item must carry a doc comment).
 // The flagship user-facing modules — `campaign`, `scenario`, `experiment`,
-// `plotdata`, `stats`, `addons`, `workload` — are fully documented; the
-// simulator-internal modules below are deliberately allowlisted
+// `plotdata`, `stats`, `addons`, `workload`, `sim`, `output` — are fully
+// documented; the remaining internal modules below are deliberately allowlisted
 // item-by-item (`#[allow(missing_docs)]`) until they get their own
 // documentation pass, so new flagship items can never regress silently.
 #![warn(missing_docs)]
@@ -77,7 +79,6 @@ pub mod experiment;
 pub mod generator;
 #[allow(missing_docs)] // internal: status panels and probes
 pub mod monitor;
-#[allow(missing_docs)] // internal: record types, documented per field where non-obvious
 pub mod output;
 pub mod plotdata;
 #[allow(missing_docs)] // internal: resource manager hot path
@@ -87,7 +88,6 @@ pub mod rng;
 #[allow(missing_docs)] // internal: PJRT bridge
 pub mod runtime;
 pub mod scenario;
-#[allow(missing_docs)] // internal: discrete-event core
 pub mod sim;
 pub mod stats;
 #[doc(hidden)]

@@ -1,17 +1,30 @@
 //! Output data (§3, *output*): per-job dispatching records (decision
 //! quality) and per-time-point simulator performance records (simulation
 //! process), streamed to CSV and/or kept in memory for the plot factory.
+//!
+//! Since the resumable-core refactor the collector is a *log consumer*
+//! (DESIGN.md §Event log & replay): the simulator appends every state
+//! transition to its [`crate::sim::SimEvent`] log and the collector
+//! materializes records from the events delivered to its cursor via
+//! [`OutputCollector::apply`], instead of being invoked inline from the
+//! simulation loop.
 
+use crate::sim::SimEvent;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
 /// Execution record of one dispatched job (first output type of §3).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct JobRecord {
+    /// Job id (the SWF job number).
     pub id: u64,
+    /// Submission time `T_sb` (epoch seconds).
     pub submit: u64,
+    /// Dispatch time.
     pub start: u64,
+    /// Completion time `T_c`.
     pub end: u64,
+    /// Processing slots the job occupied.
     pub slots: u32,
     /// Waiting time `T_w = start - submit`.
     pub wait: u64,
@@ -20,8 +33,11 @@ pub struct JobRecord {
 }
 
 impl JobRecord {
+    /// Column header of the job CSV (`jobs.csv`).
     pub const CSV_HEADER: &'static str = "id,submit,start,end,slots,wait,slowdown";
 
+    /// One CSV row (no trailing newline); slowdown fixed to 6 decimals so
+    /// the row is a deterministic function of the record.
     pub fn to_csv(&self) -> String {
         format!(
             "{},{},{},{},{},{},{:.6}",
@@ -53,8 +69,10 @@ pub struct PerfRecord {
 }
 
 impl PerfRecord {
+    /// Column header of the performance CSV (`perf.csv`).
     pub const CSV_HEADER: &'static str = "t,dispatch_ns,other_ns,queue_len,running,started,rss_kb";
 
+    /// One CSV row (no trailing newline).
     pub fn to_csv(&self) -> String {
         format!(
             "{},{},{},{},{},{},{}",
@@ -134,6 +152,18 @@ impl OutputCollector {
         }
         if self.keep_perf {
             self.perf.push(rec);
+        }
+    }
+
+    /// Consume one simulation-log event (the collector's log-consumer
+    /// entry point): job completions become job records, closed time points
+    /// become perf records, and queue/start/reject transitions — which
+    /// carry no output row — are ignored.
+    pub fn apply(&mut self, ev: &SimEvent) {
+        match ev {
+            SimEvent::Completed(rec) => self.record_job(*rec),
+            SimEvent::PointClosed(rec) => self.record_perf(*rec),
+            SimEvent::Submitted { .. } | SimEvent::Started { .. } | SimEvent::Rejected { .. } => {}
         }
     }
 
@@ -232,6 +262,27 @@ mod tests {
         c.record_job(rec(2));
         assert_eq!(c.jobs.len(), 2);
         assert_eq!(c.jobs[1].id, 2);
+    }
+
+    #[test]
+    fn apply_routes_log_events_to_records() {
+        let mut c = OutputCollector::in_memory(true, true);
+        c.apply(&SimEvent::Submitted { t: 0, id: 1 });
+        c.apply(&SimEvent::Started { t: 0, id: 1 });
+        c.apply(&SimEvent::Completed(rec(1)));
+        c.apply(&SimEvent::PointClosed(PerfRecord {
+            t: 1,
+            dispatch_ns: 0,
+            other_ns: 0,
+            queue_len: 0,
+            running: 0,
+            started: 1,
+            rss_kb: 0,
+        }));
+        c.apply(&SimEvent::Rejected { t: 2, id: 9 });
+        assert_eq!(c.jobs.len(), 1);
+        assert_eq!(c.perf.len(), 1);
+        assert_eq!(c.jobs[0].id, 1);
     }
 
     #[test]

@@ -239,6 +239,13 @@ impl ResourceManager {
         self.shapes.len()
     }
 
+    /// The `per_slot` vector behind the `i`-th interned shape (intern
+    /// order). Snapshot files record shapes in this order so a restore can
+    /// re-intern them and hand every job back its original [`ShapeId`].
+    pub fn shape_vector(&self, i: usize) -> Option<&[u64]> {
+        (i < self.shapes.len()).then(|| ShapeId::from_index(i)).and_then(|id| self.shapes.get(id))
+    }
+
     /// Take a node out of service. Only honored when the node is idle (no
     /// running slots); returns whether the node is now down.
     pub fn set_node_down(&mut self, node: usize) -> bool {

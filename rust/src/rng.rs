@@ -35,6 +35,18 @@ impl Pcg64 {
         rng
     }
 
+    /// Expose the internal `(state, inc)` pair for serialization (snapshot
+    /// files, DESIGN.md §Event log & replay).
+    pub fn parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a [`Self::parts`] pair, resuming the stream
+    /// exactly where the original left off.
+    pub fn from_parts(state: u64, inc: u64) -> Self {
+        Pcg64 { state, inc }
+    }
+
     /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
@@ -135,6 +147,19 @@ mod tests {
     fn deterministic_across_instances() {
         let mut a = Pcg64::new(42);
         let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn parts_roundtrip_resumes_the_stream() {
+        let mut a = Pcg64::new(42);
+        for _ in 0..37 {
+            a.next_u64();
+        }
+        let (state, inc) = a.parts();
+        let mut b = Pcg64::from_parts(state, inc);
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

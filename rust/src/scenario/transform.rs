@@ -71,6 +71,12 @@ impl JobSource for WarpedSource {
     fn lines_skipped(&self) -> u64 {
         self.inner.lines_skipped()
     }
+
+    fn exhausted(&self) -> bool {
+        // pass through: wrapping a streaming source must not turn its
+        // "idle" (None, not exhausted) into "end of workload"
+        self.inner.exhausted()
+    }
 }
 
 #[cfg(test)]
@@ -133,5 +139,102 @@ mod tests {
         let submits: Vec<u64> =
             std::iter::from_fn(|| src.next_job()).map(|j| j.submit).collect();
         assert_eq!(submits, vec![10, 120]);
+    }
+
+    /// Deterministic pseudo-random sorted submit streams for the property
+    /// tests below (no external proptest dependency).
+    fn random_sorted_submits(seed: u64, n: usize, max_gap: u64) -> Vec<u64> {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        let mut t = 0u64;
+        (0..n)
+            .map(|_| {
+                t += rng.range_u64(0, max_gap);
+                t
+            })
+            .collect()
+    }
+
+    /// Property: for any sorted stream and any warp with `factor ≥ 1`, the
+    /// warped stream is still sorted (the incremental loader's assumption),
+    /// warped times never leave `[from, until)` headed backwards past
+    /// `from`, and jobs outside the window are untouched.
+    fn assert_warp_invariants(warp: SubmitWarp, submits: &[u64]) {
+        let jobs: Vec<Job> =
+            submits.iter().enumerate().map(|(i, &s)| job(i as u64 + 1, s)).collect();
+        let mut src = WarpedSource::wrap(Box::new(MemorySource::new(jobs)), vec![warp]);
+        let mut prev = 0u64;
+        let mut count = 0usize;
+        while let Some(j) = src.next_job() {
+            let original = submits[count];
+            assert!(
+                j.submit >= prev,
+                "stream unsorted at job {}: {} after {prev} (warp {warp:?})",
+                j.id,
+                j.submit
+            );
+            assert!(j.submit <= original, "a compression warp may only pull submits earlier");
+            if original < warp.from || original >= warp.until {
+                assert_eq!(j.submit, original, "outside the window must be untouched");
+            } else {
+                assert!(j.submit >= warp.from, "warped submit left the window backwards");
+            }
+            prev = j.submit;
+            count += 1;
+        }
+        assert_eq!(count, submits.len(), "the warp must not drop or invent jobs");
+        assert!(src.exhausted(), "a drained batch source reports exhausted through the wrapper");
+    }
+
+    #[test]
+    fn property_zero_width_window_is_identity() {
+        // until == from: the window [from, from) is empty, every submit is
+        // outside it. The minimal *valid* surge window (until == from + 1,
+        // ArrivalSurge validates from < until) only ever maps from → from.
+        for seed in 0..20 {
+            let submits = random_sorted_submits(seed, 200, 97);
+            assert_warp_invariants(SubmitWarp { from: 500, until: 500, factor: 8.0 }, &submits);
+            assert_warp_invariants(SubmitWarp { from: 500, until: 501, factor: 8.0 }, &submits);
+        }
+        // the one-point window maps its single member to itself
+        let w = SubmitWarp { from: 500, until: 501, factor: 1e12 };
+        assert_eq!(w.warp(500), 500);
+    }
+
+    #[test]
+    fn property_factor_at_the_validation_cap_and_beyond() {
+        // factor == 1.0 is the cap ArrivalSurge validates against (the
+        // identity warp); a huge finite factor collapses the whole window
+        // onto `from`. Both must preserve sortedness.
+        for seed in 0..20 {
+            let submits = random_sorted_submits(seed + 100, 200, 53);
+            let lo = SubmitWarp { from: 100, until: 5_000, factor: 1.0 };
+            assert_warp_invariants(lo, &submits);
+            for &s in &submits {
+                assert_eq!(lo.warp(s), s, "factor 1.0 must be the identity");
+            }
+            let hi = SubmitWarp { from: 100, until: 5_000, factor: 1e300 };
+            assert_warp_invariants(hi, &submits);
+            for &s in &submits {
+                if s >= 100 && s < 5_000 {
+                    assert_eq!(hi.warp(s), 100, "an extreme factor collapses onto `from`");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_window_past_the_last_submit_is_identity() {
+        for seed in 0..20 {
+            let submits = random_sorted_submits(seed + 200, 150, 41);
+            let last = *submits.last().unwrap();
+            let w = SubmitWarp { from: last + 1, until: last + 10_000, factor: 16.0 };
+            assert_warp_invariants(w, &submits);
+            let jobs: Vec<Job> =
+                submits.iter().enumerate().map(|(i, &s)| job(i as u64 + 1, s)).collect();
+            let mut src = WarpedSource::wrap(Box::new(MemorySource::new(jobs)), vec![w]);
+            let warped: Vec<u64> =
+                std::iter::from_fn(|| src.next_job()).map(|j| j.submit).collect();
+            assert_eq!(warped, submits, "a window beyond the stream must change nothing");
+        }
     }
 }

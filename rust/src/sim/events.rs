@@ -97,6 +97,7 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue.
     pub fn new() -> Self {
         EventQueue::default()
     }
@@ -131,8 +132,29 @@ impl EventQueue {
         self.heap.len()
     }
 
+    /// Whether no event is queued.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Snapshot view: every queued event as `(time, seq, payload)`, sorted
+    /// by pop order, plus the next insertion sequence number. The sequence
+    /// numbers are part of the determinism contract (FIFO tie-break within
+    /// a kind at one timestamp), so a snapshot must capture them exactly.
+    pub fn snapshot_entries(&self) -> (Vec<(u64, u64, EventPayload)>, u64) {
+        let mut entries: Vec<&Event> = self.heap.iter().map(|Reverse(e)| e).collect();
+        entries.sort_by_key(|e| e.key());
+        (entries.into_iter().map(|e| (e.time, e.seq, e.payload.clone())).collect(), self.seq)
+    }
+
+    /// Rebuild a queue from [`Self::snapshot_entries`] output, preserving
+    /// the exact per-event sequence numbers and the insertion counter.
+    pub fn from_snapshot_entries(entries: Vec<(u64, u64, EventPayload)>, next_seq: u64) -> Self {
+        let mut heap = BinaryHeap::with_capacity(entries.len());
+        for (time, seq, payload) in entries {
+            heap.push(Reverse(Event { time, seq, payload }));
+        }
+        EventQueue { heap, seq: next_seq }
     }
 }
 
@@ -220,6 +242,34 @@ mod tests {
         assert!(q.pop_at(5).is_some());
         assert!(q.pop_at(5).is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_order_and_seq() {
+        let mut q = EventQueue::new();
+        q.push(9, EventPayload::Submit(job(1)));
+        q.push(9, EventPayload::Submit(job(2)));
+        q.push(4, EventPayload::Complete(7));
+        q.push(9, EventPayload::AddonWake(0));
+        let (entries, next_seq) = q.snapshot_entries();
+        assert_eq!(entries.len(), 4);
+        assert_eq!(next_seq, 4);
+        let mut restored = EventQueue::from_snapshot_entries(entries, next_seq);
+        // pop order must be identical to the original queue's
+        let mut orig = Vec::new();
+        while let Some(t) = q.next_time() {
+            orig.push((t, rank_of(&q.pop_at(t).unwrap())));
+        }
+        let mut back = Vec::new();
+        while let Some(t) = restored.next_time() {
+            back.push((t, rank_of(&restored.pop_at(t).unwrap())));
+        }
+        assert_eq!(orig, back);
+        // and new pushes continue the sequence where the original left off
+        restored.push(9, EventPayload::MemSample);
+        let (entries, next_seq) = restored.snapshot_entries();
+        assert_eq!(entries[0].1, 4);
+        assert_eq!(next_seq, 5);
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! The append-only simulation event log (DESIGN.md §Event log & replay).
+//!
+//! Every externally visible state transition of the simulation — a job
+//! entering the queue, starting, completing, being rejected, a time point
+//! closing — is appended to one [`EventLog`]. Consumers (the in-memory
+//! [`crate::output::OutputCollector`], the campaign store's CSV writers,
+//! live monitors) each hold a cursor and call [`EventLog::advance`] to
+//! receive exactly the events they have not seen yet: one queue,
+//! per-consumer counters, exactly-once delivery.
+//!
+//! Delivered events are garbage-collected once *every* consumer has passed
+//! them ([`EventLog::compact`]), so a plain run holds only a handful of
+//! events at a time. Checkpointable runs switch the log to retain-all mode
+//! ([`crate::sim::SimOptions::retain_log`]): the full history then travels
+//! inside each snapshot, and a restore replays it into fresh consumers —
+//! which is what makes a resumed run's `jobs.csv`/`perf.csv` byte-identical
+//! to an uninterrupted one.
+
+use crate::output::{JobRecord, PerfRecord};
+use crate::workload::JobId;
+
+/// One externally visible state transition of the simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimEvent {
+    /// A job joined the queue at time `t`.
+    Submitted {
+        /// Simulation time of the transition.
+        t: u64,
+        /// The job.
+        id: JobId,
+    },
+    /// A job was dispatched (resources allocated) at time `t`.
+    Started {
+        /// Simulation time of the transition.
+        t: u64,
+        /// The job.
+        id: JobId,
+    },
+    /// A job was rejected at time `t` (oversized at submission, refused by
+    /// the dispatcher, or stranded when the event queue drained).
+    Rejected {
+        /// Simulation time of the transition.
+        t: u64,
+        /// The job.
+        id: JobId,
+    },
+    /// A job completed; carries its full execution record.
+    Completed(JobRecord),
+    /// A simulation time point closed; carries its performance record.
+    PointClosed(PerfRecord),
+}
+
+/// Append-only log with per-consumer delivery counters.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    /// Retained events; `events[0]` has global index `base`.
+    events: Vec<SimEvent>,
+    /// Global index of the first retained event (0 while retaining all).
+    base: u64,
+    /// Per-consumer absolute positions: consumer `c` has seen every event
+    /// with global index `< counters[c]`.
+    counters: Vec<u64>,
+    /// Keep the full history (required for snapshots) instead of
+    /// compacting delivered events away.
+    retain_all: bool,
+}
+
+impl EventLog {
+    /// An empty log; `retain_all` keeps the full history for snapshots.
+    pub fn new(retain_all: bool) -> Self {
+        EventLog { retain_all, ..Default::default() }
+    }
+
+    /// Register a consumer. Its cursor starts at the oldest retained event
+    /// — which is the very beginning of the run while the log retains all
+    /// (so a consumer registered after a restore replays the full prefix).
+    pub fn register_consumer(&mut self) -> usize {
+        self.counters.push(self.base);
+        self.counters.len() - 1
+    }
+
+    /// Append one event.
+    #[inline]
+    pub fn push(&mut self, ev: SimEvent) {
+        self.events.push(ev);
+    }
+
+    /// Deliver every event consumer `c` has not seen yet and advance its
+    /// cursor past them (exactly-once delivery).
+    pub fn advance(&mut self, c: usize) -> &[SimEvent] {
+        let start = (self.counters[c] - self.base) as usize;
+        self.counters[c] = self.base + self.events.len() as u64;
+        &self.events[start..]
+    }
+
+    /// Drop events every consumer has passed (no-op in retain-all mode).
+    pub fn compact(&mut self) {
+        if self.retain_all || self.counters.is_empty() {
+            return;
+        }
+        let min = self.counters.iter().copied().min().unwrap_or(self.base);
+        let cut = (min - self.base) as usize;
+        if cut > 0 {
+            self.events.drain(..cut);
+            self.base = min;
+        }
+    }
+
+    /// Global index of the first retained event (0 = full history).
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Total events appended over the log's lifetime.
+    pub fn total(&self) -> u64 {
+        self.base + self.events.len() as u64
+    }
+
+    /// The retained events (the full history in retain-all mode).
+    pub fn retained(&self) -> &[SimEvent] {
+        &self.events
+    }
+
+    /// Whether the full history is being retained.
+    pub fn retains_all(&self) -> bool {
+        self.retain_all
+    }
+
+    /// Rebuild a log from a snapshot's event list. No consumers are
+    /// registered; fresh ones start at index 0 and replay everything (the
+    /// history survives until every consumer has seen it even when
+    /// `retain_all` is off — compaction never outruns the slowest cursor).
+    pub fn from_events(events: Vec<SimEvent>, retain_all: bool) -> Self {
+        EventLog { events, base: 0, counters: Vec::new(), retain_all }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: JobId) -> SimEvent {
+        SimEvent::Submitted { t: 0, id }
+    }
+
+    #[test]
+    fn consumers_see_each_event_exactly_once() {
+        let mut log = EventLog::new(false);
+        let a = log.register_consumer();
+        let b = log.register_consumer();
+        log.push(ev(1));
+        log.push(ev(2));
+        assert_eq!(log.advance(a).len(), 2);
+        assert_eq!(log.advance(a).len(), 0, "no redelivery");
+        log.push(ev(3));
+        assert_eq!(log.advance(a).len(), 1);
+        assert_eq!(log.advance(b).len(), 3, "slow consumer catches up in one call");
+    }
+
+    #[test]
+    fn compaction_waits_for_the_slowest_consumer() {
+        let mut log = EventLog::new(false);
+        let a = log.register_consumer();
+        let b = log.register_consumer();
+        log.push(ev(1));
+        log.push(ev(2));
+        log.advance(a);
+        log.compact();
+        assert_eq!(log.base(), 0, "b has not seen anything yet");
+        assert_eq!(log.retained().len(), 2);
+        log.advance(b);
+        log.compact();
+        assert_eq!(log.base(), 2);
+        assert!(log.retained().is_empty());
+        // cursors stay valid across compaction
+        log.push(ev(3));
+        assert_eq!(log.advance(a).len(), 1);
+        assert_eq!(log.advance(b).len(), 1);
+    }
+
+    #[test]
+    fn retain_all_keeps_history_and_replays_to_late_consumers() {
+        let mut log = EventLog::new(true);
+        let a = log.register_consumer();
+        log.push(ev(1));
+        log.push(ev(2));
+        log.advance(a);
+        log.compact();
+        assert_eq!(log.base(), 0);
+        assert_eq!(log.retained().len(), 2);
+        // a consumer registered late replays from the very start
+        let b = log.register_consumer();
+        assert_eq!(log.advance(b).len(), 2);
+        assert_eq!(log.total(), 2);
+    }
+
+    #[test]
+    fn from_events_restores_full_history() {
+        let mut log2 = EventLog::from_events(vec![ev(1), ev(2), ev(3)], true);
+        let c = log2.register_consumer();
+        assert_eq!(log2.advance(c).len(), 3);
+        assert!(log2.retains_all());
+        // without retain-all the history still reaches a fresh consumer,
+        // and only then is it compacted away
+        let mut log3 = EventLog::from_events(vec![ev(1), ev(2)], false);
+        log3.compact();
+        let c3 = log3.register_consumer();
+        assert_eq!(log3.advance(c3).len(), 2);
+        log3.compact();
+        assert_eq!(log3.base(), 2);
+    }
+}

@@ -19,12 +19,29 @@
 //! t=1000 fires at exactly t=1000 even when no job event falls between the
 //! last submission and the repair — the seed's two-`BTreeMap` design starved
 //! such timers and bulk-rejected the stalled queue instead.
+//!
+//! # Resumable core
+//!
+//! The simulator is an incremental state machine ([`SimCore`], DESIGN.md
+//! §Event log & replay): [`SimCore::step`] advances exactly one simulation
+//! time point, every state transition is appended to an append-only
+//! [`SimEvent`] log consumed by cursor-holding consumers, and
+//! [`SimCore::snapshot`]/[`SimCore::restore`] round-trip the complete
+//! mutable state — job table, queue, allocations, event heap (with
+//! sequence numbers), RNG stream, addon timers and accumulated statistics —
+//! through a versioned JSON format. A restored (or [`SimCore::fork`]ed)
+//! run that follows the original scenario produces byte-identical
+//! `jobs.csv`/`perf.csv` to an uninterrupted one. [`SimCore::run`] is the
+//! batch driver: `step()` in a loop, then [`SimCore::finish`].
 
 mod events;
+mod log;
+mod snapshot;
 mod source;
 
 pub use events::{Event, EventPayload, EventQueue};
-pub use source::{JobSource, MemorySource, SwfSource};
+pub use log::{EventLog, SimEvent};
+pub use source::{JobSource, MemorySource, StreamHandle, StreamingSource, SwfSource};
 
 use crate::addons::{AddonAck, AddonAction, AdditionalData};
 use crate::config::SysConfig;
@@ -32,6 +49,7 @@ use crate::dispatch::{Dispatcher, RunningInfo, SystemView};
 use crate::monitor::{process_cpu_ms, MemProbe};
 use crate::output::{JobRecord, OutputCollector, PerfRecord};
 use crate::resources::ResourceManager;
+use crate::rng::Pcg64;
 use crate::util::idhash::{IdHashMap, IdHashSet};
 use crate::workload::{FactoryConfig, Job, JobId};
 use std::collections::{BTreeMap, VecDeque};
@@ -67,7 +85,9 @@ pub struct SimOptions {
     /// Where records go.
     pub output: OutputCollector,
     /// Measure per-time-point wall time (Figs 12–13). Costs ~4 clock reads
-    /// per time point; pure-overhead runs (Table 1) switch it off.
+    /// per time point; pure-overhead runs (Table 1) switch it off. Byte-
+    /// determinism studies (snapshot/restore equivalence) also switch it
+    /// off, since measured nanoseconds are inherently nondeterministic.
     pub time_dispatch: bool,
     /// Intern job shapes at submission so availability queries run against
     /// the incremental index (DESIGN.md §Perf). On by default; switching it
@@ -76,6 +96,12 @@ pub struct SimOptions {
     /// `rust/tests/availability_index.rs`), only slower, so the toggle
     /// exists for A/B measurements and the equivalence tests themselves.
     pub use_shape_index: bool,
+    /// Keep the full [`SimEvent`] history instead of compacting delivered
+    /// events away. Required for [`SimCore::snapshot`]/[`SimCore::fork`]
+    /// (the snapshot carries the history so a restore can replay it into
+    /// fresh consumers); costs memory proportional to the run length, so
+    /// plain batch runs leave it off.
+    pub retain_log: bool,
 }
 
 impl Default for SimOptions {
@@ -90,6 +116,7 @@ impl Default for SimOptions {
             output: OutputCollector::in_memory(true, true),
             time_dispatch: true,
             use_shape_index: true,
+            retain_log: false,
         }
     }
 }
@@ -101,7 +128,10 @@ pub struct SimOutput {
     pub dispatcher: String,
     /// Seed this run was configured with ([`SimOptions::seed`]).
     pub seed: u64,
+    /// Jobs that ran to completion.
     pub jobs_completed: u64,
+    /// Jobs rejected (oversized at submission, refused by the dispatcher,
+    /// or stranded when the event queue drained).
     pub jobs_rejected: u64,
     /// Malformed workload lines skipped by the reader.
     pub lines_skipped: u64,
@@ -111,9 +141,9 @@ pub struct SimOutput {
     pub last_completion: u64,
     /// `last_completion − first_submit`.
     pub makespan: u64,
-    /// Total wall-clock time of `run()` (seconds).
+    /// Total wall-clock time of the run (seconds).
     pub wall_s: f64,
-    /// Process CPU time consumed during `run()` (ms).
+    /// Process CPU time consumed during the run (ms).
     pub cpu_ms: u64,
     /// Wall time spent generating dispatching decisions (ns).
     pub dispatch_ns: u64,
@@ -125,8 +155,9 @@ pub struct SimOutput {
     pub addon_wakes: u64,
     /// Largest queue length observed.
     pub max_queue: usize,
-    /// Mean/max RSS over samples (KB).
+    /// Mean RSS over samples (KB).
     pub avg_rss_kb: u64,
+    /// Peak RSS over samples (KB).
     pub max_rss_kb: u64,
     /// Sum of job slowdowns (for quick averages without records).
     pub slowdown_sum: f64,
@@ -134,6 +165,7 @@ pub struct SimOutput {
     pub wait_sum: u64,
     /// In-memory records (when the collector keeps them).
     pub jobs: Vec<JobRecord>,
+    /// In-memory performance records (when the collector keeps them).
     pub perf: Vec<PerfRecord>,
     /// Energy metrics published by addons at the final time point.
     pub final_extra: BTreeMap<String, f64>,
@@ -168,8 +200,42 @@ impl SimOutput {
     }
 }
 
-/// The simulator: event manager + resource manager + dispatcher.
-pub struct Simulator {
+/// Life-cycle phase of a [`SimCore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Constructed; `start()` runs lazily on the first `step()`.
+    Fresh,
+    /// Started (possibly via restore); `step()` advances time points.
+    Running,
+    /// `finish()` consumed the output; the core is spent.
+    Finished,
+}
+
+/// Outcome of one [`SimCore::step`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// One simulation time point was processed at the given time.
+    Advanced(u64),
+    /// No event is pending but the job source is still open (streaming):
+    /// nothing to do until more jobs are pushed. Never returned for batch
+    /// sources (files, memory lists).
+    Idle,
+    /// The simulation is over: the event queue drained and the source is
+    /// exhausted. Any stranded queued jobs have been bulk-rejected. Call
+    /// [`SimCore::finish`] for the output.
+    Done,
+}
+
+/// Backwards-compatible name for [`SimCore`] (the Figure 4 entry point).
+pub type Simulator = SimCore;
+
+/// The simulator as an incremental state machine: event manager + resource
+/// manager + dispatcher, advanced one time point per [`SimCore::step`].
+///
+/// All mutable simulation state lives in named fields (never in loop
+/// locals), which is what makes [`SimCore::snapshot`] possible; see the
+/// module docs and DESIGN.md §Event log & replay.
+pub struct SimCore {
     source: Box<dyn JobSource>,
     rm: ResourceManager,
     dispatcher: Dispatcher,
@@ -193,6 +259,29 @@ pub struct Simulator {
     /// Values published by addons for the dispatcher.
     extra: BTreeMap<String, f64>,
     source_done: bool,
+    /// Jobs pulled from the source so far (`Some` returns only). A restore
+    /// fast-forwards a fresh source past this many jobs; the skipped jobs
+    /// already live in the snapshot (event heap, job table, or log).
+    source_consumed: u64,
+    /// The core's deterministic random stream, seeded from
+    /// [`SimOptions::seed`] and carried across snapshot/restore so
+    /// stochastic extensions resume mid-stream instead of restarting it.
+    rng: Pcg64,
+    // --- progress state (formerly `run()` locals) ---
+    phase: Phase,
+    /// Accumulating summary; moved out by [`SimCore::finish`].
+    out: SimOutput,
+    first_submit: Option<u64>,
+    last_point: Option<u64>,
+    mem: MemProbe,
+    mem_armed: bool,
+    wall0: Option<Instant>,
+    cpu0: u64,
+    /// The append-only state-transition log (DESIGN.md §Event log & replay).
+    log: EventLog,
+    /// The output collector's consumer cursor in [`Self::log`].
+    out_consumer: Option<usize>,
+    views: ViewScratch,
     // --- reusable per-cycle scratch (zero-allocation dispatch cycle) ---
     /// Started/rejected ids for the one-pass queue removal.
     retain_scratch: IdHashSet,
@@ -241,7 +330,7 @@ impl ViewScratch {
     }
 }
 
-impl Simulator {
+impl SimCore {
     /// Simulator over an SWF workload file (the Figure 4 instantiation).
     pub fn new<P: AsRef<std::path::Path>>(
         workload: P,
@@ -270,7 +359,9 @@ impl Simulator {
         dispatcher: Dispatcher,
         opts: SimOptions,
     ) -> Self {
-        Simulator {
+        let rng = Pcg64::new(opts.seed);
+        let log = EventLog::new(opts.retain_log);
+        SimCore {
             source,
             rm: ResourceManager::from_config(&sys),
             dispatcher,
@@ -284,6 +375,19 @@ impl Simulator {
             addon_wake: Vec::new(),
             extra: BTreeMap::new(),
             source_done: false,
+            source_consumed: 0,
+            rng,
+            phase: Phase::Fresh,
+            out: SimOutput::default(),
+            first_submit: None,
+            last_point: None,
+            mem: MemProbe::new(),
+            mem_armed: false,
+            wall0: None,
+            cpu0: 0,
+            log,
+            out_consumer: None,
+            views: ViewScratch::default(),
             retain_scratch: IdHashSet::default(),
             completed_buf: Vec::new(),
             submitted_buf: Vec::new(),
@@ -294,6 +398,162 @@ impl Simulator {
     /// Access the resource manager (monitoring tools).
     pub fn resource_manager(&self) -> &ResourceManager {
         &self.rm
+    }
+
+    /// The core's deterministic random stream (carried in snapshots).
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// Register an additional consumer on the state-transition log (e.g.
+    /// the campaign store's streaming CSV sink) and return its cursor for
+    /// [`SimCore::drain_events`]. Register before the first `step()` — or
+    /// any time under [`SimOptions::retain_log`], where a late consumer
+    /// replays the full history — so no event is compacted away unseen.
+    pub fn register_consumer(&mut self) -> usize {
+        self.log.register_consumer()
+    }
+
+    /// Deliver every not-yet-seen log event to `f` and advance the
+    /// consumer's cursor (exactly-once delivery; see [`EventLog`]).
+    pub fn drain_events<F>(&mut self, consumer: usize, mut f: F) -> anyhow::Result<()>
+    where
+        F: FnMut(&SimEvent) -> anyhow::Result<()>,
+    {
+        for ev in self.log.advance(consumer) {
+            f(ev)?;
+        }
+        self.log.compact();
+        Ok(())
+    }
+
+    /// One-time initialization: stamp the clocks, seed the event queue from
+    /// the source, arm the probe chain, register the output collector as a
+    /// log consumer.
+    fn start(&mut self) {
+        debug_assert!(matches!(self.phase, Phase::Fresh));
+        self.wall0 = Some(Instant::now());
+        self.cpu0 = process_cpu_ms();
+        self.out = SimOutput {
+            dispatcher: self.dispatcher.label(),
+            seed: self.opts.seed,
+            ..Default::default()
+        };
+        // Expose the run seed to dispatchers and addons alongside their
+        // published metrics (f64: informational, the manifest keeps the
+        // exact 64-bit value).
+        self.extra.insert("run.seed".to_string(), self.opts.seed as f64);
+        self.refill(0);
+        self.addon_wake = vec![None; self.opts.addons.len()];
+        // Align the memory-probe cadence with the workload start. The chain
+        // pauses whenever job work stops (a stalled queue waiting on a
+        // repair) and is re-seeded at the next real time point.
+        if self.opts.mem_sample_secs > 0 {
+            if let Some(t0) = self.events.next_time() {
+                self.events.push(t0, EventPayload::MemSample);
+                self.mem_armed = true;
+            }
+        }
+        self.out_consumer = Some(self.log.register_consumer());
+        self.phase = Phase::Running;
+    }
+
+    /// Advance the simulation by one time point.
+    ///
+    /// Lazily runs the one-time start on the first call. Returns
+    /// [`Step::Advanced`] with the processed time, [`Step::Idle`] when a
+    /// streaming source is open but quiet, and [`Step::Done`] when the
+    /// simulation is over (stranded queued jobs are bulk-rejected at that
+    /// moment). Calling `step()` again after `Done` is a no-op returning
+    /// `Done`; calling it after [`SimCore::finish`] is an error.
+    pub fn step(&mut self) -> anyhow::Result<Step> {
+        match self.phase {
+            Phase::Fresh => self.start(),
+            Phase::Running => {}
+            Phase::Finished => anyhow::bail!("step() called after finish()"),
+        }
+        if self.events.is_empty() && !self.source_done {
+            // A streaming source may have received jobs since the last
+            // point; poll it at the next representable time so event times
+            // stay strictly monotone. (Batch sources never reach this arm:
+            // refill() either leaves a pending submission or exhausts.)
+            let base = self.last_point.map_or(0, |p| p + 1);
+            self.refill(base);
+        }
+        let Some(now) = self.events.next_time() else {
+            if !self.source_done {
+                return Ok(Step::Idle);
+            }
+            // The event queue drained completely: no completion,
+            // submission or addon wake-up can ever free capacity again,
+            // so whatever is still queued can never start (e.g. the
+            // dispatcher refuses it). Reject to terminate.
+            let t_end = self.last_point.unwrap_or(0);
+            for id in std::mem::take(&mut self.queue) {
+                self.jobs.remove(&id);
+                self.out.jobs_rejected += 1;
+                self.log.push(SimEvent::Rejected { t: t_end, id });
+            }
+            self.drain_out_consumer();
+            return Ok(Step::Done);
+        };
+        self.advance_point(now)?;
+        self.drain_out_consumer();
+        Ok(Step::Advanced(now))
+    }
+
+    /// Run the simulation to completion, consuming all events, and return
+    /// the output summary. Equivalent to `step()` until [`Step::Done`] then
+    /// [`SimCore::finish`]. A still-open streaming source is treated as end
+    /// of input ([`Step::Idle`] breaks the loop): callers that feed jobs
+    /// live must drive `step()` themselves.
+    pub fn run(&mut self) -> anyhow::Result<SimOutput> {
+        loop {
+            match self.step()? {
+                Step::Advanced(_) => {}
+                Step::Idle | Step::Done => break,
+            }
+        }
+        self.finish()
+    }
+
+    /// Close the simulation and move the accumulated [`SimOutput`] out.
+    /// Flushes log consumers and file streams; the core is spent afterwards.
+    pub fn finish(&mut self) -> anyhow::Result<SimOutput> {
+        anyhow::ensure!(
+            !matches!(self.phase, Phase::Finished),
+            "finish() called twice on one SimCore"
+        );
+        if matches!(self.phase, Phase::Fresh) {
+            self.start();
+        }
+        // final memory sample so short runs still report something
+        self.mem.sample();
+        self.drain_out_consumer();
+        self.opts.output.finish()?;
+        let mut out = std::mem::take(&mut self.out);
+        out.first_submit = self.first_submit.unwrap_or(0);
+        out.makespan = out.last_completion.saturating_sub(out.first_submit);
+        out.wall_s = self.wall0.map(|w| w.elapsed().as_secs_f64()).unwrap_or(0.0);
+        out.cpu_ms = process_cpu_ms().saturating_sub(self.cpu0);
+        out.avg_rss_kb = self.mem.avg_kb();
+        out.max_rss_kb = self.mem.max_kb;
+        out.lines_skipped = self.source.lines_skipped();
+        out.jobs = std::mem::take(&mut self.opts.output.jobs);
+        out.perf = std::mem::take(&mut self.opts.output.perf);
+        out.final_extra = self.extra.clone();
+        self.phase = Phase::Finished;
+        Ok(out)
+    }
+
+    /// Deliver pending log events to the output collector and compact.
+    fn drain_out_consumer(&mut self) {
+        if let Some(c) = self.out_consumer {
+            for ev in self.log.advance(c) {
+                self.opts.output.apply(ev);
+            }
+            self.log.compact();
+        }
     }
 
     /// Pull jobs from the source whose submission time falls inside the
@@ -308,6 +568,7 @@ impl Simulator {
         while self.pending_submits == 0 || self.pending_max <= horizon {
             match self.source.next_job() {
                 Some(job) => {
+                    self.source_consumed += 1;
                     // Never schedule into the past: an unsorted source's
                     // "late" job submits at the current time point, keeping
                     // event times monotone.
@@ -317,7 +578,13 @@ impl Simulator {
                     self.events.push(at, EventPayload::Submit(job));
                 }
                 None => {
-                    self.source_done = true;
+                    // A streaming source's `None` is "idle", not "end of
+                    // workload": leave `source_done` unset so the core
+                    // keeps polling ([`Step::Idle`]) instead of
+                    // terminating.
+                    if self.source.exhausted() {
+                        self.source_done = true;
+                    }
                     break;
                 }
             }
@@ -333,14 +600,10 @@ impl Simulator {
         self.pending_submits > 0 || !self.starts.is_empty() || !self.source_done
     }
 
-    /// Retire a batch of jobs completing at `now`: release resources and
-    /// emit their execution records.
-    fn complete_jobs(
-        &mut self,
-        now: u64,
-        ids: &[JobId],
-        out: &mut SimOutput,
-    ) -> anyhow::Result<()> {
+    /// Retire a batch of jobs completing at `now`: release resources,
+    /// accumulate summary statistics, and append their execution records to
+    /// the log.
+    fn complete_jobs(&mut self, now: u64, ids: &[JobId]) -> anyhow::Result<()> {
         for &id in ids {
             let job = self.jobs.remove(&id).expect("running job in table");
             let start = self.starts.remove(&id).expect("running job has start");
@@ -355,11 +618,11 @@ impl Simulator {
                 wait,
                 slowdown: job.slowdown(wait),
             };
-            out.slowdown_sum += rec.slowdown;
-            out.wait_sum += wait;
-            out.jobs_completed += 1;
-            out.last_completion = now;
-            self.opts.output.record_job(rec);
+            self.out.slowdown_sum += rec.slowdown;
+            self.out.wait_sum += wait;
+            self.out.jobs_completed += 1;
+            self.out.last_completion = now;
+            self.log.push(SimEvent::Completed(rec));
         }
         Ok(())
     }
@@ -368,314 +631,261 @@ impl Simulator {
     /// where shapes are interned (once per job, O(nodes × types) only the
     /// first time a shape appears), so every later availability query on
     /// the dispatch hot path is an index lookup.
-    fn submit_job(&mut self, mut job: Job, first_submit: &mut Option<u64>, out: &mut SimOutput) {
-        first_submit.get_or_insert(job.submit);
+    fn submit_job(&mut self, now: u64, mut job: Job) {
+        self.first_submit.get_or_insert(job.submit);
         if self.opts.use_shape_index {
             job.shape = self.rm.intern_shape(&job.per_slot);
         }
         if self.opts.reject_unrunnable && !self.rm.can_ever_host(&job) {
-            out.jobs_rejected += 1;
+            self.out.jobs_rejected += 1;
+            self.log.push(SimEvent::Rejected { t: now, id: job.id });
             return;
         }
+        self.log.push(SimEvent::Submitted { t: now, id: job.id });
         self.queue.push_back(job.id);
         self.jobs.insert(job.id, job);
     }
 
-    /// Run the simulation to completion, consuming all events.
-    pub fn run(&mut self) -> anyhow::Result<SimOutput> {
-        let wall0 = Instant::now();
-        let cpu0 = process_cpu_ms();
-        let mut out = SimOutput {
-            dispatcher: self.dispatcher.label(),
-            seed: self.opts.seed,
-            ..Default::default()
-        };
-        // Expose the run seed to dispatchers and addons alongside their
-        // published metrics (f64: informational, the manifest keeps the
-        // exact 64-bit value).
-        self.extra.insert("run.seed".to_string(), self.opts.seed as f64);
-        let mut mem = MemProbe::new();
-        let mut first_submit: Option<u64> = None;
-        let mut last_point: Option<u64> = None;
+    /// Process every event at timestamp `now` as one simulation time point:
+    /// completions, submissions, addon updates, the (repeated, for
+    /// zero-duration jobs) dispatch cycle, wake planting and the perf
+    /// record. This is the body of the former monolithic `run()` loop.
+    fn advance_point(&mut self, now: u64) -> anyhow::Result<()> {
+        let timing = self.opts.time_dispatch;
+        let t_other0 = timing.then(Instant::now);
 
-        self.refill(0);
-        self.addon_wake = vec![None; self.opts.addons.len()];
-        // Align the memory-probe cadence with the workload start. The chain
-        // pauses whenever job work stops (a stalled queue waiting on a
-        // repair) and is re-seeded at the next real time point.
-        let mut mem_armed = false;
-        if self.opts.mem_sample_secs > 0 {
-            if let Some(t0) = self.events.next_time() {
-                self.events.push(t0, EventPayload::MemSample);
-                mem_armed = true;
+        // Load submissions entering the lookahead horizon.
+        self.refill(now);
+
+        // --- drain every event at `now`: one timestamp = one point ---
+        // (reused buffers: emptied and returned at the end of the point)
+        let mut completed = std::mem::take(&mut self.completed_buf);
+        let mut submitted = std::mem::take(&mut self.submitted_buf);
+        let mut addon_due = false;
+        let mut mem_due = false;
+        while let Some(ev) = self.events.pop_at(now) {
+            match ev.payload {
+                EventPayload::Complete(id) => completed.push(id),
+                EventPayload::Submit(job) => {
+                    self.pending_submits -= 1;
+                    submitted.push(job);
+                }
+                EventPayload::AddonWake(i) => {
+                    // A wake is fresh only while it matches the timer
+                    // currently scheduled for its addon; reschedules
+                    // leave stale heap entries behind, ignored here.
+                    // A timer planted while jobs were active can also
+                    // outlive the workload: once no job work and no
+                    // queued jobs remain it cannot matter any more, so
+                    // it is dropped — this keeps e.g. a power model
+                    // from sweeping its integral across the idle tail
+                    // to a far-future repair time. (Completions popping
+                    // first at equal timestamps means `starts` still
+                    // counts jobs finishing right now.)
+                    if self.addon_wake.get(i) == Some(&Some(now)) {
+                        self.addon_wake[i] = None;
+                        if self.has_job_work() || !self.queue.is_empty() {
+                            addon_due = true;
+                            self.out.addon_wakes += 1;
+                        }
+                    }
+                }
+                EventPayload::MemSample => {
+                    mem_due = true;
+                    self.mem_armed = false;
+                }
             }
         }
-        let timing = self.opts.time_dispatch;
-        let mut views = ViewScratch::default();
+        let job_event = !completed.is_empty() || !submitted.is_empty();
 
-        loop {
-            let Some(now) = self.events.next_time() else {
-                // The event queue drained completely: no completion,
-                // submission or addon wake-up can ever free capacity again,
-                // so whatever is still queued can never start (e.g. the
-                // dispatcher refuses it). Reject to terminate.
-                for id in std::mem::take(&mut self.queue) {
-                    self.jobs.remove(&id);
-                    out.jobs_rejected += 1;
+        // --- completions at `now` (release before submit/dispatch) ---
+        self.complete_jobs(now, &completed)?;
+        completed.clear();
+        self.completed_buf = completed;
+
+        // --- submissions at `now` ---
+        for job in submitted.drain(..) {
+            self.submit_job(now, job);
+        }
+        self.submitted_buf = submitted;
+
+        if !job_event && !addon_due {
+            // Observation-only timestamp (memory sample or stale wake):
+            // sample and move on without a dispatch cycle or perf
+            // record, so results don't depend on the probe cadence.
+            if mem_due {
+                self.mem.sample();
+                if self.opts.mem_sample_secs > 0 && self.has_job_work() {
+                    self.events.push(now + self.opts.mem_sample_secs, EventPayload::MemSample);
+                    self.mem_armed = true;
                 }
-                break;
+            }
+            return Ok(());
+        }
+
+        // --- additional data (before the dispatcher sees the view) ---
+        let mut addons = std::mem::take(&mut self.opts.addons);
+        for addon in addons.iter_mut() {
+            for action in addon.update(now, &self.rm, self.queue.len(), self.starts.len()) {
+                match action {
+                    AddonAction::Publish(k, v) => {
+                        self.extra.insert(k, v);
+                    }
+                    AddonAction::DisableNode(n) => {
+                        // Acknowledged: busy nodes refuse to go down and
+                        // the provider learns it immediately instead of
+                        // the request being silently dropped.
+                        let down = self.rm.set_node_down(n as usize);
+                        addon.acknowledge(&AddonAck::NodeDown { node: n, down });
+                    }
+                    AddonAction::EnableNode(n) => {
+                        self.rm.set_node_up(n as usize);
+                    }
+                }
+            }
+        }
+
+        self.out.max_queue = self.out.max_queue.max(self.queue.len());
+        let queue_len = self.queue.len() as u32;
+
+        // --- dispatch ---
+        // Re-dispatch while zero-duration jobs complete within this very
+        // timestamp, so one timestamp stays one time point (and perf
+        // timestamps stay strictly increasing) while freed capacity is
+        // still offered to the remaining queue.
+        let mut started_this_point = 0u32;
+        let mut dispatch_ns = 0u64;
+        loop {
+            let t_disp0 = timing.then(Instant::now);
+            let decision = {
+                // view buffers are recycled across cycles (ViewScratch):
+                // no per-cycle allocation once capacities warm up
+                let (mut queue_jobs, mut running) = self.views.take();
+                queue_jobs.extend(self.queue.iter().map(|id| &self.jobs[id]));
+                running.extend(
+                    self.starts
+                        .iter()
+                        .map(|(id, &start)| RunningInfo { job: &self.jobs[id], start }),
+                );
+                let view = SystemView { now, queue: queue_jobs, running, extra: &self.extra };
+                let decision = self.dispatcher.dispatch(&view, &mut self.rm);
+                self.views.put(view.queue, view.running);
+                decision
             };
-            let t_other0 = timing.then(Instant::now);
+            if let Some(t0) = t_disp0 {
+                dispatch_ns += t0.elapsed().as_nanos() as u64;
+            }
 
-            // Load submissions entering the lookahead horizon.
-            self.refill(now);
+            // --- apply decision ---
+            for (id, _alloc) in &decision.started {
+                let job = &self.jobs[id];
+                let completion = job.completion_at(now);
+                self.starts.insert(*id, now);
+                self.events.push(completion, EventPayload::Complete(*id));
+                self.log.push(SimEvent::Started { t: now, id: *id });
+                started_this_point += 1;
+            }
+            for id in &decision.rejected {
+                self.jobs.remove(id);
+                self.out.jobs_rejected += 1;
+                self.log.push(SimEvent::Rejected { t: now, id: *id });
+            }
+            // Remove started + rejected ids from the queue in one pass
+            // (a per-id retain is O(k·|queue|) and showed up in
+            // profiles); the id set is a reusable scratch with the fast
+            // id hasher, so this allocates nothing after warm-up.
+            let removed = decision.started.len() + decision.rejected.len();
+            if removed > 0 {
+                if removed == self.queue.len() {
+                    self.queue.clear();
+                } else {
+                    self.retain_scratch.clear();
+                    self.retain_scratch.extend(decision.started.iter().map(|(id, _)| *id));
+                    self.retain_scratch.extend(decision.rejected.iter().copied());
+                    let remove = &self.retain_scratch;
+                    self.queue.retain(|q| !remove.contains(q));
+                }
+            }
 
-            // --- drain every event at `now`: one timestamp = one point ---
-            // (reused buffers: emptied and returned at the end of the point)
-            let mut completed = std::mem::take(&mut self.completed_buf);
-            let mut submitted = std::mem::take(&mut self.submitted_buf);
-            let mut addon_due = false;
-            let mut mem_due = false;
+            if self.events.next_time() != Some(now) {
+                break;
+            }
+            // Events materialized at the current timestamp (zero-duration
+            // completions): drain, retire, and dispatch again.
+            let mut done_now = std::mem::take(&mut self.done_now_buf);
             while let Some(ev) = self.events.pop_at(now) {
                 match ev.payload {
-                    EventPayload::Complete(id) => completed.push(id),
+                    EventPayload::Complete(id) => done_now.push(id),
                     EventPayload::Submit(job) => {
+                        // defensive: an unsorted source clamped to `now`
                         self.pending_submits -= 1;
-                        submitted.push(job);
+                        self.submit_job(now, job);
                     }
                     EventPayload::AddonWake(i) => {
-                        // A wake is fresh only while it matches the timer
-                        // currently scheduled for its addon; reschedules
-                        // leave stale heap entries behind, ignored here.
-                        // A timer planted while jobs were active can also
-                        // outlive the workload: once no job work and no
-                        // queued jobs remain it cannot matter any more, so
-                        // it is dropped — this keeps e.g. a power model
-                        // from sweeping its integral across the idle tail
-                        // to a far-future repair time. (Completions popping
-                        // first at equal timestamps means `starts` still
-                        // counts jobs finishing right now.)
+                        // already updated at `now`; just clear the timer
                         if self.addon_wake.get(i) == Some(&Some(now)) {
                             self.addon_wake[i] = None;
-                            if self.has_job_work() || !self.queue.is_empty() {
-                                addon_due = true;
-                                out.addon_wakes += 1;
-                            }
                         }
                     }
                     EventPayload::MemSample => {
                         mem_due = true;
-                        mem_armed = false;
+                        self.mem_armed = false;
                     }
                 }
             }
-            let job_event = !completed.is_empty() || !submitted.is_empty();
-
-            // --- completions at `now` (release before submit/dispatch) ---
-            self.complete_jobs(now, &completed, &mut out)?;
-            completed.clear();
-            self.completed_buf = completed;
-
-            // --- submissions at `now` ---
-            for job in submitted.drain(..) {
-                self.submit_job(job, &mut first_submit, &mut out);
-            }
-            self.submitted_buf = submitted;
-
-            if !job_event && !addon_due {
-                // Observation-only timestamp (memory sample or stale wake):
-                // sample and move on without a dispatch cycle or perf
-                // record, so results don't depend on the probe cadence.
-                if mem_due {
-                    mem.sample();
-                    if self.opts.mem_sample_secs > 0 && self.has_job_work() {
-                        self.events
-                            .push(now + self.opts.mem_sample_secs, EventPayload::MemSample);
-                        mem_armed = true;
-                    }
-                }
-                continue;
-            }
-
-            // --- additional data (before the dispatcher sees the view) ---
-            let mut addons = std::mem::take(&mut self.opts.addons);
-            for addon in addons.iter_mut() {
-                for action in
-                    addon.update(now, &self.rm, self.queue.len(), self.starts.len())
-                {
-                    match action {
-                        AddonAction::Publish(k, v) => {
-                            self.extra.insert(k, v);
-                        }
-                        AddonAction::DisableNode(n) => {
-                            // Acknowledged: busy nodes refuse to go down and
-                            // the provider learns it immediately instead of
-                            // the request being silently dropped.
-                            let down = self.rm.set_node_down(n as usize);
-                            addon.acknowledge(&AddonAck::NodeDown { node: n, down });
-                        }
-                        AddonAction::EnableNode(n) => {
-                            self.rm.set_node_up(n as usize);
-                        }
-                    }
-                }
-            }
-
-            out.max_queue = out.max_queue.max(self.queue.len());
-            let queue_len = self.queue.len() as u32;
-
-            // --- dispatch ---
-            // Re-dispatch while zero-duration jobs complete within this very
-            // timestamp, so one timestamp stays one time point (and perf
-            // timestamps stay strictly increasing) while freed capacity is
-            // still offered to the remaining queue.
-            let mut started_this_point = 0u32;
-            let mut dispatch_ns = 0u64;
-            loop {
-                let t_disp0 = timing.then(Instant::now);
-                let decision = {
-                    // view buffers are recycled across cycles (ViewScratch):
-                    // no per-cycle allocation once capacities warm up
-                    let (mut queue_jobs, mut running) = views.take();
-                    queue_jobs.extend(self.queue.iter().map(|id| &self.jobs[id]));
-                    running.extend(
-                        self.starts
-                            .iter()
-                            .map(|(id, &start)| RunningInfo { job: &self.jobs[id], start }),
-                    );
-                    let view =
-                        SystemView { now, queue: queue_jobs, running, extra: &self.extra };
-                    let decision = self.dispatcher.dispatch(&view, &mut self.rm);
-                    views.put(view.queue, view.running);
-                    decision
-                };
-                if let Some(t0) = t_disp0 {
-                    dispatch_ns += t0.elapsed().as_nanos() as u64;
-                }
-
-                // --- apply decision ---
-                for (id, _alloc) in &decision.started {
-                    let job = &self.jobs[id];
-                    let completion = job.completion_at(now);
-                    self.starts.insert(*id, now);
-                    self.events.push(completion, EventPayload::Complete(*id));
-                    started_this_point += 1;
-                }
-                for id in &decision.rejected {
-                    self.jobs.remove(id);
-                    out.jobs_rejected += 1;
-                }
-                // Remove started + rejected ids from the queue in one pass
-                // (a per-id retain is O(k·|queue|) and showed up in
-                // profiles); the id set is a reusable scratch with the fast
-                // id hasher, so this allocates nothing after warm-up.
-                let removed = decision.started.len() + decision.rejected.len();
-                if removed > 0 {
-                    if removed == self.queue.len() {
-                        self.queue.clear();
-                    } else {
-                        self.retain_scratch.clear();
-                        self.retain_scratch
-                            .extend(decision.started.iter().map(|(id, _)| *id));
-                        self.retain_scratch.extend(decision.rejected.iter().copied());
-                        let remove = &self.retain_scratch;
-                        self.queue.retain(|q| !remove.contains(q));
-                    }
-                }
-
-                if self.events.next_time() != Some(now) {
-                    break;
-                }
-                // Events materialized at the current timestamp (zero-duration
-                // completions): drain, retire, and dispatch again.
-                let mut done_now = std::mem::take(&mut self.done_now_buf);
-                while let Some(ev) = self.events.pop_at(now) {
-                    match ev.payload {
-                        EventPayload::Complete(id) => done_now.push(id),
-                        EventPayload::Submit(job) => {
-                            // defensive: an unsorted source clamped to `now`
-                            self.pending_submits -= 1;
-                            self.submit_job(job, &mut first_submit, &mut out);
-                        }
-                        EventPayload::AddonWake(i) => {
-                            // already updated at `now`; just clear the timer
-                            if self.addon_wake.get(i) == Some(&Some(now)) {
-                                self.addon_wake[i] = None;
-                            }
-                        }
-                        EventPayload::MemSample => {
-                            mem_due = true;
-                            mem_armed = false;
-                        }
-                    }
-                }
-                self.complete_jobs(now, &done_now, &mut out)?;
-                done_now.clear();
-                self.done_now_buf = done_now;
-            }
-
-            // --- addon wake-ups toward the *next* time point -------------
-            // Scheduled after dispatch so `has_job_work` sees jobs started
-            // at this very point (a power model must keep integrating while
-            // they run). A wake is only planted when it can matter: job work
-            // remains, or the queue is stalled and this provider may restore
-            // capacity (the repair that un-starves the queue).
-            for (i, addon) in addons.iter().enumerate() {
-                if let Some(t) = addon.next_event(now) {
-                    let useful = self.has_job_work()
-                        || (!self.queue.is_empty() && addon.may_restore_capacity());
-                    if t > now && useful && self.addon_wake[i].map_or(true, |s| t < s) {
-                        self.addon_wake[i] = Some(t);
-                        self.events.push(t, EventPayload::AddonWake(i));
-                    }
-                }
-            }
-            self.opts.addons = addons;
-
-            // --- bookkeeping / perf record ---
-            let rss = if mem_due { mem.sample() } else { 0 };
-            // (Re-)seed the probe chain: also revives sampling after a
-            // stall ended (queue waiting on a repair produced no job work,
-            // so the chain went quiet).
-            if self.opts.mem_sample_secs > 0 && !mem_armed && self.has_job_work() {
-                self.events.push(now + self.opts.mem_sample_secs, EventPayload::MemSample);
-                mem_armed = true;
-            }
-            out.time_points += 1;
-            out.dispatch_ns += dispatch_ns;
-            let elapsed = t_other0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
-            let other_total = elapsed.saturating_sub(dispatch_ns);
-            out.other_ns += other_total;
-            debug_assert!(
-                last_point.map_or(true, |p| now > p),
-                "time points must be strictly increasing: {now} after {last_point:?}"
-            );
-            last_point = Some(now);
-            self.opts.output.record_perf(PerfRecord {
-                t: now,
-                dispatch_ns,
-                other_ns: other_total,
-                queue_len,
-                running: self.starts.len() as u32,
-                started: started_this_point,
-                rss_kb: rss,
-            });
+            self.complete_jobs(now, &done_now)?;
+            done_now.clear();
+            self.done_now_buf = done_now;
         }
 
-        // final memory sample so short runs still report something
-        mem.sample();
-        self.opts.output.finish()?;
-        out.first_submit = first_submit.unwrap_or(0);
-        out.makespan = out.last_completion.saturating_sub(out.first_submit);
-        out.wall_s = wall0.elapsed().as_secs_f64();
-        out.cpu_ms = process_cpu_ms().saturating_sub(cpu0);
-        out.avg_rss_kb = mem.avg_kb();
-        out.max_rss_kb = mem.max_kb;
-        out.lines_skipped = self.source.lines_skipped();
-        out.jobs = std::mem::take(&mut self.opts.output.jobs);
-        out.perf = std::mem::take(&mut self.opts.output.perf);
-        out.final_extra = self.extra.clone();
-        Ok(out)
+        // --- addon wake-ups toward the *next* time point -------------
+        // Scheduled after dispatch so `has_job_work` sees jobs started
+        // at this very point (a power model must keep integrating while
+        // they run). A wake is only planted when it can matter: job work
+        // remains, or the queue is stalled and this provider may restore
+        // capacity (the repair that un-starves the queue).
+        for (i, addon) in addons.iter().enumerate() {
+            if let Some(t) = addon.next_event(now) {
+                let useful = self.has_job_work()
+                    || (!self.queue.is_empty() && addon.may_restore_capacity());
+                if t > now && useful && self.addon_wake[i].map_or(true, |s| t < s) {
+                    self.addon_wake[i] = Some(t);
+                    self.events.push(t, EventPayload::AddonWake(i));
+                }
+            }
+        }
+        self.opts.addons = addons;
+
+        // --- bookkeeping / perf record ---
+        let rss = if mem_due { self.mem.sample() } else { 0 };
+        // (Re-)seed the probe chain: also revives sampling after a
+        // stall ended (queue waiting on a repair produced no job work,
+        // so the chain went quiet).
+        if self.opts.mem_sample_secs > 0 && !self.mem_armed && self.has_job_work() {
+            self.events.push(now + self.opts.mem_sample_secs, EventPayload::MemSample);
+            self.mem_armed = true;
+        }
+        self.out.time_points += 1;
+        self.out.dispatch_ns += dispatch_ns;
+        let elapsed = t_other0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+        let other_total = elapsed.saturating_sub(dispatch_ns);
+        self.out.other_ns += other_total;
+        debug_assert!(
+            self.last_point.map_or(true, |p| now > p),
+            "time points must be strictly increasing: {now} after {:?}",
+            self.last_point
+        );
+        self.last_point = Some(now);
+        self.log.push(SimEvent::PointClosed(PerfRecord {
+            t: now,
+            dispatch_ns,
+            other_ns: other_total,
+            queue_len,
+            running: self.starts.len() as u32,
+            started: started_this_point,
+            rss_kb: rss,
+        }));
+        Ok(())
     }
 }
 
@@ -721,6 +931,63 @@ mod tests {
         assert_eq!(r.wait, 0);
         assert!((r.slowdown - 1.0).abs() < 1e-12);
         assert_eq!(out.makespan, 100);
+    }
+
+    #[test]
+    fn step_loop_matches_run() {
+        // Driving the state machine by hand is equivalent to run().
+        let jobs = vec![job(1, 0, 50, 2), job(2, 0, 50, 2), job(3, 60, 10, 1)];
+        let opts = || SimOptions { time_dispatch: false, mem_sample_secs: 0, ..Default::default() };
+        let mut batch = Simulator::from_jobs(jobs.clone(), sys(1, 2), fifo_ff(), opts());
+        let batch_out = batch.run().unwrap();
+
+        let mut stepped = Simulator::from_jobs(jobs, sys(1, 2), fifo_ff(), opts());
+        let mut advanced = Vec::new();
+        loop {
+            match stepped.step().unwrap() {
+                Step::Advanced(t) => advanced.push(t),
+                Step::Idle => panic!("batch source must never be idle"),
+                Step::Done => break,
+            }
+        }
+        // repeated step() after Done stays Done
+        assert_eq!(stepped.step().unwrap(), Step::Done);
+        let out = stepped.finish().unwrap();
+        assert_eq!(advanced.len() as u64, out.time_points);
+        assert_eq!(out.jobs, batch_out.jobs);
+        assert_eq!(out.perf, batch_out.perf);
+        assert_eq!(out.jobs_completed, batch_out.jobs_completed);
+        assert!(stepped.step().is_err(), "step() after finish() must error");
+    }
+
+    #[test]
+    fn streaming_source_feeds_a_live_core() {
+        let (source, handle) = StreamingSource::new();
+        let opts = SimOptions { time_dispatch: false, mem_sample_secs: 0, ..Default::default() };
+        let mut sim = Simulator::with_source(Box::new(source), sys(1, 4), fifo_ff(), opts);
+        // nothing pushed yet: the core idles instead of terminating
+        assert_eq!(sim.step().unwrap(), Step::Idle);
+        handle.push(job(1, 10, 5, 1));
+        assert!(matches!(sim.step().unwrap(), Step::Advanced(10)));
+        assert!(matches!(sim.step().unwrap(), Step::Advanced(15)));
+        assert_eq!(sim.step().unwrap(), Step::Idle);
+        // a job pushed after the sim passed its submit time is clamped
+        // forward, never scheduled into the past
+        handle.push(job(2, 3, 5, 1));
+        let Step::Advanced(t) = sim.step().unwrap() else {
+            panic!("pushed job must advance the clock");
+        };
+        assert!(t > 15);
+        handle.close();
+        loop {
+            match sim.step().unwrap() {
+                Step::Advanced(_) => {}
+                Step::Done => break,
+                Step::Idle => panic!("closed stream must terminate"),
+            }
+        }
+        let out = sim.finish().unwrap();
+        assert_eq!(out.jobs_completed, 2);
     }
 
     #[test]
@@ -959,5 +1226,35 @@ mod tests {
         assert!((out.avg_wait() - 50.0).abs() < 1e-12);
         assert!(out.throughput_per_hour() > 0.0);
         assert_eq!(out.dispatcher, "FIFO-FF");
+    }
+
+    #[test]
+    fn extra_consumer_streams_the_full_transition_history() {
+        let jobs = vec![job(1, 0, 10, 1), job(2, 0, 10, 4)]; // job 2 oversized
+        let opts = SimOptions { time_dispatch: false, mem_sample_secs: 0, ..Default::default() };
+        let mut sim = Simulator::from_jobs(jobs, sys(1, 1), fifo_ff(), opts);
+        let consumer = sim.register_consumer();
+        let mut seen = Vec::new();
+        loop {
+            let done = matches!(sim.step().unwrap(), Step::Done);
+            sim.drain_events(consumer, |ev| {
+                seen.push(ev.clone());
+                Ok(())
+            })
+            .unwrap();
+            if done {
+                break;
+            }
+        }
+        let submitted = seen.iter().filter(|e| matches!(e, SimEvent::Submitted { .. })).count();
+        let started = seen.iter().filter(|e| matches!(e, SimEvent::Started { .. })).count();
+        let rejected = seen.iter().filter(|e| matches!(e, SimEvent::Rejected { .. })).count();
+        let completed = seen.iter().filter(|e| matches!(e, SimEvent::Completed(_))).count();
+        let points = seen.iter().filter(|e| matches!(e, SimEvent::PointClosed(_))).count();
+        assert_eq!(submitted, 1);
+        assert_eq!(started, 1);
+        assert_eq!(rejected, 1, "oversized job must appear as a Rejected transition");
+        assert_eq!(completed, 1);
+        assert!(points >= 2);
     }
 }

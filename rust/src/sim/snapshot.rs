@@ -1,0 +1,744 @@
+//! Versioned snapshot / restore / fork for [`SimCore`] (DESIGN.md §Event
+//! log & replay).
+//!
+//! A snapshot is a self-contained JSON document (format marker
+//! `accasim-snapshot`, version 1) carrying the complete mutable state of a
+//! running core: the live job table, queue order, running starts and their
+//! committed allocations, node-down flags, the shape intern table (in
+//! intern order, so dense ids keep their meaning), the event heap with its
+//! sequence numbers, addon timers and opaque addon state, published
+//! `extra` metrics, the RNG stream position, the accumulated summary
+//! statistics — and the full [`SimEvent`] history, which is why snapshots
+//! require [`SimOptions::retain_log`].
+//!
+//! Restore rebuilds a core from scratch and registers the output collector
+//! as a *fresh* log consumer at index 0: the entire prefix replays into it,
+//! which is what makes a resumed run's `jobs.csv`/`perf.csv` byte-identical
+//! to an uninterrupted one (asserted per dispatcher in
+//! `rust/tests/resume.rs`).
+//!
+//! Every `f64` crossing the format is encoded as its 16-hex-digit IEEE-754
+//! bit pattern ([`crate::util::json::f64_to_hex`]): bit-exactness is the
+//! whole point, and a decimal round-trip through the hand-rolled printer
+//! would lose `-0.0` and NaN payloads.
+
+use super::{EventLog, Phase, SimCore, SimEvent, SimOptions};
+use crate::config::SysConfig;
+use crate::dispatch::Dispatcher;
+use crate::monitor::{process_cpu_ms, MemProbe};
+use crate::output::{JobRecord, PerfRecord};
+use crate::resources::{Allocation, ShapeId};
+use crate::rng::Pcg64;
+use crate::sim::{EventPayload, EventQueue, JobSource};
+use crate::util::json::{f64_from_hex, f64_to_hex, u64_from_hex, u64_to_hex, Json};
+use crate::workload::Job;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Format marker of the first object member.
+const FORMAT: &str = "accasim-snapshot";
+/// Current snapshot format version.
+const VERSION: u64 = 1;
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn hex_f64(v: f64) -> Json {
+    Json::Str(f64_to_hex(v))
+}
+
+fn hex_u64(v: u64) -> Json {
+    Json::Str(u64_to_hex(v))
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow::anyhow!("snapshot: missing field {key:?}"))
+}
+
+fn req_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
+    req(j, key)?
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("snapshot: field {key:?} is not an unsigned integer"))
+}
+
+fn req_bool(j: &Json, key: &str) -> anyhow::Result<bool> {
+    match req(j, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => anyhow::bail!("snapshot: field {key:?} is not a bool"),
+    }
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    req(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("snapshot: field {key:?} is not a string"))
+}
+
+fn req_arr<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a [Json]> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("snapshot: field {key:?} is not an array"))
+}
+
+fn req_hex_f64(j: &Json, key: &str) -> anyhow::Result<f64> {
+    f64_from_hex(req_str(j, key)?)
+}
+
+fn req_hex_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
+    u64_from_hex(req_str(j, key)?)
+}
+
+/// `None` when the key is absent or null.
+fn opt_u64(j: &Json, key: &str) -> anyhow::Result<Option<u64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("snapshot: field {key:?} is not an unsigned integer")),
+    }
+}
+
+fn job_to_json(job: &Job) -> Json {
+    obj(vec![
+        ("id", num(job.id)),
+        ("submit", num(job.submit)),
+        ("duration", num(job.duration)),
+        ("req_time", num(job.req_time)),
+        ("slots", num(job.slots as u64)),
+        ("per_slot", Json::Arr(job.per_slot.iter().map(|&v| num(v)).collect())),
+        ("user", num(job.user as u64)),
+        ("app", num(job.app as u64)),
+        ("status", Json::Num(job.status as f64)),
+        ("shape", job.shape.index().map_or(Json::Null, |i| num(i as u64))),
+    ])
+}
+
+fn job_from_json(j: &Json) -> anyhow::Result<Job> {
+    let per_slot = req_arr(j, "per_slot")?
+        .iter()
+        .map(|v| v.as_u64().ok_or_else(|| anyhow::anyhow!("snapshot: bad per_slot entry")))
+        .collect::<anyhow::Result<Vec<u64>>>()?;
+    let status = req(j, "status")?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("snapshot: job status is not a number"))?;
+    let shape = match opt_u64(j, "shape")? {
+        Some(i) => ShapeId::from_index(i as usize),
+        None => ShapeId::UNSET,
+    };
+    Ok(Job {
+        id: req_u64(j, "id")?,
+        submit: req_u64(j, "submit")?,
+        duration: req_u64(j, "duration")?,
+        req_time: req_u64(j, "req_time")?,
+        slots: req_u64(j, "slots")? as u32,
+        per_slot,
+        user: req_u64(j, "user")? as u32,
+        app: req_u64(j, "app")? as u32,
+        status: status as i32,
+        shape,
+    })
+}
+
+fn job_record_to_json(rec: &JobRecord) -> Json {
+    obj(vec![
+        ("id", num(rec.id)),
+        ("submit", num(rec.submit)),
+        ("start", num(rec.start)),
+        ("end", num(rec.end)),
+        ("slots", num(rec.slots as u64)),
+        ("wait", num(rec.wait)),
+        ("slowdown", hex_f64(rec.slowdown)),
+    ])
+}
+
+fn job_record_from_json(j: &Json) -> anyhow::Result<JobRecord> {
+    Ok(JobRecord {
+        id: req_u64(j, "id")?,
+        submit: req_u64(j, "submit")?,
+        start: req_u64(j, "start")?,
+        end: req_u64(j, "end")?,
+        slots: req_u64(j, "slots")? as u32,
+        wait: req_u64(j, "wait")?,
+        slowdown: req_hex_f64(j, "slowdown")?,
+    })
+}
+
+fn perf_record_to_json(rec: &PerfRecord) -> Json {
+    obj(vec![
+        ("t", num(rec.t)),
+        ("dispatch_ns", num(rec.dispatch_ns)),
+        ("other_ns", num(rec.other_ns)),
+        ("queue_len", num(rec.queue_len as u64)),
+        ("running", num(rec.running as u64)),
+        ("started", num(rec.started as u64)),
+        ("rss_kb", num(rec.rss_kb)),
+    ])
+}
+
+fn perf_record_from_json(j: &Json) -> anyhow::Result<PerfRecord> {
+    Ok(PerfRecord {
+        t: req_u64(j, "t")?,
+        dispatch_ns: req_u64(j, "dispatch_ns")?,
+        other_ns: req_u64(j, "other_ns")?,
+        queue_len: req_u64(j, "queue_len")? as u32,
+        running: req_u64(j, "running")? as u32,
+        started: req_u64(j, "started")? as u32,
+        rss_kb: req_u64(j, "rss_kb")?,
+    })
+}
+
+fn sim_event_to_json(ev: &SimEvent) -> Json {
+    match ev {
+        SimEvent::Submitted { t, id } => {
+            obj(vec![("k", Json::Str("sub".into())), ("t", num(*t)), ("id", num(*id))])
+        }
+        SimEvent::Started { t, id } => {
+            obj(vec![("k", Json::Str("start".into())), ("t", num(*t)), ("id", num(*id))])
+        }
+        SimEvent::Rejected { t, id } => {
+            obj(vec![("k", Json::Str("rej".into())), ("t", num(*t)), ("id", num(*id))])
+        }
+        SimEvent::Completed(rec) => {
+            obj(vec![("k", Json::Str("done".into())), ("rec", job_record_to_json(rec))])
+        }
+        SimEvent::PointClosed(rec) => {
+            obj(vec![("k", Json::Str("point".into())), ("rec", perf_record_to_json(rec))])
+        }
+    }
+}
+
+fn sim_event_from_json(j: &Json) -> anyhow::Result<SimEvent> {
+    Ok(match req_str(j, "k")? {
+        "sub" => SimEvent::Submitted { t: req_u64(j, "t")?, id: req_u64(j, "id")? },
+        "start" => SimEvent::Started { t: req_u64(j, "t")?, id: req_u64(j, "id")? },
+        "rej" => SimEvent::Rejected { t: req_u64(j, "t")?, id: req_u64(j, "id")? },
+        "done" => SimEvent::Completed(job_record_from_json(req(j, "rec")?)?),
+        "point" => SimEvent::PointClosed(perf_record_from_json(req(j, "rec")?)?),
+        other => anyhow::bail!("snapshot: unknown log event kind {other:?}"),
+    })
+}
+
+fn payload_to_json(p: &EventPayload) -> Json {
+    match p {
+        EventPayload::Complete(id) => {
+            obj(vec![("k", Json::Str("complete".into())), ("id", num(*id))])
+        }
+        EventPayload::Submit(job) => {
+            obj(vec![("k", Json::Str("submit".into())), ("job", job_to_json(job))])
+        }
+        EventPayload::AddonWake(i) => {
+            obj(vec![("k", Json::Str("wake".into())), ("i", num(*i as u64))])
+        }
+        EventPayload::MemSample => obj(vec![("k", Json::Str("mem".into()))]),
+    }
+}
+
+fn payload_from_json(j: &Json) -> anyhow::Result<EventPayload> {
+    Ok(match req_str(j, "k")? {
+        "complete" => EventPayload::Complete(req_u64(j, "id")?),
+        "submit" => EventPayload::Submit(job_from_json(req(j, "job")?)?),
+        "wake" => EventPayload::AddonWake(req_u64(j, "i")? as usize),
+        "mem" => EventPayload::MemSample,
+        other => anyhow::bail!("snapshot: unknown event payload kind {other:?}"),
+    })
+}
+
+impl SimCore {
+    /// Serialize the complete running state as a versioned JSON document.
+    ///
+    /// Requires a started, unfinished core whose log retains the full
+    /// history from the beginning of the run ([`SimOptions::retain_log`]):
+    /// the history travels inside the snapshot so a restore can replay it
+    /// into fresh output consumers.
+    pub fn snapshot(&self) -> anyhow::Result<String> {
+        anyhow::ensure!(
+            matches!(self.phase, Phase::Running),
+            "snapshot() needs a started, unfinished core (call it between step()s)"
+        );
+        anyhow::ensure!(
+            self.log.retains_all() && self.log.base() == 0,
+            "snapshot() requires SimOptions::retain_log from the start of the run"
+        );
+
+        let jobs: Vec<Json> = {
+            let mut ids: Vec<u64> = self.jobs.keys().copied().collect();
+            ids.sort_unstable();
+            ids.iter().map(|id| job_to_json(&self.jobs[id])).collect()
+        };
+        let queue: Vec<Json> = self.queue.iter().map(|&id| num(id)).collect();
+        let starts: Vec<Json> = {
+            let mut pairs: Vec<(u64, u64)> = self.starts.iter().map(|(&id, &s)| (id, s)).collect();
+            pairs.sort_unstable();
+            pairs
+                .into_iter()
+                .map(|(id, s)| obj(vec![("id", num(id)), ("start", num(s))]))
+                .collect()
+        };
+        let allocs: Vec<Json> = {
+            let mut ids: Vec<u64> = self.starts.iter().map(|(&id, _)| id).collect();
+            ids.sort_unstable();
+            ids.iter()
+                .map(|&id| {
+                    let alloc = self
+                        .rm
+                        .allocation_of(id)
+                        .ok_or_else(|| anyhow::anyhow!("running job {id} has no allocation"))?;
+                    let slices = alloc
+                        .slices
+                        .iter()
+                        .map(|&(node, slots)| {
+                            Json::Arr(vec![num(node as u64), num(slots as u64)])
+                        })
+                        .collect();
+                    Ok(obj(vec![("id", num(id)), ("slices", Json::Arr(slices))]))
+                })
+                .collect::<anyhow::Result<_>>()?
+        };
+        let down: Vec<Json> = (0..self.rm.num_nodes())
+            .filter(|&n| self.rm.is_node_down(n))
+            .map(|n| num(n as u64))
+            .collect();
+        let shapes: Vec<Json> = (0..self.rm.shape_count())
+            .map(|i| {
+                let v = self.rm.shape_vector(i).expect("dense shape index");
+                Json::Arr(v.iter().map(|&x| num(x)).collect())
+            })
+            .collect();
+        let (entries, next_seq) = self.events.snapshot_entries();
+        let heap: Vec<Json> = entries
+            .iter()
+            .map(|(t, s, p)| obj(vec![("t", num(*t)), ("s", num(*s)), ("p", payload_to_json(p))]))
+            .collect();
+        let wakes: Vec<Json> =
+            self.addon_wake.iter().map(|w| w.map_or(Json::Null, num)).collect();
+        let addons: Vec<Json> = self
+            .opts
+            .addons
+            .iter()
+            .map(|a| {
+                obj(vec![("name", Json::Str(a.name().to_string())), ("state", a.snapshot_state())])
+            })
+            .collect();
+        let extra = Json::Obj(
+            self.extra.iter().map(|(k, &v)| (k.clone(), hex_f64(v))).collect::<BTreeMap<_, _>>(),
+        );
+        let (rng_state, rng_inc) = self.rng.parts();
+        let log: Vec<Json> = self.log.retained().iter().map(sim_event_to_json).collect();
+
+        let doc = obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            ("version", num(VERSION)),
+            ("dispatcher", Json::Str(self.dispatcher.label())),
+            ("seed", hex_u64(self.opts.seed)),
+            (
+                "sim",
+                obj(vec![
+                    ("pending_submits", num(self.pending_submits as u64)),
+                    ("pending_max", num(self.pending_max)),
+                    ("source_done", Json::Bool(self.source_done)),
+                    ("source_consumed", num(self.source_consumed)),
+                    ("first_submit", self.first_submit.map_or(Json::Null, num)),
+                    ("last_point", self.last_point.map_or(Json::Null, num)),
+                    ("mem_armed", Json::Bool(self.mem_armed)),
+                    ("next_seq", num(next_seq)),
+                ]),
+            ),
+            (
+                "out",
+                obj(vec![
+                    ("jobs_completed", num(self.out.jobs_completed)),
+                    ("jobs_rejected", num(self.out.jobs_rejected)),
+                    ("last_completion", num(self.out.last_completion)),
+                    ("time_points", num(self.out.time_points)),
+                    ("addon_wakes", num(self.out.addon_wakes)),
+                    ("max_queue", num(self.out.max_queue as u64)),
+                    ("dispatch_ns", num(self.out.dispatch_ns)),
+                    ("other_ns", num(self.out.other_ns)),
+                    ("slowdown_sum", hex_f64(self.out.slowdown_sum)),
+                    ("wait_sum", num(self.out.wait_sum)),
+                ]),
+            ),
+            ("jobs", Json::Arr(jobs)),
+            ("queue", Json::Arr(queue)),
+            ("starts", Json::Arr(starts)),
+            ("allocs", Json::Arr(allocs)),
+            ("down", Json::Arr(down)),
+            ("shapes", Json::Arr(shapes)),
+            ("heap", Json::Arr(heap)),
+            ("addon_wake", Json::Arr(wakes)),
+            ("addons", Json::Arr(addons)),
+            ("extra", extra),
+            ("rng", obj(vec![("state", hex_u64(rng_state)), ("inc", hex_u64(rng_inc))])),
+            ("log", Json::Arr(log)),
+        ]);
+        Ok(doc.to_string_pretty())
+    }
+
+    /// Rebuild a running core from a [`SimCore::snapshot`] document.
+    ///
+    /// `source` must replay the original workload from its beginning — the
+    /// snapshot's consumed-job count fast-forwards it past everything
+    /// already loaded. `sys`, `dispatcher` and `opts` are *not* serialized:
+    /// pass the originals to resume, or deliberately different ones to
+    /// explore a divergent future from the same prefix (see
+    /// [`SimCore::fork`]). The restored collector replays the full event
+    /// history, so its files/records are byte-identical to an uninterrupted
+    /// run's up to this point.
+    pub fn restore(
+        text: &str,
+        source: Box<dyn JobSource>,
+        sys: SysConfig,
+        dispatcher: Dispatcher,
+        opts: SimOptions,
+    ) -> anyhow::Result<SimCore> {
+        let doc = Json::parse(text)?;
+        anyhow::ensure!(
+            doc.get("format").and_then(|f| f.as_str()) == Some(FORMAT),
+            "not an {FORMAT} document"
+        );
+        let version = req_u64(&doc, "version")?;
+        anyhow::ensure!(version == VERSION, "unsupported snapshot version {version}");
+
+        let mut core = SimCore::with_source(source, sys, dispatcher, opts);
+
+        // --- fast-forward the fresh source past the consumed prefix ---
+        let sim = req(&doc, "sim")?;
+        let consumed = req_u64(sim, "source_consumed")?;
+        for i in 0..consumed {
+            anyhow::ensure!(
+                core.source.next_job().is_some(),
+                "source ended after {i} jobs; the snapshot consumed {consumed} — \
+                 restore needs the original workload from its beginning"
+            );
+        }
+        core.source_consumed = consumed;
+        core.pending_submits = req_u64(sim, "pending_submits")? as usize;
+        core.pending_max = req_u64(sim, "pending_max")?;
+        core.source_done = req_bool(sim, "source_done")?;
+        core.first_submit = opt_u64(sim, "first_submit")?;
+        core.last_point = opt_u64(sim, "last_point")?;
+        core.mem_armed = req_bool(sim, "mem_armed")?;
+
+        // --- shape table, in intern order (dense ids keep their meaning) ---
+        for (i, shape) in req_arr(&doc, "shapes")?.iter().enumerate() {
+            let v = shape
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("snapshot: shape {i} is not an array"))?
+                .iter()
+                .map(|x| x.as_u64().ok_or_else(|| anyhow::anyhow!("snapshot: bad shape entry")))
+                .collect::<anyhow::Result<Vec<u64>>>()?;
+            let id = core.rm.intern_shape(&v);
+            anyhow::ensure!(
+                id.index() == Some(i),
+                "snapshot: shape {i} re-interned at a different index"
+            );
+        }
+
+        // --- node-down flags (before allocations; down nodes are idle) ---
+        for n in req_arr(&doc, "down")? {
+            let n = n.as_u64().ok_or_else(|| anyhow::anyhow!("snapshot: bad down entry"))? as usize;
+            anyhow::ensure!(core.rm.set_node_down(n), "snapshot: cannot re-mark node {n} down");
+        }
+
+        // --- live jobs, queue order, starts ---
+        for j in req_arr(&doc, "jobs")? {
+            let job = job_from_json(j)?;
+            core.jobs.insert(job.id, job);
+        }
+        for id in req_arr(&doc, "queue")? {
+            let id = id.as_u64().ok_or_else(|| anyhow::anyhow!("snapshot: bad queue entry"))?;
+            anyhow::ensure!(core.jobs.contains_key(&id), "snapshot: queued job {id} missing");
+            core.queue.push_back(id);
+        }
+        for s in req_arr(&doc, "starts")? {
+            let id = req_u64(s, "id")?;
+            anyhow::ensure!(core.jobs.contains_key(&id), "snapshot: running job {id} missing");
+            core.starts.insert(id, req_u64(s, "start")?);
+        }
+
+        // --- re-commit allocations of running jobs ---
+        for a in req_arr(&doc, "allocs")? {
+            let id = req_u64(a, "id")?;
+            let slices = req_arr(a, "slices")?
+                .iter()
+                .map(|s| {
+                    let pair = s.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                        anyhow::anyhow!("snapshot: allocation slice is not a [node, slots] pair")
+                    })?;
+                    let node = pair[0]
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("snapshot: bad slice node"))?;
+                    let slots = pair[1]
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("snapshot: bad slice slots"))?;
+                    Ok((node as u32, slots as u32))
+                })
+                .collect::<anyhow::Result<Vec<(u32, u32)>>>()?;
+            let job = core
+                .jobs
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("snapshot: allocated job {id} missing"))?;
+            core.rm.allocate(job, Allocation { slices })?;
+        }
+
+        // --- event heap with original sequence numbers ---
+        let mut entries = Vec::new();
+        for e in req_arr(&doc, "heap")? {
+            entries.push((req_u64(e, "t")?, req_u64(e, "s")?, payload_from_json(req(e, "p")?)?));
+        }
+        core.events = EventQueue::from_snapshot_entries(entries, req_u64(sim, "next_seq")?);
+
+        // --- addon timers and opaque addon state, matched by name ---
+        let mut wakes: Vec<Option<u64>> = Vec::new();
+        for w in req_arr(&doc, "addon_wake")? {
+            wakes.push(match w {
+                Json::Null => None,
+                v => Some(
+                    v.as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("snapshot: bad addon_wake entry"))?,
+                ),
+            });
+        }
+        // A fork may add or drop providers: timers beyond the new addon
+        // list are truncated (their stale heap wakes fail the freshness
+        // check and are ignored); new providers start with no timer and
+        // fresh state.
+        wakes.resize(core.opts.addons.len(), None);
+        core.addon_wake = wakes;
+        let mut restored = vec![false; core.opts.addons.len()];
+        for a in req_arr(&doc, "addons")? {
+            let name = req_str(a, "name")?;
+            let state = req(a, "state")?;
+            if let Some((i, addon)) = core
+                .opts
+                .addons
+                .iter_mut()
+                .enumerate()
+                .find(|(i, a)| !restored[*i] && a.name() == name)
+            {
+                addon.restore_state(state)?;
+                restored[i] = true;
+            }
+        }
+
+        // --- published metrics and the RNG stream position ---
+        if let Some(extra) = req(&doc, "extra")?.as_obj() {
+            for (k, v) in extra {
+                let bits = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("snapshot: extra {k:?} is not hex"))?;
+                core.extra.insert(k.clone(), f64_from_hex(bits)?);
+            }
+        } else {
+            anyhow::bail!("snapshot: extra is not an object");
+        }
+        let rng = req(&doc, "rng")?;
+        core.rng = Pcg64::from_parts(req_hex_u64(rng, "state")?, req_hex_u64(rng, "inc")?);
+
+        // --- accumulated summary ---
+        let out = req(&doc, "out")?;
+        core.out.dispatcher = core.dispatcher.label();
+        core.out.seed = req_hex_u64(&doc, "seed")?;
+        core.out.jobs_completed = req_u64(out, "jobs_completed")?;
+        core.out.jobs_rejected = req_u64(out, "jobs_rejected")?;
+        core.out.last_completion = req_u64(out, "last_completion")?;
+        core.out.time_points = req_u64(out, "time_points")?;
+        core.out.addon_wakes = req_u64(out, "addon_wakes")?;
+        core.out.max_queue = req_u64(out, "max_queue")? as usize;
+        core.out.dispatch_ns = req_u64(out, "dispatch_ns")?;
+        core.out.other_ns = req_u64(out, "other_ns")?;
+        core.out.slowdown_sum = req_hex_f64(out, "slowdown_sum")?;
+        core.out.wait_sum = req_u64(out, "wait_sum")?;
+
+        // --- the transition history: fresh consumers replay the prefix ---
+        let events = req_arr(&doc, "log")?
+            .iter()
+            .map(sim_event_from_json)
+            .collect::<anyhow::Result<Vec<SimEvent>>>()?;
+        let retain = core.opts.retain_log;
+        core.log = EventLog::from_events(events, retain);
+        core.out_consumer = Some(core.log.register_consumer());
+
+        core.wall0 = Some(Instant::now());
+        core.cpu0 = process_cpu_ms();
+        core.mem = MemProbe::new();
+        core.phase = Phase::Running;
+        Ok(core)
+    }
+
+    /// Checkpoint this core and build an independent sibling from the same
+    /// prefix: the fork shares the entire history up to now and then
+    /// evolves on its own — with the same scenario for a resumed twin, or a
+    /// different dispatcher/addon set to explore a divergent future.
+    /// Requires [`SimOptions::retain_log`] (see [`SimCore::snapshot`]).
+    pub fn fork(
+        &self,
+        source: Box<dyn JobSource>,
+        sys: SysConfig,
+        dispatcher: Dispatcher,
+        opts: SimOptions,
+    ) -> anyhow::Result<SimCore> {
+        let snap = self.snapshot()?;
+        Self::restore(&snap, source, sys, dispatcher, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::{Dispatcher, FifoScheduler, FirstFit};
+    use crate::sim::{MemorySource, SimOutput, Step};
+
+    fn sys(nodes: u64, cores: u64) -> SysConfig {
+        SysConfig::homogeneous("t", nodes, &[("core", cores)], 0)
+    }
+
+    fn job(id: u64, submit: u64, duration: u64, slots: u32) -> Job {
+        Job {
+            id,
+            submit,
+            duration,
+            req_time: duration.max(1),
+            slots,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+            shape: ShapeId::UNSET,
+        }
+    }
+
+    fn fifo_ff() -> Dispatcher {
+        Dispatcher::new(Box::new(FifoScheduler::new()), Box::new(FirstFit::new()))
+    }
+
+    fn jobs() -> Vec<Job> {
+        vec![
+            job(1, 0, 50, 2),
+            job(2, 0, 50, 2),
+            job(3, 10, 30, 1),
+            job(4, 60, 0, 1),
+            job(5, 200, 10, 4), // oversized on sys(1, 2): rejected
+        ]
+    }
+
+    fn opts() -> SimOptions {
+        SimOptions {
+            time_dispatch: false,
+            mem_sample_secs: 0,
+            retain_log: true,
+            ..Default::default()
+        }
+    }
+
+    fn run_uninterrupted() -> SimOutput {
+        let mut sim = SimCore::from_jobs(jobs(), sys(1, 2), fifo_ff(), opts());
+        sim.run().unwrap()
+    }
+
+    #[test]
+    fn restore_after_every_prefix_reproduces_the_run() {
+        let reference = run_uninterrupted();
+        // Snapshot after k steps for every possible k, restore, run the
+        // remainder, and demand identical records each time.
+        for k in 0..10 {
+            let mut sim = SimCore::from_jobs(jobs(), sys(1, 2), fifo_ff(), opts());
+            let mut done = false;
+            for _ in 0..k {
+                if matches!(sim.step().unwrap(), Step::Done) {
+                    done = true;
+                    break;
+                }
+            }
+            if done {
+                break;
+            }
+            if k == 0 {
+                // a Fresh core cannot snapshot; step once to start it
+                assert!(sim.snapshot().is_err());
+                continue;
+            }
+            let snap = sim.snapshot().unwrap();
+            let mut resumed = SimCore::restore(
+                &snap,
+                Box::new(MemorySource::new(jobs())),
+                sys(1, 2),
+                fifo_ff(),
+                opts(),
+            )
+            .unwrap();
+            let out = resumed.run().unwrap();
+            assert_eq!(out.jobs, reference.jobs, "jobs diverge after {k} steps");
+            assert_eq!(out.perf, reference.perf, "perf diverges after {k} steps");
+            assert_eq!(out.jobs_completed, reference.jobs_completed);
+            assert_eq!(out.jobs_rejected, reference.jobs_rejected);
+            assert_eq!(out.time_points, reference.time_points);
+            assert_eq!(out.max_queue, reference.max_queue);
+            assert!((out.avg_slowdown() - reference.avg_slowdown()).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_its_own_text() {
+        // snapshot(restore(snapshot(s))) == snapshot(s): the format loses
+        // nothing that the format itself records.
+        let mut sim = SimCore::from_jobs(jobs(), sys(1, 2), fifo_ff(), opts());
+        sim.step().unwrap();
+        sim.step().unwrap();
+        let snap = sim.snapshot().unwrap();
+        let restored = SimCore::restore(
+            &snap,
+            Box::new(MemorySource::new(jobs())),
+            sys(1, 2),
+            fifo_ff(),
+            opts(),
+        )
+        .unwrap();
+        assert_eq!(restored.snapshot().unwrap(), snap);
+    }
+
+    #[test]
+    fn fork_explores_a_divergent_future_without_disturbing_the_parent() {
+        let mut parent = SimCore::from_jobs(jobs(), sys(1, 2), fifo_ff(), opts());
+        parent.step().unwrap();
+        let mut twin = parent
+            .fork(Box::new(MemorySource::new(jobs())), sys(1, 2), fifo_ff(), opts())
+            .unwrap();
+        let twin_out = twin.run().unwrap();
+        let parent_out = parent.run().unwrap();
+        assert_eq!(twin_out.jobs, parent_out.jobs, "same scenario ⇒ same records");
+        assert_eq!(twin_out.perf, parent_out.perf);
+    }
+
+    #[test]
+    fn restore_rejects_foreign_and_future_documents() {
+        let err = |text: &str| {
+            SimCore::restore(
+                text,
+                Box::new(MemorySource::new(Vec::new())),
+                sys(1, 1),
+                fifo_ff(),
+                SimOptions::default(),
+            )
+            .unwrap_err()
+            .to_string()
+        };
+        assert!(err("{}").contains("accasim-snapshot"));
+        assert!(err(r#"{"format": "accasim-snapshot", "version": 999}"#).contains("version"));
+    }
+
+    #[test]
+    fn snapshot_requires_the_retained_log() {
+        let no_log = SimOptions { retain_log: false, ..opts() };
+        let mut sim = SimCore::from_jobs(jobs(), sys(1, 2), fifo_ff(), no_log);
+        sim.step().unwrap();
+        let err = sim.snapshot().unwrap_err().to_string();
+        assert!(err.contains("retain_log"), "got: {err}");
+    }
+}

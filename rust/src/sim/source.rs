@@ -2,10 +2,14 @@
 //!
 //! [`SwfSource`] streams an SWF file through the [`JobFactory`]
 //! (incremental loading); [`MemorySource`] serves a pre-built job list
-//! (tests, baselines, generated workloads).
+//! (tests, baselines, generated workloads); [`StreamingSource`] accepts
+//! jobs pushed from outside *while the simulation runs* (live services,
+//! interactive studies) through a [`StreamHandle`].
 
 use crate::config::SysConfig;
 use crate::workload::{FactoryConfig, Job, JobFactory, Reader, SwfReader};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
 
 /// Abstract job source consumed by the simulator in submission order.
 ///
@@ -17,6 +21,13 @@ pub trait JobSource: Send {
     /// Malformed records skipped so far (SWF preprocessing).
     fn lines_skipped(&self) -> u64 {
         0
+    }
+    /// Whether a `None` from [`Self::next_job`] is final. Batch sources
+    /// (files, memory lists) are exhausted for good; a streaming source may
+    /// return `None` now and produce more jobs later, so the simulator
+    /// treats its `None` as "idle", not "end of workload".
+    fn exhausted(&self) -> bool {
+        true
     }
 }
 
@@ -66,6 +77,7 @@ pub struct MemorySource {
 }
 
 impl MemorySource {
+    /// Build a source over `jobs`, sorted by `(submit, id)`.
     pub fn new(mut jobs: Vec<Job>) -> Self {
         jobs.sort_by_key(|j| (j.submit, j.id));
         MemorySource { jobs: jobs.into_iter() }
@@ -75,6 +87,66 @@ impl MemorySource {
 impl JobSource for MemorySource {
     fn next_job(&mut self) -> Option<Job> {
         self.jobs.next()
+    }
+}
+
+/// Shared state between a [`StreamingSource`] and its [`StreamHandle`]s.
+#[derive(Debug, Default)]
+struct StreamState {
+    queue: VecDeque<Job>,
+    closed: bool,
+}
+
+/// A job source fed from outside the simulator while it runs.
+///
+/// The streaming half of the resumable core (DESIGN.md §Event log &
+/// replay): a long-lived [`super::SimCore`] can be driven with `step()`
+/// while a service pushes newly submitted jobs through the handle. The
+/// source reports [`JobSource::exhausted`] only once the handle is closed
+/// *and* the buffer has drained, so the simulator keeps polling instead of
+/// declaring end-of-workload at the first empty read.
+#[derive(Debug)]
+pub struct StreamingSource {
+    state: Arc<Mutex<StreamState>>,
+}
+
+/// Producer handle for a [`StreamingSource`]; clone freely across threads.
+#[derive(Debug, Clone)]
+pub struct StreamHandle {
+    state: Arc<Mutex<StreamState>>,
+}
+
+impl StreamingSource {
+    /// Create a connected `(source, handle)` pair.
+    pub fn new() -> (StreamingSource, StreamHandle) {
+        let state = Arc::new(Mutex::new(StreamState::default()));
+        (StreamingSource { state: state.clone() }, StreamHandle { state })
+    }
+}
+
+impl StreamHandle {
+    /// Enqueue a job for the simulator. Jobs should be pushed in submission
+    /// order; a late job is clamped to the simulator's current time on
+    /// arrival (the event manager never schedules into the past).
+    pub fn push(&self, job: Job) {
+        self.state.lock().expect("stream lock").queue.push_back(job);
+    }
+
+    /// Close the stream: once the buffer drains, the source is exhausted
+    /// and the simulation can terminate.
+    pub fn close(&self) {
+        self.state.lock().expect("stream lock").closed = true;
+    }
+}
+
+impl JobSource for StreamingSource {
+    fn next_job(&mut self) -> Option<Job> {
+        self.state.lock().expect("stream lock").queue.pop_front()
+    }
+
+    fn exhausted(&self) -> bool {
+        let st = self.state.lock().expect("stream lock");
+        st.closed && st.queue.is_empty()
     }
 }
 
@@ -102,6 +174,34 @@ mod tests {
         let mut s = MemorySource::new(vec![mk(1, 50), mk(2, 10), mk(3, 30)]);
         let order: Vec<u64> = std::iter::from_fn(|| s.next_job()).map(|j| j.id).collect();
         assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn streaming_source_drains_then_reports_idle_not_exhausted() {
+        let mk = |id, submit| Job {
+            id,
+            submit,
+            duration: 1,
+            req_time: 1,
+            slots: 1,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+            shape: crate::resources::ShapeId::UNSET,
+        };
+        let (mut src, handle) = StreamingSource::new();
+        assert!(src.next_job().is_none());
+        assert!(!src.exhausted(), "open stream is idle, not exhausted");
+        handle.push(mk(1, 10));
+        handle.push(mk(2, 20));
+        assert_eq!(src.next_job().unwrap().id, 1);
+        assert!(!src.exhausted());
+        handle.close();
+        assert!(!src.exhausted(), "buffered job still pending");
+        assert_eq!(src.next_job().unwrap().id, 2);
+        assert!(src.next_job().is_none());
+        assert!(src.exhausted(), "closed + drained = exhausted");
     }
 
     #[test]

@@ -136,6 +136,35 @@ impl Json {
     }
 }
 
+/// Encode an `f64` as its exact bit pattern, 16 lowercase hex digits.
+///
+/// Snapshot files (DESIGN.md §Event log & replay) must round-trip floats
+/// *bit-exactly* — including `-0.0`, subnormals and values whose shortest
+/// decimal form would re-parse to a neighbouring bit pattern — so they store
+/// every float through this encoding rather than as a JSON number.
+pub fn f64_to_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Decode an [`f64_to_hex`] string back to the exact `f64`.
+pub fn f64_from_hex(s: &str) -> anyhow::Result<f64> {
+    anyhow::ensure!(s.len() == 16, "expected 16 hex digits, got {:?}", s);
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|e| anyhow::anyhow!("bad f64 hex {s:?}: {e}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Encode a `u64` as 16 lowercase hex digits (snapshot format; matches the
+/// campaign store's `run_seed` convention).
+pub fn u64_to_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Decode a [`u64_to_hex`] string.
+pub fn u64_from_hex(s: &str) -> anyhow::Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|e| anyhow::anyhow!("bad u64 hex {s:?}: {e}"))
+}
+
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(n) = indent {
         out.push('\n');
@@ -418,6 +447,28 @@ mod tests {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
         assert_eq!(Json::parse("[]").unwrap().to_string_compact(), "[]");
         assert_eq!(Json::parse("{}").unwrap().to_string_pretty(), "{}");
+    }
+
+    #[test]
+    fn f64_hex_roundtrips_bit_exactly() {
+        for v in [0.0, -0.0, 1.5, -2.75e-300, f64::MIN_POSITIVE, f64::INFINITY, 280.0] {
+            let hex = f64_to_hex(v);
+            assert_eq!(hex.len(), 16);
+            let back = f64_from_hex(&hex).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "bits must survive for {v}");
+        }
+        let nan = f64_from_hex(&f64_to_hex(f64::NAN)).unwrap();
+        assert!(nan.is_nan());
+        assert!(f64_from_hex("zz").is_err());
+        assert!(f64_from_hex("0123").is_err());
+    }
+
+    #[test]
+    fn u64_hex_roundtrips() {
+        for v in [0u64, 1, u64::MAX, 0xdead_beef_0102_0304] {
+            assert_eq!(u64_from_hex(&u64_to_hex(v)).unwrap(), v);
+        }
+        assert!(u64_from_hex("not hex").is_err());
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Resumable-core determinism contracts (ISSUE 6 acceptance): for every
+//! shipped dispatcher — and for scenarios with stateful addons (a failure
+//! storm mid-flight, a power-cap schedule integrating energy) — a run that
+//! is snapshotted at a midpoint, dropped, restored from the snapshot text
+//! and played to completion produces `jobs.csv`/`perf.csv` byte-identical
+//! to the same run left uninterrupted. Measured-time perf columns are
+//! switched off (`time_dispatch: false`, `mem_sample_secs: 0`), so the
+//! whole perf CSV — not just the deterministic columns — must match.
+
+use accasim::campaign::{PowerSpec, ScenarioSpec};
+use accasim::config::SysConfig;
+use accasim::dispatch::{dispatcher_from_label, Dispatcher};
+use accasim::output::OutputCollector;
+use accasim::scenario::{Perturbation, WarpedSource};
+use accasim::sim::{JobSource, SimCore, SimOptions, Step, SwfSource};
+use accasim::testutil as tempfile;
+use std::path::Path;
+
+fn read(p: &Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+/// A small SWF with enough variety (durations, widths, a same-time tie)
+/// that every scheduler family makes different decisions on it.
+fn varied_swf(path: &Path, n: u64) {
+    let mut text = String::from("; UnitTime: seconds\n");
+    for i in 1..=n {
+        // two jobs share each submit time so tie-break order matters
+        let submit = (i - 1) / 2 * 300;
+        let duration = 200 + (i % 5) * 400;
+        let slots = 1 + (i % 3);
+        text.push_str(&format!(
+            "{i} {submit} -1 {duration} {slots} -1 -1 {slots} {} -1 1 1 1 1 1 1 -1 -1\n",
+            duration * 2
+        ));
+    }
+    std::fs::write(path, text).unwrap();
+}
+
+/// 2 nodes × 4 cores: small enough that a queue forms and backfilling,
+/// capping and rejection all have something to do.
+fn tiny_sys() -> SysConfig {
+    SysConfig::homogeneous("tiny", 2, &[("core", 4)], 0)
+}
+
+/// Assemble the pieces of one run: deterministic options (no measured
+/// time, no RSS probe), snapshot-grade event log, CSV outputs at `jobs`/
+/// `perf`, scenario compiled against the system and seed.
+fn parts(
+    swf: &Path,
+    label: &str,
+    scenario: Option<&ScenarioSpec>,
+    seed: u64,
+    jobs: &Path,
+    perf: &Path,
+) -> (Box<dyn JobSource>, SysConfig, Dispatcher, SimOptions) {
+    let sys = tiny_sys();
+    let d = dispatcher_from_label(label).unwrap();
+    let mut addons = Vec::new();
+    let mut warps = Vec::new();
+    if let Some(sc) = scenario {
+        let compiled = sc.compile(seed, sys.total_nodes()).unwrap();
+        warps = compiled.warps;
+        addons = compiled.addons;
+    }
+    let output = OutputCollector::in_memory(true, true)
+        .with_job_file(jobs)
+        .unwrap()
+        .with_perf_file(perf)
+        .unwrap();
+    let opts = SimOptions {
+        output,
+        addons,
+        seed,
+        time_dispatch: false,
+        mem_sample_secs: 0,
+        retain_log: true,
+        ..Default::default()
+    };
+    let source = SwfSource::open(swf, &sys, opts.factory.clone()).unwrap();
+    let source = WarpedSource::wrap(Box::new(source), warps);
+    (source, sys, d, opts)
+}
+
+/// The contract itself: reference run vs snapshot-at-`k`-points → restore
+/// → completion, compared byte-for-byte on both CSVs.
+fn assert_resume_byte_identical(
+    dir: &Path,
+    swf: &Path,
+    label: &str,
+    scenario: Option<&ScenarioSpec>,
+    seed: u64,
+    k: u64,
+) {
+    let tag = format!("{label}-{}-{seed}-{k}", scenario.map_or("plain", |s| s.name.as_str()));
+    let ref_jobs = dir.join(format!("{tag}-ref-jobs.csv"));
+    let ref_perf = dir.join(format!("{tag}-ref-perf.csv"));
+    let (source, sys, d, opts) = parts(swf, label, scenario, seed, &ref_jobs, &ref_perf);
+    let mut reference = SimCore::with_source(source, sys, d, opts);
+    let ref_out = reference.run().unwrap();
+
+    // interrupted twin: advance k time points, snapshot, drop
+    let scratch_jobs = dir.join(format!("{tag}-scratch-jobs.csv"));
+    let scratch_perf = dir.join(format!("{tag}-scratch-perf.csv"));
+    let (source, sys, d, opts) = parts(swf, label, scenario, seed, &scratch_jobs, &scratch_perf);
+    let mut interrupted = SimCore::with_source(source, sys, d, opts);
+    for i in 0..k {
+        match interrupted.step().unwrap() {
+            Step::Advanced(_) => {}
+            Step::Idle | Step::Done => panic!("{tag}: run ended after {i} points (k={k})"),
+        }
+    }
+    let snap = interrupted.snapshot().unwrap();
+    drop(interrupted);
+
+    // restore into entirely fresh parts (fresh source from the beginning,
+    // fresh collectors writing fresh files) and play to completion
+    let res_jobs = dir.join(format!("{tag}-res-jobs.csv"));
+    let res_perf = dir.join(format!("{tag}-res-perf.csv"));
+    let (source, sys, d, opts) = parts(swf, label, scenario, seed, &res_jobs, &res_perf);
+    let mut restored = SimCore::restore(&snap, source, sys, d, opts).unwrap();
+    let res_out = restored.run().unwrap();
+
+    assert_eq!(read(&ref_jobs), read(&res_jobs), "{tag}: jobs.csv diverged after restore");
+    assert_eq!(read(&ref_perf), read(&res_perf), "{tag}: perf.csv diverged after restore");
+    assert_eq!(
+        (ref_out.jobs_completed, ref_out.jobs_rejected, ref_out.makespan),
+        (res_out.jobs_completed, res_out.jobs_rejected, res_out.makespan),
+        "{tag}: summary diverged after restore"
+    );
+}
+
+/// Every shipped scheduler, each paired with one of the three allocators
+/// so all allocators are covered too.
+const SCHEDULERS: [&str; 12] = [
+    "FIFO", "SJF", "LJF", "FIFO_RND", "SJF_RND", "LJF_RND", "EBF", "EBF_SJF", "EBF_LJF", "CBF",
+    "PCAP", "REJECT",
+];
+
+#[test]
+fn every_shipped_dispatcher_resumes_byte_identically() {
+    let tmp = tempfile::tempdir().unwrap();
+    let swf = tmp.path().join("w.swf");
+    varied_swf(&swf, 30);
+    let allocators = ["FF", "BF", "WF"];
+    for (i, sched) in SCHEDULERS.iter().enumerate() {
+        let label = format!("{sched}-{}", allocators[i % allocators.len()]);
+        assert_resume_byte_identical(tmp.path(), &swf, &label, None, 7, 5);
+    }
+}
+
+#[test]
+fn failure_storm_scenario_resumes_byte_identically() {
+    // The storm's compiled failure injector carries pending repairs across
+    // the snapshot: nodes down at the midpoint must come back up at the
+    // exact original instant in the restored run.
+    let tmp = tempfile::tempdir().unwrap();
+    let swf = tmp.path().join("w.swf");
+    varied_swf(&swf, 30);
+    let storm = ScenarioSpec::named("storm").with_perturbation(Perturbation::FailureStorm {
+        from: 0,
+        until: 4000,
+        storms: 2,
+        width: 1,
+        repair: 2000,
+    });
+    for k in [3, 9] {
+        assert_resume_byte_identical(tmp.path(), &swf, "FIFO-FF", Some(&storm), 11, k);
+    }
+}
+
+#[test]
+fn power_cap_scenario_resumes_byte_identically() {
+    // The power model integrates energy and the cap schedule steps over
+    // time; both live in addon snapshot state, and PCAP reads the
+    // published cap metric — midpoint restores must not lose a joule.
+    let tmp = tempfile::tempdir().unwrap();
+    let swf = tmp.path().join("w.swf");
+    varied_swf(&swf, 30);
+    let daycap = ScenarioSpec {
+        power: Some(PowerSpec { idle_w: 100.0, max_w: 300.0, cadence: 600 }),
+        ..ScenarioSpec::named("daycap")
+    }
+    .with_perturbation(Perturbation::PowerCap {
+        steps: vec![(0, 100_000.0), (1500, 450.0), (5000, 100_000.0)],
+        watts_per_slot: 50.0,
+    });
+    for k in [4, 10] {
+        assert_resume_byte_identical(tmp.path(), &swf, "PCAP-FF", Some(&daycap), 3, k);
+    }
+}
+
+#[test]
+fn snapshot_text_is_stable_across_a_snapshot_restore_cycle() {
+    // Restoring a snapshot and snapshotting again without stepping must
+    // reproduce the document byte-for-byte — the serialized state is
+    // closed under restore.
+    let tmp = tempfile::tempdir().unwrap();
+    let swf = tmp.path().join("w.swf");
+    varied_swf(&swf, 20);
+    let jobs = tmp.path().join("a-jobs.csv");
+    let perf = tmp.path().join("a-perf.csv");
+    let (source, sys, d, opts) = parts(&swf, "EBF-BF", None, 1, &jobs, &perf);
+    let mut sim = SimCore::with_source(source, sys, d, opts);
+    for _ in 0..6 {
+        assert!(matches!(sim.step().unwrap(), Step::Advanced(_)));
+    }
+    let snap = sim.snapshot().unwrap();
+    let jobs2 = tmp.path().join("b-jobs.csv");
+    let perf2 = tmp.path().join("b-perf.csv");
+    let (source, sys, d, opts) = parts(&swf, "EBF-BF", None, 1, &jobs2, &perf2);
+    let restored = SimCore::restore(&snap, source, sys, d, opts).unwrap();
+    assert_eq!(restored.snapshot().unwrap(), snap);
+}
