@@ -32,6 +32,6 @@ pub mod store;
 
 pub use compare::{CompareOptions, Comparison, Metric};
 pub use matrix::{derive_run_seed, derive_scenario_seed, expand, RunMatrix, RunSpec};
-pub use runner::{Campaign, CampaignReport, CampaignStatus};
+pub use runner::{Campaign, CampaignReport, CampaignStatus, RunProgress};
 pub use spec::{CampaignSpec, PowerSpec, ScenarioSpec, SystemSource, SystemSpec, WorkloadSpec};
 pub use store::{load_index, read_run_output, run_dir, CampaignIndex, RunRecord};

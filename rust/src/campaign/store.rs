@@ -316,6 +316,21 @@ impl RunSink {
     }
 }
 
+/// Write a run's telemetry summary (`telemetry.json`: counters, span
+/// histograms, gauges) into its run directory. Returns `None` without
+/// touching the filesystem when the handle is disabled — absence of the
+/// file is how an unobserved run looks, and the A/B byte-identity tests
+/// rely on it being the *only* store difference telemetry makes.
+pub fn write_telemetry(
+    dir: &Path,
+    tel: &crate::telemetry::Telemetry,
+) -> anyhow::Result<Option<PathBuf>> {
+    let Some(doc) = tel.to_json() else { return Ok(None) };
+    let path = dir.join("telemetry.json");
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(Some(path))
+}
+
 /// Load a run's manifest; `None` when the run never completed (no readable
 /// `run.json`).
 pub fn load_run(dir: &Path) -> Option<RunRecord> {

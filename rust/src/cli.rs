@@ -23,6 +23,7 @@ use accasim::output::OutputCollector;
 use accasim::plotdata::{PlotFactory, PlotKind};
 use accasim::sim::{SimOptions, Simulator};
 use accasim::stats::{mean, stddev};
+use accasim::telemetry::{Telemetry, DEFAULT_STALE_AFTER_SECS};
 use accasim::traces::{self, spec_by_name};
 use accasim::util::args::Args;
 use std::collections::BTreeMap;
@@ -38,8 +39,13 @@ COMMANDS:
            [--out-jobs jobs.csv] [--out-perf perf.csv]
            [--power IDLE_W,MAX_W] [--power-cadence SECS]
            [--fail NODE:FAIL_AT:REPAIR_AT[,...]] [--mem-sample-secs SECS]
-           [--scenario scenario.json] [--seed N]
+           [--scenario scenario.json] [--seed N] [--trace out.json]
            [--checkpoint-every N] [--checkpoint FILE] [--restore FILE]
+           --trace records hot-path spans (dispatch cycles, allocator
+           placements, index syncs, addon wakes) and writes Chrome
+           trace-event JSON — open it in Perfetto (ui.perfetto.dev) or
+           chrome://tracing. Observation-only: simulation outputs are
+           byte-identical with and without it
            --scenario applies a campaign scenario object (power/failures
            sugar + perturbations: arrival_surge, maintenance,
            failure_storm, power_cap; see docs/campaign-spec.md); --seed
@@ -62,8 +68,11 @@ COMMANDS:
            execute a scenario matrix; completed runs are skipped (resume).
            --checkpoint-every N snapshots each in-flight run every N time
            points, so a killed campaign resumes mid-run, not per-run
-  campaign status <spec.json> [--out DIR]
-           show how much of the matrix the results store already holds
+  campaign status <spec.json> [--out DIR] [--stale-after SECS]
+           show matrix progress: done / active (recent worker heartbeat,
+           with per-run simulation progress) / stale (heartbeat older
+           than --stale-after, default 30 — worker likely crashed) /
+           pending
   campaign compare <spec.json> [--out DIR] [--baseline DISPATCHER]
            [--metric slowdown,wait,...] [--resamples 2000] [--alpha 0.05]
            [--html]
@@ -75,16 +84,21 @@ COMMANDS:
   traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
   table1   [--scale 0.05] [--dir data] [--reps 3] [--out results/table1.csv]
   table2   [--scale 0.05] [--dir data] [--reps 1] [--out results/table2.csv]
-  perf-smoke [--nodes 2048] [--jobs 50000] [--dispatcher FIFO-FF]
-           [--seed 1] [--out results/BENCH_6.json]
-           large-system dispatch-hot-path smoke: simulate a synthetic
-           oversubscribed workload and write machine-readable timings
-           (wall_s, dispatch_ns, time_points, max_rss_kb) for the perf
-           trajectory tracked in CI
+  perf-smoke [--nodes 512,2048] [--dispatchers FIFO-FF,SJF-FF]
+           [--jobs 50000] [--seed 1] [--out results/BENCH_7.json]
+           dispatch-hot-path smoke over a nodes × dispatchers sweep:
+           each cell simulates a synthetic oversubscribed workload with
+           telemetry on and records machine-readable timings (wall_s,
+           dispatch_ns, time_points, max_rss_kb) plus a telemetry
+           summary (span percentiles, index counters) for the perf
+           trajectory tracked in CI. --dispatcher LABEL (singular)
+           restricts the sweep to one dispatcher
   bench-check <prev.json> <curr.json> [--max-regress 0.25]
-           compare two perf-smoke outputs: exits non-zero when
-           dispatch_ns_per_point or max_rss_kb regressed by more than
-           the tolerance (a missing prev.json passes — first data point)
+           compare two perf-smoke outputs cell by cell (matched on
+           bench/dispatcher/nodes/jobs/seed): exits non-zero when any
+           cell's dispatch_ns_per_point or max_rss_kb regressed by more
+           than the tolerance. A missing prev.json passes (first data
+           point), and so do unmatched cells (new configurations)
   status   <workload.swf> --sys <cfg.json> [--dispatcher FIFO-FF]
   validate <workload.swf>                  lint a workload dataset
   analyze  <jobs.csv>                      analyze saved job records
@@ -270,7 +284,14 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         "--checkpoint has no effect without --checkpoint-every N"
     );
     let restore_from = args.get_opt("restore");
-    let (sys, d, opts, source) = sim_setup(args, &workload, checkpoint_every > 0)?;
+    let trace_path = args.get_opt("trace");
+    let (sys, d, mut opts, source) = sim_setup(args, &workload, checkpoint_every > 0)?;
+    // --trace enables span collection; the handle is kept so the trace
+    // can be serialized after the run. Observation-only: outputs are
+    // byte-identical either way (asserted in rust/tests/telemetry.rs).
+    let tel =
+        if trace_path.is_some() { Telemetry::with_trace() } else { Telemetry::disabled() };
+    opts.telemetry = tel.clone();
     args.reject_unknown()?;
     // A restored core replays the snapshot's event-log prefix into the
     // fresh output collector above, so jobs.csv/perf.csv come out
@@ -314,6 +335,17 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     if checkpoint_every > 0 {
         println!("checkpoint        : {}", checkpoint.display());
     }
+    if let Some(p) = &trace_path {
+        let json = tel.chrome_trace().expect("--trace enables the tracer");
+        std::fs::write(p, json)?;
+        if let Some(s) = tel.summary() {
+            println!(
+                "trace             : {p} ({} dispatch cycles, p50 {} ns, p99 {} ns; \
+                 {} placements; open in Perfetto)",
+                s.dispatch_count, s.dispatch_p50_ns, s.dispatch_p99_ns, s.place_count
+            );
+        }
+    }
     Ok(())
 }
 
@@ -345,12 +377,16 @@ fn fork_cmd(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `bench-check <prev.json> <curr.json>`: the perf-trajectory gate.
-/// Compares two `perf-smoke` outputs and fails when a tracked metric
-/// (`dispatch_ns_per_point`, `max_rss_kb`) regressed by more than
-/// `--max-regress` (a fraction; 0.25 = 25 %). A missing previous file
-/// passes — the first point of a trajectory has no baseline — and so do
-/// two files from different bench configurations (a stale CI cache after
-/// the bench parameters changed must not fail the build).
+/// Compares two `perf-smoke` outputs cell by cell — cells pair up on the
+/// identity keys (`bench`, `dispatcher`, `nodes`, `jobs`, `seed`) — and
+/// fails when any matched cell's tracked metric (`dispatch_ns_per_point`,
+/// `max_rss_kb`) regressed by more than `--max-regress` (a fraction;
+/// 0.25 = 25 %). A missing previous file passes — the first point of a
+/// trajectory has no baseline — as do unmatched cells (new sweep
+/// configurations, or a stale CI cache after the bench parameters
+/// changed, must not fail the build). A flat pre-sweep document reads as
+/// a single cell, so old baselines stay comparable across the format
+/// change.
 fn bench_check(args: &Args) -> anyhow::Result<()> {
     use accasim::util::json::Json;
     let prev_path = args
@@ -378,37 +414,69 @@ fn bench_check(args: &Args) -> anyhow::Result<()> {
         Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
     };
     let (prev, curr) = (read(&prev_path)?, read(&curr_path)?);
-    for key in ["bench", "dispatcher", "nodes", "jobs", "seed"] {
-        if prev.get(key) != curr.get(key) {
-            println!(
-                "bench-check: {key:?} differs between {prev_path} and {curr_path}; \
-                 configurations are not comparable — treating as a new baseline"
-            );
-            return Ok(());
+    // A sweep document carries its cells in "cells"; a flat (pre-sweep)
+    // document is itself one cell.
+    fn cells(doc: &Json) -> Vec<&Json> {
+        match doc.get("cells").and_then(|c| c.as_arr()) {
+            Some(arr) => arr.iter().collect(),
+            None => vec![doc],
         }
     }
-    let metric = |doc: &Json, p: &str, key: &str| -> anyhow::Result<f64> {
-        doc.get(key)
+    const IDENTITY: [&str; 5] = ["bench", "dispatcher", "nodes", "jobs", "seed"];
+    let label = |c: &Json| -> String {
+        format!(
+            "{}@{}",
+            c.get("dispatcher").and_then(|v| v.as_str()).unwrap_or("?"),
+            c.get("nodes").and_then(|v| v.as_u64()).unwrap_or(0),
+        )
+    };
+    let metric = |cell: &Json, p: &str, key: &str| -> anyhow::Result<f64> {
+        cell.get(key)
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!("{p}: missing numeric {key:?}"))
     };
-    let mut failed = Vec::new();
-    for key in ["dispatch_ns_per_point", "max_rss_kb"] {
-        let (p, c) = (metric(&prev, &prev_path, key)?, metric(&curr, &curr_path, key)?);
-        let ratio = if p > 0.0 {
-            c / p
-        } else if c > 0.0 {
-            f64::INFINITY
-        } else {
-            1.0
+    let prev_cells = cells(&prev);
+    let mut matched = 0usize;
+    let mut failed: Vec<String> = Vec::new();
+    for c in cells(&curr) {
+        let Some(p) =
+            prev_cells.iter().find(|pc| IDENTITY.iter().all(|k| pc.get(k) == c.get(k)))
+        else {
+            println!(
+                "bench-check: no baseline cell for {}; treating as a new configuration",
+                label(c)
+            );
+            continue;
         };
-        let verdict = if ratio > 1.0 + max_regress {
-            failed.push(key);
-            "REGRESSED"
-        } else {
-            "ok"
-        };
-        println!("{key:<22} prev {p:>14.1}  curr {c:>14.1}  ratio {ratio:>6.3}  {verdict}");
+        matched += 1;
+        for key in ["dispatch_ns_per_point", "max_rss_kb"] {
+            let (pv, cv) = (metric(p, &prev_path, key)?, metric(c, &curr_path, key)?);
+            let ratio = if pv > 0.0 {
+                cv / pv
+            } else if cv > 0.0 {
+                f64::INFINITY
+            } else {
+                1.0
+            };
+            let verdict = if ratio > 1.0 + max_regress {
+                failed.push(format!("{} {key}", label(c)));
+                "REGRESSED"
+            } else {
+                "ok"
+            };
+            println!(
+                "{:<16} {key:<22} prev {pv:>14.1}  curr {cv:>14.1}  ratio {ratio:>6.3}  \
+                 {verdict}",
+                label(c)
+            );
+        }
+    }
+    if matched == 0 {
+        println!(
+            "bench-check: no comparable cells between {prev_path} and {curr_path}; \
+             treating as a new baseline"
+        );
+        return Ok(());
     }
     anyhow::ensure!(
         failed.is_empty(),
@@ -416,7 +484,10 @@ fn bench_check(args: &Args) -> anyhow::Result<()> {
         max_regress * 100.0,
         failed.join(", ")
     );
-    println!("bench-check: within {:.0} % tolerance of {prev_path}", max_regress * 100.0);
+    println!(
+        "bench-check: {matched} cell(s) within {:.0} % tolerance of {prev_path}",
+        max_regress * 100.0
+    );
     Ok(())
 }
 
@@ -525,15 +596,31 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
             }
         }
         "status" => {
+            let stale_after: u64 = args.get_parse("stale-after", DEFAULT_STALE_AFTER_SECS)?;
             args.reject_unknown()?;
             let name = spec.name.clone();
-            let st = Campaign::new(spec, &out_dir).status()?;
+            let st = Campaign::new(spec, &out_dir).status_with(stale_after)?;
             println!(
-                "campaign {name}: {}/{} run(s) done, {} pending",
+                "campaign {name}: {}/{} run(s) done, {} active, {} stale, {} pending",
                 st.done,
                 st.total,
+                st.active.len(),
+                st.stale.len(),
                 st.pending.len()
             );
+            for p in &st.active {
+                println!(
+                    "active : {} — sim t={} s, {} point(s), heartbeat {} s ago",
+                    p.run_id, p.sim_time, p.points, p.age_secs
+                );
+            }
+            for p in &st.stale {
+                println!(
+                    "stale  : {} — stuck at sim t={} s after {} point(s), last heartbeat \
+                     {} s ago (threshold {stale_after} s; worker likely crashed)",
+                    p.run_id, p.sim_time, p.points, p.age_secs
+                );
+            }
             for id in st.pending.iter().take(20) {
                 println!("pending: {id}");
             }
@@ -850,27 +937,27 @@ fn perf_smoke_jobs(
         .collect()
 }
 
-/// Perf smoke: one large-system simulation with machine-readable output —
-/// the CI-tracked perf trajectory point (`results/BENCH_6.json`, compared
-/// against the previous run by `bench-check`).
-fn perf_smoke(args: &Args) -> anyhow::Result<()> {
+/// One perf-smoke sweep cell: simulate `jobs` synthetic jobs on a
+/// `nodes`-node system under `dispatcher`, with telemetry enabled, and
+/// return the machine-readable cell object (identity keys + timings +
+/// telemetry summary).
+fn perf_smoke_cell(
+    nodes: u64,
+    jobs: u64,
+    seed: u64,
+    dispatcher: &str,
+) -> anyhow::Result<accasim::util::json::Json> {
     use accasim::util::json::Json;
-    let nodes: u64 = args.get_parse("nodes", 2048)?;
-    let jobs: u64 = args.get_parse("jobs", 50_000)?;
-    let seed: u64 = args.get_parse("seed", 1)?;
-    let dispatcher = args.get("dispatcher", "FIFO-FF");
-    let out_path = PathBuf::from(args.get("out", "results/BENCH_6.json"));
-    args.reject_unknown()?;
-    anyhow::ensure!(nodes > 0 && jobs > 0, "perf-smoke wants positive --nodes/--jobs");
-
     const CORES: u64 = 16;
     let sys = SysConfig::homogeneous("perfsmoke", nodes, &[("core", CORES), ("mem", 65_536)], 0);
     let workload = perf_smoke_jobs(nodes, CORES, jobs, seed);
-    let d = dispatcher_from_label(&dispatcher)?;
+    let d = dispatcher_from_label(dispatcher)?;
+    let tel = Telemetry::enabled();
     let opts = SimOptions {
         output: OutputCollector::null(),
         mem_sample_secs: 300,
         seed,
+        telemetry: tel.clone(),
         ..Default::default()
     };
     let mut sim = Simulator::from_jobs(workload, sys, d, opts);
@@ -901,12 +988,9 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     );
     m.insert("avg_rss_kb".to_string(), Json::Num(o.avg_rss_kb as f64));
     m.insert("max_rss_kb".to_string(), Json::Num(o.max_rss_kb as f64));
-    if let Some(parent) = out_path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
+    if let Some(s) = tel.summary() {
+        m.insert("telemetry".to_string(), s.to_json());
     }
-    std::fs::write(&out_path, Json::Obj(m).to_string_pretty())?;
     println!(
         "perf-smoke {dispatcher}: {} nodes × {} jobs → {} completed in {:.2}s wall \
          (dispatch {:.1} ms over {} points, {:.0} ns/point, peak RSS {} KB)",
@@ -919,6 +1003,55 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
         if o.time_points == 0 { 0.0 } else { o.dispatch_ns as f64 / o.time_points as f64 },
         o.max_rss_kb
     );
+    Ok(Json::Obj(m))
+}
+
+/// Perf smoke: a nodes × dispatchers sweep of large-system simulations
+/// with machine-readable output — the CI-tracked perf trajectory
+/// (`results/BENCH_7.json`, compared cell by cell against the previous run
+/// by `bench-check`). Each cell runs with telemetry enabled and embeds its
+/// span-percentile summary; the dispatch timing gated by `bench-check` is
+/// therefore measured *with* spans on, keeping the observation overhead
+/// itself on the perf trajectory.
+fn perf_smoke(args: &Args) -> anyhow::Result<()> {
+    use accasim::util::json::Json;
+    let nodes_list = args.get("nodes", "512,2048");
+    let jobs: u64 = args.get_parse("jobs", 50_000)?;
+    let seed: u64 = args.get_parse("seed", 1)?;
+    // --dispatcher (singular) narrows the sweep to one dispatcher
+    let dispatchers = match args.get_opt("dispatcher") {
+        Some(one) => one,
+        None => args.get("dispatchers", "FIFO-FF,SJF-FF"),
+    };
+    let out_path = PathBuf::from(args.get("out", "results/BENCH_7.json"));
+    args.reject_unknown()?;
+    let nodes_axis = nodes_list
+        .split(',')
+        .map(|s| s.trim().parse::<u64>().map_err(|e| anyhow::anyhow!("--nodes {s:?}: {e}")))
+        .collect::<anyhow::Result<Vec<u64>>>()?;
+    let disp_axis: Vec<&str> = dispatchers.split(',').map(str::trim).collect();
+    anyhow::ensure!(
+        !nodes_axis.is_empty() && nodes_axis.iter().all(|&n| n > 0) && jobs > 0,
+        "perf-smoke wants positive --nodes and --jobs"
+    );
+
+    let mut cells = Vec::new();
+    for &nodes in &nodes_axis {
+        for dispatcher in &disp_axis {
+            cells.push(perf_smoke_cell(nodes, jobs, seed, dispatcher)?);
+        }
+    }
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perf_smoke_sweep".to_string()));
+    doc.insert("jobs".to_string(), Json::Num(jobs as f64));
+    doc.insert("seed".to_string(), Json::Num(seed as f64));
+    doc.insert("cells".to_string(), Json::Arr(cells));
+    if let Some(parent) = out_path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out_path, Json::Obj(doc).to_string_pretty())?;
     println!("wrote {}", out_path.display());
     Ok(())
 }

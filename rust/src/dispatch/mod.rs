@@ -30,6 +30,7 @@ pub use schedulers::{
 pub use xla_fit::XlaFit;
 
 use crate::resources::{Allocation, ResourceManager};
+use crate::telemetry::{SpanKind, Telemetry};
 use crate::workload::{Job, JobId};
 use std::collections::BTreeMap;
 
@@ -152,17 +153,67 @@ pub trait Allocator {
     }
 }
 
+/// Observation-only wrapper timing every [`Allocator::place`] call as a
+/// [`SpanKind::Place`] span. Everything else — name, round hooks, node
+/// orders, scratch — forwards verbatim to the inner allocator, so
+/// placements and the dispatcher label are identical with or without it.
+struct TimedAllocator {
+    inner: Box<dyn Allocator>,
+    tel: Telemetry,
+}
+
+impl Allocator for TimedAllocator {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn begin_round(&mut self, queue: &[&Job], rm: &ResourceManager) {
+        self.inner.begin_round(queue, rm);
+    }
+
+    fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
+        self.inner.node_order(job, rm, out);
+    }
+
+    fn place_scratch(&mut self) -> &mut Vec<u32> {
+        self.inner.place_scratch()
+    }
+
+    fn place(&mut self, job: &Job, rm: &ResourceManager) -> Option<Allocation> {
+        let t0 = self.tel.start();
+        let placed = self.inner.place(job, rm);
+        self.tel.span(SpanKind::Place, t0, job.slots as u64);
+        placed
+    }
+}
+
 /// A dispatcher: scheduler ∘ allocator, as instantiated in the paper's
 /// Figure 4 (`FirstInFirstOut(FirstFit())`).
 pub struct Dispatcher {
     scheduler: Box<dyn Scheduler>,
     allocator: Box<dyn Allocator>,
+    /// Whether the allocator is already wrapped in a [`TimedAllocator`]
+    /// (instrumenting twice would double-count spans).
+    timed: bool,
 }
 
 impl Dispatcher {
     /// Compose a scheduler with an allocator.
     pub fn new(scheduler: Box<dyn Scheduler>, allocator: Box<dyn Allocator>) -> Self {
-        Dispatcher { scheduler, allocator }
+        Dispatcher { scheduler, allocator, timed: false }
+    }
+
+    /// Time every `Allocator::place` call as a telemetry span. No-op when
+    /// the handle is disabled or the dispatcher is already instrumented;
+    /// decisions are identical either way (observation-only).
+    pub fn instrument(&mut self, tel: &Telemetry) {
+        if !tel.is_enabled() || self.timed {
+            return;
+        }
+        // placeholder allocator for the swap; immediately overwritten
+        let inner = std::mem::replace(&mut self.allocator, Box::new(FirstFit::new()));
+        self.allocator = Box::new(TimedAllocator { inner, tel: tel.clone() });
+        self.timed = true;
     }
 
     /// `"FIFO-FF"`-style label used in tables and plots.
@@ -235,6 +286,37 @@ mod tests {
         assert!(dispatcher_from_label("FIFO").is_err());
         assert!(dispatcher_from_label("XXX-FF").is_err());
         assert!(dispatcher_from_label("FIFO-ZZ").is_err());
+    }
+
+    #[test]
+    fn instrumented_dispatcher_times_places_without_changing_labels() {
+        use crate::config::SysConfig;
+        use crate::resources::ShapeId;
+        let mut rm =
+            ResourceManager::from_config(&SysConfig::homogeneous("t", 2, &[("core", 4)], 0));
+        let mut d = dispatcher_from_label("FIFO-FF").unwrap();
+        let tel = Telemetry::enabled();
+        d.instrument(&tel);
+        d.instrument(&tel); // idempotent: no double wrap / double count
+        assert_eq!(d.label(), "FIFO-FF", "timing must not rename the allocator");
+        let job = Job {
+            id: 1,
+            submit: 0,
+            duration: 5,
+            req_time: 5,
+            slots: 2,
+            per_slot: vec![1],
+            user: 0,
+            app: 0,
+            status: 1,
+            shape: ShapeId::UNSET,
+        };
+        let extra = BTreeMap::new();
+        let view = SystemView { now: 0, queue: vec![&job], running: Vec::new(), extra: &extra };
+        let dec = d.dispatch(&view, &mut rm);
+        assert_eq!(dec.started.len(), 1);
+        let reg = tel.registry().unwrap();
+        assert_eq!(reg.histogram(SpanKind::Place).count(), 1);
     }
 
     #[test]

@@ -24,6 +24,8 @@
 //!   power-cap schedules) compiled into workload transforms and
 //!   additional-data providers.
 //! * [`monitor`] — system status, utilization visualization, CPU/memory probes.
+//! * [`telemetry`] — the observability layer: metrics registry, hot-path
+//!   span timing with Chrome-trace (Perfetto) export, campaign heartbeats.
 //! * [`output`] — dispatching-decision and simulator-performance records.
 //! * [`stats`] — descriptive statistics used by the plot factory, plus the
 //!   paired-comparison inference toolkit (bootstrap CIs, Wilcoxon, ranks).
@@ -58,8 +60,8 @@
 // Public-API documentation is enforced (`cargo doc` runs with
 // `-D warnings` in CI, and every public item must carry a doc comment).
 // The flagship user-facing modules — `campaign`, `scenario`, `experiment`,
-// `plotdata`, `stats`, `addons`, `workload`, `sim`, `output` — are fully
-// documented; the remaining internal modules below are deliberately allowlisted
+// `plotdata`, `stats`, `addons`, `workload`, `sim`, `output`, `monitor`,
+// `telemetry` — are fully documented; the remaining internal modules below are deliberately allowlisted
 // item-by-item (`#[allow(missing_docs)]`) until they get their own
 // documentation pass, so new flagship items can never regress silently.
 #![warn(missing_docs)]
@@ -77,7 +79,6 @@ pub mod dispatch;
 pub mod experiment;
 #[allow(missing_docs)] // internal: synthetic workload generator
 pub mod generator;
-#[allow(missing_docs)] // internal: status panels and probes
 pub mod monitor;
 pub mod output;
 pub mod plotdata;
@@ -90,6 +91,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sim;
 pub mod stats;
+pub mod telemetry;
 #[doc(hidden)]
 #[allow(missing_docs)]
 pub mod testkit;
@@ -119,6 +121,7 @@ pub mod prelude {
     pub use crate::resources::ResourceManager;
     pub use crate::scenario::Perturbation;
     pub use crate::sim::{SimOptions, SimOutput, Simulator};
+    pub use crate::telemetry::Telemetry;
     pub use crate::workload::{Job, JobState, SwfReader, SwfWriter};
 }
 

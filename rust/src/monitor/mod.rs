@@ -9,19 +9,30 @@ use crate::resources::ResourceManager;
 /// sample in-process, driven by `MemSample` events on the simulator's
 /// unified event queue at a bounded simulation-time cadence — same metric,
 /// see DESIGN.md §Monitoring and §Events.)
+///
+/// Unreadable probes (`/proc` absent, e.g. non-Linux) are **skipped**,
+/// not averaged in as zero — a run that cannot read RSS reports 0/0
+/// rather than an average dragged toward 0 — and counted in
+/// [`MemProbe::skipped`] (folded into the telemetry registry as
+/// [`crate::telemetry::Counter::MemProbeSkipped`] at the end of a run).
 #[derive(Debug, Default, Clone)]
 pub struct MemProbe {
     page_kb: u64,
-    /// Sum and count of samples for the average; max of samples for peak.
+    /// Readable samples accumulated into the average.
     pub samples: u64,
+    /// Sum of readable samples (KB), for [`MemProbe::avg_kb`].
     pub sum_kb: u64,
+    /// Largest readable sample (KB).
     pub max_kb: u64,
+    /// Probes skipped because RSS was unreadable.
+    pub skipped: u64,
 }
 
 impl MemProbe {
+    /// A fresh probe with zeroed accumulators.
     pub fn new() -> Self {
         // conservative default when sysconf isn't readable: 4 KiB pages
-        MemProbe { page_kb: 4, samples: 0, sum_kb: 0, max_kb: 0 }
+        MemProbe { page_kb: 4, samples: 0, sum_kb: 0, max_kb: 0, skipped: 0 }
     }
 
     /// Current RSS in KB (0 when /proc is unavailable, e.g. non-Linux).
@@ -54,13 +65,25 @@ impl MemProbe {
         0
     }
 
-    /// Take a sample, updating avg/max accumulators; returns the sample.
+    /// Take a sample, updating avg/max accumulators; returns the sample
+    /// (0 means the probe was unreadable and skipped).
     pub fn sample(&mut self) -> u64 {
         let kb = self.rss_kb();
+        self.record_sample(kb);
+        kb
+    }
+
+    /// Fold one reading into the accumulators. A reading of 0 means the
+    /// probe failed (RSS is never 0 for a live process): it increments
+    /// [`MemProbe::skipped`] and leaves the average/peak untouched.
+    pub fn record_sample(&mut self, kb: u64) {
+        if kb == 0 {
+            self.skipped += 1;
+            return;
+        }
         self.samples += 1;
         self.sum_kb += kb;
         self.max_kb = self.max_kb.max(kb);
-        kb
     }
 
     /// Average of samples taken so far (KB).
@@ -90,11 +113,17 @@ pub fn process_cpu_ms() -> u64 {
 /// A snapshot of the current synthetic system status (Figure 8).
 #[derive(Debug, Clone, Default)]
 pub struct SystemStatus {
+    /// Simulation time of the snapshot.
     pub sim_time: u64,
+    /// Jobs loaded but not yet submitted.
     pub loaded: usize,
+    /// Jobs waiting in the queue.
     pub queued: usize,
+    /// Jobs currently running.
     pub running: usize,
+    /// Jobs completed so far.
     pub completed: u64,
+    /// Jobs rejected so far.
     pub rejected: u64,
     /// `(resource type, used, capacity)` triples.
     pub usage: Vec<(String, u64, u64)>,
@@ -192,6 +221,24 @@ mod tests {
         assert!(p.peak_rss_kb() >= kb / 2);
         assert_eq!(p.avg_kb(), kb);
         assert_eq!(p.max_kb, kb);
+    }
+
+    #[test]
+    fn mem_probe_skips_unreadable_samples() {
+        let mut p = MemProbe::new();
+        p.record_sample(1000);
+        p.record_sample(0); // unreadable probe: must not drag the average
+        p.record_sample(2000);
+        assert_eq!(p.samples, 2);
+        assert_eq!(p.skipped, 1);
+        assert_eq!(p.avg_kb(), 1500);
+        assert_eq!(p.max_kb, 2000);
+        // a probe that never reads anything reports 0/0, not 0-average
+        let mut dead = MemProbe::new();
+        dead.record_sample(0);
+        dead.record_sample(0);
+        assert_eq!((dead.samples, dead.skipped), (0, 2));
+        assert_eq!((dead.avg_kb(), dead.max_kb), (0, 0));
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! not change results.
 
 use super::hostable_slots_in;
+use crate::telemetry::{Counter, SpanKind, Telemetry};
 
 /// Cursor value marking a shape that must be fully rebuilt on next query.
 const STALE: usize = usize::MAX;
@@ -154,9 +155,17 @@ impl AvailabilityIndex {
         self.shapes[sid].ever_total
     }
 
-    /// Bring shape `sid` up to date with the journal.
-    fn sync(&mut self, sid: usize, st: &NodeState, shape: &[u64]) {
+    /// Bring shape `sid` up to date with the journal. Syncs that do
+    /// work are timed as [`SpanKind::JournalSync`] spans; up-to-date
+    /// shapes return before telemetry reads a clock, so idle queries
+    /// stay instrumentation-free.
+    fn sync(&mut self, sid: usize, st: &NodeState, shape: &[u64], tel: &Telemetry) {
+        if self.shapes[sid].cursor == self.journal.len() {
+            return; // up to date: nothing to replay (STALE != len)
+        }
+        let t0 = tel.start();
         let entry = &mut self.shapes[sid];
+        let mut replayed = 0u64;
         if entry.cursor == STALE {
             let nodes = st.nodes();
             entry.hostable.clear();
@@ -168,6 +177,7 @@ impl AvailabilityIndex {
                 total += h as u128;
             }
             entry.total = total;
+            tel.count(Counter::JournalRebuilds, 1);
         } else {
             for &n in &self.journal[entry.cursor..] {
                 let n = n as usize;
@@ -176,22 +186,32 @@ impl AvailabilityIndex {
                 // idempotent and the total tracks the stored delta
                 entry.total = entry.total + h as u128 - entry.hostable[n] as u128;
                 entry.hostable[n] = h;
+                replayed += 1;
             }
+            tel.count(Counter::JournalReplayedEntries, replayed);
         }
         entry.cursor = self.journal.len();
+        tel.span(SpanKind::JournalSync, t0, replayed);
     }
 
     /// Current system-wide hostable total of shape `sid`.
     #[inline]
-    pub fn total(&mut self, sid: usize, st: &NodeState, shape: &[u64]) -> u128 {
-        self.sync(sid, st, shape);
+    pub fn total(&mut self, sid: usize, st: &NodeState, shape: &[u64], tel: &Telemetry) -> u128 {
+        self.sync(sid, st, shape, tel);
         self.shapes[sid].total
     }
 
     /// Current hostable slots of shape `sid` on one node.
     #[inline]
-    pub fn hostable(&mut self, sid: usize, node: usize, st: &NodeState, shape: &[u64]) -> u64 {
-        self.sync(sid, st, shape);
+    pub fn hostable(
+        &mut self,
+        sid: usize,
+        node: usize,
+        st: &NodeState,
+        shape: &[u64],
+        tel: &Telemetry,
+    ) -> u64 {
+        self.sync(sid, st, shape, tel);
         self.shapes[sid].hostable[node]
     }
 
@@ -202,9 +222,10 @@ impl AvailabilityIndex {
         sid: usize,
         st: &NodeState,
         shape: &[u64],
+        tel: &Telemetry,
         out: &mut Vec<u32>,
     ) {
-        self.sync(sid, st, shape);
+        self.sync(sid, st, shape, tel);
         for (n, &h) in self.shapes[sid].hostable.iter().enumerate() {
             if h > 0 {
                 out.push(n as u32);
@@ -235,18 +256,18 @@ mod tests {
 
         fn total(&mut self, sid: usize, shape: &[u64]) -> u128 {
             let st = NodeState { free: &self.free, down: &self.down, types: 2 };
-            self.idx.total(sid, &st, shape)
+            self.idx.total(sid, &st, shape, &Telemetry::default())
         }
 
         fn hostable(&mut self, sid: usize, node: usize, shape: &[u64]) -> u64 {
             let st = NodeState { free: &self.free, down: &self.down, types: 2 };
-            self.idx.hostable(sid, node, &st, shape)
+            self.idx.hostable(sid, node, &st, shape, &Telemetry::default())
         }
 
         fn feasible(&mut self, sid: usize, shape: &[u64]) -> Vec<u32> {
             let st = NodeState { free: &self.free, down: &self.down, types: 2 };
             let mut out = Vec::new();
-            self.idx.feasible_into(sid, &st, shape, &mut out);
+            self.idx.feasible_into(sid, &st, shape, &Telemetry::default(), &mut out);
             out
         }
     }
@@ -293,6 +314,25 @@ mod tests {
         // after compactions the shape must still answer exactly
         assert_eq!(h.total(sid, &shape), (h.free[0].min(h.free[1]) + 2) as u128);
         assert_eq!(h.hostable(sid, 1, &shape), 2);
+    }
+
+    #[test]
+    fn sync_work_is_counted_in_telemetry() {
+        let mut h = Harness::new();
+        let shape = [1u64, 1];
+        let sid = h.idx.register_shape(0);
+        let tel = Telemetry::enabled();
+        let st = NodeState { free: &h.free, down: &h.down, types: 2 };
+        // first query: stale → full rebuild; second: up to date, no record
+        h.idx.total(sid, &st, &shape, &tel);
+        h.idx.total(sid, &st, &shape, &tel);
+        // one journaled touch → one replayed entry on the next query
+        h.idx.note_touch(1);
+        h.idx.total(sid, &st, &shape, &tel);
+        let reg = tel.registry().unwrap();
+        assert_eq!(reg.counter(Counter::JournalRebuilds), 1);
+        assert_eq!(reg.counter(Counter::JournalReplayedEntries), 1);
+        assert_eq!(reg.histogram(SpanKind::JournalSync).count(), 2);
     }
 
     #[test]

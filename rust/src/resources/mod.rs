@@ -19,8 +19,9 @@ pub use index::{AvailabilityIndex, NodeState};
 pub use shapes::{ShapeId, ShapeTable};
 
 use crate::config::SysConfig;
+use crate::telemetry::Telemetry;
 use crate::workload::{Job, JobId};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
 /// Where a job's slots were placed: `(node index, slot count)` slices.
@@ -66,6 +67,15 @@ pub struct ResourceManager {
     /// Per-type free totals, tracked incrementally by allocate/release (so
     /// [`ResourceManager::utilization`] never rescans the node matrix).
     type_free: Vec<u64>,
+    /// Telemetry handle for journal-sync spans (no-op unless enabled by
+    /// [`ResourceManager::set_telemetry`]).
+    tel: Telemetry,
+    /// Shaped queries demoted to the naive full-scan path because the
+    /// carried [`ShapeId`] did not resolve here (`Cell`: [`shape_for`]
+    /// takes `&self`). Observation-only — never read by simulation logic.
+    ///
+    /// [`shape_for`]: ResourceManager::shape_for
+    demotions: Cell<u64>,
 }
 
 impl ResourceManager {
@@ -109,7 +119,24 @@ impl ResourceManager {
             index: RefCell::new(AvailabilityIndex::new(nodes)),
             type_free: type_capacity.clone(),
             type_capacity,
+            tel: Telemetry::default(),
+            demotions: Cell::new(0),
         }
+    }
+
+    /// Attach a telemetry handle: index journal syncs get timed as
+    /// [`crate::telemetry::SpanKind::JournalSync`] spans. Observation-only —
+    /// answers are identical with or without it.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.tel = tel;
+    }
+
+    /// Shaped queries that fell back to the naive full-scan path so far
+    /// (unset, stale or foreign [`ShapeId`]s). Folded into the telemetry
+    /// registry as [`crate::telemetry::Counter::IndexDemotions`] at the
+    /// end of a run.
+    pub fn naive_demotions(&self) -> u64 {
+        self.demotions.get()
     }
 
     /// Number of nodes.
@@ -192,10 +219,25 @@ impl ResourceManager {
     /// Resolve a job's interned shape against *this* manager's table.
     /// Returns `None` for [`ShapeId::UNSET`] and for stale/foreign ids
     /// whose stored vector does not match the job's `per_slot` (such jobs
-    /// fall back to the naive full-scan path).
+    /// fall back to the naive full-scan path). A *set* id failing to
+    /// resolve counts as a demotion ([`ResourceManager::naive_demotions`]);
+    /// unset ids are deliberate naive-path users, not demotions.
     #[inline]
     pub fn shape_for(&self, job: &Job) -> Option<ShapeId> {
-        (self.shapes.get(job.shape)? == job.per_slot.as_slice()).then_some(job.shape)
+        match self.shapes.get(job.shape) {
+            Some(v) if v == job.per_slot.as_slice() => Some(job.shape),
+            Some(_) => {
+                self.demotions.set(self.demotions.get() + 1);
+                None
+            }
+            None => {
+                if job.shape.index().is_some() {
+                    // set id pointing past this manager's table (foreign)
+                    self.demotions.set(self.demotions.get() + 1);
+                }
+                None
+            }
+        }
     }
 
     /// The borrowed state view the availability index recomputes from.
@@ -211,7 +253,7 @@ impl ResourceManager {
     pub fn shaped_hostable_slots(&self, sid: ShapeId, node: usize) -> u64 {
         let i = sid.index().expect("shaped query with ShapeId::UNSET");
         let shape = self.shapes.get(sid).expect("shape id from this manager");
-        self.index.borrow_mut().hostable(i, node, &self.node_state(), shape)
+        self.index.borrow_mut().hostable(i, node, &self.node_state(), shape, &self.tel)
     }
 
     /// Append the feasible nodes (hostable > 0) of an interned shape to
@@ -219,7 +261,7 @@ impl ResourceManager {
     pub fn shaped_feasible_nodes(&self, sid: ShapeId, out: &mut Vec<u32>) {
         let i = sid.index().expect("shaped query with ShapeId::UNSET");
         let shape = self.shapes.get(sid).expect("shape id from this manager");
-        self.index.borrow_mut().feasible_into(i, &self.node_state(), shape, out);
+        self.index.borrow_mut().feasible_into(i, &self.node_state(), shape, &self.tel, out);
     }
 
     /// Current system-wide hostable total of an interned shape — the O(1)
@@ -231,7 +273,7 @@ impl ResourceManager {
     pub fn shaped_total_hostable(&self, sid: ShapeId) -> u128 {
         let i = sid.index().expect("shaped query with ShapeId::UNSET");
         let shape = self.shapes.get(sid).expect("shape id from this manager");
-        self.index.borrow_mut().total(i, &self.node_state(), shape)
+        self.index.borrow_mut().total(i, &self.node_state(), shape, &self.tel)
     }
 
     /// Number of shapes interned so far.
@@ -282,7 +324,7 @@ impl ResourceManager {
         if let Some(sid) = self.shape_for(job) {
             let i = sid.index().expect("resolved shape is set");
             let shape = self.shapes.get(sid).expect("resolved shape exists");
-            let total = self.index.borrow_mut().total(i, &self.node_state(), shape);
+            let total = self.index.borrow_mut().total(i, &self.node_state(), shape, &self.tel);
             return total >= job.slots as u128;
         }
         let mut remaining = job.slots as u64;
@@ -754,6 +796,29 @@ mod tests {
         assert_eq!(rm_b.shape_for(&j), None, "foreign id with mismatched vector");
         // the fallback still answers correctly
         assert!(rm_b.can_host(&j));
+    }
+
+    #[test]
+    fn demotions_count_only_set_but_unresolvable_shapes() {
+        let mut rm = ResourceManager::from_config(&sys());
+        // unset id: deliberate naive path, not a demotion
+        assert_eq!(rm.shape_for(&job(1, 1, 1, 1)), None);
+        assert_eq!(rm.naive_demotions(), 0);
+        // set id whose stored vector mismatches: demotion
+        rm.intern_shape(&[2, 40]);
+        let mut stale = job(2, 1, 1, 30);
+        stale.shape = ShapeId::from_index(0);
+        assert_eq!(rm.shape_for(&stale), None);
+        assert_eq!(rm.naive_demotions(), 1);
+        // set id past the table (foreign manager): demotion
+        let mut foreign = job(3, 1, 1, 30);
+        foreign.shape = ShapeId::from_index(7);
+        assert_eq!(rm.shape_for(&foreign), None);
+        assert_eq!(rm.naive_demotions(), 2);
+        // resolving query leaves the counter alone
+        let ok = interned(&mut rm, job(4, 1, 1, 30));
+        assert_eq!(rm.shape_for(&ok), Some(ok.shape));
+        assert_eq!(rm.naive_demotions(), 2);
     }
 
     #[test]

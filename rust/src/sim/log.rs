@@ -94,9 +94,11 @@ impl EventLog {
     }
 
     /// Drop events every consumer has passed (no-op in retain-all mode).
-    pub fn compact(&mut self) {
+    /// Returns how many events were dropped (feeds the
+    /// `log_events_compacted` telemetry counter).
+    pub fn compact(&mut self) -> usize {
         if self.retain_all || self.counters.is_empty() {
-            return;
+            return 0;
         }
         let min = self.counters.iter().copied().min().unwrap_or(self.base);
         let cut = (min - self.base) as usize;
@@ -104,6 +106,7 @@ impl EventLog {
             self.events.drain(..cut);
             self.base = min;
         }
+        cut
     }
 
     /// Global index of the first retained event (0 = full history).
@@ -165,11 +168,11 @@ mod tests {
         log.push(ev(1));
         log.push(ev(2));
         log.advance(a);
-        log.compact();
+        assert_eq!(log.compact(), 0);
         assert_eq!(log.base(), 0, "b has not seen anything yet");
         assert_eq!(log.retained().len(), 2);
         log.advance(b);
-        log.compact();
+        assert_eq!(log.compact(), 2, "compaction reports dropped events");
         assert_eq!(log.base(), 2);
         assert!(log.retained().is_empty());
         // cursors stay valid across compaction

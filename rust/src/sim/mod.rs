@@ -50,6 +50,7 @@ use crate::monitor::{process_cpu_ms, MemProbe};
 use crate::output::{JobRecord, OutputCollector, PerfRecord};
 use crate::resources::ResourceManager;
 use crate::rng::Pcg64;
+use crate::telemetry::{Counter, SpanKind, Telemetry};
 use crate::util::idhash::{IdHashMap, IdHashSet};
 use crate::workload::{FactoryConfig, Job, JobId};
 use std::collections::{BTreeMap, VecDeque};
@@ -102,6 +103,13 @@ pub struct SimOptions {
     /// fresh consumers); costs memory proportional to the run length, so
     /// plain batch runs leave it off.
     pub retain_log: bool,
+    /// Instrumentation handle (disabled by default). When enabled, the
+    /// core times dispatch cycles, placements, index journal syncs, addon
+    /// updates, log compactions and snapshot/restore as telemetry spans.
+    /// Strictly observation-only: all simulation outputs are byte-identical
+    /// with telemetry on or off (asserted in `rust/tests/telemetry.rs`);
+    /// measured nanoseconds live only in measure-grade sinks.
+    pub telemetry: Telemetry,
 }
 
 impl Default for SimOptions {
@@ -117,6 +125,7 @@ impl Default for SimOptions {
             time_dispatch: true,
             use_shape_index: true,
             retain_log: false,
+            telemetry: Telemetry::default(),
         }
     }
 }
@@ -400,6 +409,12 @@ impl SimCore {
         &self.rm
     }
 
+    /// The instrumentation handle this core records into (a clone shares
+    /// the same registry; see [`SimOptions::telemetry`]).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.opts.telemetry
+    }
+
     /// The core's deterministic random stream (carried in snapshots).
     pub fn rng(&mut self) -> &mut Pcg64 {
         &mut self.rng
@@ -423,7 +438,7 @@ impl SimCore {
         for ev in self.log.advance(consumer) {
             f(ev)?;
         }
-        self.log.compact();
+        self.compact_log();
         Ok(())
     }
 
@@ -455,7 +470,31 @@ impl SimCore {
             }
         }
         self.out_consumer = Some(self.log.register_consumer());
+        self.wire_telemetry();
         self.phase = Phase::Running;
+    }
+
+    /// Hand the telemetry handle to the subsystems that record spans of
+    /// their own: the resource manager (journal syncs) and the dispatcher
+    /// (placement timing). No-ops when the handle is disabled. Called from
+    /// both entry paths into `Phase::Running` — [`SimCore::start`] and
+    /// restore.
+    pub(crate) fn wire_telemetry(&mut self) {
+        let tel = self.opts.telemetry.clone();
+        self.rm.set_telemetry(tel.clone());
+        self.dispatcher.instrument(&tel);
+    }
+
+    /// Compact the event log, folding the dropped-event count (and a
+    /// [`SpanKind::LogCompact`] span when anything was dropped) into
+    /// telemetry.
+    fn compact_log(&mut self) {
+        let t0 = self.opts.telemetry.start();
+        let dropped = self.log.compact();
+        if dropped > 0 {
+            self.opts.telemetry.count(Counter::LogEventsCompacted, dropped as u64);
+            self.opts.telemetry.span(SpanKind::LogCompact, t0, dropped as u64);
+        }
     }
 
     /// Advance the simulation by one time point.
@@ -543,6 +582,13 @@ impl SimCore {
         out.perf = std::mem::take(&mut self.opts.output.perf);
         out.final_extra = self.extra.clone();
         self.phase = Phase::Finished;
+        // fold end-of-run health counters into the telemetry registry
+        let tel = &self.opts.telemetry;
+        tel.count(Counter::IndexDemotions, self.rm.naive_demotions());
+        tel.count(Counter::MemProbeSkipped, self.mem.skipped);
+        tel.gauge("sim.time_points", out.time_points as f64);
+        tel.gauge("sim.max_queue", out.max_queue as f64);
+        tel.gauge("sim.shape_count", self.rm.shape_count() as f64);
         Ok(out)
     }
 
@@ -552,7 +598,7 @@ impl SimCore {
             for ev in self.log.advance(c) {
                 self.opts.output.apply(ev);
             }
-            self.log.compact();
+            self.compact_log();
         }
     }
 
@@ -725,6 +771,7 @@ impl SimCore {
 
         // --- additional data (before the dispatcher sees the view) ---
         let mut addons = std::mem::take(&mut self.opts.addons);
+        let t_add0 = if addons.is_empty() { None } else { self.opts.telemetry.start() };
         for addon in addons.iter_mut() {
             for action in addon.update(now, &self.rm, self.queue.len(), self.starts.len()) {
                 match action {
@@ -744,6 +791,7 @@ impl SimCore {
                 }
             }
         }
+        self.opts.telemetry.span(SpanKind::AddonUpdate, t_add0, addons.len() as u64);
 
         self.out.max_queue = self.out.max_queue.max(self.queue.len());
         let queue_len = self.queue.len() as u32;
@@ -755,8 +803,12 @@ impl SimCore {
         // still offered to the remaining queue.
         let mut started_this_point = 0u32;
         let mut dispatch_ns = 0u64;
+        let tel_on = self.opts.telemetry.is_enabled();
         loop {
-            let t_disp0 = timing.then(Instant::now);
+            // queue length as this cycle's view sees it (re-dispatch rounds
+            // run against the shrunken queue)
+            let cycle_queue = self.queue.len() as u64;
+            let t_disp0 = (timing || tel_on).then(Instant::now);
             let decision = {
                 // view buffers are recycled across cycles (ViewScratch):
                 // no per-cycle allocation once capacities warm up
@@ -773,7 +825,13 @@ impl SimCore {
                 decision
             };
             if let Some(t0) = t_disp0 {
-                dispatch_ns += t0.elapsed().as_nanos() as u64;
+                // one clock reading feeds both the perf-record field and
+                // the telemetry span, so the two can never disagree
+                let ns = t0.elapsed().as_nanos() as u64;
+                if timing {
+                    dispatch_ns += ns;
+                }
+                self.opts.telemetry.span_with(SpanKind::DispatchCycle, t0, ns, cycle_queue);
             }
 
             // --- apply decision ---
@@ -1226,6 +1284,37 @@ mod tests {
         assert!((out.avg_wait() - 50.0).abs() < 1e-12);
         assert!(out.throughput_per_hour() > 0.0);
         assert_eq!(out.dispatcher, "FIFO-FF");
+    }
+
+    #[test]
+    fn telemetry_records_spans_without_changing_results() {
+        let jobs = || vec![job(1, 0, 50, 2), job(2, 0, 50, 2), job(3, 60, 10, 1)];
+        let opts = |tel: Telemetry| SimOptions {
+            time_dispatch: false,
+            mem_sample_secs: 0,
+            telemetry: tel,
+            ..Default::default()
+        };
+        let mut plain = Simulator::from_jobs(jobs(), sys(1, 2), fifo_ff(), opts(Telemetry::disabled()));
+        let base = plain.run().unwrap();
+
+        let tel = Telemetry::enabled();
+        let mut inst = Simulator::from_jobs(jobs(), sys(1, 2), fifo_ff(), opts(tel.clone()));
+        let out = inst.run().unwrap();
+        // observation-only: identical records and counters
+        assert_eq!(out.jobs, base.jobs);
+        assert_eq!(out.perf, base.perf);
+        assert_eq!(out.jobs_completed, base.jobs_completed);
+        // time_dispatch is off, so the perf-record field stays untimed ...
+        assert_eq!(out.dispatch_ns, 0);
+        // ... while telemetry still saw every dispatch cycle and placement
+        let s = tel.summary().unwrap();
+        assert!(s.dispatch_count >= out.time_points);
+        assert!(s.place_count >= 3, "three jobs were placed");
+        assert_eq!(s.index_demotions, 0, "interned shapes never demote");
+        let reg = tel.registry().unwrap();
+        assert_eq!(reg.gauge("sim.time_points"), Some(out.time_points as f64));
+        assert!(reg.gauge("sim.shape_count").unwrap() >= 1.0);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::output::{JobRecord, PerfRecord};
 use crate::resources::{Allocation, ShapeId};
 use crate::rng::Pcg64;
 use crate::sim::{EventPayload, EventQueue, JobSource};
+use crate::telemetry::SpanKind;
 use crate::util::json::{f64_from_hex, f64_to_hex, u64_from_hex, u64_to_hex, Json};
 use crate::workload::Job;
 use std::collections::BTreeMap;
@@ -265,6 +266,7 @@ impl SimCore {
             self.log.retains_all() && self.log.base() == 0,
             "snapshot() requires SimOptions::retain_log from the start of the run"
         );
+        let t0 = self.opts.telemetry.start();
 
         let jobs: Vec<Json> = {
             let mut ids: Vec<u64> = self.jobs.keys().copied().collect();
@@ -377,7 +379,9 @@ impl SimCore {
             ("rng", obj(vec![("state", hex_u64(rng_state)), ("inc", hex_u64(rng_inc))])),
             ("log", Json::Arr(log)),
         ]);
-        Ok(doc.to_string_pretty())
+        let text = doc.to_string_pretty();
+        self.opts.telemetry.span(SpanKind::Snapshot, t0, text.len() as u64);
+        Ok(text)
     }
 
     /// Rebuild a running core from a [`SimCore::snapshot`] document.
@@ -397,6 +401,7 @@ impl SimCore {
         dispatcher: Dispatcher,
         opts: SimOptions,
     ) -> anyhow::Result<SimCore> {
+        let t0 = opts.telemetry.start();
         let doc = Json::parse(text)?;
         anyhow::ensure!(
             doc.get("format").and_then(|f| f.as_str()) == Some(FORMAT),
@@ -561,6 +566,7 @@ impl SimCore {
             .iter()
             .map(sim_event_from_json)
             .collect::<anyhow::Result<Vec<SimEvent>>>()?;
+        let replayed = events.len() as u64;
         let retain = core.opts.retain_log;
         core.log = EventLog::from_events(events, retain);
         core.out_consumer = Some(core.log.register_consumer());
@@ -569,6 +575,10 @@ impl SimCore {
         core.cpu0 = process_cpu_ms();
         core.mem = MemProbe::new();
         core.phase = Phase::Running;
+        // Restore bypasses `start()`, so the observation hooks must be wired
+        // here too (resource-manager handle + timed allocator wrapper).
+        core.wire_telemetry();
+        core.opts.telemetry.span(SpanKind::Restore, t0, replayed);
         Ok(core)
     }
 

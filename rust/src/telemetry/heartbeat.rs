@@ -1,0 +1,197 @@
+//! Campaign-worker liveness: per-run heartbeat files.
+//!
+//! While a worker executes a run it appends lines to
+//! `runs/<run_id>/heartbeat`; `campaign status` reads the **last** line
+//! to distinguish an *active* worker (recent heartbeat) from a *stale*
+//! one (crashed or wedged — file present but old). Each line is
+//!
+//! ```text
+//! <unix_ms> <sim_time> <points>
+//! ```
+//!
+//! wall-clock unix milliseconds (clamped monotone non-decreasing across
+//! lines even if the system clock steps backwards), the simulation time
+//! reached, and time points processed. Heartbeats are observation-only:
+//! write failures (full disk, read-only store) are swallowed — liveness
+//! reporting must never kill the run it reports on.
+
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Default staleness threshold for `campaign status`: a run whose last
+/// heartbeat is older than this many seconds is reported *stale*
+/// (likely crashed or wedged) instead of *active*. Workers beat at most
+/// once per second, so 30 s tolerates heavy scheduler pauses without
+/// flapping.
+pub const DEFAULT_STALE_AFTER_SECS: u64 = 30;
+
+/// Name of the heartbeat file inside a run directory.
+pub const HEARTBEAT_FILE: &str = "heartbeat";
+
+/// The decoded last line of a heartbeat file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Heartbeat {
+    /// Wall-clock stamp, unix milliseconds.
+    pub wall_unix_ms: u64,
+    /// Simulation time the run had reached.
+    pub sim_time: u64,
+    /// Time points the run had processed.
+    pub points: u64,
+}
+
+impl Heartbeat {
+    /// Seconds elapsed since this heartbeat, by the current wall clock
+    /// (0 if the stamp is in the future — clocks across hosts may skew).
+    pub fn age_secs(&self) -> u64 {
+        now_unix_ms().saturating_sub(self.wall_unix_ms) / 1_000
+    }
+}
+
+fn now_unix_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+/// Appends rate-limited heartbeat lines for one run.
+#[derive(Debug)]
+pub struct HeartbeatWriter {
+    path: PathBuf,
+    min_interval: Duration,
+    last_write: Option<Instant>,
+    last_stamp_ms: u64,
+}
+
+impl HeartbeatWriter {
+    /// A writer appending to `path`, at most one line per second.
+    pub fn new<P: Into<PathBuf>>(path: P) -> Self {
+        HeartbeatWriter {
+            path: path.into(),
+            min_interval: Duration::from_secs(1),
+            last_write: None,
+            last_stamp_ms: 0,
+        }
+    }
+
+    /// Override the rate limit (tests use `Duration::ZERO`).
+    pub fn min_interval(mut self, d: Duration) -> Self {
+        self.min_interval = d;
+        self
+    }
+
+    /// Append a heartbeat unless one was written less than the minimum
+    /// interval ago. Returns whether a line was written. IO errors are
+    /// swallowed (observation-only; see the module docs).
+    pub fn beat(&mut self, sim_time: u64, points: u64) -> bool {
+        if let Some(t) = self.last_write {
+            if t.elapsed() < self.min_interval {
+                return false;
+            }
+        }
+        self.force_beat(sim_time, points);
+        true
+    }
+
+    /// Append a heartbeat line now, ignoring the rate limit.
+    pub fn force_beat(&mut self, sim_time: u64, points: u64) {
+        // monotone stamps even if the wall clock steps backwards
+        let stamp = now_unix_ms().max(self.last_stamp_ms);
+        self.last_stamp_ms = stamp;
+        self.last_write = Some(Instant::now());
+        let _ = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .and_then(|mut f| writeln!(f, "{stamp} {sim_time} {points}"));
+    }
+
+    /// The file this writer appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Read the last well-formed line of a heartbeat file. `None` when the
+/// file is missing, empty, or holds no parseable line.
+pub fn read_last<P: AsRef<Path>>(path: P) -> Option<Heartbeat> {
+    let text = std::fs::read_to_string(path).ok()?;
+    text.lines().rev().find_map(parse_line)
+}
+
+fn parse_line(line: &str) -> Option<Heartbeat> {
+    let mut f = line.split_whitespace();
+    let hb = Heartbeat {
+        wall_unix_ms: f.next()?.parse().ok()?,
+        sim_time: f.next()?.parse().ok()?,
+        points: f.next()?.parse().ok()?,
+    };
+    f.next().is_none().then_some(hb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil as tempfile;
+
+    #[test]
+    fn beats_append_and_read_back_last() {
+        let tmp = tempfile::tempdir().unwrap();
+        let p = tmp.path().join("heartbeat");
+        let mut w = HeartbeatWriter::new(&p).min_interval(Duration::ZERO);
+        assert!(w.beat(100, 1));
+        assert!(w.beat(250, 2));
+        assert!(w.beat(999, 7));
+        let hb = read_last(&p).expect("last line parses");
+        assert_eq!((hb.sim_time, hb.points), (999, 7));
+        assert!(hb.wall_unix_ms > 0);
+        assert!(hb.age_secs() < 60, "fresh heartbeat must read as recent");
+        assert_eq!(std::fs::read_to_string(&p).unwrap().lines().count(), 3);
+    }
+
+    #[test]
+    fn rate_limit_suppresses_rapid_beats() {
+        let tmp = tempfile::tempdir().unwrap();
+        let p = tmp.path().join("heartbeat");
+        let mut w = HeartbeatWriter::new(&p); // default 1 s interval
+        assert!(w.beat(1, 1), "first beat always writes");
+        assert!(!w.beat(2, 2), "immediate second beat is suppressed");
+        assert_eq!(read_last(&p).unwrap().points, 1);
+        w.force_beat(3, 3);
+        assert_eq!(read_last(&p).unwrap().points, 3);
+    }
+
+    #[test]
+    fn stamps_are_monotone_across_lines() {
+        let tmp = tempfile::tempdir().unwrap();
+        let p = tmp.path().join("heartbeat");
+        let mut w = HeartbeatWriter::new(&p).min_interval(Duration::ZERO);
+        for i in 0..5 {
+            w.force_beat(i, i);
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let stamps: Vec<u64> =
+            text.lines().map(|l| parse_line(l).unwrap().wall_unix_ms).collect();
+        assert!(stamps.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn missing_or_garbage_files_read_as_none() {
+        let tmp = tempfile::tempdir().unwrap();
+        assert!(read_last(tmp.path().join("nope")).is_none());
+        let p = tmp.path().join("garbage");
+        std::fs::write(&p, "not a heartbeat\n1 2\n").unwrap();
+        assert!(read_last(&p).is_none());
+        // a trailing torn write falls back to the previous good line
+        std::fs::write(&p, "1000 5 1\n20").unwrap();
+        assert_eq!(read_last(&p).unwrap().sim_time, 5);
+    }
+
+    #[test]
+    fn old_stamp_reads_as_stale_age() {
+        let hb = Heartbeat { wall_unix_ms: now_unix_ms() - 90_000, sim_time: 0, points: 0 };
+        assert!(hb.age_secs() >= 90);
+        assert!(hb.age_secs() > DEFAULT_STALE_AFTER_SECS);
+        let future = Heartbeat { wall_unix_ms: now_unix_ms() + 60_000, sim_time: 0, points: 0 };
+        assert_eq!(future.age_secs(), 0);
+    }
+}

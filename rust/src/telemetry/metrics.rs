@@ -1,0 +1,416 @@
+//! The metrics registry: counters, gauges and log-bucketed histograms.
+//!
+//! Histograms store **no samples**: values land in one of 256
+//! logarithmic buckets (4 sub-buckets per power of two; the midpoint
+//! estimate is within 12.5 % of any value in the bucket), so
+//! p50/p90/p99 are derivable from a fixed-size table no matter how
+//! many spans a run records. Exact count/sum/
+//! min/max ride along so means and extremes stay precise.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// The hot phases the simulator times (one histogram per kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One dispatch cycle (scheduler + allocator) at a time point.
+    DispatchCycle,
+    /// One `Allocator::place` call for a single job.
+    Place,
+    /// One availability-index journal sync that actually did work
+    /// (replay or full rebuild); up-to-date queries record nothing.
+    JournalSync,
+    /// The addon-update section of one time point (only recorded when
+    /// addons are present).
+    AddonUpdate,
+    /// One event-log compaction that actually dropped events.
+    LogCompact,
+    /// Serializing one snapshot.
+    Snapshot,
+    /// Restoring a core from a snapshot.
+    Restore,
+    /// One whole campaign run (worker-side, per `RunSpec`).
+    CampaignRun,
+}
+
+impl SpanKind {
+    /// Every kind, in display/serialization order.
+    pub const ALL: [SpanKind; 8] = [
+        SpanKind::DispatchCycle,
+        SpanKind::Place,
+        SpanKind::JournalSync,
+        SpanKind::AddonUpdate,
+        SpanKind::LogCompact,
+        SpanKind::Snapshot,
+        SpanKind::Restore,
+        SpanKind::CampaignRun,
+    ];
+
+    /// Stable name (histogram key and Chrome-trace event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::DispatchCycle => "dispatch_cycle",
+            SpanKind::Place => "allocator_place",
+            SpanKind::JournalSync => "journal_sync",
+            SpanKind::AddonUpdate => "addon_update",
+            SpanKind::LogCompact => "log_compact",
+            SpanKind::Snapshot => "snapshot",
+            SpanKind::Restore => "restore",
+            SpanKind::CampaignRun => "campaign_run",
+        }
+    }
+
+    /// Name of the span's numeric argument in trace output.
+    pub fn arg_name(self) -> &'static str {
+        match self {
+            SpanKind::DispatchCycle => "queue_len",
+            SpanKind::Place => "slots",
+            SpanKind::JournalSync => "replayed",
+            SpanKind::AddonUpdate => "addons",
+            SpanKind::LogCompact => "dropped",
+            SpanKind::Snapshot => "bytes",
+            SpanKind::Restore => "events",
+            SpanKind::CampaignRun => "index",
+        }
+    }
+
+    pub(crate) fn index(self) -> usize {
+        SpanKind::ALL.iter().position(|k| *k == self).unwrap()
+    }
+}
+
+/// Named monotonic counters maintained by the instrumented subsystems.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Jobs whose interned `ShapeId` failed validation and demoted a
+    /// query to the naive full-scan path (stale/foreign ids).
+    IndexDemotions,
+    /// Journal entries replayed by availability-index syncs.
+    JournalReplayedEntries,
+    /// Full per-shape rebuilds forced by journal compaction.
+    JournalRebuilds,
+    /// RSS probes skipped because `/proc/self/statm` was unreadable.
+    MemProbeSkipped,
+    /// Events dropped from the sim event log by compaction.
+    LogEventsCompacted,
+    /// Trace events discarded after the tracer hit its capacity cap.
+    TraceEventsDropped,
+}
+
+impl Counter {
+    /// Every counter, in display/serialization order.
+    pub const ALL: [Counter; 6] = [
+        Counter::IndexDemotions,
+        Counter::JournalReplayedEntries,
+        Counter::JournalRebuilds,
+        Counter::MemProbeSkipped,
+        Counter::LogEventsCompacted,
+        Counter::TraceEventsDropped,
+    ];
+
+    /// Stable serialization name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::IndexDemotions => "index_demotions",
+            Counter::JournalReplayedEntries => "journal_replayed_entries",
+            Counter::JournalRebuilds => "journal_rebuilds",
+            Counter::MemProbeSkipped => "mem_probe_skipped",
+            Counter::LogEventsCompacted => "log_events_compacted",
+            Counter::TraceEventsDropped => "trace_events_dropped",
+        }
+    }
+
+    pub(crate) fn index(self) -> usize {
+        Counter::ALL.iter().position(|c| *c == self).unwrap()
+    }
+}
+
+const BUCKETS: usize = 256;
+
+/// A log-bucketed histogram of `u64` values (nanoseconds in practice).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Box<[u64; BUCKETS]>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: Box::new([0; BUCKETS]), count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+/// Bucket index of `v`: 4 sub-buckets per power of two. Monotone in `v`,
+/// and the widest bucket spans ≤ 25 % of its lower bound.
+fn bucket_of(v: u64) -> usize {
+    if v < 4 {
+        v as usize
+    } else {
+        let log2 = 63 - v.leading_zeros() as u64;
+        (4 * log2 + ((v >> (log2 - 2)) & 3)) as usize
+    }
+}
+
+/// Lower bound of bucket `idx` (inverse of [`bucket_of`]).
+fn bucket_low(idx: usize) -> u64 {
+    if idx < 8 {
+        idx as u64
+    } else {
+        let (log2, sub) = (idx as u64 / 4, idx as u64 % 4);
+        (1 << log2) + (sub << (log2 - 2))
+    }
+}
+
+impl Histogram {
+    /// Record one value.
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded values (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`) as a bucket-midpoint estimate,
+    /// clamped into the exact observed `[min, max]` range. 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let low = bucket_low(idx);
+                let high = if idx + 1 < BUCKETS { bucket_low(idx + 1) - 1 } else { u64::MAX };
+                let mid = low + (high - low) / 2;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Serialize the summary statistics (not the raw bucket table).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum_ns".to_string(), Json::Num(self.sum as f64));
+        m.insert("min_ns".to_string(), Json::Num(self.min() as f64));
+        m.insert("max_ns".to_string(), Json::Num(self.max as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean()));
+        m.insert("p50_ns".to_string(), Json::Num(self.percentile(0.50) as f64));
+        m.insert("p90_ns".to_string(), Json::Num(self.percentile(0.90) as f64));
+        m.insert("p99_ns".to_string(), Json::Num(self.percentile(0.99) as f64));
+        Json::Obj(m)
+    }
+}
+
+/// The per-run registry: one histogram per [`SpanKind`], one slot per
+/// [`Counter`], plus free-form named gauges (point-in-time doubles).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: [u64; Counter::ALL.len()],
+    hists: [Histogram; SpanKind::ALL.len()],
+    gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    /// Add `n` to a counter.
+    pub fn count(&mut self, c: Counter, n: u64) {
+        self.counters[c.index()] += n;
+    }
+
+    /// Current value of a counter.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.index()]
+    }
+
+    /// Record one span duration (nanoseconds) into its histogram.
+    pub fn record(&mut self, kind: SpanKind, dur_ns: u64) {
+        self.hists[kind.index()].record(dur_ns);
+    }
+
+    /// The histogram of one span kind.
+    pub fn histogram(&self, kind: SpanKind) -> &Histogram {
+        &self.hists[kind.index()]
+    }
+
+    /// Set a named gauge to its latest value.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Read a named gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Full registry dump: counters, gauges and histogram summaries.
+    /// Non-empty histograms only — an all-zero block is noise.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for c in Counter::ALL {
+            counters.insert(c.name().to_string(), Json::Num(self.counter(c) as f64));
+        }
+        let mut spans = BTreeMap::new();
+        for k in SpanKind::ALL {
+            let h = self.histogram(k);
+            if h.count() > 0 {
+                spans.insert(k.name().to_string(), h.to_json());
+            }
+        }
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        let mut m = BTreeMap::new();
+        m.insert("counters".to_string(), Json::Obj(counters));
+        m.insert("spans".to_string(), Json::Obj(spans));
+        m.insert("gauges".to_string(), Json::Obj(gauges));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_tight() {
+        let mut prev = 0usize;
+        for v in 0..100_000u64 {
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket_of must be monotone at {v}");
+            assert!(b < BUCKETS);
+            prev = b;
+        }
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // every value lies inside its bucket's [low, next_low) range
+        for v in [0u64, 1, 3, 4, 7, 8, 100, 1_000_000, u64::MAX / 2] {
+            let b = bucket_of(v);
+            assert!(bucket_low(b) <= v, "low({b}) > {v}");
+            if b + 1 < BUCKETS {
+                assert!(v < bucket_low(b + 1), "{v} >= next low of {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_relative_error_bounded() {
+        // bucket width ≤ 25 % of its lower bound, so the midpoint
+        // estimate is within 12.5 % of any value in the bucket
+        for idx in 8..BUCKETS - 4 {
+            let (low, next) = (bucket_low(idx), bucket_low(idx + 1));
+            assert!(
+                (next - low) as f64 / low as f64 <= 0.25 + 1e-12,
+                "bucket {idx} too wide: [{low}, {next})"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_of_uniform_ramp() {
+        let mut h = Histogram::default();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 10_000);
+        // bucket estimates stay within the 12.5 % bucket width
+        for (q, exact) in [(0.50, 5_000.0), (0.90, 9_000.0), (0.99, 9_900.0)] {
+            let est = h.percentile(q) as f64;
+            assert!(
+                (est - exact).abs() / exact < 0.13,
+                "p{q}: estimate {est} too far from {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_exact_for_single_value() {
+        let mut h = Histogram::default();
+        for _ in 0..100 {
+            h.record(777);
+        }
+        // clamping into [min, max] makes a constant series exact
+        assert_eq!(h.percentile(0.5), 777);
+        assert_eq!(h.percentile(0.99), 777);
+        assert_eq!(h.mean(), 777.0);
+    }
+
+    #[test]
+    fn registry_counts_and_serializes() {
+        let mut r = MetricsRegistry::default();
+        r.count(Counter::IndexDemotions, 3);
+        r.count(Counter::IndexDemotions, 2);
+        r.record(SpanKind::DispatchCycle, 1_000);
+        r.set_gauge("sim.time_points", 42.0);
+        assert_eq!(r.counter(Counter::IndexDemotions), 5);
+        assert_eq!(r.histogram(SpanKind::DispatchCycle).count(), 1);
+        assert_eq!(r.gauge("sim.time_points"), Some(42.0));
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("index_demotions").unwrap().as_u64(), Some(5));
+        assert!(j.get("spans").unwrap().get("dispatch_cycle").is_some());
+        // empty histograms are omitted
+        assert!(j.get("spans").unwrap().get("snapshot").is_none());
+        assert_eq!(j.get("gauges").unwrap().get("sim.time_points").unwrap().as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn span_and_counter_names_are_unique() {
+        let mut names: Vec<&str> = SpanKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), SpanKind::ALL.len());
+        let mut cn: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        cn.sort_unstable();
+        cn.dedup();
+        assert_eq!(cn.len(), Counter::ALL.len());
+    }
+}

@@ -1,0 +1,317 @@
+//! The telemetry layer: metrics registry, hot-path span timing with
+//! Perfetto export, and campaign liveness (DESIGN.md §Observability).
+//!
+//! Everything hangs off a cheap, clonable [`Telemetry`] handle that is
+//! **explicitly plumbed** — no globals — and compiles to near-zero cost
+//! when disabled: the handle is then a `None`, [`Telemetry::start`]
+//! returns `None` without reading a clock, and every record call
+//! returns on the first branch. The non-negotiable invariant is that
+//! telemetry is *observation-only*: simulation outputs are
+//! byte-identical with telemetry on or off, and wall-clock readings
+//! live only in measure-grade sinks (`telemetry.json`, trace files,
+//! `BENCH_*.json`), never in spec-hash- or output-relevant state
+//! (asserted in `rust/tests/telemetry.rs`).
+//!
+//! * [`metrics`] — counters, gauges, log-bucketed histograms
+//!   (p50/p90/p99 without storing samples).
+//! * [`trace`] — bounded span buffer + Chrome trace-event JSON export
+//!   (`simulate --trace out.json`, loadable in Perfetto).
+//! * [`heartbeat`] — per-run worker liveness files behind
+//!   `campaign status`.
+//!
+//! # Examples
+//!
+//! ```
+//! use accasim::telemetry::{SpanKind, Telemetry};
+//!
+//! let tel = Telemetry::enabled();
+//! let t0 = tel.start(); // None on a disabled handle: no clock read
+//! // ... timed work ...
+//! tel.span(SpanKind::DispatchCycle, t0, 3 /* queue_len */);
+//! let summary = tel.summary().unwrap();
+//! assert_eq!(summary.dispatch_count, 1);
+//! ```
+
+pub mod heartbeat;
+pub mod metrics;
+pub mod trace;
+
+pub use heartbeat::{read_last, Heartbeat, HeartbeatWriter, DEFAULT_STALE_AFTER_SECS, HEARTBEAT_FILE};
+pub use metrics::{Counter, Histogram, MetricsRegistry, SpanKind};
+pub use trace::{TraceEvent, Tracer};
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Shared instrumentation state behind one enabled handle.
+#[derive(Debug)]
+struct Inner {
+    /// Trace timestamps are offsets from this construction-time origin.
+    epoch: Instant,
+    reg: RefCell<MetricsRegistry>,
+    tracer: Option<RefCell<Tracer>>,
+}
+
+/// The instrumentation handle threaded through the simulator.
+///
+/// Clones share one registry/tracer (`Rc`), so the campaign runner, the
+/// resource manager and the dispatcher all feed the same per-run
+/// metrics. The handle is deliberately `!Send` — like the simulator
+/// core itself, it is built and consumed inside one worker.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Rc<Inner>>,
+}
+
+impl Telemetry {
+    /// The no-op handle (the default): every call is a cheap early
+    /// return and [`Telemetry::start`] never reads the clock.
+    pub fn disabled() -> Self {
+        Telemetry { inner: None }
+    }
+
+    /// An enabled handle collecting metrics (no trace buffer).
+    pub fn enabled() -> Self {
+        Telemetry {
+            inner: Some(Rc::new(Inner {
+                epoch: Instant::now(),
+                reg: RefCell::new(MetricsRegistry::default()),
+                tracer: None,
+            })),
+        }
+    }
+
+    /// An enabled handle that also buffers spans for Chrome-trace
+    /// export ([`Telemetry::chrome_trace`]).
+    pub fn with_trace() -> Self {
+        Telemetry {
+            inner: Some(Rc::new(Inner {
+                epoch: Instant::now(),
+                reg: RefCell::new(MetricsRegistry::default()),
+                tracer: Some(RefCell::new(Tracer::default())),
+            })),
+        }
+    }
+
+    /// Whether this handle records anything.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Begin a span: the start instant, or `None` when disabled (the
+    /// one branch instrumented hot loops pay; no clock read, no side
+    /// effects).
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        self.inner.as_ref().map(|_| Instant::now())
+    }
+
+    /// Finish a span begun with [`Telemetry::start`]: records its
+    /// duration histogram entry and, when tracing, a trace event.
+    /// No-op when `t0` is `None`.
+    #[inline]
+    pub fn span(&self, kind: SpanKind, t0: Option<Instant>, arg: u64) {
+        if let Some(t0) = t0 {
+            let dur_ns = t0.elapsed().as_nanos() as u64;
+            self.span_with(kind, t0, dur_ns, arg);
+        }
+    }
+
+    /// Finish a span whose duration the caller already measured (used
+    /// where one clock reading feeds both telemetry and a pre-existing
+    /// measure field, so the two never disagree). No-op when disabled.
+    pub fn span_with(&self, kind: SpanKind, t0: Instant, dur_ns: u64, arg: u64) {
+        let Some(inner) = &self.inner else { return };
+        inner.reg.borrow_mut().record(kind, dur_ns);
+        if let Some(tracer) = &inner.tracer {
+            let ts_ns = t0.saturating_duration_since(inner.epoch).as_nanos() as u64;
+            if !tracer.borrow_mut().record(TraceEvent { kind, ts_ns, dur_ns, arg }) {
+                inner.reg.borrow_mut().count(Counter::TraceEventsDropped, 1);
+            }
+        }
+    }
+
+    /// Add `n` to a counter. No-op when disabled or `n == 0`.
+    pub fn count(&self, c: Counter, n: u64) {
+        if n == 0 {
+            return;
+        }
+        if let Some(inner) = &self.inner {
+            inner.reg.borrow_mut().count(c, n);
+        }
+    }
+
+    /// Set a named gauge. No-op when disabled.
+    pub fn gauge(&self, name: &str, v: f64) {
+        if let Some(inner) = &self.inner {
+            inner.reg.borrow_mut().set_gauge(name, v);
+        }
+    }
+
+    /// Snapshot the registry (counters + gauges + histograms).
+    /// `None` when disabled.
+    pub fn registry(&self) -> Option<MetricsRegistry> {
+        self.inner.as_ref().map(|i| i.reg.borrow().clone())
+    }
+
+    /// The headline summary (dispatch/place percentiles, index health).
+    /// `None` when disabled.
+    pub fn summary(&self) -> Option<TelemetrySummary> {
+        let inner = self.inner.as_ref()?;
+        let reg = inner.reg.borrow();
+        let dispatch = reg.histogram(SpanKind::DispatchCycle);
+        let place = reg.histogram(SpanKind::Place);
+        let sync = reg.histogram(SpanKind::JournalSync);
+        Some(TelemetrySummary {
+            dispatch_count: dispatch.count(),
+            dispatch_p50_ns: dispatch.percentile(0.50),
+            dispatch_p90_ns: dispatch.percentile(0.90),
+            dispatch_p99_ns: dispatch.percentile(0.99),
+            place_count: place.count(),
+            place_p50_ns: place.percentile(0.50),
+            place_p99_ns: place.percentile(0.99),
+            index_demotions: reg.counter(Counter::IndexDemotions),
+            journal_syncs: sync.count(),
+            journal_sync_ns: sync.sum(),
+            journal_replayed_entries: reg.counter(Counter::JournalReplayedEntries),
+            journal_rebuilds: reg.counter(Counter::JournalRebuilds),
+        })
+    }
+
+    /// Full registry dump as JSON (the `telemetry.json` document).
+    /// `None` when disabled.
+    pub fn to_json(&self) -> Option<Json> {
+        let inner = self.inner.as_ref()?;
+        let mut doc = inner.reg.borrow().to_json();
+        if let (Some(tracer), Json::Obj(m)) = (&inner.tracer, &mut doc) {
+            m.insert(
+                "trace_events".to_string(),
+                Json::Num(tracer.borrow().events().len() as f64),
+            );
+        }
+        Some(doc)
+    }
+
+    /// Serialize buffered spans as Chrome trace-event JSON. `None`
+    /// unless the handle was built with [`Telemetry::with_trace`].
+    pub fn chrome_trace(&self) -> Option<String> {
+        let inner = self.inner.as_ref()?;
+        Some(inner.tracer.as_ref()?.borrow().to_chrome_json())
+    }
+}
+
+/// The headline per-run telemetry block (folded into `BENCH_*.json`
+/// cells and printed after `simulate --trace`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TelemetrySummary {
+    /// Dispatch cycles timed.
+    pub dispatch_count: u64,
+    /// Median dispatch-cycle duration, ns.
+    pub dispatch_p50_ns: u64,
+    /// 90th-percentile dispatch-cycle duration, ns.
+    pub dispatch_p90_ns: u64,
+    /// 99th-percentile dispatch-cycle duration, ns.
+    pub dispatch_p99_ns: u64,
+    /// `Allocator::place` calls timed.
+    pub place_count: u64,
+    /// Median placement duration, ns.
+    pub place_p50_ns: u64,
+    /// 99th-percentile placement duration, ns.
+    pub place_p99_ns: u64,
+    /// Naive-path demotions (stale/foreign shape ids; see
+    /// [`Counter::IndexDemotions`]).
+    pub index_demotions: u64,
+    /// Availability-index journal syncs that did work.
+    pub journal_syncs: u64,
+    /// Total nanoseconds spent in journal syncs.
+    pub journal_sync_ns: u64,
+    /// Journal entries replayed across all syncs.
+    pub journal_replayed_entries: u64,
+    /// Full per-shape rebuilds forced by journal compaction.
+    pub journal_rebuilds: u64,
+}
+
+impl TelemetrySummary {
+    /// Serialize as the `"telemetry"` block of a `BENCH_*.json` cell.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: u64| {
+            m.insert(k.to_string(), Json::Num(v as f64));
+        };
+        put("dispatch_count", self.dispatch_count);
+        put("dispatch_p50_ns", self.dispatch_p50_ns);
+        put("dispatch_p90_ns", self.dispatch_p90_ns);
+        put("dispatch_p99_ns", self.dispatch_p99_ns);
+        put("place_count", self.place_count);
+        put("place_p50_ns", self.place_p50_ns);
+        put("place_p99_ns", self.place_p99_ns);
+        put("index_demotions", self.index_demotions);
+        put("journal_syncs", self.journal_syncs);
+        put("journal_sync_ns", self.journal_sync_ns);
+        put("journal_replayed_entries", self.journal_replayed_entries);
+        put("journal_rebuilds", self.journal_rebuilds);
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let tel = Telemetry::disabled();
+        assert!(!tel.is_enabled());
+        assert!(tel.start().is_none());
+        tel.span(SpanKind::DispatchCycle, None, 0);
+        tel.count(Counter::IndexDemotions, 5);
+        tel.gauge("x", 1.0);
+        assert!(tel.summary().is_none());
+        assert!(tel.to_json().is_none());
+        assert!(tel.chrome_trace().is_none());
+        assert!(!Telemetry::default().is_enabled());
+    }
+
+    #[test]
+    fn clones_share_one_registry() {
+        let tel = Telemetry::enabled();
+        let other = tel.clone();
+        other.count(Counter::IndexDemotions, 2);
+        tel.count(Counter::IndexDemotions, 1);
+        assert_eq!(tel.summary().unwrap().index_demotions, 3);
+        assert!(tel.chrome_trace().is_none(), "enabled() has no tracer");
+    }
+
+    #[test]
+    fn spans_record_histograms_and_trace_events() {
+        let tel = Telemetry::with_trace();
+        let t0 = tel.start().expect("enabled handle returns a start instant");
+        tel.span(SpanKind::Place, Some(t0), 8);
+        tel.span_with(SpanKind::DispatchCycle, t0, 1_234, 3);
+        let s = tel.summary().unwrap();
+        assert_eq!(s.place_count, 1);
+        assert_eq!(s.dispatch_count, 1);
+        assert_eq!(s.dispatch_p50_ns, 1_234);
+        let trace = tel.chrome_trace().unwrap();
+        let v = Json::parse(&trace).unwrap();
+        assert_eq!(v.get("traceEvents").unwrap().as_arr().unwrap().len(), 2);
+        let j = tel.to_json().unwrap();
+        assert_eq!(j.get("trace_events").unwrap().as_u64(), Some(2));
+        assert!(j.get("spans").unwrap().get("allocator_place").is_some());
+    }
+
+    #[test]
+    fn summary_json_has_the_bench_fields() {
+        let tel = Telemetry::enabled();
+        let t0 = tel.start();
+        tel.span(SpanKind::DispatchCycle, t0, 0);
+        let j = tel.summary().unwrap().to_json();
+        for key in ["dispatch_p50_ns", "dispatch_p99_ns", "index_demotions", "journal_sync_ns"] {
+            assert!(j.get(key).is_some(), "summary JSON missing {key}");
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Telemetry invariants (DESIGN.md §Observability).
+//!
+//! Two families of guarantees:
+//!
+//! 1. **Observation-only** — simulations and whole campaigns executed with
+//!    telemetry disabled, enabled, and enabled-with-tracing must produce
+//!    byte-identical outputs (including under a failure-storm scenario);
+//!    at the campaign level the *only* store difference is the presence
+//!    of `telemetry.json`.
+//! 2. **Valid traces & live status** — `chrome_trace()` parses as Chrome
+//!    trace-event JSON with complete (`ph == "X"`) events, placements
+//!    nested inside their dispatch cycles and cycles disjoint in time;
+//!    `campaign status` classifies runs into done/active/stale/pending by
+//!    heartbeat age.
+
+use accasim::addons::FailureInjector;
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::rng::Pcg64;
+use accasim::sim::{SimOptions, SimOutput, Simulator};
+use accasim::telemetry::{SpanKind, Telemetry, DEFAULT_STALE_AFTER_SECS, HEARTBEAT_FILE};
+use accasim::testkit::arb_jobs;
+use accasim::testutil as tempfile;
+use accasim::util::json::Json;
+use accasim::workload::Job;
+
+/// Render the deterministic portion of a run: the full jobs.csv bytes plus
+/// the timing-free perf columns (dispatch/other ns and RSS are wall-clock
+/// noise and excluded by design — same rule as `rust/tests/availability_index.rs`).
+fn deterministic_bytes(out: &SimOutput) -> String {
+    let mut s = String::from("jobs.csv\n");
+    for j in &out.jobs {
+        s.push_str(&j.to_csv());
+        s.push('\n');
+    }
+    s.push_str("perf(t,queue,running,started)\n");
+    for p in &out.perf {
+        s.push_str(&format!("{},{},{},{}\n", p.t, p.queue_len, p.running, p.started));
+    }
+    s.push_str(&format!(
+        "completed={} rejected={} makespan={} slowdown_sum={} wait_sum={} max_queue={}\n",
+        out.jobs_completed,
+        out.jobs_rejected,
+        out.makespan,
+        out.slowdown_sum,
+        out.wait_sum,
+        out.max_queue
+    ));
+    s
+}
+
+fn run_with_telemetry(jobs: Vec<Job>, sys: SysConfig, label: &str, tel: Telemetry) -> SimOutput {
+    let opts = SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        mem_sample_secs: 0,
+        telemetry: tel,
+        ..Default::default()
+    };
+    let mut sim = Simulator::from_jobs(jobs, sys, dispatcher_from_label(label).unwrap(), opts);
+    sim.run().expect("simulation completes")
+}
+
+/// Byte identity across the telemetry toggle, for every dispatcher family:
+/// metrics collection and span tracing must not change a single result.
+#[test]
+fn simulations_are_byte_identical_with_telemetry_on() {
+    let mut rng = Pcg64::new(0x7E1E);
+    let jobs = arb_jobs(&mut rng, 120, 12, 3);
+    let sys = SysConfig::homogeneous("tel", 6, &[("core", 8), ("gpu", 1), ("mem", 64)], 0);
+    for label in ["FIFO-FF", "SJF-BF", "LJF-WF", "EBF-FF", "CBF-FF", "FIFO_RND-FF"] {
+        let off = run_with_telemetry(jobs.clone(), sys.clone(), label, Telemetry::disabled());
+        let on = run_with_telemetry(jobs.clone(), sys.clone(), label, Telemetry::enabled());
+        let traced_tel = Telemetry::with_trace();
+        let traced =
+            run_with_telemetry(jobs.clone(), sys.clone(), label, traced_tel.clone());
+        assert_eq!(
+            deterministic_bytes(&off),
+            deterministic_bytes(&on),
+            "{label}: metrics collection changed simulation results"
+        );
+        assert_eq!(
+            deterministic_bytes(&off),
+            deterministic_bytes(&traced),
+            "{label}: span tracing changed simulation results"
+        );
+        assert!(off.jobs_completed > 0, "{label}: degenerate case");
+        // and the observation actually observed something
+        let s = traced_tel.summary().unwrap();
+        assert!(s.dispatch_count >= traced.time_points, "{label}: cycles not timed");
+        assert!(s.place_count > 0, "{label}: placements not timed");
+    }
+}
+
+/// Same guarantee under capacity perturbations: a failure storm drives the
+/// availability-index journal and the addon wake path while telemetry
+/// watches both.
+#[test]
+fn failure_storms_are_byte_identical_with_telemetry_on() {
+    let mut rng = Pcg64::new(0x5708);
+    let jobs = arb_jobs(&mut rng, 80, 8, 2);
+    let sys = SysConfig::homogeneous("telf", 4, &[("core", 8), ("mem", 64)], 0);
+    let run = |tel: Telemetry| {
+        let opts = SimOptions {
+            output: OutputCollector::in_memory(true, true),
+            addons: vec![Box::new(FailureInjector::new(vec![
+                (0, 100, 5_000),
+                (1, 2_000, 20_000),
+                (2, 100, 3_000),
+            ]))],
+            mem_sample_secs: 0,
+            telemetry: tel,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(
+            jobs.clone(),
+            sys.clone(),
+            dispatcher_from_label("FIFO-FF").unwrap(),
+            opts,
+        );
+        sim.run().expect("simulation completes")
+    };
+    let off = run(Telemetry::disabled());
+    let tel = Telemetry::with_trace();
+    let on = run(tel.clone());
+    assert_eq!(deterministic_bytes(&off), deterministic_bytes(&on));
+    assert_eq!(off.addon_wakes, on.addon_wakes);
+    let reg = tel.registry().unwrap();
+    assert!(
+        reg.histogram(SpanKind::AddonUpdate).count() > 0,
+        "failure windows must drive timed addon updates"
+    );
+    assert!(
+        tel.summary().unwrap().journal_syncs > 0,
+        "node down/up transitions must drive timed journal syncs"
+    );
+}
+
+/// Campaign-level observation-only: the same matrix executed with
+/// telemetry on and off leaves stores that differ in exactly one way —
+/// the presence of `telemetry.json`.
+#[test]
+fn campaign_store_differs_only_by_telemetry_json() {
+    use accasim::campaign::{Campaign, CampaignSpec};
+    let tmp = tempfile::tempdir().unwrap();
+    let spec = || {
+        let mut s = CampaignSpec::new("abtel");
+        s.add_trace("seth", 0.0005).add_system_trace("seth");
+        s.add_dispatcher("FIFO-FF").add_dispatcher("SJF-BF");
+        s.seeds = vec![1, 2];
+        s
+    };
+    let dir_on = tmp.path().join("on");
+    let dir_off = tmp.path().join("off");
+    let rep_on = Campaign::new(spec(), &dir_on).telemetry(true).run().unwrap();
+    let rep_off = Campaign::new(spec(), &dir_off).telemetry(false).run().unwrap();
+    assert_eq!(rep_on.records.len(), 4);
+    assert_eq!(rep_on.records.len(), rep_off.records.len());
+
+    let read = |p: &std::path::Path| std::fs::read_to_string(p).unwrap();
+    for file in ["summary.csv", "index.json", "plots/fig10_slowdown.csv", "plots/fig11_queue.csv"]
+    {
+        assert_eq!(
+            read(&dir_on.join(file)),
+            read(&dir_off.join(file)),
+            "{file} must not depend on telemetry"
+        );
+    }
+    for rec in &rep_on.records {
+        let run = |d: &std::path::Path| d.join("runs").join(&rec.run_id);
+        assert_eq!(
+            read(&run(&dir_on).join("jobs.csv")),
+            read(&run(&dir_off).join("jobs.csv")),
+            "{}: jobs.csv must not depend on telemetry",
+            rec.run_id
+        );
+        let strip = |text: String| {
+            // keep the deterministic perf columns: t,queue_len,running,started
+            text.lines()
+                .skip(1)
+                .map(|l| {
+                    let f: Vec<&str> = l.split(',').collect();
+                    format!("{},{},{},{}", f[0], f[3], f[4], f[5])
+                })
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(
+            strip(read(&run(&dir_on).join("perf.csv"))),
+            strip(read(&run(&dir_off).join("perf.csv"))),
+            "{}: perf.csv deterministic columns diverged",
+            rec.run_id
+        );
+        // the single store difference
+        assert!(run(&dir_on).join("telemetry.json").exists(), "{}", rec.run_id);
+        assert!(!run(&dir_off).join("telemetry.json").exists(), "{}", rec.run_id);
+        let doc = Json::parse(&read(&run(&dir_on).join("telemetry.json"))).unwrap();
+        assert!(doc.get("counters").is_some() && doc.get("spans").is_some());
+    }
+}
+
+/// The exported trace is valid Chrome trace-event JSON whose spans nest
+/// and order the way the synchronous call stack says they must:
+/// dispatch cycles disjoint and time-ordered, every allocator placement
+/// inside some dispatch cycle.
+#[test]
+fn chrome_trace_parses_and_spans_nest() {
+    let mut rng = Pcg64::new(0x7ACE);
+    let jobs = arb_jobs(&mut rng, 60, 6, 2);
+    let sys = SysConfig::homogeneous("tr", 4, &[("core", 8), ("mem", 64)], 0);
+    let tel = Telemetry::with_trace();
+    run_with_telemetry(jobs, sys, "FIFO-FF", tel.clone());
+
+    let text = tel.chrome_trace().expect("with_trace() buffers spans");
+    let doc = Json::parse(&text).expect("chrome trace is valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ns"));
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "an instrumented run must emit events");
+    for ev in events {
+        assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"), "complete spans only");
+        assert_eq!(ev.get("cat").unwrap().as_str(), Some("sim"));
+        assert_eq!(ev.get("pid").unwrap().as_u64(), Some(1));
+        assert_eq!(ev.get("tid").unwrap().as_u64(), Some(1));
+        assert!(ev.get("ts").unwrap().as_f64().is_some());
+        assert!(ev.get("dur").unwrap().as_f64().is_some());
+        assert!(ev.get("args").unwrap().as_obj().is_some());
+    }
+
+    // [start, end] in µs, as the viewer reads them
+    let span = |ev: &Json| -> (f64, f64) {
+        let ts = ev.get("ts").unwrap().as_f64().unwrap();
+        (ts, ts + ev.get("dur").unwrap().as_f64().unwrap())
+    };
+    let named = |n: &str| -> Vec<(f64, f64)> {
+        events
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str() == Some(n))
+            .map(span)
+            .collect()
+    };
+    let mut cycles = named("dispatch_cycle");
+    assert!(!cycles.is_empty());
+    cycles.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // sequential hot loop ⇒ cycles are disjoint and time-ordered
+    const EPS: f64 = 1e-6; // 0.001 ns in µs: serialization rounding headroom
+    for w in cycles.windows(2) {
+        assert!(w[0].1 <= w[1].0 + EPS, "dispatch cycles overlap: {w:?}");
+    }
+    let places = named("allocator_place");
+    assert!(!places.is_empty());
+    for p in &places {
+        assert!(
+            cycles.iter().any(|c| c.0 - EPS <= p.0 && p.1 <= c.1 + EPS),
+            "placement span {p:?} escapes every dispatch cycle"
+        );
+    }
+}
+
+/// `campaign status` heartbeat classification through the public API:
+/// fresh heartbeat → active (with per-run progress), old heartbeat →
+/// stale under the documented 30 s default, threshold adjustable.
+#[test]
+fn campaign_status_classifies_by_heartbeat_age() {
+    use accasim::campaign::{Campaign, CampaignSpec};
+    let tmp = tempfile::tempdir().unwrap();
+    let spec = || {
+        let mut s = CampaignSpec::new("hb");
+        s.add_trace("seth", 0.0005).add_system_trace("seth").add_dispatcher("FIFO-FF");
+        s.seeds = vec![1, 2];
+        s
+    };
+    let out = tmp.path().join("out");
+    let campaign = Campaign::new(spec(), &out);
+    let st = campaign.status().unwrap();
+    assert_eq!(
+        (st.total, st.done, st.active.len(), st.stale.len(), st.pending.len()),
+        (2, 0, 0, 0, 2),
+        "an untouched campaign is all pending"
+    );
+
+    // hand-write heartbeats: one fresh, one 60 s old
+    let now_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_millis() as u64;
+    let dirs: Vec<_> = st.pending.iter().map(|id| out.join("runs").join(id)).collect();
+    for d in &dirs {
+        std::fs::create_dir_all(d).unwrap();
+    }
+    std::fs::write(dirs[0].join(HEARTBEAT_FILE), format!("{now_ms} 500 12\n")).unwrap();
+    std::fs::write(dirs[1].join(HEARTBEAT_FILE), format!("{} 200 3\n", now_ms - 60_000))
+        .unwrap();
+
+    assert_eq!(DEFAULT_STALE_AFTER_SECS, 30, "the documented default threshold");
+    let st = campaign.status().unwrap(); // default threshold
+    assert_eq!((st.active.len(), st.stale.len(), st.pending.len()), (1, 1, 0));
+    assert_eq!((st.active[0].sim_time, st.active[0].points), (500, 12));
+    assert_eq!((st.stale[0].sim_time, st.stale[0].points), (200, 3));
+    assert!(st.stale[0].age_secs >= 59, "age {} s", st.stale[0].age_secs);
+    // a wider threshold flips the old heartbeat back to active
+    let st = campaign.status_with(120).unwrap();
+    assert_eq!((st.active.len(), st.stale.len()), (2, 0));
+    // completing the campaign wins over any leftover liveness files
+    let report = Campaign::new(spec(), &out).run().unwrap();
+    assert_eq!(report.executed, 2);
+    let st = campaign.status().unwrap();
+    assert_eq!((st.done, st.active.len(), st.stale.len(), st.pending.len()), (2, 0, 0, 0));
+}
