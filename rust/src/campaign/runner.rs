@@ -116,6 +116,7 @@ pub struct Campaign<'a> {
     jobs: usize,
     addon_factory: Option<AddonFactoryRef<'a>>,
     shape_index: bool,
+    backfill_profile: bool,
     checkpoint_every: u64,
     telemetry: bool,
     #[cfg(test)]
@@ -131,6 +132,7 @@ impl<'a> Campaign<'a> {
             jobs: 1,
             addon_factory: None,
             shape_index: true,
+            backfill_profile: true,
             checkpoint_every: 0,
             telemetry: true,
             #[cfg(test)]
@@ -182,6 +184,17 @@ impl<'a> Campaign<'a> {
     /// index on and off and asserts byte-identical stores.
     pub fn shape_index(mut self, on: bool) -> Self {
         self.shape_index = on;
+        self
+    }
+
+    /// Toggle the incremental backfilling profile
+    /// ([`SimOptions::use_backfill_profile`]) for every run. An execution
+    /// knob outside the spec identity, like [`Campaign::shape_index`]:
+    /// results are identical either way by construction —
+    /// `rust/tests/backfill_profile.rs` runs the same campaign with the
+    /// profile on and off and asserts byte-identical stores.
+    pub fn backfill_profile(mut self, on: bool) -> Self {
+        self.backfill_profile = on;
         self
     }
 
@@ -247,6 +260,7 @@ impl<'a> Campaign<'a> {
             // The store sink consumes the event log; no in-memory records.
             output: OutputCollector::null(),
             use_shape_index: self.shape_index,
+            use_backfill_profile: self.backfill_profile,
             retain_log: self.checkpoint_every > 0,
             telemetry: if self.telemetry { Telemetry::enabled() } else { Telemetry::disabled() },
             ..Default::default()

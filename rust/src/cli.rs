@@ -84,15 +84,20 @@ COMMANDS:
   traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
   table1   [--scale 0.05] [--dir data] [--reps 3] [--out results/table1.csv]
   table2   [--scale 0.05] [--dir data] [--reps 1] [--out results/table2.csv]
-  perf-smoke [--nodes 512,2048] [--dispatchers FIFO-FF,SJF-FF]
-           [--jobs 50000] [--seed 1] [--out results/BENCH_7.json]
+  perf-smoke [--nodes 512,2048] [--dispatchers FIFO-FF,SJF-FF,EBF-FF,CBF-FF]
+           [--jobs 50000] [--seed 1] [--out results/BENCH_8.json]
+           [--deep-dispatchers EBF-FF,CBF-FF] [--deep-jobs JOBS/5]
+           [--no-backfill-profile]
            dispatch-hot-path smoke over a nodes × dispatchers sweep:
            each cell simulates a synthetic oversubscribed workload with
            telemetry on and records machine-readable timings (wall_s,
            dispatch_ns, time_points, max_rss_kb) plus a telemetry
            summary (span percentiles, index counters) for the perf
-           trajectory tracked in CI. --dispatcher LABEL (singular)
-           restricts the sweep to one dispatcher
+           trajectory tracked in CI. A deep-queue regime (2x
+           oversubscription, smallest node count) additionally stresses
+           the backfilling dispatchers; --no-backfill-profile forces
+           the naive oracle path for A/B timing. --dispatcher LABEL
+           (singular) restricts the sweep to one dispatcher
   bench-check <prev.json> <curr.json> [--max-regress 0.25]
            compare two perf-smoke outputs cell by cell (matched on
            bench/dispatcher/nodes/jobs/seed): exits non-zero when any
@@ -891,15 +896,19 @@ fn table1(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Synthesize the perf-smoke workload: `jobs` jobs against a `nodes`-node
-/// system, ~15% oversubscribed so a queue forms and the dispatcher's
-/// blocked-head path is exercised, drawing from a handful of request
-/// shapes (the regime the shape-interned availability index is built for —
-/// real SWF workloads cluster the same way, DESIGN.md §Perf).
+/// system, oversubscribed by `oversub` (~15% in the standard regime) so a
+/// queue forms and the dispatcher's blocked-head path is exercised,
+/// drawing from a handful of request shapes (the regime the shape-interned
+/// availability index is built for — real SWF workloads cluster the same
+/// way, DESIGN.md §Perf). The deep-queue regime pushes `oversub` to 2× so
+/// backfilling dispatchers carry a long blocked queue over many running
+/// jobs — the case the incremental availability profile targets.
 fn perf_smoke_jobs(
     nodes: u64,
     cores_per_node: u64,
     jobs: u64,
     seed: u64,
+    oversub: f64,
 ) -> Vec<accasim::workload::Job> {
     use accasim::rng::Pcg64;
     let mut rng = Pcg64::new(seed ^ 0x5E1F_50B5);
@@ -907,7 +916,7 @@ fn perf_smoke_jobs(
     let total_cores = (nodes * cores_per_node) as f64;
     // E[slots] ≈ 0.5·1 + 0.5·mean(2,4,8,16,32,64) ≈ 11; E[dur] = 3630 s
     let mean_work = 11.0 * 3630.0;
-    let gap = mean_work / (total_cores * 1.15);
+    let gap = mean_work / (total_cores * oversub);
     let mut t = 0.0f64;
     (1..=jobs)
         .map(|id| {
@@ -946,11 +955,13 @@ fn perf_smoke_cell(
     jobs: u64,
     seed: u64,
     dispatcher: &str,
+    deep: bool,
+    backfill_profile: bool,
 ) -> anyhow::Result<accasim::util::json::Json> {
     use accasim::util::json::Json;
     const CORES: u64 = 16;
     let sys = SysConfig::homogeneous("perfsmoke", nodes, &[("core", CORES), ("mem", 65_536)], 0);
-    let workload = perf_smoke_jobs(nodes, CORES, jobs, seed);
+    let workload = perf_smoke_jobs(nodes, CORES, jobs, seed, if deep { 2.0 } else { 1.15 });
     let d = dispatcher_from_label(dispatcher)?;
     let tel = Telemetry::enabled();
     let opts = SimOptions {
@@ -958,13 +969,17 @@ fn perf_smoke_cell(
         mem_sample_secs: 300,
         seed,
         telemetry: tel.clone(),
+        use_backfill_profile: backfill_profile,
         ..Default::default()
     };
     let mut sim = Simulator::from_jobs(workload, sys, d, opts);
     let o = sim.run()?;
 
     let mut m = std::collections::BTreeMap::new();
-    m.insert("bench".to_string(), Json::Str("perf_smoke".to_string()));
+    // the regime is part of the bench-check cell identity: deep-queue cells
+    // pair with deep-queue baseline cells, never with standard ones
+    let bench = if deep { "perf_smoke_deep" } else { "perf_smoke" };
+    m.insert("bench".to_string(), Json::Str(bench.to_string()));
     m.insert("dispatcher".to_string(), Json::Str(o.dispatcher.clone()));
     m.insert("nodes".to_string(), Json::Num(nodes as f64));
     m.insert("jobs".to_string(), Json::Num(jobs as f64));
@@ -992,8 +1007,9 @@ fn perf_smoke_cell(
         m.insert("telemetry".to_string(), s.to_json());
     }
     println!(
-        "perf-smoke {dispatcher}: {} nodes × {} jobs → {} completed in {:.2}s wall \
+        "perf-smoke{} {dispatcher}: {} nodes × {} jobs → {} completed in {:.2}s wall \
          (dispatch {:.1} ms over {} points, {:.0} ns/point, peak RSS {} KB)",
+        if deep { " [deep]" } else { "" },
         nodes,
         jobs,
         o.jobs_completed,
@@ -1008,11 +1024,16 @@ fn perf_smoke_cell(
 
 /// Perf smoke: a nodes × dispatchers sweep of large-system simulations
 /// with machine-readable output — the CI-tracked perf trajectory
-/// (`results/BENCH_7.json`, compared cell by cell against the previous run
+/// (`results/BENCH_8.json`, compared cell by cell against the previous run
 /// by `bench-check`). Each cell runs with telemetry enabled and embeds its
 /// span-percentile summary; the dispatch timing gated by `bench-check` is
 /// therefore measured *with* spans on, keeping the observation overhead
-/// itself on the perf trajectory.
+/// itself on the perf trajectory. Besides the standard ~15%-oversubscribed
+/// sweep, a deep-queue regime (2× oversubscription on the smallest node
+/// count) exercises the backfilling dispatchers against long blocked
+/// queues — the cells the incremental availability profile is gated on.
+/// `--no-backfill-profile` forces every cell onto the naive oracle path
+/// for A/B timing.
 fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     use accasim::util::json::Json;
     let nodes_list = args.get("nodes", "512,2048");
@@ -1021,9 +1042,12 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     // --dispatcher (singular) narrows the sweep to one dispatcher
     let dispatchers = match args.get_opt("dispatcher") {
         Some(one) => one,
-        None => args.get("dispatchers", "FIFO-FF,SJF-FF"),
+        None => args.get("dispatchers", "FIFO-FF,SJF-FF,EBF-FF,CBF-FF"),
     };
-    let out_path = PathBuf::from(args.get("out", "results/BENCH_7.json"));
+    let deep_dispatchers = args.get("deep-dispatchers", "EBF-FF,CBF-FF");
+    let deep_jobs: u64 = args.get_parse("deep-jobs", jobs / 5)?;
+    let backfill_profile = !args.flag("no-backfill-profile");
+    let out_path = PathBuf::from(args.get("out", "results/BENCH_8.json"));
     args.reject_unknown()?;
     let nodes_axis = nodes_list
         .split(',')
@@ -1038,7 +1062,23 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     let mut cells = Vec::new();
     for &nodes in &nodes_axis {
         for dispatcher in &disp_axis {
-            cells.push(perf_smoke_cell(nodes, jobs, seed, dispatcher)?);
+            cells.push(perf_smoke_cell(nodes, jobs, seed, dispatcher, false, backfill_profile)?);
+        }
+    }
+    // Deep-queue regime: smallest system only (queue depth, not node count,
+    // is the variable under test) and a reduced job count to keep the
+    // quadratic-prone naive baseline runnable.
+    if deep_jobs > 0 && !deep_dispatchers.trim().is_empty() {
+        let deep_nodes = *nodes_axis.iter().min().unwrap();
+        for dispatcher in deep_dispatchers.split(',').map(str::trim) {
+            cells.push(perf_smoke_cell(
+                deep_nodes,
+                deep_jobs,
+                seed,
+                dispatcher,
+                true,
+                backfill_profile,
+            )?);
         }
     }
     let mut doc = std::collections::BTreeMap::new();

@@ -29,6 +29,7 @@ pub struct FirstFit {
 }
 
 impl FirstFit {
+    /// First-Fit allocator.
     pub fn new() -> Self {
         Self::default()
     }
@@ -59,6 +60,7 @@ pub struct BestFit {
 }
 
 impl BestFit {
+    /// Best-Fit allocator (busiest feasible node first).
     pub fn new() -> Self {
         Self::default()
     }
@@ -94,6 +96,7 @@ pub struct WorstFit {
 }
 
 impl WorstFit {
+    /// Worst-Fit allocator (least busy feasible node first).
     pub fn new() -> Self {
         Self::default()
     }

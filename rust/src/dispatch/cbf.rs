@@ -20,9 +20,16 @@ struct Profile {
 
 impl Profile {
     /// Build from the live manager plus the estimated completions of the
-    /// running jobs.
+    /// running jobs. The incremental profile index supplies the checkpoint
+    /// list in O(breakpoints) when it covers the running set; otherwise the
+    /// naive per-job rebuild below remains the in-tree oracle.
     fn new(view: &SystemView, rm: &ResourceManager) -> Self {
         let types = rm.num_types();
+        let mut times = Vec::new();
+        let mut frees = Vec::new();
+        if rm.profile_snapshot(view.now, view.running.len(), &mut times, &mut frees) {
+            return Profile { times, frees, types };
+        }
         let mut events: Vec<(u64, usize)> = view
             .running
             .iter()
@@ -34,7 +41,12 @@ impl Profile {
         let mut frees = vec![rm.free_matrix().to_vec()];
         for (t, i) in events {
             let r = &view.running[i];
-            let Some(alloc) = rm.allocation_of(r.job.id) else { continue };
+            let Some(alloc) = rm.allocation_of(r.job.id) else {
+                // A running job with no live allocation is a desync the
+                // profile used to paper over optimistically — surface it.
+                rm.note_cbf_profile_skip();
+                continue;
+            };
             let mut next = frees.last().unwrap().clone();
             for &(node, slots) in &alloc.slices {
                 let base = node as usize * types;
@@ -144,6 +156,7 @@ impl Profile {
 pub struct ConservativeBackfilling;
 
 impl ConservativeBackfilling {
+    /// Conservative backfilling (every queued job gets a reservation).
     pub fn new() -> Self {
         Self
     }

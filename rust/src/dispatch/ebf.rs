@@ -11,7 +11,7 @@
 
 use super::allocators::place_in_matrix;
 use super::{Allocator, Decision, Scheduler, SystemView};
-use crate::resources::ResourceManager;
+use crate::resources::{ProfileProbe, ResourceManager, ShadowState};
 use crate::workload::Job;
 
 /// EASY backfilling scheduler with configurable base priority (FIFO in the
@@ -27,9 +27,18 @@ pub struct EasyBackfilling {
     order: Vec<u32>,
     /// Scratch: allocator node order for the past-reservation backfill path.
     node_buf: Vec<u32>,
+    /// Scratch: (estimated end, running index) events for the naive shadow
+    /// replay (the oracle path when the profile index demotes).
+    events_buf: Vec<(u64, u32)>,
+    /// Scratch: free matrix at the reservation time with the head's greedy
+    /// reservation deducted.
+    free_after_buf: Vec<u64>,
+    /// Scratch: shadow free state, refilled (not reallocated) per cycle.
+    shadow: ShadowState,
 }
 
 impl EasyBackfilling {
+    /// EASY backfilling with the paper's FIFO base priority.
     pub fn new() -> Self {
         Self::default()
     }
@@ -53,38 +62,50 @@ impl EasyBackfilling {
     }
 
     /// Earliest (estimated) time the head job fits, simulated over the
-    /// release of running jobs; returns the shadow free matrix at that time
-    /// with the head's reservation deducted. `None` when the head can never
-    /// fit (should have been rejected upstream).
+    /// release of running jobs; leaves the shadow free matrix at that time —
+    /// with the head's reservation deducted — in `self.free_after_buf`.
+    /// `None` when the head can never fit (should have been rejected
+    /// upstream). Answered in O(log running) by the incremental profile
+    /// index when it covers the running set; otherwise falls back to the
+    /// naive shadow replay, which doubles as the in-tree oracle.
     fn reserve_head(
-        &self,
+        &mut self,
         head: &Job,
         view: &SystemView,
         rm: &ResourceManager,
-    ) -> Option<(u64, Vec<u64>)> {
-        let mut shadow = rm.shadow();
+    ) -> Option<u64> {
+        match rm.profile_reserve_head(head, view.now, view.running.len(), &mut self.free_after_buf)
+        {
+            ProfileProbe::Reserved(t) => return Some(t),
+            ProfileProbe::NeverFits => return None,
+            ProfileProbe::Demoted => {}
+        }
+        rm.shadow_into(&mut self.shadow);
         // Release running jobs in estimated-completion order.
-        let mut events: Vec<(u64, usize)> = view
-            .running
-            .iter()
-            .enumerate()
-            .map(|(i, r)| (r.estimated_completion(view.now), i))
-            .collect();
-        events.sort_unstable();
+        self.events_buf.clear();
+        self.events_buf.extend(
+            view.running
+                .iter()
+                .enumerate()
+                .map(|(i, r)| (r.estimated_completion(view.now), i as u32)),
+        );
+        self.events_buf.sort_unstable();
         let mut idx = 0;
-        while idx < events.len() {
-            let t = events[idx].0;
+        while idx < self.events_buf.len() {
+            let t = self.events_buf[idx].0;
             // release every job estimated to end at t
-            while idx < events.len() && events[idx].0 == t {
-                let r = &view.running[events[idx].1];
+            while idx < self.events_buf.len() && self.events_buf[idx].0 == t {
+                let r = &view.running[self.events_buf[idx].1 as usize];
                 if let Some(alloc) = rm.allocation_of(r.job.id) {
-                    shadow.release(r.job, alloc);
+                    self.shadow.release(r.job, alloc);
                 }
                 idx += 1;
             }
-            if shadow.can_host(head) {
-                let _reservation = shadow.reserve_greedy(head)?;
-                return Some((t, shadow.free_matrix().to_vec()));
+            if self.shadow.can_host(head) {
+                self.shadow.reserve_greedy(head)?;
+                self.free_after_buf.clear();
+                self.free_after_buf.extend_from_slice(self.shadow.free_matrix());
+                return Some(t);
             }
         }
         None
@@ -133,7 +154,7 @@ impl Scheduler for EasyBackfilling {
         let head = view.queue[order[head_pos] as usize];
 
         // Phase 2: reservation for the head.
-        let Some((t_res, free_after)) = self.reserve_head(head, view, rm) else {
+        let Some(t_res) = self.reserve_head(head, view, rm) else {
             // Head can never fit even on an empty machine (oversized and not
             // filtered upstream): don't backfill past it blindly — behave
             // like plain FIFO blocking.
@@ -159,8 +180,9 @@ impl Scheduler for EasyBackfilling {
                 // both now and after the reservation takes force.
                 let free_now = rm.free_matrix();
                 self.min_matrix.clear();
-                self.min_matrix
-                    .extend(free_now.iter().zip(&free_after).map(|(a, b)| (*a).min(*b)));
+                self.min_matrix.extend(
+                    free_now.iter().zip(&self.free_after_buf).map(|(a, b)| (*a).min(*b)),
+                );
                 alloc.node_order(job, rm, &mut self.node_buf);
                 if let Some(a) = place_in_matrix(&self.node_buf, &self.min_matrix, types, job) {
                     rm.allocate(job, a.clone()).expect("min-matrix placement fits live state");

@@ -37,7 +37,9 @@ use std::collections::BTreeMap;
 /// A running job as seen by the dispatcher: the job plus its start time.
 #[derive(Debug, Clone, Copy)]
 pub struct RunningInfo<'a> {
+    /// The running job.
     pub job: &'a Job,
+    /// Simulation time the job started at.
     pub start: u64,
 }
 

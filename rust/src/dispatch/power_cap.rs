@@ -31,6 +31,9 @@ pub struct PowerCapped {
 }
 
 impl PowerCapped {
+    /// Wrap `inner` with a static power budget of `budget_w` watts,
+    /// charging each started slot `watts_per_slot` (both overridable per
+    /// cycle by published `power.*` metrics).
     pub fn new(inner: Box<dyn Scheduler>, budget_w: f64, watts_per_slot: f64) -> Self {
         PowerCapped { inner, budget_w, watts_per_slot, deferred: 0 }
     }

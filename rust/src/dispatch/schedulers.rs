@@ -129,6 +129,7 @@ impl Scheduler for SortingScheduler {
 /// First In First Out.
 pub struct FifoScheduler(SortingScheduler);
 impl FifoScheduler {
+    /// FIFO with arrival-order tie-breaking.
     pub fn new() -> Self {
         FifoScheduler(SortingScheduler::with_policy(SortPolicy::Fifo))
     }
@@ -155,6 +156,7 @@ impl Scheduler for FifoScheduler {
 /// Shortest Job First (by estimated duration).
 pub struct SjfScheduler(SortingScheduler);
 impl SjfScheduler {
+    /// SJF with arrival-order tie-breaking.
     pub fn new() -> Self {
         SjfScheduler(SortingScheduler::with_policy(SortPolicy::Sjf))
     }
@@ -181,6 +183,7 @@ impl Scheduler for SjfScheduler {
 /// Longest Job First (by estimated duration).
 pub struct LjfScheduler(SortingScheduler);
 impl LjfScheduler {
+    /// LJF with arrival-order tie-breaking.
     pub fn new() -> Self {
         LjfScheduler(SortingScheduler::with_policy(SortPolicy::Ljf))
     }
@@ -211,6 +214,7 @@ impl Scheduler for LjfScheduler {
 pub struct RejectScheduler;
 
 impl RejectScheduler {
+    /// The all-rejecting scheduler (pure simulator-overhead instrument).
     pub fn new() -> Self {
         RejectScheduler
     }

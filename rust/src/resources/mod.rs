@@ -13,9 +13,11 @@
 //! `rust/tests/availability_index.rs`.
 
 pub mod index;
+pub mod profile;
 pub mod shapes;
 
 pub use index::{AvailabilityIndex, NodeState};
+pub use profile::{ProfileIndex, ProfileProbe};
 pub use shapes::{ShapeId, ShapeTable};
 
 use crate::config::SysConfig;
@@ -76,6 +78,15 @@ pub struct ResourceManager {
     ///
     /// [`shape_for`]: ResourceManager::shape_for
     demotions: Cell<u64>,
+    /// Incremental backfilling availability profile (EBF/CBF probes);
+    /// `RefCell` because probes synchronise lazily through `&self`
+    /// methods, like the shape index above.
+    profile: RefCell<ProfileIndex>,
+    /// Running jobs the naive CBF profile skipped because their
+    /// allocation lookup failed here (`Cell`: counted from `&self`).
+    /// Observation-only — folded into
+    /// [`crate::telemetry::Counter::CbfProfileSkips`].
+    cbf_skips: Cell<u64>,
 }
 
 impl ResourceManager {
@@ -121,6 +132,8 @@ impl ResourceManager {
             type_capacity,
             tel: Telemetry::default(),
             demotions: Cell::new(0),
+            profile: RefCell::new(ProfileIndex::new(nodes, types)),
+            cbf_skips: Cell::new(0),
         }
     }
 
@@ -137,6 +150,85 @@ impl ResourceManager {
     /// end of a run.
     pub fn naive_demotions(&self) -> u64 {
         self.demotions.get()
+    }
+
+    /// Switch the incremental backfilling profile on or off
+    /// (`SimOptions::use_backfill_profile`). Disabled probes demote to
+    /// the naive oracle path silently.
+    pub fn set_backfill_profile(&mut self, on: bool) {
+        self.profile.get_mut().set_enabled(on);
+    }
+
+    /// Whether the incremental backfilling profile answers probes.
+    pub fn backfill_profile_enabled(&self) -> bool {
+        self.profile.borrow().enabled()
+    }
+
+    /// Backfill probes demoted to the naive oracle path so far. Folded
+    /// into [`crate::telemetry::Counter::ProfileDemotions`] at the end
+    /// of a run.
+    pub fn profile_demotions(&self) -> u64 {
+        self.profile.borrow().demotions()
+    }
+
+    /// Running jobs the naive CBF profile skipped over a failed
+    /// allocation lookup (see [`ResourceManager::note_cbf_profile_skip`]).
+    pub fn cbf_profile_skips(&self) -> u64 {
+        self.cbf_skips.get()
+    }
+
+    /// Record one running job the naive CBF profile could not resolve
+    /// an allocation for — a desync that used to be silently optimistic.
+    pub fn note_cbf_profile_skip(&self) {
+        self.cbf_skips.set(self.cbf_skips.get() + 1);
+    }
+
+    /// Start a dispatch round at `now`: finalise the profile
+    /// registration of jobs started in the previous round (their starts
+    /// are committed, so their estimated ends are known) and arm the
+    /// in-cycle allocation hint. The simulator calls this before every
+    /// dispatcher invocation.
+    pub fn begin_dispatch_cycle(&mut self, now: u64) {
+        self.profile.get_mut().begin_cycle(now, &self.free);
+    }
+
+    /// The EASY head-reservation probe against the incremental profile:
+    /// earliest dispatcher-clock time the head fits given estimated
+    /// releases, with `out` receiving the free matrix at that time
+    /// minus the greedy reservation — byte-identical to the naive
+    /// shadow replay, O(log running) on a synchronised cache.
+    /// `running` is the caller's view of the running-job count; any
+    /// coverage mismatch demotes to [`ProfileProbe::Demoted`].
+    pub fn profile_reserve_head(
+        &self,
+        job: &Job,
+        now: u64,
+        running: usize,
+        out: &mut Vec<u64>,
+    ) -> ProfileProbe {
+        self.profile.borrow_mut().reserve_head(
+            job.slots as u64,
+            &job.per_slot,
+            now,
+            running,
+            &self.free,
+            &self.tel,
+            out,
+        )
+    }
+
+    /// Copy the full piecewise availability profile (CBF's checkpoint
+    /// list) out of the incremental index. Returns `false` when the
+    /// index cannot answer (disabled or coverage mismatch) — the caller
+    /// falls back to the naive rebuild.
+    pub fn profile_snapshot(
+        &self,
+        now: u64,
+        running: usize,
+        times_out: &mut Vec<u64>,
+        frees_out: &mut Vec<Vec<u64>>,
+    ) -> bool {
+        self.profile.borrow_mut().snapshot_into(now, running, &self.free, times_out, frees_out)
     }
 
     /// Number of nodes.
@@ -395,7 +487,27 @@ impl ResourceManager {
             self.node_busy_slots[node as usize] += slots;
             self.index.get_mut().note_touch(node);
         }
+        let est_end = self.profile.get_mut().cycle_now().map(|t| job.estimated_completion_at(t));
+        self.profile.get_mut().on_allocate(job.id, &job.per_slot, &alloc.slices, est_end);
         self.allocations.insert(job.id, alloc);
+        Ok(())
+    }
+
+    /// Commit an allocation for a job that is *already running* with a
+    /// known `start` time (snapshot restore): besides the usual
+    /// deduction, the job is registered with the backfill profile
+    /// immediately, so the first probe of the restored run sees exactly
+    /// the breakpoints the original run had.
+    pub fn allocate_running(
+        &mut self,
+        job: &Job,
+        alloc: Allocation,
+        start: u64,
+    ) -> anyhow::Result<()> {
+        let slices = alloc.slices.clone();
+        self.allocate(job, alloc)?;
+        let end = job.estimated_completion_at(start);
+        self.profile.get_mut().promote(job.id, end, &job.per_slot, &slices, &self.free);
         Ok(())
     }
 
@@ -418,6 +530,7 @@ impl ResourceManager {
             self.node_busy_slots[node as usize] -= slots;
             self.index.get_mut().note_touch(node);
         }
+        self.profile.get_mut().on_release(job.id, &job.per_slot, &alloc.slices);
         Ok(())
     }
 
@@ -463,6 +576,15 @@ impl ResourceManager {
     pub fn shadow(&self) -> ShadowState {
         ShadowState { free: self.free.clone(), types: self.types, nodes: self.nodes }
     }
+
+    /// Refill a caller-owned [`ShadowState`] from the live free matrix
+    /// without allocating (the shadow's buffer is reused across cycles).
+    pub fn shadow_into(&self, sh: &mut ShadowState) {
+        sh.free.clear();
+        sh.free.extend_from_slice(&self.free);
+        sh.types = self.types;
+        sh.nodes = self.nodes;
+    }
 }
 
 /// Slots of `per_slot` shape fitting in a free vector.
@@ -486,7 +608,7 @@ pub fn hostable_slots_in(free: &[u64], per_slot: &[u64]) -> u64 {
 
 /// A lightweight copy of the free state used by EASY backfilling to simulate
 /// future completions without touching the live manager.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ShadowState {
     free: Vec<u64>,
     types: usize,

@@ -1,0 +1,757 @@
+//! The backfilling availability profile: future free matrices at
+//! running-job estimated end times, maintained incrementally instead of
+//! rebuilt per dispatch cycle (DESIGN.md §Backfilling profiles).
+//!
+//! EASY backfilling's `reserve_head` and conservative backfilling's
+//! `Profile::new` both answer the same question — *how much of the
+//! machine is free at each future estimated-release time?* — and before
+//! this index they re-derived it every cycle by replaying every running
+//! job over a cloned free matrix: O(running × nodes × types) per probe.
+//!
+//! [`ProfileIndex`] keeps that answer materialised:
+//!
+//! * `times` — sorted, distinct, *unclamped* estimated end times of the
+//!   registered running jobs (`refs` counts jobs per breakpoint),
+//! * `frees[i]` — the full `nodes × types` free matrix at `times[i]`:
+//!   the current free matrix plus every registered allocation whose
+//!   estimated end is ≤ `times[i]`. Rows are elementwise monotone
+//!   nondecreasing in `i` (releases only add).
+//!
+//! Mutations are **eager on the rows** (O(breakpoints × slice types)
+//! per allocate/release — cheap because only touched slices move) and
+//! **lazy on the per-shape cache**: a probe for one job shape keeps a
+//! per-breakpoint hostable table + totals, synchronised through a
+//! bounded journal exactly like the PR-5 availability index
+//! ([`super::index`]) — replay touched rows on query, compact past the
+//! bound, demote laggards to a full rebuild. A head-reservation probe
+//! on a synchronised cache is then a binary search over the monotone
+//! totals: **O(log running)** instead of a full replay.
+//!
+//! **Job registration protocol.** The profile only knows a job's
+//! estimated end once it knows the job's start time. Jobs allocated
+//! during a dispatch cycle (between [`ProfileIndex::begin_cycle`]
+//! calls) are *pending*: their allocation is deducted from every row
+//! (they do not release inside the profile horizon yet) and they are
+//! promoted to *registered* — breakpoint inserted, allocation credited
+//! back from their estimated end onward — at the next `begin_cycle`,
+//! i.e. before any probe can observe them as running. Jobs allocated
+//! outside a cycle (hand-built tests, baselines) stay *untracked*;
+//! probes notice the coverage gap (`registered ≠ running`) and demote
+//! to the naive oracle path, counted in
+//! [`crate::telemetry::Counter::ProfileDemotions`]. Snapshot restore
+//! registers resurrected jobs immediately via
+//! [`super::ResourceManager::allocate_running`].
+//!
+//! **Clamping.** Dispatchers see estimated completions clamped to
+//! `now + 1` ([`crate::dispatch::RunningInfo::estimated_completion`]);
+//! the index stores unclamped ends and merges the `≤ now + 1` prefix
+//! into a single effective breakpoint at query time, so overrunning
+//! jobs cost nothing to re-index as time advances.
+//!
+//! **Down nodes are deliberately ignored**: the naive shadow/profile
+//! code copies only the free matrix, treating out-of-service nodes as
+//! released capacity in the future — the index replicates that exactly
+//! (byte-identity with the oracle beats speculative semantics; enforced
+//! by `rust/tests/backfill_profile.rs`).
+
+use super::hostable_slots_in;
+use crate::telemetry::{Counter, SpanKind, Telemetry};
+use crate::workload::JobId;
+use std::collections::HashMap;
+
+/// Cursor value marking a cache that must be fully rebuilt on next query.
+const STALE: usize = usize::MAX;
+
+/// What a job contributes to the profile once its end is known.
+#[derive(Debug, Clone)]
+struct Reg {
+    /// Unclamped estimated end (`start + req_time.max(1)`).
+    end: u64,
+    /// The job's per-slot request vector.
+    per_slot: Vec<u64>,
+    /// The committed `(node, slots)` slices.
+    slices: Vec<(u32, u32)>,
+}
+
+/// One journal entry: `node`'s availability changed on the rows whose
+/// breakpoint time satisfies the predicate. Predicates are on absolute
+/// times, so they stay valid across breakpoint inserts/removes.
+#[derive(Debug, Clone, Copy)]
+struct Touch {
+    node: u32,
+    /// Predicate pivot time.
+    t: u64,
+    /// `true`: rows with `times[i] < t` changed; `false`: rows with
+    /// `times[i] ≥ t` changed.
+    before: bool,
+}
+
+/// Per-shape probe cache: hostable slots of one `per_slot` shape on
+/// every (breakpoint, node), plus per-breakpoint totals. One shape is
+/// cached — EBF probes the same blocked head shape cycle after cycle,
+/// and a shape switch is an ordinary rebuild.
+#[derive(Debug, Clone)]
+struct ShapeCache {
+    shape: Vec<u64>,
+    /// `host[i][n]` — hostable slots on node `n` at breakpoint `i`.
+    host: Vec<Vec<u64>>,
+    /// Exact per-breakpoint sums of `host[i]`; monotone nondecreasing
+    /// in `i` because the free rows only grow with time.
+    totals: Vec<u128>,
+    /// Journal position this cache is synchronised to; [`STALE`] forces
+    /// a full rebuild.
+    cursor: usize,
+}
+
+/// Outcome of an indexed head-reservation probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileProbe {
+    /// The head fits at (dispatcher-clock) time `t`; the caller's
+    /// buffer now holds the free matrix at `t` with the head deducted.
+    Reserved(u64),
+    /// The head never fits, even after every running job releases —
+    /// exactly the naive oracle's `None`.
+    NeverFits,
+    /// The index cannot answer (disabled, or registration does not
+    /// cover the running set) — fall back to the naive oracle.
+    Demoted,
+}
+
+/// Incremental time-indexed availability profile over running-job
+/// estimated end times. Owned by [`super::ResourceManager`] behind a
+/// `RefCell` (probes synchronise lazily through `&self` methods).
+#[derive(Debug, Clone)]
+pub struct ProfileIndex {
+    /// Master switch (`SimOptions::use_backfill_profile`). Disabled
+    /// probes return [`ProfileProbe::Demoted`] without counting.
+    enabled: bool,
+    /// Rows are only maintained once a probe has happened; until then
+    /// mutations keep the registration bookkeeping and nothing else, so
+    /// non-backfilling dispatchers never pay for rows.
+    active: bool,
+    /// Set by [`ProfileIndex::begin_cycle`]; allocations carrying this
+    /// hint become pending registrations instead of untracked ones.
+    cycle_now: Option<u64>,
+    nodes: usize,
+    types: usize,
+    /// Sorted distinct unclamped estimated ends of registered jobs.
+    times: Vec<u64>,
+    /// Registered jobs per breakpoint (breakpoint removed at zero).
+    refs: Vec<u32>,
+    /// Free matrix at each breakpoint (see module docs).
+    frees: Vec<Vec<u64>>,
+    /// Registered jobs by id.
+    ends: HashMap<JobId, Reg>,
+    /// Jobs allocated this cycle, awaiting registration.
+    pending: Vec<(JobId, Reg)>,
+    /// Dirty (node, row-range) set for the lazy shape cache.
+    journal: Vec<Touch>,
+    /// Journal length that triggers compaction.
+    limit: usize,
+    cache: Option<ShapeCache>,
+    /// Probes demoted to the naive path (coverage gaps). Folded into
+    /// [`Counter::ProfileDemotions`] at the end of a run.
+    demotions: u64,
+}
+
+impl ProfileIndex {
+    /// An empty profile for a `nodes × types` system.
+    pub fn new(nodes: usize, types: usize) -> Self {
+        ProfileIndex {
+            enabled: true,
+            active: false,
+            cycle_now: None,
+            nodes,
+            types,
+            times: Vec::new(),
+            refs: Vec::new(),
+            frees: Vec::new(),
+            ends: HashMap::new(),
+            pending: Vec::new(),
+            journal: Vec::new(),
+            limit: (4 * nodes).max(64),
+            cache: None,
+            demotions: 0,
+        }
+    }
+
+    /// Enable or disable the index (disabled probes demote silently).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Whether the index answers probes at all.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Probes demoted to the naive oracle path so far.
+    pub fn demotions(&self) -> u64 {
+        self.demotions
+    }
+
+    /// The dispatch-cycle time hint, when inside a cycle.
+    pub fn cycle_now(&self) -> Option<u64> {
+        self.cycle_now
+    }
+
+    /// Start a dispatch round at `now`: promote every pending job to
+    /// registered (their starts are final) and arm the allocation hint.
+    /// `free` is the manager's current free matrix.
+    pub fn begin_cycle(&mut self, now: u64, free: &[u64]) {
+        if !self.enabled {
+            return;
+        }
+        while let Some((id, reg)) = self.pending.pop() {
+            self.register(id, reg, free);
+        }
+        self.cycle_now = Some(now);
+    }
+
+    /// A job's allocation was committed. `est_end` is its unclamped
+    /// estimated end when the start time is known (in-cycle starts and
+    /// snapshot restores); `None` leaves the job untracked.
+    pub fn on_allocate(
+        &mut self,
+        id: JobId,
+        per_slot: &[u64],
+        slices: &[(u32, u32)],
+        est_end: Option<u64>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        if self.active {
+            // The job holds resources but does not release inside the
+            // profile yet: every future row loses its allocation.
+            for &(node, slots) in slices {
+                let base = node as usize * self.types;
+                for row in &mut self.frees {
+                    for (r, q) in per_slot.iter().enumerate() {
+                        row[base + r] -= q * slots as u64;
+                    }
+                }
+                self.note(Touch { node, t: 0, before: false });
+            }
+        }
+        if let Some(end) = est_end {
+            let reg = Reg { end, per_slot: per_slot.to_vec(), slices: slices.to_vec() };
+            self.pending.push((id, reg));
+        }
+    }
+
+    /// A job's allocation was released.
+    pub fn on_release(&mut self, id: JobId, per_slot: &[u64], slices: &[(u32, u32)]) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(reg) = self.ends.remove(&id) {
+            if self.active {
+                let end = reg.end;
+                // Rows from `end` on already credited the release; the
+                // earlier rows get the allocation back now that the live
+                // free matrix has it back.
+                let upto = self.times.partition_point(|&t| t < end);
+                for &(node, slots) in &reg.slices {
+                    let base = node as usize * self.types;
+                    for row in &mut self.frees[..upto] {
+                        for (r, q) in reg.per_slot.iter().enumerate() {
+                            row[base + r] += q * slots as u64;
+                        }
+                    }
+                    self.note(Touch { node, t: end, before: true });
+                }
+                let i = self.times.binary_search(&end).expect("registered end has a breakpoint");
+                self.refs[i] -= 1;
+                if self.refs[i] == 0 {
+                    // The row now equals its predecessor: drop it.
+                    self.times.remove(i);
+                    self.refs.remove(i);
+                    self.frees.remove(i);
+                    if let Some(c) = &mut self.cache {
+                        if c.cursor != STALE {
+                            c.host.remove(i);
+                            c.totals.remove(i);
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        if let Some(p) = self.pending.iter().position(|(pid, _)| *pid == id) {
+            self.pending.swap_remove(p);
+        }
+        // Pending and untracked jobs were deducted from every row.
+        if self.active {
+            for &(node, slots) in slices {
+                let base = node as usize * self.types;
+                for row in &mut self.frees {
+                    for (r, q) in per_slot.iter().enumerate() {
+                        row[base + r] += q * slots as u64;
+                    }
+                }
+                self.note(Touch { node, t: 0, before: false });
+            }
+        }
+    }
+
+    /// Register a job whose start (hence estimated end) is final
+    /// without waiting for a cycle flush. Used by snapshot restore,
+    /// where the job must be visible to the very first probe. Works for
+    /// pending and untracked jobs alike (their row treatment is
+    /// identical until registration); no-op if already registered.
+    pub fn promote(
+        &mut self,
+        id: JobId,
+        end: u64,
+        per_slot: &[u64],
+        slices: &[(u32, u32)],
+        free: &[u64],
+    ) {
+        if !self.enabled || self.ends.contains_key(&id) {
+            return;
+        }
+        if let Some(p) = self.pending.iter().position(|(pid, _)| *pid == id) {
+            self.pending.swap_remove(p);
+        }
+        let reg = Reg { end, per_slot: per_slot.to_vec(), slices: slices.to_vec() };
+        self.register(id, reg, free);
+    }
+
+    /// Insert a registered job's breakpoint and credit its release.
+    fn register(&mut self, id: JobId, reg: Reg, free: &[u64]) {
+        if self.active {
+            let end = reg.end;
+            match self.times.binary_search(&end) {
+                Ok(i) => self.refs[i] += 1,
+                Err(i) => {
+                    // No breakpoint between the predecessor and `end`,
+                    // so the new row starts as a copy (rows are eager —
+                    // never stale).
+                    let row =
+                        if i == 0 { free.to_vec() } else { self.frees[i - 1].clone() };
+                    self.times.insert(i, end);
+                    self.refs.insert(i, 1);
+                    self.frees.insert(i, row);
+                    if let Some(c) = &mut self.cache {
+                        if c.cursor != STALE {
+                            let mut h = Vec::with_capacity(self.nodes);
+                            let mut total = 0u128;
+                            for n in 0..self.nodes {
+                                let row = &self.frees[i][n * self.types..(n + 1) * self.types];
+                                let v = hostable_slots_in(row, &c.shape);
+                                h.push(v);
+                                total += v as u128;
+                            }
+                            c.host.insert(i, h);
+                            c.totals.insert(i, total);
+                        }
+                    }
+                }
+            }
+            // From `end` on the job has released: credit the rows.
+            let from = self.times.partition_point(|&t| t < end);
+            for &(node, slots) in &reg.slices {
+                let base = node as usize * self.types;
+                for row in &mut self.frees[from..] {
+                    for (r, q) in reg.per_slot.iter().enumerate() {
+                        row[base + r] += q * slots as u64;
+                    }
+                }
+                self.note(Touch { node, t: end, before: false });
+            }
+        }
+        self.ends.insert(id, reg);
+    }
+
+    /// Append a journal entry, compacting past the bound (a laggard
+    /// cache is marked stale and rebuilt on its next probe, amortised
+    /// against the touches that forced the compaction).
+    fn note(&mut self, touch: Touch) {
+        if self.journal.len() >= self.limit {
+            let len = self.journal.len();
+            if let Some(c) = &mut self.cache {
+                c.cursor = if c.cursor == len { 0 } else { STALE };
+            }
+            self.journal.clear();
+        }
+        self.journal.push(touch);
+    }
+
+    /// First materialisation of the rows: build them from the
+    /// registered set. Probes call this once; until then mutations cost
+    /// only bookkeeping.
+    fn activate(&mut self, free: &[u64]) {
+        if self.active {
+            return;
+        }
+        self.active = true;
+        self.times.clear();
+        self.refs.clear();
+        self.frees.clear();
+        let mut ends: Vec<u64> = self.ends.values().map(|r| r.end).collect();
+        ends.sort_unstable();
+        for e in ends {
+            match self.times.last() {
+                Some(&t) if t == e => *self.refs.last_mut().unwrap() += 1,
+                _ => {
+                    self.times.push(e);
+                    self.refs.push(1);
+                }
+            }
+        }
+        self.frees = vec![free.to_vec(); self.times.len()];
+        for reg in self.ends.values() {
+            let from = self.times.partition_point(|&t| t < reg.end);
+            for &(node, slots) in &reg.slices {
+                let base = node as usize * self.types;
+                for row in &mut self.frees[from..] {
+                    for (r, q) in reg.per_slot.iter().enumerate() {
+                        row[base + r] += q * slots as u64;
+                    }
+                }
+            }
+        }
+        self.journal.clear();
+        self.cache = None;
+    }
+
+    /// Synchronise the shape cache to `shape`, rebuilding on a shape
+    /// switch, staleness or first use, replaying the journal otherwise.
+    fn sync_cache(&mut self, shape: &[u64], tel: &Telemetry) {
+        let hit = matches!(&self.cache, Some(c) if c.shape == shape);
+        if hit && self.cache.as_ref().unwrap().cursor == self.journal.len() {
+            return; // up to date: nothing to replay (STALE != len)
+        }
+        let t0 = tel.start();
+        let mut replayed = 0u64;
+        if !hit || self.cache.as_ref().unwrap().cursor == STALE {
+            let b = self.times.len();
+            let mut host = Vec::with_capacity(b);
+            let mut totals = Vec::with_capacity(b);
+            for row in &self.frees {
+                let mut h = Vec::with_capacity(self.nodes);
+                let mut total = 0u128;
+                for n in 0..self.nodes {
+                    let v = hostable_slots_in(&row[n * self.types..(n + 1) * self.types], shape);
+                    h.push(v);
+                    total += v as u128;
+                }
+                host.push(h);
+                totals.push(total);
+            }
+            self.cache = Some(ShapeCache {
+                shape: shape.to_vec(),
+                host,
+                totals,
+                cursor: self.journal.len(),
+            });
+            tel.count(Counter::ProfileRebuilds, 1);
+        } else {
+            let c = self.cache.as_mut().unwrap();
+            for touch in &self.journal[c.cursor..] {
+                let n = touch.node as usize;
+                let pivot = self.times.partition_point(|&t| t < touch.t);
+                let range = if touch.before { 0..pivot } else { pivot..self.times.len() };
+                for i in range {
+                    let row = &self.frees[i][n * self.types..(n + 1) * self.types];
+                    let h = hostable_slots_in(row, shape);
+                    // replays are idempotent: recompute from the (eager,
+                    // always-current) row and track the stored delta
+                    c.totals[i] = c.totals[i] + h as u128 - c.host[i][n] as u128;
+                    c.host[i][n] = h;
+                    replayed += 1;
+                }
+            }
+            c.cursor = self.journal.len();
+            tel.count(Counter::ProfileReplayedEntries, replayed);
+        }
+        tel.span(SpanKind::ProfileSync, t0, replayed);
+    }
+
+    /// Whether registration covers exactly the `running` set a probe's
+    /// caller sees (pending/untracked jobs are invisible to the view,
+    /// registered jobs are exactly the visible running jobs).
+    fn covers(&mut self, running: usize) -> bool {
+        if self.ends.len() == running {
+            return true;
+        }
+        self.demotions += 1;
+        false
+    }
+
+    /// The EASY head probe: earliest dispatcher-clock time `t` at which
+    /// `slots` slots of `shape` fit, assuming running jobs release at
+    /// their estimated ends. On success `out` holds the free matrix at
+    /// `t` with the reservation greedily deducted (ascending nodes) —
+    /// byte-identical to the naive shadow replay. O(log running) on a
+    /// synchronised cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reserve_head(
+        &mut self,
+        slots: u64,
+        shape: &[u64],
+        now: u64,
+        running: usize,
+        free: &[u64],
+        tel: &Telemetry,
+        out: &mut Vec<u64>,
+    ) -> ProfileProbe {
+        if !self.enabled {
+            return ProfileProbe::Demoted;
+        }
+        if !self.covers(running) {
+            return ProfileProbe::Demoted;
+        }
+        if running == 0 {
+            return ProfileProbe::NeverFits; // no release can ever help
+        }
+        self.activate(free);
+        self.sync_cache(shape, tel);
+        let c = self.cache.as_ref().expect("sync_cache materialises the cache");
+        // Dispatcher clocks clamp estimates to now+1: the whole ≤ now+1
+        // prefix releases together at the first probe-visible instant.
+        let k = self.times.partition_point(|&t| t <= now + 1);
+        let (seg, t) = if k > 0 && c.totals[k - 1] >= slots as u128 {
+            (k - 1, now + 1)
+        } else {
+            // totals are monotone: binary-search the first later
+            // breakpoint whose row hosts the head (times[i] > now + 1
+            // for every i ≥ k, so the raw time is the probe answer).
+            let i = k + c.totals[k..].partition_point(|&tot| tot < slots as u128);
+            if i >= self.times.len() {
+                return ProfileProbe::NeverFits;
+            }
+            (i, self.times[i])
+        };
+        // Greedy reservation over the row — exactly
+        // `ShadowState::reserve_greedy` on the same matrix.
+        out.clear();
+        out.extend_from_slice(&self.frees[seg]);
+        let mut remaining = slots;
+        for n in 0..self.nodes {
+            if remaining == 0 {
+                break;
+            }
+            let h = c.host[seg][n].min(remaining);
+            if h > 0 {
+                let base = n * self.types;
+                for (r, q) in shape.iter().enumerate() {
+                    out[base + r] -= q * h;
+                }
+                remaining -= h;
+            }
+        }
+        debug_assert_eq!(remaining, 0, "totals[seg] >= slots guarantees the greedy fill");
+        ProfileProbe::Reserved(t)
+    }
+
+    /// Copy the full piecewise profile as CBF builds it: a base row at
+    /// `now` (current free matrix), the merged `≤ now+1` prefix, then
+    /// every later breakpoint. Returns `false` (and counts a demotion)
+    /// when the index cannot answer.
+    pub fn snapshot_into(
+        &mut self,
+        now: u64,
+        running: usize,
+        free: &[u64],
+        times_out: &mut Vec<u64>,
+        frees_out: &mut Vec<Vec<u64>>,
+    ) -> bool {
+        if !self.enabled || !self.covers(running) {
+            return false;
+        }
+        self.activate(free);
+        times_out.clear();
+        frees_out.clear();
+        times_out.push(now);
+        frees_out.push(free.to_vec());
+        let k = self.times.partition_point(|&t| t <= now + 1);
+        if k > 0 {
+            times_out.push(now + 1);
+            frees_out.push(self.frees[k - 1].clone());
+        }
+        for i in k..self.times.len() {
+            times_out.push(self.times[i]);
+            frees_out.push(self.frees[i].clone());
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 nodes × 1 type toy harness driving the index by hand.
+    struct Harness {
+        free: Vec<u64>,
+        idx: ProfileIndex,
+    }
+
+    impl Harness {
+        fn new() -> Self {
+            Harness { free: vec![4, 4], idx: ProfileIndex::new(2, 1) }
+        }
+
+        /// Allocate `slots` on `node` in-cycle at `now`, est end `end`.
+        fn start(&mut self, id: JobId, node: u32, slots: u32, now: u64, end: u64) {
+            self.idx.begin_cycle(now, &self.free.clone());
+            self.free[node as usize] -= slots as u64;
+            self.idx.on_allocate(id, &[1], &[(node, slots)], Some(end));
+        }
+
+        fn release(&mut self, id: JobId, node: u32, slots: u32) {
+            self.free[node as usize] += slots as u64;
+            self.idx.on_release(id, &[1], &[(node, slots)]);
+        }
+
+        fn probe(&mut self, slots: u64, now: u64, running: usize) -> (ProfileProbe, Vec<u64>) {
+            self.idx.begin_cycle(now, &self.free.clone());
+            let mut out = Vec::new();
+            let p = self.idx.reserve_head(
+                slots,
+                &[1],
+                now,
+                running,
+                &self.free,
+                &Telemetry::default(),
+                &mut out,
+            );
+            (p, out)
+        }
+    }
+
+    #[test]
+    fn head_waits_for_the_right_release() {
+        let mut h = Harness::new();
+        // j1 fills node 0 until 100, j2 fills node 1 until 50.
+        h.start(1, 0, 4, 0, 100);
+        h.start(2, 1, 4, 0, 50);
+        // 6 slots need both nodes → earliest at t=100.
+        let (p, out) = h.probe(6, 0, 2);
+        assert_eq!(p, ProfileProbe::Reserved(100));
+        assert_eq!(out, vec![0, 2], "greedy reservation: 4 from node0, 2 from node1");
+        // 4 slots fit as soon as node 1 releases at 50.
+        let (p, out) = h.probe(4, 0, 2);
+        assert_eq!(p, ProfileProbe::Reserved(50));
+        assert_eq!(out, vec![0, 0]);
+    }
+
+    #[test]
+    fn overrun_jobs_merge_into_the_clamped_prefix() {
+        let mut h = Harness::new();
+        h.start(1, 0, 4, 0, 10);
+        h.start(2, 1, 4, 0, 20);
+        // Clock far past both estimates: both clamp to now+1.
+        let (p, _) = h.probe(8, 500, 2);
+        assert_eq!(p, ProfileProbe::Reserved(501));
+    }
+
+    #[test]
+    fn release_and_refcounts_keep_rows_exact() {
+        let mut h = Harness::new();
+        h.start(1, 0, 2, 0, 30);
+        h.start(2, 0, 2, 0, 30); // same breakpoint: refs = 2
+        h.start(3, 1, 4, 0, 60);
+        let (p, _) = h.probe(8, 0, 3);
+        assert_eq!(p, ProfileProbe::Reserved(60));
+        // j1 finishes early: breakpoint 30 survives (j2 still ends there).
+        h.release(1, 0, 2);
+        let (p, _) = h.probe(8, 5, 2);
+        assert_eq!(p, ProfileProbe::Reserved(60));
+        let (p, _) = h.probe(4, 5, 2);
+        assert_eq!(p, ProfileProbe::Reserved(30), "j2's breakpoint remains");
+        h.release(2, 0, 2);
+        // Like the naive shadow replay, the probe only considers times
+        // at which something releases — it is only ever invoked for a
+        // head that failed to place right now.
+        let (p, _) = h.probe(4, 5, 1);
+        assert_eq!(p, ProfileProbe::Reserved(60));
+    }
+
+    #[test]
+    fn coverage_gaps_demote() {
+        let mut h = Harness::new();
+        // Untracked allocation: no cycle hint.
+        h.free[0] -= 4;
+        h.idx.on_allocate(9, &[1], &[(0, 4)], None);
+        let mut out = Vec::new();
+        let p = h.idx.reserve_head(8, &[1], 0, 1, &h.free, &Telemetry::default(), &mut out);
+        assert_eq!(p, ProfileProbe::Demoted);
+        assert_eq!(h.idx.demotions(), 1);
+        // Releasing the untracked job restores row math for the rest.
+        h.free[0] += 4;
+        h.idx.on_release(9, &[1], &[(0, 4)]);
+        let (p, _) = h.probe(8, 0, 0);
+        assert_eq!(p, ProfileProbe::NeverFits, "idle machine, 8 slots fit now — but the \
+             head probe only runs when blocked; with nothing running it can never unblock");
+    }
+
+    #[test]
+    fn disabled_index_demotes_silently() {
+        let mut h = Harness::new();
+        h.idx.set_enabled(false);
+        h.start(1, 0, 4, 0, 100);
+        let mut out = Vec::new();
+        let p = h.idx.reserve_head(4, &[1], 0, 1, &h.free, &Telemetry::default(), &mut out);
+        assert_eq!(p, ProfileProbe::Demoted);
+        assert_eq!(h.idx.demotions(), 0, "deliberate opt-out is not a demotion");
+    }
+
+    #[test]
+    fn journal_compaction_keeps_answers_exact() {
+        let mut h = Harness::new();
+        h.start(1, 0, 4, 0, 1_000);
+        let (p, _) = h.probe(8, 0, 1);
+        assert_eq!(p, ProfileProbe::Reserved(1_000), "both nodes free once j1 ends");
+        // Churn far past the journal bound (limit ≥ 64): each start and
+        // release of a pending job journals a touch, forcing multiple
+        // compactions and a stale-cache rebuild.
+        for i in 0..200u64 {
+            h.start(100 + i, 1, 2, i, 1_000 + i);
+            h.release(100 + i, 1, 2);
+        }
+        let (p, _) = h.probe(5, 0, 1);
+        assert_eq!(p, ProfileProbe::Reserved(1_000));
+        let (p, out) = h.probe(4, 0, 1);
+        assert_eq!(p, ProfileProbe::Reserved(1_000));
+        assert_eq!(out, vec![0, 4], "greedy fill takes node0 first");
+    }
+
+    #[test]
+    fn cbf_snapshot_matches_hand_profile() {
+        let mut h = Harness::new();
+        h.start(1, 0, 4, 0, 100);
+        h.start(2, 1, 2, 0, 40);
+        h.idx.begin_cycle(0, &h.free.clone());
+        let (mut times, mut frees) = (Vec::new(), Vec::new());
+        assert!(h.idx.snapshot_into(0, 2, &h.free, &mut times, &mut frees));
+        assert_eq!(times, vec![0, 40, 100]);
+        assert_eq!(frees, vec![vec![0, 2], vec![0, 4], vec![4, 4]]);
+        // A job overrunning its estimate folds into the now+1 row.
+        let (mut times, mut frees) = (Vec::new(), Vec::new());
+        assert!(h.idx.snapshot_into(70, 2, &h.free, &mut times, &mut frees));
+        assert_eq!(times, vec![70, 71, 100]);
+        assert_eq!(frees, vec![vec![0, 2], vec![0, 4], vec![4, 4]]);
+    }
+
+    #[test]
+    fn pending_jobs_vanish_from_rows_until_registered() {
+        let mut h = Harness::new();
+        h.start(1, 0, 4, 0, 100);
+        let (p, _) = h.probe(4, 0, 1); // activates rows
+        assert_eq!(p, ProfileProbe::Reserved(100), "first release time with room");
+        // In-cycle start of j2 on node1: pending, so every row loses it.
+        h.free[1] -= 4;
+        h.idx.on_allocate(2, &[1], &[(1, 4)], Some(60));
+        let mut out = Vec::new();
+        // Probe in the same cycle still sees running == 1 (the view was
+        // built before j2 started): coverage holds, rows exclude j2.
+        let p = h.idx.reserve_head(4, &[1], 0, 1, &h.free, &Telemetry::default(), &mut out);
+        assert_eq!(p, ProfileProbe::Reserved(100), "node1 is spoken for by pending j2");
+        // Next cycle registers j2; its release at 60 is now visible.
+        let (p, _) = h.probe(4, 0, 2);
+        assert_eq!(p, ProfileProbe::Reserved(60));
+    }
+}

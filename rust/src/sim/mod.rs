@@ -97,6 +97,14 @@ pub struct SimOptions {
     /// `rust/tests/availability_index.rs`), only slower, so the toggle
     /// exists for A/B measurements and the equivalence tests themselves.
     pub use_shape_index: bool,
+    /// Maintain the incremental backfilling availability profile
+    /// (`resources::ProfileIndex`) so EBF head reservations and CBF
+    /// profile builds are answered in O(log running) instead of a full
+    /// shadow replay. On by default; switching it off demotes every probe
+    /// to the naive in-tree oracle — results are identical by construction
+    /// (asserted in `rust/tests/backfill_profile.rs`), only slower, so the
+    /// toggle exists for A/B measurements and the equivalence tests.
+    pub use_backfill_profile: bool,
     /// Keep the full [`SimEvent`] history instead of compacting delivered
     /// events away. Required for [`SimCore::snapshot`]/[`SimCore::fork`]
     /// (the snapshot carries the history so a restore can replay it into
@@ -124,6 +132,7 @@ impl Default for SimOptions {
             output: OutputCollector::in_memory(true, true),
             time_dispatch: true,
             use_shape_index: true,
+            use_backfill_profile: true,
             retain_log: false,
             telemetry: Telemetry::default(),
         }
@@ -370,9 +379,11 @@ impl SimCore {
     ) -> Self {
         let rng = Pcg64::new(opts.seed);
         let log = EventLog::new(opts.retain_log);
+        let mut rm = ResourceManager::from_config(&sys);
+        rm.set_backfill_profile(opts.use_backfill_profile);
         SimCore {
             source,
-            rm: ResourceManager::from_config(&sys),
+            rm,
             dispatcher,
             opts,
             events: EventQueue::new(),
@@ -585,6 +596,8 @@ impl SimCore {
         // fold end-of-run health counters into the telemetry registry
         let tel = &self.opts.telemetry;
         tel.count(Counter::IndexDemotions, self.rm.naive_demotions());
+        tel.count(Counter::ProfileDemotions, self.rm.profile_demotions());
+        tel.count(Counter::CbfProfileSkips, self.rm.cbf_profile_skips());
         tel.count(Counter::MemProbeSkipped, self.mem.skipped);
         tel.gauge("sim.time_points", out.time_points as f64);
         tel.gauge("sim.max_queue", out.max_queue as f64);
@@ -808,6 +821,10 @@ impl SimCore {
             // queue length as this cycle's view sees it (re-dispatch rounds
             // run against the shrunken queue)
             let cycle_queue = self.queue.len() as u64;
+            // Flush the profile index's pending registrations (jobs started
+            // in the previous round now have committed starts) and arm the
+            // in-cycle estimated-end hint for allocations made this round.
+            self.rm.begin_dispatch_cycle(now);
             let t_disp0 = (timing || tel_on).then(Instant::now);
             let decision = {
                 // view buffers are recycled across cycles (ViewScratch):

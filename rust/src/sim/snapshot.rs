@@ -489,7 +489,15 @@ impl SimCore {
                 .jobs
                 .get(&id)
                 .ok_or_else(|| anyhow::anyhow!("snapshot: allocated job {id} missing"))?;
-            core.rm.allocate(job, Allocation { slices })?;
+            let start = *core
+                .starts
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("snapshot: allocated job {id} has no start"))?;
+            // allocate_running registers the job in the backfilling profile
+            // index with its estimated end, so a restored core converges to
+            // the same profile state the snapshotting core had (asserted
+            // byte-identical in rust/tests/resume.rs).
+            core.rm.allocate_running(job, Allocation { slices }, start)?;
         }
 
         // --- event heap with original sequence numbers ---

@@ -20,6 +20,9 @@ pub enum SpanKind {
     /// One availability-index journal sync that actually did work
     /// (replay or full rebuild); up-to-date queries record nothing.
     JournalSync,
+    /// One backfill-profile cache sync that actually did work (journal
+    /// replay or full rebuild); up-to-date probes record nothing.
+    ProfileSync,
     /// The addon-update section of one time point (only recorded when
     /// addons are present).
     AddonUpdate,
@@ -35,10 +38,11 @@ pub enum SpanKind {
 
 impl SpanKind {
     /// Every kind, in display/serialization order.
-    pub const ALL: [SpanKind; 8] = [
+    pub const ALL: [SpanKind; 9] = [
         SpanKind::DispatchCycle,
         SpanKind::Place,
         SpanKind::JournalSync,
+        SpanKind::ProfileSync,
         SpanKind::AddonUpdate,
         SpanKind::LogCompact,
         SpanKind::Snapshot,
@@ -52,6 +56,7 @@ impl SpanKind {
             SpanKind::DispatchCycle => "dispatch_cycle",
             SpanKind::Place => "allocator_place",
             SpanKind::JournalSync => "journal_sync",
+            SpanKind::ProfileSync => "profile_sync",
             SpanKind::AddonUpdate => "addon_update",
             SpanKind::LogCompact => "log_compact",
             SpanKind::Snapshot => "snapshot",
@@ -66,6 +71,7 @@ impl SpanKind {
             SpanKind::DispatchCycle => "queue_len",
             SpanKind::Place => "slots",
             SpanKind::JournalSync => "replayed",
+            SpanKind::ProfileSync => "replayed",
             SpanKind::AddonUpdate => "addons",
             SpanKind::LogCompact => "dropped",
             SpanKind::Snapshot => "bytes",
@@ -89,6 +95,18 @@ pub enum Counter {
     JournalReplayedEntries,
     /// Full per-shape rebuilds forced by journal compaction.
     JournalRebuilds,
+    /// Backfill-profile cache entries replayed by profile syncs.
+    ProfileReplayedEntries,
+    /// Full backfill-profile cache rebuilds (shape switch, activation
+    /// or journal compaction).
+    ProfileRebuilds,
+    /// Backfill probes demoted to the naive oracle path because the
+    /// profile's registered set did not cover the running jobs.
+    ProfileDemotions,
+    /// Running jobs the naive CBF profile skipped because their
+    /// allocation lookup failed — a desync that used to be silently
+    /// optimistic.
+    CbfProfileSkips,
     /// RSS probes skipped because `/proc/self/statm` was unreadable.
     MemProbeSkipped,
     /// Events dropped from the sim event log by compaction.
@@ -99,10 +117,14 @@ pub enum Counter {
 
 impl Counter {
     /// Every counter, in display/serialization order.
-    pub const ALL: [Counter; 6] = [
+    pub const ALL: [Counter; 10] = [
         Counter::IndexDemotions,
         Counter::JournalReplayedEntries,
         Counter::JournalRebuilds,
+        Counter::ProfileReplayedEntries,
+        Counter::ProfileRebuilds,
+        Counter::ProfileDemotions,
+        Counter::CbfProfileSkips,
         Counter::MemProbeSkipped,
         Counter::LogEventsCompacted,
         Counter::TraceEventsDropped,
@@ -114,6 +136,10 @@ impl Counter {
             Counter::IndexDemotions => "index_demotions",
             Counter::JournalReplayedEntries => "journal_replayed_entries",
             Counter::JournalRebuilds => "journal_rebuilds",
+            Counter::ProfileReplayedEntries => "profile_replayed_entries",
+            Counter::ProfileRebuilds => "profile_rebuilds",
+            Counter::ProfileDemotions => "profile_demotions",
+            Counter::CbfProfileSkips => "cbf_profile_skips",
             Counter::MemProbeSkipped => "mem_probe_skipped",
             Counter::LogEventsCompacted => "log_events_compacted",
             Counter::TraceEventsDropped => "trace_events_dropped",

@@ -166,6 +166,7 @@ impl Telemetry {
         let dispatch = reg.histogram(SpanKind::DispatchCycle);
         let place = reg.histogram(SpanKind::Place);
         let sync = reg.histogram(SpanKind::JournalSync);
+        let psync = reg.histogram(SpanKind::ProfileSync);
         Some(TelemetrySummary {
             dispatch_count: dispatch.count(),
             dispatch_p50_ns: dispatch.percentile(0.50),
@@ -179,6 +180,11 @@ impl Telemetry {
             journal_sync_ns: sync.sum(),
             journal_replayed_entries: reg.counter(Counter::JournalReplayedEntries),
             journal_rebuilds: reg.counter(Counter::JournalRebuilds),
+            profile_syncs: psync.count(),
+            profile_sync_ns: psync.sum(),
+            profile_rebuilds: reg.counter(Counter::ProfileRebuilds),
+            profile_demotions: reg.counter(Counter::ProfileDemotions),
+            cbf_profile_skips: reg.counter(Counter::CbfProfileSkips),
         })
     }
 
@@ -233,6 +239,18 @@ pub struct TelemetrySummary {
     pub journal_replayed_entries: u64,
     /// Full per-shape rebuilds forced by journal compaction.
     pub journal_rebuilds: u64,
+    /// Backfill-profile cache syncs that did work.
+    pub profile_syncs: u64,
+    /// Total nanoseconds spent in profile syncs.
+    pub profile_sync_ns: u64,
+    /// Full backfill-profile cache rebuilds (shape switch, activation
+    /// or compaction).
+    pub profile_rebuilds: u64,
+    /// Backfill probes demoted to the naive oracle path.
+    pub profile_demotions: u64,
+    /// Running jobs the naive CBF profile skipped (allocation lookup
+    /// failed).
+    pub cbf_profile_skips: u64,
 }
 
 impl TelemetrySummary {
@@ -254,6 +272,11 @@ impl TelemetrySummary {
         put("journal_sync_ns", self.journal_sync_ns);
         put("journal_replayed_entries", self.journal_replayed_entries);
         put("journal_rebuilds", self.journal_rebuilds);
+        put("profile_syncs", self.profile_syncs);
+        put("profile_sync_ns", self.profile_sync_ns);
+        put("profile_rebuilds", self.profile_rebuilds);
+        put("profile_demotions", self.profile_demotions);
+        put("cbf_profile_skips", self.cbf_profile_skips);
         Json::Obj(m)
     }
 }

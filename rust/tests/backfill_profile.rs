@@ -1,0 +1,452 @@
+//! Backfilling-profile invariants (DESIGN.md §Perf, §Backfilling profiles).
+//!
+//! Two families of guarantees, mirroring `availability_index.rs`:
+//!
+//! 1. **Oracle equivalence** — after every allocate/release/cycle-advance/
+//!    intern step of a randomized sequence, the incremental profile's
+//!    head-reservation probe must equal a naive shadow replay (the EASY
+//!    oracle) and its piecewise snapshot must equal a naive per-job
+//!    rebuild (the CBF oracle), at every breakpoint — including after
+//!    journal compaction and mid-sequence shape interning — with zero
+//!    demotions while registration covers the running set.
+//! 2. **Byte identity** — simulations and whole campaigns executed with
+//!    the profile disabled (`SimOptions::use_backfill_profile = false`,
+//!    the naive rebuild path) must produce byte-identical outputs for
+//!    every backfilling dispatcher, under estimate noise, failure storms
+//!    and power caps alike: speed must not change results.
+
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::resources::{
+    hostable_slots_in, Allocation, ProfileProbe, ResourceManager, ShapeId,
+};
+use accasim::rng::Pcg64;
+use accasim::sim::{SimOptions, SimOutput, Simulator};
+use accasim::testkit::{arb_jobs, check};
+use accasim::testutil as tempfile;
+use accasim::workload::Job;
+
+fn probe(per_slot: &[u64], slots: u32) -> Job {
+    Job {
+        id: 0,
+        submit: 0,
+        duration: 10,
+        req_time: 10,
+        slots,
+        per_slot: per_slot.to_vec(),
+        user: 0,
+        app: 0,
+        status: 1,
+        shape: ShapeId::UNSET,
+    }
+}
+
+/// A job the test committed through the manager, with everything the
+/// naive oracles need to replay its future release.
+struct Tracked {
+    job: Job,
+    alloc: Allocation,
+    start: u64,
+}
+
+/// Greedy first-fit placement against the live free matrix, straight from
+/// the public accessors (independent of the allocators under test).
+fn greedy_place(rm: &ResourceManager, job: &Job) -> Option<Allocation> {
+    let mut remaining = job.slots as u64;
+    let mut slices = Vec::new();
+    for n in 0..rm.num_nodes() {
+        if remaining == 0 {
+            break;
+        }
+        let h = hostable_slots_in(rm.node_free(n), &job.per_slot).min(remaining);
+        if h > 0 {
+            slices.push((n as u32, h as u32));
+            remaining -= h;
+        }
+    }
+    (remaining == 0).then_some(Allocation { slices })
+}
+
+/// The naive EASY oracle: shadow-replay the registered releases in
+/// estimated-end order (dispatcher-clock clamped to `now + 1`) and return
+/// the first group boundary after which the head fits, plus the shadow
+/// free matrix with the head's greedy reservation deducted — exactly
+/// `EasyBackfilling`'s pre-profile `reserve_head`.
+fn naive_reserve(
+    rm: &ResourceManager,
+    head: &Job,
+    now: u64,
+    running: &[Tracked],
+) -> Option<(u64, Vec<u64>)> {
+    let mut sh = rm.shadow();
+    let mut events: Vec<(u64, usize)> = running
+        .iter()
+        .enumerate()
+        .map(|(i, t)| (t.job.estimated_completion_at(t.start).max(now + 1), i))
+        .collect();
+    events.sort_unstable();
+    let mut idx = 0;
+    while idx < events.len() {
+        let t = events[idx].0;
+        while idx < events.len() && events[idx].0 == t {
+            let tr = &running[events[idx].1];
+            sh.release(&tr.job, &tr.alloc);
+            idx += 1;
+        }
+        if sh.can_host(head) {
+            sh.reserve_greedy(head).expect("can_host implies the greedy fill");
+            return Some((t, sh.free_matrix().to_vec()));
+        }
+    }
+    None
+}
+
+/// The naive CBF oracle: the piecewise availability profile rebuilt per
+/// running job — a base row at `now`, then one merged row per distinct
+/// clamped estimated end — exactly `Profile::new`'s pre-profile path.
+fn naive_profile(
+    rm: &ResourceManager,
+    now: u64,
+    running: &[Tracked],
+) -> (Vec<u64>, Vec<Vec<u64>>) {
+    let types = rm.num_types();
+    let mut events: Vec<(u64, usize)> = running
+        .iter()
+        .enumerate()
+        .map(|(i, t)| (t.job.estimated_completion_at(t.start).max(now + 1), i))
+        .collect();
+    events.sort_unstable();
+    let mut times = vec![now];
+    let mut frees = vec![rm.free_matrix().to_vec()];
+    for (t, i) in events {
+        let tr = &running[i];
+        let mut next = frees.last().unwrap().clone();
+        for &(node, slots) in &tr.alloc.slices {
+            let base = node as usize * types;
+            for (rt, q) in tr.job.per_slot.iter().enumerate() {
+                next[base + rt] += q * slots as u64;
+            }
+        }
+        if *times.last().unwrap() == t {
+            *frees.last_mut().unwrap() = next;
+        } else {
+            times.push(t);
+            frees.push(next);
+        }
+    }
+    (times, frees)
+}
+
+/// Assert both indexed probes equal their naive oracles for every shape,
+/// across a spread of head sizes (fits-now, fits-later, never-fits).
+fn assert_profile_matches_oracles(
+    rm: &ResourceManager,
+    now: u64,
+    running: &[Tracked],
+    shapes: &[Vec<u64>],
+    rng: &mut Pcg64,
+) {
+    let mut out = Vec::new();
+    for vec in shapes {
+        for _ in 0..2 {
+            let head = probe(vec, rng.range_u64(1, 12) as u32);
+            let got = rm.profile_reserve_head(&head, now, running.len(), &mut out);
+            match (got, naive_reserve(rm, &head, now, running)) {
+                (ProfileProbe::Reserved(t), Some((et, efree))) => {
+                    assert_eq!(t, et, "shape {vec:?} ×{}: reservation time", head.slots);
+                    assert_eq!(
+                        out, efree,
+                        "shape {vec:?} ×{}: free-after matrix diverged",
+                        head.slots
+                    );
+                }
+                (ProfileProbe::NeverFits, None) => {}
+                (got, expect) => panic!(
+                    "shape {vec:?} ×{}: probe {got:?} vs oracle {:?}",
+                    head.slots,
+                    expect.map(|(t, _)| t)
+                ),
+            }
+        }
+    }
+    let (mut times, mut frees) = (Vec::new(), Vec::new());
+    assert!(
+        rm.profile_snapshot(now, running.len(), &mut times, &mut frees),
+        "snapshot must not demote while coverage holds"
+    );
+    let (etimes, efrees) = naive_profile(rm, now, running);
+    assert_eq!(times, etimes, "snapshot breakpoints diverged");
+    assert_eq!(frees, efrees, "snapshot free rows diverged");
+}
+
+/// The tentpole property: drive randomized allocate/release/cycle-advance
+/// sequences through the manager (long enough on small systems to force
+/// journal compactions) following the dispatch-cycle protocol — jobs
+/// started this cycle stay pending until the next `begin_dispatch_cycle`
+/// registers them, exactly as the simulator's event loop does — and
+/// assert both profile probes equal the naive oracles after every step.
+#[test]
+fn prop_profile_matches_naive_oracles() {
+    check("backfill-profile", 0xBF111, 25, |rng| {
+        let nodes = rng.range_u64(1, 6);
+        let sys = SysConfig::homogeneous(
+            "bfp",
+            nodes,
+            &[("core", rng.range_u64(2, 8)), ("mem", rng.range_u64(8, 64))],
+            0,
+        );
+        let mut rm = ResourceManager::from_config(&sys);
+        let mut shapes: Vec<Vec<u64>> = vec![vec![1, rng.range_u64(1, 8)]];
+        let mut now = 0u64;
+        rm.begin_dispatch_cycle(now);
+        // started in an earlier cycle → in the profile's registered set
+        let mut registered: Vec<Tracked> = Vec::new();
+        // started this cycle → committed resources but pending registration
+        let mut pending: Vec<Tracked> = Vec::new();
+        let mut next_id = 1u64;
+        for _ in 0..200 {
+            match rng.range_u64(0, 9) {
+                0..=3 => {
+                    // start a job of a random known shape
+                    let i = rng.range_u64(0, shapes.len() as u64 - 1) as usize;
+                    let mut j = probe(&shapes[i], rng.range_u64(1, 8) as u32);
+                    j.id = next_id;
+                    j.req_time = rng.range_u64(1, 2_000);
+                    if let Some(alloc) = greedy_place(&rm, &j) {
+                        next_id += 1;
+                        rm.allocate(&j, alloc.clone()).expect("greedy placement is valid");
+                        pending.push(Tracked { job: j, alloc, start: now });
+                    }
+                }
+                4..=5 => {
+                    // release a random live job (registered or pending)
+                    let total = registered.len() + pending.len();
+                    if total > 0 {
+                        let i = rng.range_u64(0, total as u64 - 1) as usize;
+                        let tr = if i < registered.len() {
+                            registered.swap_remove(i)
+                        } else {
+                            pending.swap_remove(i - registered.len())
+                        };
+                        rm.release(&tr.job).expect("live job releases");
+                    }
+                }
+                6..=8 => {
+                    // next dispatch cycle: pending starts become registered
+                    now += rng.range_u64(1, 1_500);
+                    rm.begin_dispatch_cycle(now);
+                    registered.append(&mut pending);
+                }
+                _ => {
+                    // intern a fresh shape mid-sequence: its first probe
+                    // must observe the current profile state
+                    let vec = vec![1, rng.range_u64(0, 16)];
+                    rm.intern_shape(&vec);
+                    if !shapes.contains(&vec) {
+                        shapes.push(vec);
+                    }
+                }
+            }
+            assert_profile_matches_oracles(&rm, now, &registered, &shapes, rng);
+        }
+        assert_eq!(rm.profile_demotions(), 0, "coverage was maintained throughout");
+    });
+}
+
+fn run_with_profile(
+    jobs: Vec<Job>,
+    sys: SysConfig,
+    label: &str,
+    use_backfill_profile: bool,
+) -> SimOutput {
+    let opts = SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        mem_sample_secs: 0,
+        use_backfill_profile,
+        ..Default::default()
+    };
+    let mut sim =
+        Simulator::from_jobs(jobs, sys, dispatcher_from_label(label).unwrap(), opts);
+    sim.run().expect("simulation completes")
+}
+
+/// Render the deterministic portion of a run: the full jobs.csv bytes plus
+/// the timing-free perf columns (dispatch/other ns and RSS are wall-clock
+/// noise and excluded by design — same rule as the campaign store's
+/// byte-identical index.json).
+fn deterministic_bytes(out: &SimOutput) -> String {
+    let mut s = String::from("jobs.csv\n");
+    for j in &out.jobs {
+        s.push_str(&j.to_csv());
+        s.push('\n');
+    }
+    s.push_str("perf(t,queue,running,started)\n");
+    for p in &out.perf {
+        s.push_str(&format!("{},{},{},{}\n", p.t, p.queue_len, p.running, p.started));
+    }
+    s.push_str(&format!(
+        "completed={} rejected={} makespan={} slowdown_sum={} wait_sum={} max_queue={}\n",
+        out.jobs_completed,
+        out.jobs_rejected,
+        out.makespan,
+        out.slowdown_sum,
+        out.wait_sum,
+        out.max_queue
+    ));
+    s
+}
+
+/// Byte identity across the profile toggle for every shipped backfilling
+/// dispatcher. The `arb_jobs` workload builds in runtime-estimate noise
+/// (`req_time` is a 0.5–4× multiple of the true duration), so clamped,
+/// exceeded and early-finishing estimates are all exercised.
+#[test]
+fn simulations_are_byte_identical_with_profile_disabled() {
+    let mut rng = Pcg64::new(0xBF2);
+    let jobs = arb_jobs(&mut rng, 120, 12, 3);
+    let sys = SysConfig::homogeneous("abp", 6, &[("core", 8), ("gpu", 1), ("mem", 64)], 0);
+    for label in ["EBF-FF", "EBF_SJF-BF", "EBF_LJF-FF", "CBF-FF"] {
+        let on = run_with_profile(jobs.clone(), sys.clone(), label, true);
+        let off = run_with_profile(jobs.clone(), sys.clone(), label, false);
+        assert_eq!(
+            deterministic_bytes(&on),
+            deterministic_bytes(&off),
+            "{label}: the backfilling profile changed simulation results"
+        );
+        assert!(on.jobs_completed > 0, "{label}: degenerate case");
+    }
+}
+
+/// Same guarantee under a failure storm: down/up windows change capacity
+/// mid-simulation while running jobs keep (and release) their slices, the
+/// regime in which the naive rebuild and the incremental rows must agree
+/// on every clamped estimate.
+#[test]
+fn failure_scenarios_are_byte_identical_with_profile_disabled() {
+    use accasim::addons::FailureInjector;
+    let mut rng = Pcg64::new(0xBF3);
+    let jobs = arb_jobs(&mut rng, 80, 8, 2);
+    let sys = SysConfig::homogeneous("abpf", 4, &[("core", 8), ("mem", 64)], 0);
+    for label in ["EBF-FF", "CBF-FF"] {
+        let run = |use_backfill_profile: bool| {
+            let opts = SimOptions {
+                output: OutputCollector::in_memory(true, true),
+                addons: vec![Box::new(FailureInjector::new(vec![
+                    (0, 100, 5_000),
+                    (1, 2_000, 20_000),
+                    (2, 100, 3_000),
+                ]))],
+                mem_sample_secs: 0,
+                use_backfill_profile,
+                ..Default::default()
+            };
+            let mut sim = Simulator::from_jobs(
+                jobs.clone(),
+                sys.clone(),
+                dispatcher_from_label(label).unwrap(),
+                opts,
+            );
+            sim.run().expect("simulation completes")
+        };
+        let (on, off) = (run(true), run(false));
+        assert_eq!(
+            deterministic_bytes(&on),
+            deterministic_bytes(&off),
+            "{label}: profile diverged under failure windows"
+        );
+        assert_eq!(on.addon_wakes, off.addon_wakes);
+    }
+}
+
+/// Same guarantee under a power cap: `PowerCapped` un-commits same-cycle
+/// starts (`rm.release` of a job allocated moments earlier), the one path
+/// that releases a *pending* profile entry before it ever registers.
+#[test]
+fn power_cap_scenarios_are_byte_identical_with_profile_disabled() {
+    use accasim::addons::PowerModel;
+    use accasim::dispatch::{Dispatcher, EasyBackfilling, FirstFit, PowerCapped};
+    let mut rng = Pcg64::new(0xBF4);
+    let jobs = arb_jobs(&mut rng, 80, 8, 2);
+    let sys = SysConfig::homogeneous("abpp", 4, &[("core", 8), ("mem", 64)], 0);
+    let run = |use_backfill_profile: bool| {
+        let capped = Dispatcher::new(
+            Box::new(PowerCapped::new(Box::new(EasyBackfilling::new()), 900.0, 50.0)),
+            Box::new(FirstFit::new()),
+        );
+        let opts = SimOptions {
+            output: OutputCollector::in_memory(true, true),
+            addons: vec![Box::new(PowerModel::new(100.0, 300.0))],
+            mem_sample_secs: 0,
+            use_backfill_profile,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(jobs.clone(), sys.clone(), capped, opts);
+        sim.run().expect("simulation completes")
+    };
+    let (on, off) = (run(true), run(false));
+    assert_eq!(
+        deterministic_bytes(&on),
+        deterministic_bytes(&off),
+        "PCAP[EBF]-FF: profile diverged across power-cap deferrals"
+    );
+    assert!(on.jobs_completed > 0);
+}
+
+/// Campaign-level byte identity: the same backfilling matrix executed with
+/// the profile on and off must leave byte-identical stores — summary.csv,
+/// index.json and every per-run jobs.csv (perf.csv agrees on its
+/// deterministic columns; its ns/RSS fields are wall-clock noise).
+#[test]
+fn campaign_store_is_byte_identical_with_profile_disabled() {
+    use accasim::campaign::{Campaign, CampaignSpec};
+    let tmp = tempfile::tempdir().unwrap();
+    let spec = || {
+        let mut s = CampaignSpec::new("abprofile");
+        s.add_trace("seth", 0.0005).add_system_trace("seth");
+        s.add_dispatcher("EBF-FF").add_dispatcher("CBF-FF");
+        s.seeds = vec![1, 2];
+        s
+    };
+    let dir_on = tmp.path().join("on");
+    let dir_off = tmp.path().join("off");
+    let rep_on = Campaign::new(spec(), &dir_on).backfill_profile(true).run().unwrap();
+    let rep_off = Campaign::new(spec(), &dir_off).backfill_profile(false).run().unwrap();
+    assert_eq!(rep_on.records.len(), 4);
+    assert_eq!(rep_on.records.len(), rep_off.records.len());
+
+    let read = |p: &std::path::Path| std::fs::read_to_string(p).unwrap();
+    for file in ["summary.csv", "index.json"] {
+        assert_eq!(
+            read(&dir_on.join(file)),
+            read(&dir_off.join(file)),
+            "{file} must not depend on the backfilling profile"
+        );
+    }
+    for rec in &rep_on.records {
+        let run = |d: &std::path::Path| d.join("runs").join(&rec.run_id);
+        assert_eq!(
+            read(&run(&dir_on).join("jobs.csv")),
+            read(&run(&dir_off).join("jobs.csv")),
+            "{}: jobs.csv must not depend on the backfilling profile",
+            rec.run_id
+        );
+        let strip = |text: String| {
+            // keep the deterministic perf columns: t,queue_len,running,started
+            text.lines()
+                .skip(1)
+                .map(|l| {
+                    let f: Vec<&str> = l.split(',').collect();
+                    format!("{},{},{},{}", f[0], f[3], f[4], f[5])
+                })
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(
+            strip(read(&run(&dir_on).join("perf.csv"))),
+            strip(read(&run(&dir_off).join("perf.csv"))),
+            "{}: perf.csv deterministic columns diverged",
+            rec.run_id
+        );
+    }
+}

@@ -191,6 +191,45 @@ fn power_cap_scenario_resumes_byte_identically() {
 }
 
 #[test]
+fn backfilling_profile_resumes_byte_identically() {
+    // Snapshot/restore round-trips with the incremental backfilling
+    // profile active (the default). Restore re-registers every still-
+    // running job from its committed start (`allocate_running`), so the
+    // restored profile must answer every later probe exactly as the
+    // uninterrupted one — and exactly as a run on the naive oracle path.
+    let tmp = tempfile::tempdir().unwrap();
+    let swf = tmp.path().join("w.swf");
+    varied_swf(&swf, 30);
+    for label in ["EBF-FF", "EBF_SJF-BF", "CBF-FF"] {
+        for k in [3, 8] {
+            assert_resume_byte_identical(tmp.path(), &swf, label, None, 13, k);
+        }
+        // The restored profile-on run must also match an uninterrupted
+        // profile-off twin byte-for-byte: restore-time registration and
+        // the naive rebuild describe the same availability future.
+        let naive_jobs = tmp.path().join(format!("{label}-naive-jobs.csv"));
+        let naive_perf = tmp.path().join(format!("{label}-naive-perf.csv"));
+        let (source, sys, d, mut opts) =
+            parts(&swf, label, None, 13, &naive_jobs, &naive_perf);
+        opts.use_backfill_profile = false;
+        let mut naive = SimCore::with_source(source, sys, d, opts);
+        naive.run().unwrap();
+        // files written by assert_resume_byte_identical's restored twin
+        let tag = format!("{label}-plain-13-8");
+        assert_eq!(
+            read(&naive_jobs),
+            read(&tmp.path().join(format!("{tag}-res-jobs.csv"))),
+            "{label}: restored profile run diverged from the naive path"
+        );
+        assert_eq!(
+            read(&naive_perf),
+            read(&tmp.path().join(format!("{tag}-res-perf.csv"))),
+            "{label}: restored profile perf diverged from the naive path"
+        );
+    }
+}
+
+#[test]
 fn snapshot_text_is_stable_across_a_snapshot_restore_cycle() {
     // Restoring a snapshot and snapshotting again without stepping must
     // reproduce the document byte-for-byte — the serialized state is
