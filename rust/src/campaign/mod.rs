@@ -20,18 +20,24 @@
 //! * [`compare`] — the comparator: paired per-seed dispatcher deltas with
 //!   bootstrap confidence intervals, win/loss/tie counts and rank tables,
 //!   computed from the store (`campaign compare` on the CLI).
+//! * [`observatory`] — cross-run telemetry aggregation: every run's
+//!   `telemetry.json`/`timeseries.csv` merged into per-cell observation
+//!   tables with optional baseline regression checks (`campaign
+//!   telemetry` on the CLI).
 //!
 //! The experimentation tool ([`crate::experiment::Experiment`]) is now a
 //! thin 1-workload × 1-system campaign, so both fronts share one engine.
 
 pub mod compare;
 pub mod matrix;
+pub mod observatory;
 pub mod runner;
 pub mod spec;
 pub mod store;
 
 pub use compare::{CompareOptions, Comparison, Metric};
 pub use matrix::{derive_run_seed, derive_scenario_seed, expand, RunMatrix, RunSpec};
+pub use observatory::{CellTelemetry, Observatory, Regression, RunTelemetry};
 pub use runner::{Campaign, CampaignReport, CampaignStatus, RunProgress};
 pub use spec::{CampaignSpec, PowerSpec, ScenarioSpec, SystemSource, SystemSpec, WorkloadSpec};
 pub use store::{load_index, read_run_output, run_dir, CampaignIndex, RunRecord};

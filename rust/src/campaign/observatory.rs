@@ -1,0 +1,775 @@
+//! The campaign observatory: cross-run telemetry aggregation over a
+//! finished results store (DESIGN.md §Observability).
+//!
+//! Where [`super::compare`] pairs *simulation outcomes* (slowdown, wait,
+//! makespan), the observatory aggregates *observation artifacts*: every
+//! run's `telemetry.json` (span percentiles, counters) and
+//! `timeseries.csv` (per-time-point streams) merge into per-cell tables
+//! keyed exactly like the comparator keys cells — (workload × system ×
+//! scenario), one row per dispatcher. The output answers operational
+//! questions the outcome tables cannot: how expensive was dispatch in
+//! this cell, did the availability index demote, how often did journals
+//! rebuild, what did the queue actually look like over time.
+//!
+//! Everything is computed from the store, so the observatory can be
+//! (re)run long after the campaign; runs that executed without
+//! `--telemetry` simply contribute no observation rows (counted in
+//! `with_telemetry` and warned about — never a panic). All aggregation
+//! iterates BTreeMaps, so artifacts are byte-identical no matter how many
+//! loader threads (`--jobs`) filled the per-run slots.
+//!
+//! Throughput (`points_per_s`) derives from each run's `run.json` measure
+//! fields (`time_points / wall_s`) rather than from heartbeat files —
+//! heartbeats are progress markers and are deleted when a run completes.
+//!
+//! With `--baseline` the observatory re-applies the `bench-check`
+//! thresholding rule per cell: `ratio = current / baseline`, a zero
+//! baseline with a non-zero current reads as infinite, and a ratio above
+//! `1 + max_regress` flags a regression. Cells absent from the baseline
+//! (or unobserved on either side) pass — new cells are not regressions.
+
+use super::store::{self, RunRecord};
+use crate::telemetry::timeseries::lttb_indices;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Cell key: the comparator's (workload, system, scenario) coordinate
+/// plus the dispatcher — observation cost is a per-dispatcher property.
+type CellKey = (String, String, String, String);
+
+/// Telemetry extracted from one stored run directory.
+#[derive(Debug, Clone, Default)]
+pub struct RunTelemetry {
+    /// The run's manifest (`run.json`, measure fields included).
+    pub record: RunRecord,
+    /// Whether the run stored a `telemetry.json` (ran with observation on).
+    pub observed: bool,
+    /// `spans.dispatch_cycle.p50_ns` when the span was recorded.
+    pub dispatch_p50_ns: Option<f64>,
+    /// `spans.dispatch_cycle.p99_ns`.
+    pub dispatch_p99_ns: Option<f64>,
+    /// `spans.allocator_place.p50_ns`.
+    pub place_p50_ns: Option<f64>,
+    /// `spans.allocator_place.p99_ns`.
+    pub place_p99_ns: Option<f64>,
+    /// The full counters block of `telemetry.json`.
+    pub counters: BTreeMap<String, u64>,
+    /// Backfill starts from the folded time-series summary block.
+    pub backfill_starts: u64,
+    /// `(t, queue)` pairs from `timeseries.csv`, for sparklines.
+    pub queue_series: Vec<(f64, f64)>,
+    /// Loader warnings (missing artifacts, unreadable documents).
+    pub warnings: Vec<String>,
+}
+
+impl RunTelemetry {
+    /// Load one run's observation artifacts from its store directory.
+    /// Missing or unreadable artifacts degrade to warnings — a partially
+    /// observed store still aggregates.
+    pub fn load(out_dir: &Path, rec: &RunRecord) -> RunTelemetry {
+        let dir = store::run_dir(out_dir, &rec.run_id);
+        let mut rt = RunTelemetry {
+            // re-read run.json: the index deliberately drops measure
+            // fields, and throughput needs wall_s
+            record: store::load_run(&dir).unwrap_or_else(|| rec.clone()),
+            ..RunTelemetry::default()
+        };
+        match std::fs::read_to_string(dir.join("telemetry.json")) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(doc) => rt.absorb_telemetry(&doc),
+                Err(e) => rt.warnings.push(format!(
+                    "{}: unreadable telemetry.json ({e}); treated as unobserved",
+                    rec.run_id
+                )),
+            },
+            // absent file = the run executed with observation off; that is
+            // a normal store state, only worth one aggregate-level warning
+            Err(_) => {}
+        }
+        match std::fs::read_to_string(dir.join(crate::telemetry::TIMESERIES_FILE)) {
+            Ok(text) => rt.absorb_timeseries(&text),
+            Err(_) => {}
+        }
+        rt
+    }
+
+    fn absorb_telemetry(&mut self, doc: &Json) {
+        self.observed = true;
+        if let Some(Json::Obj(counters)) = doc.get("counters") {
+            for (k, v) in counters {
+                if let Some(n) = v.as_u64() {
+                    self.counters.insert(k.clone(), n);
+                }
+            }
+        }
+        let span = |name: &str, pct: &str| -> Option<f64> {
+            doc.get("spans")?.get(name)?.get(pct)?.as_f64()
+        };
+        self.dispatch_p50_ns = span("dispatch_cycle", "p50_ns");
+        self.dispatch_p99_ns = span("dispatch_cycle", "p99_ns");
+        self.place_p50_ns = span("allocator_place", "p50_ns");
+        self.place_p99_ns = span("allocator_place", "p99_ns");
+        self.backfill_starts = doc
+            .get("timeseries")
+            .and_then(|ts| ts.get("backfill_starts"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0);
+    }
+
+    fn absorb_timeseries(&mut self, csv: &str) {
+        let mut lines = csv.lines();
+        let Some(header) = lines.next() else { return };
+        let cols: Vec<&str> = header.split(',').collect();
+        let (Some(ti), Some(qi)) = (
+            cols.iter().position(|c| *c == "t"),
+            cols.iter().position(|c| *c == "queue"),
+        ) else {
+            self.warnings
+                .push(format!("{}: timeseries.csv lacks t/queue columns", self.record.run_id));
+            return;
+        };
+        for line in lines {
+            let f: Vec<&str> = line.split(',').collect();
+            if let (Some(t), Some(q)) = (
+                f.get(ti).and_then(|s| s.parse::<f64>().ok()),
+                f.get(qi).and_then(|s| s.parse::<f64>().ok()),
+            ) {
+                self.queue_series.push((t, q));
+            }
+        }
+    }
+}
+
+/// Aggregated observation metrics of one (cell × dispatcher) coordinate.
+#[derive(Debug, Clone, Default)]
+pub struct CellTelemetry {
+    /// Workload axis label of the cell.
+    pub workload: String,
+    /// System axis label of the cell.
+    pub system: String,
+    /// Scenario name of the cell.
+    pub scenario: String,
+    /// Dispatcher label.
+    pub dispatcher: String,
+    /// Stored runs in the cell (repetition seeds).
+    pub runs: usize,
+    /// Runs that stored a `telemetry.json`.
+    pub with_telemetry: usize,
+    /// Mean `dispatch_cycle` p50 over observed runs (ns; 0 when none).
+    pub dispatch_p50_ns: f64,
+    /// Mean `dispatch_cycle` p99 (ns).
+    pub dispatch_p99_ns: f64,
+    /// Mean `allocator_place` p50 (ns).
+    pub place_p50_ns: f64,
+    /// Mean `allocator_place` p99 (ns).
+    pub place_p99_ns: f64,
+    /// Summed availability-index + profile demotions.
+    pub demotions: u64,
+    /// Summed journal + profile rebuilds.
+    pub rebuilds: u64,
+    /// Summed compacted event-log entries.
+    pub log_events_compacted: u64,
+    /// Summed backfill starts from the time-series summaries.
+    pub backfill_starts: u64,
+    /// Peak queue length over the cell's runs (from the manifests, so
+    /// present even for unobserved runs).
+    pub queue_peak: usize,
+    /// Mean simulation throughput, `time_points / wall_s` (run.json
+    /// measure fields — heartbeats are gone once a run completes).
+    pub points_per_s: f64,
+    /// Queue-depth sparkline source: the lowest-seed observed run's
+    /// `(t, queue)` series.
+    pub queue_series: Vec<(f64, f64)>,
+}
+
+impl CellTelemetry {
+    /// Lower-is-better metrics the baseline check thresholds, as
+    /// `(name, value)` pairs: span percentiles first, then counters.
+    pub fn regression_metrics(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("dispatch_p50_ns", self.dispatch_p50_ns),
+            ("dispatch_p99_ns", self.dispatch_p99_ns),
+            ("place_p50_ns", self.place_p50_ns),
+            ("place_p99_ns", self.place_p99_ns),
+            ("demotions", self.demotions as f64),
+            ("rebuilds", self.rebuilds as f64),
+        ]
+    }
+}
+
+/// One flagged regression of a cell metric against the baseline store.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    /// `workload/system/scenario/dispatcher` coordinate.
+    pub cell: String,
+    /// Metric name (one of [`CellTelemetry::regression_metrics`]).
+    pub metric: String,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// `current / baseline` (infinite when the baseline was zero).
+    pub ratio: f64,
+}
+
+/// A finished cross-run aggregation: everything `campaign telemetry`
+/// writes, as data.
+#[derive(Debug, Clone)]
+pub struct Observatory {
+    /// Campaign name from the store.
+    pub campaign: String,
+    /// Spec hash the stored runs were derived from.
+    pub spec_hash: u64,
+    /// Per-(cell × dispatcher) aggregates, ordered by key.
+    pub cells: Vec<CellTelemetry>,
+    /// Aggregation warnings (unobserved runs, unreadable artifacts).
+    pub warnings: Vec<String>,
+}
+
+impl Observatory {
+    /// Aggregate loaded per-run telemetry. `runs` may arrive in any
+    /// order — cells group by (workload, system, scenario, dispatcher)
+    /// through BTreeMaps, so the result is order-independent.
+    pub fn from_runs(campaign: &str, spec_hash: u64, runs: Vec<RunTelemetry>) -> Observatory {
+        let mut groups: BTreeMap<CellKey, Vec<RunTelemetry>> = BTreeMap::new();
+        let mut warnings = Vec::new();
+        let mut unobserved = 0usize;
+        for rt in runs {
+            warnings.extend(rt.warnings.iter().cloned());
+            if !rt.observed {
+                unobserved += 1;
+            }
+            let key = (
+                rt.record.workload.clone(),
+                rt.record.system.clone(),
+                rt.record.scenario.clone(),
+                rt.record.dispatcher.clone(),
+            );
+            groups.entry(key).or_default().push(rt);
+        }
+        if unobserved > 0 {
+            warnings.push(format!(
+                "{unobserved} run(s) stored no telemetry.json (executed without \
+                 --telemetry); they contribute outcomes but no observation rows"
+            ));
+        }
+        let mut cells = Vec::new();
+        for ((workload, system, scenario, dispatcher), mut group) in groups {
+            // lowest seed first: the sparkline representative and every
+            // mean below are then independent of load order
+            group.sort_by_key(|rt| rt.record.seed);
+            let mut cell = CellTelemetry {
+                workload,
+                system,
+                scenario,
+                dispatcher,
+                runs: group.len(),
+                ..CellTelemetry::default()
+            };
+            let mean = |vals: &[f64]| {
+                if vals.is_empty() { 0.0 } else { vals.iter().sum::<f64>() / vals.len() as f64 }
+            };
+            let mut d50 = Vec::new();
+            let mut d99 = Vec::new();
+            let mut p50 = Vec::new();
+            let mut p99 = Vec::new();
+            let mut pps = Vec::new();
+            for rt in &group {
+                if rt.observed {
+                    cell.with_telemetry += 1;
+                }
+                d50.extend(rt.dispatch_p50_ns);
+                d99.extend(rt.dispatch_p99_ns);
+                p50.extend(rt.place_p50_ns);
+                p99.extend(rt.place_p99_ns);
+                let c = |name: &str| rt.counters.get(name).copied().unwrap_or(0);
+                cell.demotions += c("index_demotions") + c("profile_demotions");
+                cell.rebuilds += c("journal_rebuilds") + c("profile_rebuilds");
+                cell.log_events_compacted += c("log_events_compacted");
+                cell.backfill_starts += rt.backfill_starts;
+                cell.queue_peak = cell.queue_peak.max(rt.record.max_queue);
+                if rt.record.wall_s > 0.0 {
+                    pps.push(rt.record.time_points as f64 / rt.record.wall_s);
+                }
+                if cell.queue_series.is_empty() && !rt.queue_series.is_empty() {
+                    cell.queue_series = rt.queue_series.clone();
+                }
+            }
+            cell.dispatch_p50_ns = mean(&d50);
+            cell.dispatch_p99_ns = mean(&d99);
+            cell.place_p50_ns = mean(&p50);
+            cell.place_p99_ns = mean(&p99);
+            cell.points_per_s = mean(&pps);
+            cells.push(cell);
+        }
+        Observatory { campaign: campaign.to_string(), spec_hash, cells, warnings }
+    }
+
+    /// Aggregate a finished campaign store (single-threaded loading).
+    pub fn from_store<P: AsRef<Path>>(out_dir: P) -> anyhow::Result<Observatory> {
+        Observatory::from_store_with_jobs(out_dir, 1)
+    }
+
+    /// [`Observatory::from_store`] with `jobs` parallel loader threads.
+    /// Each thread fills a disjoint contiguous slice of per-run slots, so
+    /// the aggregate — and every artifact — is byte-identical for any
+    /// `jobs` (asserted in `tests/observatory.rs`).
+    pub fn from_store_with_jobs<P: AsRef<Path>>(
+        out_dir: P,
+        jobs: usize,
+    ) -> anyhow::Result<Observatory> {
+        let out_dir = out_dir.as_ref();
+        let idx = store::load_index(out_dir)?;
+        let n = idx.records.len();
+        let mut slots: Vec<Option<RunTelemetry>> = Vec::new();
+        slots.resize_with(n, || None);
+        let chunk = n.div_ceil(jobs.max(1)).max(1);
+        std::thread::scope(|s| {
+            for (recs, out) in idx.records.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    for (rec, slot) in recs.iter().zip(out.iter_mut()) {
+                        *slot = Some(RunTelemetry::load(out_dir, rec));
+                    }
+                });
+            }
+        });
+        let runs = slots.into_iter().flatten().collect();
+        Ok(Observatory::from_runs(&idx.campaign, idx.spec_hash, runs))
+    }
+
+    /// Header of [`Observatory::telemetry_csv`].
+    pub const TELEMETRY_CSV_HEADER: &'static str = "workload,system,scenario,dispatcher,runs,\
+         with_telemetry,dispatch_p50_ns,dispatch_p99_ns,place_p50_ns,place_p99_ns,demotions,\
+         rebuilds,log_events_compacted,backfill_starts,queue_peak,points_per_s";
+
+    /// The per-cell aggregate table as CSV.
+    pub fn telemetry_csv(&self) -> String {
+        let mut out = String::from(Self::TELEMETRY_CSV_HEADER);
+        out.push('\n');
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{:.0},{:.0},{:.0},{:.0},{},{},{},{},{},{:.2}\n",
+                c.workload,
+                c.system,
+                c.scenario,
+                c.dispatcher,
+                c.runs,
+                c.with_telemetry,
+                c.dispatch_p50_ns,
+                c.dispatch_p99_ns,
+                c.place_p50_ns,
+                c.place_p99_ns,
+                c.demotions,
+                c.rebuilds,
+                c.log_events_compacted,
+                c.backfill_starts,
+                c.queue_peak,
+                c.points_per_s
+            ));
+        }
+        out
+    }
+
+    /// Human-readable Markdown report (deterministic: no timestamps, no
+    /// machine identifiers beyond what the store records).
+    pub fn report_md(&self) -> String {
+        let mut md = String::new();
+        md.push_str(&format!("# Campaign observatory — {}\n\n", self.campaign));
+        md.push_str(&format!(
+            "- spec hash: `{:016x}`\n- cells: {}\n- warnings: {}\n\n",
+            self.spec_hash,
+            self.cells.len(),
+            self.warnings.len()
+        ));
+        // one section per comparator cell, one row per dispatcher
+        let mut by_cell: BTreeMap<(String, String, String), Vec<&CellTelemetry>> = BTreeMap::new();
+        for c in &self.cells {
+            by_cell
+                .entry((c.workload.clone(), c.system.clone(), c.scenario.clone()))
+                .or_default()
+                .push(c);
+        }
+        for ((workload, system, scenario), cells) in &by_cell {
+            md.push_str(&format!("## Cell {workload} × {system} × {scenario}\n\n"));
+            md.push_str(
+                "| dispatcher | runs | obs | dispatch p50/p99 (µs) | place p50/p99 (µs) | \
+                 demotions | rebuilds | backfill | queue peak | points/s |\n\
+                 |---|---|---|---|---|---|---|---|---|---|\n",
+            );
+            for c in cells {
+                md.push_str(&format!(
+                    "| {} | {} | {} | {:.1} / {:.1} | {:.1} / {:.1} | {} | {} | {} | {} | \
+                     {:.1} |\n",
+                    c.dispatcher,
+                    c.runs,
+                    c.with_telemetry,
+                    c.dispatch_p50_ns / 1e3,
+                    c.dispatch_p99_ns / 1e3,
+                    c.place_p50_ns / 1e3,
+                    c.place_p99_ns / 1e3,
+                    c.demotions,
+                    c.rebuilds,
+                    c.backfill_starts,
+                    c.queue_peak,
+                    c.points_per_s
+                ));
+            }
+            md.push('\n');
+        }
+        if !self.warnings.is_empty() {
+            md.push_str("## Warnings\n\n");
+            for w in &self.warnings {
+                md.push_str(&format!("- {w}\n"));
+            }
+            md.push('\n');
+        }
+        md.push_str(
+            "Span percentiles are means over each cell's observed repetitions; counters are \
+             sums. Throughput derives from run.json measure fields and is therefore \
+             machine-dependent — compare it only across runs of one host.\n",
+        );
+        md
+    }
+
+    /// Check this store's cells against a baseline store's aggregates
+    /// with the `bench-check` thresholding rule (module docs). Returns
+    /// the flagged regressions, ordered by (cell, metric).
+    pub fn check_against(&self, baseline: &Observatory, max_regress: f64) -> Vec<Regression> {
+        let base: BTreeMap<CellKey, &CellTelemetry> = baseline
+            .cells
+            .iter()
+            .map(|c| {
+                (
+                    (c.workload.clone(), c.system.clone(), c.scenario.clone(), c.dispatcher.clone()),
+                    c,
+                )
+            })
+            .collect();
+        let mut regs = Vec::new();
+        for c in &self.cells {
+            let key =
+                (c.workload.clone(), c.system.clone(), c.scenario.clone(), c.dispatcher.clone());
+            // unmatched or unobserved cells pass: a new cell (or a store
+            // half run without --telemetry) is not a regression
+            let Some(b) = base.get(&key) else { continue };
+            if b.with_telemetry == 0 || c.with_telemetry == 0 {
+                continue;
+            }
+            let cell = format!("{}/{}/{}/{}", c.workload, c.system, c.scenario, c.dispatcher);
+            for ((metric, cv), (_, pv)) in
+                c.regression_metrics().into_iter().zip(b.regression_metrics())
+            {
+                let ratio = if pv == 0.0 {
+                    if cv > 0.0 { f64::INFINITY } else { 1.0 }
+                } else {
+                    cv / pv
+                };
+                if ratio > 1.0 + max_regress {
+                    regs.push(Regression {
+                        cell: cell.clone(),
+                        metric: metric.to_string(),
+                        baseline: pv,
+                        current: cv,
+                        ratio,
+                    });
+                }
+            }
+        }
+        regs
+    }
+
+    /// Header of [`Observatory::regressions_csv`].
+    pub const REGRESSIONS_CSV_HEADER: &'static str = "cell,metric,baseline,current,ratio";
+
+    /// Flagged regressions as CSV (`inf` for zero-baseline blowups).
+    pub fn regressions_csv(regs: &[Regression]) -> String {
+        let mut out = String::from(Self::REGRESSIONS_CSV_HEADER);
+        out.push('\n');
+        for r in regs {
+            out.push_str(&format!(
+                "{},{},{:.0},{:.0},{:.4}\n",
+                r.cell, r.metric, r.baseline, r.current, r.ratio
+            ));
+        }
+        out
+    }
+
+    /// Write the aggregation into `<out_dir>/observatory/`:
+    /// `telemetry.csv` and `report.md`. Returns the written paths.
+    pub fn write<P: AsRef<Path>>(&self, out_dir: P) -> anyhow::Result<Vec<PathBuf>> {
+        let dir = out_dir.as_ref().join("observatory");
+        std::fs::create_dir_all(&dir)?;
+        let mut written = Vec::new();
+        for (name, text) in
+            [("telemetry.csv", self.telemetry_csv()), ("report.md", self.report_md())]
+        {
+            let p = dir.join(name);
+            std::fs::write(&p, text)?;
+            written.push(p);
+        }
+        Ok(written)
+    }
+
+    /// Self-contained HTML dashboard: the Markdown report's tables plus
+    /// an inline-SVG queue-depth sparkline per cell. One file, no
+    /// external assets or scripts, deterministic byte-for-byte.
+    pub fn report_html(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;").replace('"', "&quot;")
+        }
+        /// Queue depth over time as a polyline, LTTB-thinned to the SVG's
+        /// horizontal resolution.
+        fn spark_svg(series: &[(f64, f64)]) -> String {
+            const W: f64 = 220.0;
+            const H: f64 = 34.0;
+            if series.len() < 2 {
+                return "<span class=\"nodata\">no series</span>".to_string();
+            }
+            let xs: Vec<f64> = series.iter().map(|p| p.0).collect();
+            let ys: Vec<f64> = series.iter().map(|p| p.1).collect();
+            let keep = lttb_indices(&xs, &ys, 100);
+            let (x0, x1) = (xs[0], xs[xs.len() - 1]);
+            let ymax = ys.iter().cloned().fold(1.0f64, f64::max);
+            let sx = |x: f64| {
+                if x1 > x0 { 2.0 + (x - x0) / (x1 - x0) * (W - 4.0) } else { W / 2.0 }
+            };
+            let sy = |y: f64| H - 2.0 - y / ymax * (H - 4.0);
+            let pts: Vec<String> =
+                keep.iter().map(|&i| format!("{:.1},{:.1}", sx(xs[i]), sy(ys[i]))).collect();
+            format!(
+                "<svg width=\"{W:.0}\" height=\"{H:.0}\" viewBox=\"0 0 {W:.0} {H:.0}\" \
+                 role=\"img\"><polyline points=\"{}\" class=\"spark\"/></svg>",
+                pts.join(" ")
+            )
+        }
+
+        let mut h = String::from(
+            "<!DOCTYPE html>\n<html lang=\"en\">\n<head>\n<meta charset=\"utf-8\">\n",
+        );
+        h.push_str(&format!("<title>Campaign observatory — {}</title>\n", esc(&self.campaign)));
+        h.push_str(
+            "<style>\nbody{font:14px/1.5 system-ui,sans-serif;max-width:80em;margin:2em auto;\
+             padding:0 1em;color:#222}\ntable{border-collapse:collapse;margin:1em 0}\n\
+             th,td{border:1px solid #ccc;padding:.25em .6em;text-align:right}\n\
+             th:first-child,td:first-child{text-align:left}\n\
+             .spark{fill:none;stroke:#369;stroke-width:1.5}\n.nodata{color:#999;\
+             font-size:12px}\n</style>\n</head>\n<body>\n",
+        );
+        h.push_str(&format!("<h1>Campaign observatory — {}</h1>\n", esc(&self.campaign)));
+        h.push_str(&format!(
+            "<ul>\n<li>spec hash: <code>{:016x}</code></li>\n<li>cells: {}</li>\n\
+             <li>warnings: {}</li>\n</ul>\n",
+            self.spec_hash,
+            self.cells.len(),
+            self.warnings.len()
+        ));
+        let mut by_cell: BTreeMap<(String, String, String), Vec<&CellTelemetry>> = BTreeMap::new();
+        for c in &self.cells {
+            by_cell
+                .entry((c.workload.clone(), c.system.clone(), c.scenario.clone()))
+                .or_default()
+                .push(c);
+        }
+        for ((workload, system, scenario), cells) in &by_cell {
+            h.push_str(&format!(
+                "<h2>Cell {} × {} × {}</h2>\n",
+                esc(workload),
+                esc(system),
+                esc(scenario)
+            ));
+            h.push_str(
+                "<table>\n<tr><th>dispatcher</th><th>runs</th><th>obs</th>\
+                 <th>dispatch p50/p99 (µs)</th><th>place p50/p99 (µs)</th>\
+                 <th>demotions</th><th>rebuilds</th><th>backfill</th><th>queue peak</th>\
+                 <th>points/s</th><th>queue over time</th></tr>\n",
+            );
+            for c in cells {
+                h.push_str(&format!(
+                    "<tr><td>{}</td><td>{}</td><td>{}</td><td>{:.1} / {:.1}</td>\
+                     <td>{:.1} / {:.1}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+                     <td>{:.1}</td><td>{}</td></tr>\n",
+                    esc(&c.dispatcher),
+                    c.runs,
+                    c.with_telemetry,
+                    c.dispatch_p50_ns / 1e3,
+                    c.dispatch_p99_ns / 1e3,
+                    c.place_p50_ns / 1e3,
+                    c.place_p99_ns / 1e3,
+                    c.demotions,
+                    c.rebuilds,
+                    c.backfill_starts,
+                    c.queue_peak,
+                    c.points_per_s,
+                    spark_svg(&c.queue_series)
+                ));
+            }
+            h.push_str("</table>\n");
+        }
+        if !self.warnings.is_empty() {
+            h.push_str("<h2>Warnings</h2>\n<ul>\n");
+            for w in &self.warnings {
+                h.push_str(&format!("<li>{}</li>\n", esc(w)));
+            }
+            h.push_str("</ul>\n");
+        }
+        h.push_str(
+            "<p>Sparklines show queue depth over simulation time (lowest observed \
+             repetition, LTTB-thinned). Span percentiles are means over observed \
+             repetitions; counters are sums; throughput is machine-dependent.</p>\n\
+             </body>\n</html>\n",
+        );
+        h
+    }
+
+    /// Write [`Observatory::report_html`] to
+    /// `<out_dir>/observatory/observatory.html` and return its path
+    /// (`campaign telemetry --html`).
+    pub fn write_html<P: AsRef<Path>>(&self, out_dir: P) -> anyhow::Result<PathBuf> {
+        let dir = out_dir.as_ref().join("observatory");
+        std::fs::create_dir_all(&dir)?;
+        let p = dir.join("observatory.html");
+        std::fs::write(&p, self.report_html())?;
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(dispatcher: &str, seed: u64, p99: f64, demote: u64) -> RunTelemetry {
+        RunTelemetry {
+            record: RunRecord {
+                run_id: format!("{dispatcher}-{seed}"),
+                workload: "w".to_string(),
+                system: "sys".to_string(),
+                scenario: "baseline".to_string(),
+                dispatcher: dispatcher.to_string(),
+                seed,
+                time_points: 1000,
+                wall_s: 2.0,
+                max_queue: 5 + seed as usize,
+                ..RunRecord::default()
+            },
+            observed: true,
+            dispatch_p50_ns: Some(p99 / 2.0),
+            dispatch_p99_ns: Some(p99),
+            counters: BTreeMap::from([
+                ("index_demotions".to_string(), demote),
+                ("journal_rebuilds".to_string(), 1),
+            ]),
+            backfill_starts: 3,
+            queue_series: vec![(0.0, 1.0), (10.0, 4.0), (20.0, 2.0)],
+            ..RunTelemetry::default()
+        }
+    }
+
+    #[test]
+    fn aggregation_is_order_independent_and_keyed_like_compare() {
+        let runs = || vec![rt("FIFO-FF", 1, 1000.0, 2), rt("FIFO-FF", 2, 3000.0, 4), rt("SJF-BF", 1, 500.0, 0)];
+        let a = Observatory::from_runs("c", 7, runs());
+        let mut shuffled = runs();
+        shuffled.reverse();
+        let b = Observatory::from_runs("c", 7, shuffled);
+        assert_eq!(a.telemetry_csv(), b.telemetry_csv());
+        assert_eq!(a.report_md(), b.report_md());
+        assert_eq!(a.report_html(), b.report_html());
+        assert_eq!(a.cells.len(), 2, "one row per (cell × dispatcher)");
+        let fifo = &a.cells[0];
+        assert_eq!(fifo.dispatcher, "FIFO-FF");
+        assert_eq!(fifo.runs, 2);
+        assert_eq!(fifo.dispatch_p99_ns, 2000.0, "mean over seeds");
+        assert_eq!(fifo.demotions, 6, "summed over seeds");
+        assert_eq!(fifo.rebuilds, 2);
+        assert_eq!(fifo.backfill_starts, 6);
+        assert_eq!(fifo.queue_peak, 7, "max over seeds");
+        assert_eq!(fifo.points_per_s, 500.0);
+    }
+
+    #[test]
+    fn unobserved_runs_aggregate_outcomes_with_a_warning() {
+        let mut dark = rt("FIFO-FF", 2, 0.0, 0);
+        dark.observed = false;
+        dark.dispatch_p50_ns = None;
+        dark.dispatch_p99_ns = None;
+        dark.counters.clear();
+        dark.backfill_starts = 0;
+        let obs = Observatory::from_runs("c", 7, vec![rt("FIFO-FF", 1, 1000.0, 2), dark]);
+        let cell = &obs.cells[0];
+        assert_eq!((cell.runs, cell.with_telemetry), (2, 1));
+        assert_eq!(cell.dispatch_p99_ns, 1000.0, "absent spans don't drag the mean to zero");
+        assert_eq!(cell.queue_peak, 7, "manifest metrics cover unobserved runs too");
+        assert!(
+            obs.warnings.iter().any(|w| w.contains("no telemetry.json")),
+            "{:?}",
+            obs.warnings
+        );
+    }
+
+    #[test]
+    fn baseline_check_applies_the_bench_check_rule() {
+        let base = Observatory::from_runs("c", 7, vec![rt("FIFO-FF", 1, 1000.0, 2)]);
+        // p99 doubled: well past a 25 % threshold
+        let curr = Observatory::from_runs("c", 7, vec![rt("FIFO-FF", 1, 2000.0, 2)]);
+        let regs = curr.check_against(&base, 0.25);
+        assert_eq!(regs.len(), 2, "p50 and p99 both doubled: {regs:?}");
+        assert!(regs.iter().any(|r| r.metric == "dispatch_p99_ns" && r.ratio == 2.0));
+        let csv = Observatory::regressions_csv(&regs);
+        assert!(csv.starts_with(Observatory::REGRESSIONS_CSV_HEADER));
+        assert!(csv.contains("w/sys/baseline/FIFO-FF,dispatch_p99_ns,1000,2000,2.0000"), "{csv}");
+        // within threshold: passes
+        let ok = Observatory::from_runs("c", 7, vec![rt("FIFO-FF", 1, 1100.0, 2)]);
+        assert!(ok.check_against(&base, 0.25).is_empty());
+        // counter zero → non-zero blows up to infinity and is flagged
+        let worse = Observatory::from_runs("c", 7, vec![rt("SJF-BF", 1, 500.0, 3)]);
+        let base2 = Observatory::from_runs("c", 7, vec![rt("SJF-BF", 1, 500.0, 0)]);
+        let regs = worse.check_against(&base2, 0.25);
+        assert!(regs.iter().any(|r| r.metric == "demotions" && r.ratio.is_infinite()), "{regs:?}");
+        // a cell absent from the baseline passes
+        let novel = Observatory::from_runs("c", 7, vec![rt("EBF-FF", 1, 9999.0, 9)]);
+        assert!(novel.check_against(&base, 0.25).is_empty());
+    }
+
+    #[test]
+    fn html_dashboard_is_self_contained_with_sparklines() {
+        use crate::testutil as tempfile;
+        let obs = Observatory::from_runs("c", 7, vec![rt("FIFO-FF", 1, 1000.0, 2)]);
+        let html = obs.report_html();
+        assert_eq!(html, obs.report_html(), "byte-identical across invocations");
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.contains("<polyline"), "queue series renders as a sparkline");
+        assert!(
+            !html.contains("src=") && !html.contains("href=") && !html.contains("<script"),
+            "no external assets or scripts"
+        );
+        let tmp = tempfile::tempdir().unwrap();
+        let p = obs.write_html(tmp.path()).unwrap();
+        assert_eq!(p, tmp.path().join("observatory/observatory.html"));
+        assert_eq!(std::fs::read_to_string(p).unwrap(), html);
+        let written = obs.write(tmp.path()).unwrap();
+        assert_eq!(written.len(), 2);
+        let csv = std::fs::read_to_string(tmp.path().join("observatory/telemetry.csv")).unwrap();
+        assert!(csv.starts_with(Observatory::TELEMETRY_CSV_HEADER));
+    }
+
+    #[test]
+    fn html_escapes_labels() {
+        let mut run = rt("FIFO-FF", 1, 1000.0, 0);
+        run.record.workload = "w<b>&\"x\"".to_string();
+        let obs = Observatory::from_runs("c", 7, vec![run]);
+        let html = obs.report_html();
+        assert!(html.contains("w&lt;b&gt;&amp;&quot;x&quot;"), "labels are escaped");
+        assert!(!html.contains("w<b>"), "raw label must not leak into markup");
+    }
+
+    #[test]
+    fn timeseries_csv_parsing_tolerates_power_columns() {
+        let mut rt = RunTelemetry::default();
+        rt.absorb_timeseries(
+            "t,queue,running,started,head_starts,backfill_starts,down_nodes,util_core,\
+             power_w,power_cap_w\n10,3,1,1,1,0,0,0.250000,120.000,\n20,5,2,1,0,1,0,0.500000,,\n",
+        );
+        assert_eq!(rt.queue_series, vec![(10.0, 3.0), (20.0, 5.0)]);
+    }
+}

@@ -24,9 +24,11 @@ use crate::plotdata::{PlotFactory, PlotKind};
 use crate::scenario::WarpedSource;
 use crate::sim::{JobSource, SimCore, SimOptions, SimOutput, Step, SwfSource};
 use crate::telemetry::{
-    read_last, HeartbeatWriter, SpanKind, Telemetry, DEFAULT_STALE_AFTER_SECS, HEARTBEAT_FILE,
+    read_last, Counter, DiagLevel, DiagLog, HeartbeatWriter, SpanKind, Telemetry,
+    TimeSeriesRecorder, DEFAULT_STALE_AFTER_SECS, HEARTBEAT_FILE,
 };
 use crate::traces::spec_by_name;
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -119,6 +121,7 @@ pub struct Campaign<'a> {
     backfill_profile: bool,
     checkpoint_every: u64,
     telemetry: bool,
+    diag: Option<DiagLog>,
     #[cfg(test)]
     abort_after_points: Option<u64>,
 }
@@ -135,6 +138,7 @@ impl<'a> Campaign<'a> {
             backfill_profile: true,
             checkpoint_every: 0,
             telemetry: true,
+            diag: None,
             #[cfg(test)]
             abort_after_points: None,
         }
@@ -142,11 +146,22 @@ impl<'a> Campaign<'a> {
 
     /// Toggle per-run telemetry (default on). Each run then collects span
     /// histograms and counters and stores them as `telemetry.json` next to
-    /// its CSVs. Observation-only: `rust/tests/telemetry.rs` runs the same
-    /// campaign with telemetry on and off and asserts every other store
-    /// artifact is byte-identical.
+    /// its CSVs, plus the time-series recorder's downsampled
+    /// `timeseries.csv` (queue depth, utilization, backfill rate — see
+    /// [`TimeSeriesRecorder`]). Observation-only: `rust/tests/telemetry.rs`
+    /// and `rust/tests/observatory.rs` run the same campaign with telemetry
+    /// on and off and assert every other store artifact is byte-identical.
     pub fn telemetry(mut self, on: bool) -> Self {
         self.telemetry = on;
+        self
+    }
+
+    /// Attach a structured diagnostic log (`campaign run --log-json`):
+    /// run lifecycle, checkpoint writes, journal/profile rebuilds, log
+    /// compactions and worker errors stream to it as JSON lines (see
+    /// [`DiagLog`]). Observation-only, like telemetry.
+    pub fn diag_log(mut self, log: DiagLog) -> Self {
+        self.diag = Some(log);
         self
     }
 
@@ -319,21 +334,89 @@ impl<'a> Campaign<'a> {
         let mut hb = HeartbeatWriter::new(sink.dir().join(HEARTBEAT_FILE));
         hb.force_beat(0, 0);
         let consumer = sim.register_consumer();
+        // The time-series recorder holds its own log cursor (exactly-once
+        // delivery, like the sink) and exists only when the run is
+        // observed — with telemetry off the store stays byte-identical.
+        let mut recorder = tel.is_enabled().then(|| {
+            let cursor = sim.register_consumer();
+            (cursor, TimeSeriesRecorder::new(sim.resource_manager().resource_types()))
+        });
+        if let Some(d) = &self.diag {
+            d.event(
+                DiagLevel::Info,
+                &run.run_id,
+                0,
+                "run_start",
+                &[
+                    ("workload", Json::Str(run.workload.label())),
+                    ("system", Json::Str(run.system.clone())),
+                    ("dispatcher", Json::Str(run.dispatcher.clone())),
+                    ("scenario", Json::Str(run.scenario.name.clone())),
+                    ("seed", Json::Num(run.seed as f64)),
+                ],
+            );
+        }
+        // Counter watermarks: a per-point increase becomes one diagnostic
+        // event (rate-limited downstream by the DiagLog itself).
+        const WATCHED: [(Counter, &str, DiagLevel); 3] = [
+            (Counter::LogEventsCompacted, "log_compact", DiagLevel::Info),
+            (Counter::JournalRebuilds, "journal_rebuild", DiagLevel::Warn),
+            (Counter::ProfileRebuilds, "profile_rebuild", DiagLevel::Warn),
+        ];
+        let mut watermarks = [0u64; WATCHED.len()];
         let mut points = 0u64;
         loop {
             let step = sim.step()?;
             sim.drain_events(consumer, |ev| sink.apply(ev))?;
+            if let Some((cursor, rec)) = recorder.as_mut() {
+                sim.drain_events(*cursor, |ev| {
+                    rec.apply(ev);
+                    Ok(())
+                })?;
+            }
             match step {
                 Step::Advanced(t) => {
                     points += 1;
+                    if let Some((_, rec)) = recorder.as_mut() {
+                        rec.sample(sim.resource_manager(), sim.extra());
+                    }
                     hb.beat(t, points);
+                    if self.diag.is_some() && tel.is_enabled() {
+                        let d = self.diag.as_ref().unwrap();
+                        for (i, (counter, event, level)) in WATCHED.into_iter().enumerate() {
+                            let v = tel.counter(counter);
+                            if v > watermarks[i] {
+                                d.event(
+                                    level,
+                                    &run.run_id,
+                                    t,
+                                    event,
+                                    &[("total", Json::Num(v as f64))],
+                                );
+                                watermarks[i] = v;
+                            }
+                        }
+                    }
                     if self.checkpoint_every > 0 && points % self.checkpoint_every == 0 {
                         // tmp + rename: a crash mid-write leaves the previous
                         // checkpoint intact, never a truncated document
                         let snap = sim.snapshot()?;
+                        let bytes = snap.len();
                         let tmp = sink.dir().join("checkpoint.json.tmp");
                         std::fs::write(&tmp, snap)?;
                         std::fs::rename(&tmp, sink.dir().join("checkpoint.json"))?;
+                        if let Some(d) = &self.diag {
+                            d.event(
+                                DiagLevel::Info,
+                                &run.run_id,
+                                t,
+                                "checkpoint",
+                                &[
+                                    ("points", Json::Num(points as f64)),
+                                    ("bytes", Json::Num(bytes as f64)),
+                                ],
+                            );
+                        }
                     }
                     #[cfg(test)]
                     if self.abort_after_points.is_some_and(|n| points >= n) {
@@ -347,13 +430,37 @@ impl<'a> Campaign<'a> {
         let out = sim.finish()?;
         let _ = std::fs::remove_file(sink.dir().join("checkpoint.json"));
         // Close the campaign-run span before serializing the registry so
-        // the stored summary includes it, then write `telemetry.json`
-        // ahead of `run.json` — the completion marker stays last.
+        // the stored summary includes it, then write `timeseries.csv` and
+        // `telemetry.json` (with the time-series summary folded in) ahead
+        // of `run.json` — the completion marker stays last.
         tel.span(SpanKind::CampaignRun, t_run0, run.index as u64);
-        store::write_telemetry(sink.dir(), &tel)?;
+        let mut extras = Vec::new();
+        if let Some((_, rec)) = recorder.as_mut() {
+            rec.write(sink.dir())?;
+            extras.push(("timeseries".to_string(), rec.summary()));
+        }
+        store::write_telemetry_with(sink.dir(), &tel, extras)?;
         let heartbeat = hb.path().to_path_buf();
         sink.finish(run, &out)?;
         let _ = std::fs::remove_file(heartbeat);
+        if let Some(d) = &self.diag {
+            d.event(
+                DiagLevel::Info,
+                &run.run_id,
+                out.last_completion,
+                "run_end",
+                &[
+                    ("points", Json::Num(out.time_points as f64)),
+                    ("jobs_completed", Json::Num(out.jobs_completed as f64)),
+                    ("jobs_rejected", Json::Num(out.jobs_rejected as f64)),
+                    ("index_demotions", Json::Num(tel.counter(Counter::IndexDemotions) as f64)),
+                    (
+                        "profile_demotions",
+                        Json::Num(tel.counter(Counter::ProfileDemotions) as f64),
+                    ),
+                ],
+            );
+        }
         Ok(())
     }
 
@@ -404,7 +511,18 @@ impl<'a> Campaign<'a> {
                         Ok(()) => {
                             executed.fetch_add(1, Ordering::Relaxed);
                         }
-                        Err(e) => errors.lock().unwrap().push(format!("{}: {e}", run.run_id)),
+                        Err(e) => {
+                            if let Some(d) = &self.diag {
+                                d.event(
+                                    DiagLevel::Error,
+                                    &run.run_id,
+                                    0,
+                                    "run_error",
+                                    &[("error", Json::Str(format!("{e}")))],
+                                );
+                            }
+                            errors.lock().unwrap().push(format!("{}: {e}", run.run_id));
+                        }
                     }
                 });
             }

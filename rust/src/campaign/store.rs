@@ -320,12 +320,30 @@ impl RunSink {
 /// histograms, gauges) into its run directory. Returns `None` without
 /// touching the filesystem when the handle is disabled — absence of the
 /// file is how an unobserved run looks, and the A/B byte-identity tests
-/// rely on it being the *only* store difference telemetry makes.
+/// rely on observation artifacts (`telemetry.json`, `timeseries.csv`)
+/// being the *only* store difference telemetry makes.
 pub fn write_telemetry(
     dir: &Path,
     tel: &crate::telemetry::Telemetry,
 ) -> anyhow::Result<Option<PathBuf>> {
-    let Some(doc) = tel.to_json() else { return Ok(None) };
+    write_telemetry_with(dir, tel, Vec::new())
+}
+
+/// [`write_telemetry`] with extra top-level blocks merged into the
+/// document before writing — e.g. the time-series recorder's
+/// `("timeseries", summary)` block. Still `None` (nothing written) on a
+/// disabled handle, regardless of `extras`.
+pub fn write_telemetry_with(
+    dir: &Path,
+    tel: &crate::telemetry::Telemetry,
+    extras: Vec<(String, Json)>,
+) -> anyhow::Result<Option<PathBuf>> {
+    let Some(mut doc) = tel.to_json() else { return Ok(None) };
+    if let Json::Obj(m) = &mut doc {
+        for (k, v) in extras {
+            m.insert(k, v);
+        }
+    }
     let path = dir.join("telemetry.json");
     std::fs::write(&path, doc.to_string_pretty())?;
     Ok(Some(path))

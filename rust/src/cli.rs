@@ -40,12 +40,16 @@ COMMANDS:
            [--power IDLE_W,MAX_W] [--power-cadence SECS]
            [--fail NODE:FAIL_AT:REPAIR_AT[,...]] [--mem-sample-secs SECS]
            [--scenario scenario.json] [--seed N] [--trace out.json]
+           [--log-json diag.jsonl]
            [--checkpoint-every N] [--checkpoint FILE] [--restore FILE]
            --trace records hot-path spans (dispatch cycles, allocator
            placements, index syncs, addon wakes) and writes Chrome
            trace-event JSON — open it in Perfetto (ui.perfetto.dev) or
            chrome://tracing. Observation-only: simulation outputs are
-           byte-identical with and without it
+           byte-identical with and without it. A warning is printed when
+           the trace buffer cap dropped events
+           --log-json streams structured diagnostics (run lifecycle,
+           checkpoint writes) as JSON lines with a monotone seq field
            --scenario applies a campaign scenario object (power/failures
            sugar + perturbations: arrival_surge, maintenance,
            failure_storm, power_cap; see docs/campaign-spec.md); --seed
@@ -65,27 +69,41 @@ COMMANDS:
   experiment <workload.swf> --sys <cfg.json> [--name NAME]
            [--schedulers FIFO,SJF,LJF,EBF] [--allocators FF,BF] [--reps 1]
   campaign run <spec.json> [--out DIR] [--jobs N] [--checkpoint-every N]
+           [--log-json diag.jsonl]
            execute a scenario matrix; completed runs are skipped (resume).
            --checkpoint-every N snapshots each in-flight run every N time
-           points, so a killed campaign resumes mid-run, not per-run
-  campaign status <spec.json> [--out DIR] [--stale-after SECS]
+           points, so a killed campaign resumes mid-run, not per-run.
+           --log-json streams structured diagnostics from every worker
+           (run lifecycle, checkpoints, journal/profile rebuilds, log
+           compactions, run errors) as rate-limited JSON lines
+  campaign status <spec.json> [--out DIR] [--stale-after SECS] [--json]
            show matrix progress: done / active (recent worker heartbeat,
            with per-run simulation progress) / stale (heartbeat older
            than --stale-after, default 30 — worker likely crashed) /
-           pending
+           pending. --json prints one machine-readable document instead
   campaign compare <spec.json> [--out DIR] [--baseline DISPATCHER]
            [--metric slowdown,wait,...] [--resamples 2000] [--alpha 0.05]
            [--html]
            paired per-seed dispatcher statistics from a finished store;
            writes comparisons/{deltas.csv,ranks.csv,report.md,
            job_deltas.csv,delta_dist.csv} (+ report.html with --html)
+  campaign telemetry <spec.json> [--out DIR] [--jobs N] [--baseline DIR]
+           [--max-regress 0.25] [--html]
+           cross-run telemetry aggregation from a finished store: every
+           run's telemetry.json + timeseries.csv merge into per-cell
+           observation tables (dispatch/place percentiles, demotion and
+           rebuild counters, backfill rate, throughput); writes
+           observatory/{telemetry.csv,report.md} (+ observatory.html
+           with --html). --baseline DIR points at another finished store
+           and exits non-zero when a cell metric regressed past
+           --max-regress (bench-check thresholding)
   generate <seed.swf> --sys <cfg.json> [--jobs 50000] [--out generated.swf]
            [--core-gflops 1.667] [--rng-seed 42]
   traces   [seth|ricc|mc|all] [--scale 0.05] [--dir data] [--seed 1]
   table1   [--scale 0.05] [--dir data] [--reps 3] [--out results/table1.csv]
   table2   [--scale 0.05] [--dir data] [--reps 1] [--out results/table2.csv]
   perf-smoke [--nodes 512,2048] [--dispatchers FIFO-FF,SJF-FF,EBF-FF,CBF-FF]
-           [--jobs 50000] [--seed 1] [--out results/BENCH_8.json]
+           [--jobs 50000] [--seed 1] [--out results/BENCH_9.json]
            [--deep-dispatchers EBF-FF,CBF-FF] [--deep-jobs JOBS/5]
            [--no-backfill-profile]
            dispatch-hot-path smoke over a nodes × dispatchers sweep:
@@ -95,7 +113,9 @@ COMMANDS:
            summary (span percentiles, index counters) for the perf
            trajectory tracked in CI. A deep-queue regime (2x
            oversubscription, smallest node count) additionally stresses
-           the backfilling dispatchers; --no-backfill-profile forces
+           the backfilling dispatchers, and a time-series regime re-runs
+           a subset with the campaign time-series recorder attached to
+           price the observation overhead; --no-backfill-profile forces
            the naive oracle path for A/B timing. --dispatcher LABEL
            (singular) restricts the sweep to one dispatcher
   bench-check <prev.json> <curr.json> [--max-regress 0.25]
@@ -297,6 +317,17 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let tel =
         if trace_path.is_some() { Telemetry::with_trace() } else { Telemetry::disabled() };
     opts.telemetry = tel.clone();
+    // --log-json: structured lifecycle diagnostics; the run id is the
+    // workload's file stem (one simulate = one run)
+    let diag = match args.get_opt("log-json") {
+        Some(p) => Some(accasim::telemetry::DiagLog::create(p)?),
+        None => None,
+    };
+    let run_id = workload
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("simulate")
+        .to_string();
     args.reject_unknown()?;
     // A restored core replays the snapshot's event-log prefix into the
     // fresh output collector above, so jobs.csv/perf.csv come out
@@ -309,14 +340,44 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         }
         None => Simulator::with_source(source, sys, d, opts),
     };
+    if let Some(d) = &diag {
+        use accasim::telemetry::DiagLevel;
+        use accasim::util::json::Json;
+        d.event(
+            DiagLevel::Info,
+            &run_id,
+            0,
+            "run_start",
+            &[
+                ("workload", Json::Str(workload.display().to_string())),
+                ("dispatcher", Json::Str(args.get("dispatcher", "FIFO-FF"))),
+                ("restored", Json::Bool(restore_from.is_some())),
+            ],
+        );
+    }
     let out = if checkpoint_every > 0 {
         let mut points = 0u64;
         loop {
             match sim.step()? {
-                Step::Advanced(_) => {
+                Step::Advanced(t) => {
                     points += 1;
                     if points % checkpoint_every == 0 {
-                        write_checkpoint(&checkpoint, &sim.snapshot()?)?;
+                        let snap = sim.snapshot()?;
+                        if let Some(d) = &diag {
+                            use accasim::telemetry::DiagLevel;
+                            use accasim::util::json::Json;
+                            d.event(
+                                DiagLevel::Info,
+                                &run_id,
+                                t,
+                                "checkpoint",
+                                &[
+                                    ("points", Json::Num(points as f64)),
+                                    ("bytes", Json::Num(snap.len() as f64)),
+                                ],
+                            );
+                        }
+                        write_checkpoint(&checkpoint, &snap)?;
                     }
                 }
                 Step::Idle | Step::Done => break,
@@ -326,6 +387,21 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     } else {
         sim.run()?
     };
+    if let Some(d) = &diag {
+        use accasim::telemetry::DiagLevel;
+        use accasim::util::json::Json;
+        d.event(
+            DiagLevel::Info,
+            &run_id,
+            out.last_completion,
+            "run_end",
+            &[
+                ("points", Json::Num(out.time_points as f64)),
+                ("jobs_completed", Json::Num(out.jobs_completed as f64)),
+                ("jobs_rejected", Json::Num(out.jobs_rejected as f64)),
+            ],
+        );
+    }
     if out.lines_skipped > 0 {
         eprintln!(
             "warning: {} malformed workload line(s) skipped while reading {}",
@@ -343,13 +419,23 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(p) = &trace_path {
         let json = tel.chrome_trace().expect("--trace enables the tracer");
         std::fs::write(p, json)?;
+        let dropped = tel.counter(accasim::telemetry::Counter::TraceEventsDropped);
         if let Some(s) = tel.summary() {
             println!(
                 "trace             : {p} ({} dispatch cycles, p50 {} ns, p99 {} ns; \
-                 {} placements; open in Perfetto)",
+                 {} placements; {dropped} dropped; open in Perfetto)",
                 s.dispatch_count, s.dispatch_p50_ns, s.dispatch_p99_ns, s.place_count
             );
         }
+        if dropped > 0 {
+            eprintln!(
+                "warning: trace buffer cap reached — {dropped} span(s) were dropped from {p}; \
+                 the trace covers only the run's prefix"
+            );
+        }
+    }
+    if let Some(d) = &diag {
+        println!("diagnostics       : {} line(s)", d.lines_written());
     }
     Ok(())
 }
@@ -535,11 +621,9 @@ fn experiment(args: &Args) -> anyhow::Result<()> {
 /// The campaign engine: `campaign run <spec.json>` / `campaign status`.
 fn campaign(args: &Args) -> anyhow::Result<()> {
     use accasim::campaign::{Campaign, CampaignSpec};
-    let action = args
-        .positionals
-        .get(1)
-        .cloned()
-        .ok_or_else(|| anyhow::anyhow!("campaign wants `run`, `status` or `compare`\n{USAGE}"))?;
+    let action = args.positionals.get(1).cloned().ok_or_else(|| {
+        anyhow::anyhow!("campaign wants `run`, `status`, `compare` or `telemetry`\n{USAGE}")
+    })?;
     let spec_path = args
         .positionals
         .get(2)
@@ -552,13 +636,23 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
         "run" => {
             let jobs: usize = args.get_parse("jobs", 1)?;
             let checkpoint_every: u64 = args.get_parse("checkpoint-every", 0)?;
+            let diag = match args.get_opt("log-json") {
+                Some(p) => Some(accasim::telemetry::DiagLog::create(p)?),
+                None => None,
+            };
             args.reject_unknown()?;
             let total = spec.run_count();
             let name = spec.name.clone();
-            let report = Campaign::new(spec, &out_dir)
+            let mut campaign = Campaign::new(spec, &out_dir)
                 .jobs(jobs)
-                .checkpoint_every(checkpoint_every)
-                .run()?;
+                .checkpoint_every(checkpoint_every);
+            if let Some(d) = &diag {
+                campaign = campaign.diag_log(d.clone());
+            }
+            let report = campaign.run()?;
+            if let Some(d) = &diag {
+                println!("diagnostics: {} line(s)", d.lines_written());
+            }
             println!(
                 "campaign {name}: {} run(s) executed, {} skipped (resume), {total} total",
                 report.executed, report.skipped
@@ -602,9 +696,40 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
         }
         "status" => {
             let stale_after: u64 = args.get_parse("stale-after", DEFAULT_STALE_AFTER_SECS)?;
+            let as_json = args.flag("json");
             args.reject_unknown()?;
             let name = spec.name.clone();
             let st = Campaign::new(spec, &out_dir).status_with(stale_after)?;
+            if as_json {
+                use accasim::util::json::Json;
+                let progress = |ps: &[accasim::campaign::RunProgress]| {
+                    Json::Arr(
+                        ps.iter()
+                            .map(|p| {
+                                let mut m = BTreeMap::new();
+                                m.insert("run_id".to_string(), Json::Str(p.run_id.clone()));
+                                m.insert("sim_time".to_string(), Json::Num(p.sim_time as f64));
+                                m.insert("points".to_string(), Json::Num(p.points as f64));
+                                m.insert("age_secs".to_string(), Json::Num(p.age_secs as f64));
+                                Json::Obj(m)
+                            })
+                            .collect(),
+                    )
+                };
+                let mut m = BTreeMap::new();
+                m.insert("campaign".to_string(), Json::Str(name));
+                m.insert("total".to_string(), Json::Num(st.total as f64));
+                m.insert("done".to_string(), Json::Num(st.done as f64));
+                m.insert("stale_after_secs".to_string(), Json::Num(stale_after as f64));
+                m.insert("active".to_string(), progress(&st.active));
+                m.insert("stale".to_string(), progress(&st.stale));
+                m.insert(
+                    "pending".to_string(),
+                    Json::Arr(st.pending.iter().map(|id| Json::Str(id.clone())).collect()),
+                );
+                println!("{}", Json::Obj(m).to_string_pretty());
+                return Ok(());
+            }
             println!(
                 "campaign {name}: {}/{} run(s) done, {} active, {} stale, {} pending",
                 st.done,
@@ -688,7 +813,71 @@ fn campaign(args: &Args) -> anyhow::Result<()> {
                 println!("wrote: {}", p.display());
             }
         }
-        other => anyhow::bail!("unknown campaign action {other:?} (run|status|compare)\n{USAGE}"),
+        "telemetry" => {
+            use accasim::campaign::Observatory;
+            let jobs: usize = args.get_parse("jobs", 1)?;
+            let baseline_dir = args.get_opt("baseline");
+            let max_regress: f64 = args.get_parse("max-regress", 0.25)?;
+            let html = args.flag("html");
+            args.reject_unknown()?;
+            anyhow::ensure!(max_regress > 0.0, "--max-regress must be positive");
+            // same spec-hash guard as `compare`: the observatory must not
+            // silently aggregate a store built from an edited spec
+            let idx = accasim::campaign::load_index(&out_dir)?;
+            let expected = spec.spec_hash()?;
+            anyhow::ensure!(
+                idx.spec_hash == expected,
+                "store {} was built from spec hash {:016x}, but {} hashes to {expected:016x}; \
+                 re-run the campaign before aggregating",
+                out_dir.display(),
+                idx.spec_hash,
+                spec_path.display()
+            );
+            let obs = Observatory::from_store_with_jobs(&out_dir, jobs)?;
+            let mut written = obs.write(&out_dir)?;
+            if html {
+                written.push(obs.write_html(&out_dir)?);
+            }
+            println!(
+                "campaign {}: aggregated {} observation cell(s) ({} warning(s))",
+                obs.campaign,
+                obs.cells.len(),
+                obs.warnings.len()
+            );
+            for w in &obs.warnings {
+                eprintln!("warning: {w}");
+            }
+            for p in &written {
+                println!("wrote: {}", p.display());
+            }
+            if let Some(bdir) = baseline_dir {
+                let base = Observatory::from_store(&bdir)?;
+                let regs = obs.check_against(&base, max_regress);
+                let p = out_dir.join("observatory").join("regressions.csv");
+                std::fs::write(&p, Observatory::regressions_csv(&regs))?;
+                println!("wrote: {}", p.display());
+                for r in &regs {
+                    eprintln!(
+                        "REGRESSED {} {}: {:.0} -> {:.0} (x{:.3}, tolerance x{:.3})",
+                        r.cell,
+                        r.metric,
+                        r.baseline,
+                        r.current,
+                        r.ratio,
+                        1.0 + max_regress
+                    );
+                }
+                anyhow::ensure!(
+                    regs.is_empty(),
+                    "{} cell metric(s) regressed past --max-regress {max_regress} vs {bdir}",
+                    regs.len()
+                );
+                println!("baseline check: all cells within x{:.3} of {bdir}", 1.0 + max_regress);
+            }
+        }
+        other => anyhow::bail!(
+            "unknown campaign action {other:?} (run|status|compare|telemetry)\n{USAGE}"
+        ),
     }
     Ok(())
 }
@@ -949,15 +1138,21 @@ fn perf_smoke_jobs(
 /// One perf-smoke sweep cell: simulate `jobs` synthetic jobs on a
 /// `nodes`-node system under `dispatcher`, with telemetry enabled, and
 /// return the machine-readable cell object (identity keys + timings +
-/// telemetry summary).
+/// telemetry summary). With `ts` the campaign time-series recorder rides
+/// along on its own event-log cursor (sampled every time point, exactly
+/// as `campaign run` attaches it), so the observation overhead itself is
+/// a gated cell on the perf trajectory.
 fn perf_smoke_cell(
     nodes: u64,
     jobs: u64,
     seed: u64,
     dispatcher: &str,
     deep: bool,
+    ts: bool,
     backfill_profile: bool,
 ) -> anyhow::Result<accasim::util::json::Json> {
+    use accasim::sim::Step;
+    use accasim::telemetry::TimeSeriesRecorder;
     use accasim::util::json::Json;
     const CORES: u64 = 16;
     let sys = SysConfig::homogeneous("perfsmoke", nodes, &[("core", CORES), ("mem", 65_536)], 0);
@@ -973,12 +1168,39 @@ fn perf_smoke_cell(
         ..Default::default()
     };
     let mut sim = Simulator::from_jobs(workload, sys, d, opts);
-    let o = sim.run()?;
+    let mut recorder = None;
+    let o = if ts {
+        let cursor = sim.register_consumer();
+        let mut rec = TimeSeriesRecorder::new(sim.resource_manager().resource_types());
+        loop {
+            let step = sim.step()?;
+            sim.drain_events(cursor, |ev| {
+                rec.apply(ev);
+                Ok(())
+            })?;
+            match step {
+                Step::Advanced(_) => rec.sample(sim.resource_manager(), sim.extra()),
+                Step::Idle | Step::Done => break,
+            }
+        }
+        recorder = Some(rec);
+        sim.finish()?
+    } else {
+        sim.run()?
+    };
 
     let mut m = std::collections::BTreeMap::new();
-    // the regime is part of the bench-check cell identity: deep-queue cells
-    // pair with deep-queue baseline cells, never with standard ones
-    let bench = if deep { "perf_smoke_deep" } else { "perf_smoke" };
+    // the regime is part of the bench-check cell identity: deep-queue and
+    // time-series cells pair with same-regime baseline cells, never with
+    // standard ones (and a baseline that predates a regime simply has
+    // unmatched cells, which pass)
+    let bench = if ts {
+        "perf_smoke_ts"
+    } else if deep {
+        "perf_smoke_deep"
+    } else {
+        "perf_smoke"
+    };
     m.insert("bench".to_string(), Json::Str(bench.to_string()));
     m.insert("dispatcher".to_string(), Json::Str(o.dispatcher.clone()));
     m.insert("nodes".to_string(), Json::Num(nodes as f64));
@@ -1006,10 +1228,19 @@ fn perf_smoke_cell(
     if let Some(s) = tel.summary() {
         m.insert("telemetry".to_string(), s.to_json());
     }
+    if let Some(rec) = &recorder {
+        m.insert("timeseries".to_string(), rec.summary());
+    }
     println!(
         "perf-smoke{} {dispatcher}: {} nodes × {} jobs → {} completed in {:.2}s wall \
          (dispatch {:.1} ms over {} points, {:.0} ns/point, peak RSS {} KB)",
-        if deep { " [deep]" } else { "" },
+        if ts {
+            " [ts]"
+        } else if deep {
+            " [deep]"
+        } else {
+            ""
+        },
         nodes,
         jobs,
         o.jobs_completed,
@@ -1024,16 +1255,18 @@ fn perf_smoke_cell(
 
 /// Perf smoke: a nodes × dispatchers sweep of large-system simulations
 /// with machine-readable output — the CI-tracked perf trajectory
-/// (`results/BENCH_8.json`, compared cell by cell against the previous run
+/// (`results/BENCH_9.json`, compared cell by cell against the previous run
 /// by `bench-check`). Each cell runs with telemetry enabled and embeds its
 /// span-percentile summary; the dispatch timing gated by `bench-check` is
 /// therefore measured *with* spans on, keeping the observation overhead
 /// itself on the perf trajectory. Besides the standard ~15%-oversubscribed
 /// sweep, a deep-queue regime (2× oversubscription on the smallest node
 /// count) exercises the backfilling dispatchers against long blocked
-/// queues — the cells the incremental availability profile is gated on.
-/// `--no-backfill-profile` forces every cell onto the naive oracle path
-/// for A/B timing.
+/// queues — the cells the incremental availability profile is gated on —
+/// and a time-series regime re-runs the sweep dispatchers on the smallest
+/// system with the campaign time-series recorder attached, gating the
+/// recorder's per-point overhead the same way. `--no-backfill-profile`
+/// forces every cell onto the naive oracle path for A/B timing.
 fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     use accasim::util::json::Json;
     let nodes_list = args.get("nodes", "512,2048");
@@ -1047,7 +1280,7 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     let deep_dispatchers = args.get("deep-dispatchers", "EBF-FF,CBF-FF");
     let deep_jobs: u64 = args.get_parse("deep-jobs", jobs / 5)?;
     let backfill_profile = !args.flag("no-backfill-profile");
-    let out_path = PathBuf::from(args.get("out", "results/BENCH_8.json"));
+    let out_path = PathBuf::from(args.get("out", "results/BENCH_9.json"));
     args.reject_unknown()?;
     let nodes_axis = nodes_list
         .split(',')
@@ -1062,7 +1295,15 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     let mut cells = Vec::new();
     for &nodes in &nodes_axis {
         for dispatcher in &disp_axis {
-            cells.push(perf_smoke_cell(nodes, jobs, seed, dispatcher, false, backfill_profile)?);
+            cells.push(perf_smoke_cell(
+                nodes,
+                jobs,
+                seed,
+                dispatcher,
+                false,
+                false,
+                backfill_profile,
+            )?);
         }
     }
     // Deep-queue regime: smallest system only (queue depth, not node count,
@@ -1076,6 +1317,24 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
                 deep_jobs,
                 seed,
                 dispatcher,
+                true,
+                false,
+                backfill_profile,
+            )?);
+        }
+    }
+    // Time-series regime: the campaign recorder attached, smallest system
+    // and reduced job count — what's under test is the per-point recorder
+    // overhead, not the dispatcher itself.
+    if deep_jobs > 0 {
+        let ts_nodes = *nodes_axis.iter().min().unwrap();
+        for dispatcher in &disp_axis {
+            cells.push(perf_smoke_cell(
+                ts_nodes,
+                deep_jobs,
+                seed,
+                dispatcher,
+                false,
                 true,
                 backfill_profile,
             )?);

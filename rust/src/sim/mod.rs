@@ -420,6 +420,13 @@ impl SimCore {
         &self.rm
     }
 
+    /// Values published by addons for the dispatcher at the current time
+    /// point (e.g. `power.system_w`, `power.cap_w`). Read-only — feeds
+    /// the time-series recorder's sampled columns.
+    pub fn extra(&self) -> &BTreeMap<String, f64> {
+        &self.extra
+    }
+
     /// The instrumentation handle this core records into (a clone shares
     /// the same registry; see [`SimOptions::telemetry`]).
     pub fn telemetry(&self) -> &Telemetry {

@@ -1,0 +1,228 @@
+//! Structured diagnostic logging: leveled, rate-limited JSON-lines
+//! events behind `simulate --log-json` and `campaign run --log-json`
+//! (DESIGN.md §Observability).
+//!
+//! One [`DiagLog`] is shared by every worker of a campaign (it is
+//! `Send + Sync`; a mutex serializes writers). Each line is a
+//! self-contained JSON object carrying a file-wide monotonically
+//! increasing `seq`, the run id, the simulation time, a `level`
+//! (`info`/`warn`/`error`), an `event` category, and event-specific
+//! fields — a machine-readable narrative CI can parse line by line
+//! instead of screen-scraping stderr.
+//!
+//! Rate limiting is **count-based and therefore deterministic**: each
+//! `(run, event)` pair may emit at most [`DiagLog::DEFAULT_EVENT_CAP`]
+//! lines; the line hitting the cap is replaced by a single
+//! `rate_limited` warning and everything beyond is counted silently
+//! (the suppressed totals surface in that warning's `cap` field).
+//! Lifecycle events (`run_start`, `run_end`, `run_error`) are exempt —
+//! losing them would orphan the narrative.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Severity of a diagnostic event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiagLevel {
+    /// Normal narrative (lifecycle, checkpoints, compactions).
+    Info,
+    /// Something degraded but the run continues (demotions, rebuilds,
+    /// rate limiting).
+    Warn,
+    /// A run failed; the event carries the error (the dead-letter line
+    /// a campaign driver would queue for retry).
+    Error,
+}
+
+impl DiagLevel {
+    /// Stable serialization name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DiagLevel::Info => "info",
+            DiagLevel::Warn => "warn",
+            DiagLevel::Error => "error",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct DiagInner {
+    w: BufWriter<File>,
+    seq: u64,
+    /// Lines emitted per `(run, event)` — the rate-limit ledger.
+    emitted: BTreeMap<(String, String), u64>,
+    cap: u64,
+}
+
+/// Shared JSONL diagnostic sink (module docs). Cloning shares the file
+/// and the sequence counter.
+#[derive(Debug, Clone)]
+pub struct DiagLog {
+    inner: Arc<Mutex<DiagInner>>,
+}
+
+impl DiagLog {
+    /// Per-`(run, event)` line cap before suppression kicks in.
+    pub const DEFAULT_EVENT_CAP: u64 = 200;
+
+    /// Create (truncate) the log file at `path`.
+    pub fn create<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        Self::with_cap(path, Self::DEFAULT_EVENT_CAP)
+    }
+
+    /// [`DiagLog::create`] with an explicit per-`(run, event)` cap
+    /// (min 2: one event line plus the `rate_limited` marker).
+    pub fn with_cap<P: AsRef<Path>>(path: P, cap: u64) -> anyhow::Result<Self> {
+        let f = File::create(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("creating diagnostic log {}: {e}", path.as_ref().display())
+        })?;
+        Ok(DiagLog {
+            inner: Arc::new(Mutex::new(DiagInner {
+                w: BufWriter::new(f),
+                seq: 0,
+                emitted: BTreeMap::new(),
+                cap: cap.max(2),
+            })),
+        })
+    }
+
+    /// Emit one event line. `fields` are appended to the fixed keys
+    /// (`seq`, `level`, `run`, `t`, `event`); IO errors are swallowed —
+    /// diagnostics must never kill a run (the heartbeat rule).
+    pub fn event(
+        &self,
+        level: DiagLevel,
+        run: &str,
+        sim_time: u64,
+        event: &str,
+        fields: &[(&str, Json)],
+    ) {
+        let lifecycle = matches!(event, "run_start" | "run_end" | "run_error");
+        let mut inner = self.inner.lock().unwrap();
+        let cap = inner.cap;
+        if !lifecycle {
+            let n = inner
+                .emitted
+                .entry((run.to_string(), event.to_string()))
+                .and_modify(|n| *n += 1)
+                .or_insert(1);
+            match (*n).cmp(&cap) {
+                std::cmp::Ordering::Greater => return, // suppressed
+                std::cmp::Ordering::Equal => {
+                    // replace the capping line with the one-shot marker
+                    let ev = event.to_string();
+                    Self::write_line(
+                        &mut inner,
+                        DiagLevel::Warn,
+                        run,
+                        sim_time,
+                        "rate_limited",
+                        &[("suppressed_event", Json::Str(ev)), ("cap", Json::Num(cap as f64))],
+                    );
+                    return;
+                }
+                std::cmp::Ordering::Less => {}
+            }
+        }
+        Self::write_line(&mut inner, level, run, sim_time, event, fields);
+    }
+
+    fn write_line(
+        inner: &mut DiagInner,
+        level: DiagLevel,
+        run: &str,
+        sim_time: u64,
+        event: &str,
+        fields: &[(&str, Json)],
+    ) {
+        inner.seq += 1;
+        let mut m = BTreeMap::new();
+        m.insert("seq".to_string(), Json::Num(inner.seq as f64));
+        m.insert("level".to_string(), Json::Str(level.name().to_string()));
+        m.insert("run".to_string(), Json::Str(run.to_string()));
+        m.insert("t".to_string(), Json::Num(sim_time as f64));
+        m.insert("event".to_string(), Json::Str(event.to_string()));
+        for (k, v) in fields {
+            m.insert((*k).to_string(), v.clone());
+        }
+        let line = Json::Obj(m).to_string_compact();
+        let _ = writeln!(inner.w, "{line}");
+        let _ = inner.w.flush();
+    }
+
+    /// Total lines written so far (the current `seq`).
+    pub fn lines_written(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    fn read_lines(p: &Path) -> Vec<Json> {
+        std::fs::read_to_string(p)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every line is standalone JSON"))
+            .collect()
+    }
+
+    #[test]
+    fn lines_are_json_with_monotone_seq() {
+        let tmp = testutil::tempdir().unwrap();
+        let p = tmp.path().join("diag.jsonl");
+        let log = DiagLog::create(&p).unwrap();
+        log.event(DiagLevel::Info, "r1", 0, "run_start", &[("seed", Json::Num(1.0))]);
+        let clone = log.clone();
+        clone.event(DiagLevel::Warn, "r1", 42, "journal_rebuild", &[]);
+        log.event(DiagLevel::Info, "r1", 99, "run_end", &[]);
+        let lines = read_lines(&p);
+        assert_eq!(lines.len(), 3);
+        let seqs: Vec<u64> = lines.iter().map(|l| l.get("seq").unwrap().as_u64().unwrap()).collect();
+        assert_eq!(seqs, vec![1, 2, 3], "clones share one monotone sequence");
+        assert_eq!(lines[0].get("event").unwrap().as_str(), Some("run_start"));
+        assert_eq!(lines[0].get("seed").unwrap().as_u64(), Some(1));
+        assert_eq!(lines[1].get("level").unwrap().as_str(), Some("warn"));
+        assert_eq!(lines[1].get("t").unwrap().as_u64(), Some(42));
+        assert_eq!(log.lines_written(), 3);
+    }
+
+    #[test]
+    fn noisy_events_are_rate_limited_per_run() {
+        let tmp = testutil::tempdir().unwrap();
+        let p = tmp.path().join("diag.jsonl");
+        let log = DiagLog::with_cap(&p, 3).unwrap();
+        for t in 0..10 {
+            log.event(DiagLevel::Info, "r1", t, "log_compact", &[]);
+        }
+        // a different run has its own budget; lifecycle is exempt
+        log.event(DiagLevel::Info, "r2", 0, "log_compact", &[]);
+        for t in 0..10 {
+            log.event(DiagLevel::Info, "r1", t, "run_end", &[]);
+        }
+        let lines = read_lines(&p);
+        let compacts =
+            lines.iter().filter(|l| l.get("event").unwrap().as_str() == Some("log_compact"));
+        assert_eq!(compacts.count(), 3, "2 from r1 (cap 3 incl. marker) + 1 from r2");
+        let limited: Vec<&Json> = lines
+            .iter()
+            .filter(|l| l.get("event").unwrap().as_str() == Some("rate_limited"))
+            .collect();
+        assert_eq!(limited.len(), 1);
+        assert_eq!(limited[0].get("suppressed_event").unwrap().as_str(), Some("log_compact"));
+        assert_eq!(
+            lines.iter().filter(|l| l.get("event").unwrap().as_str() == Some("run_end")).count(),
+            10,
+            "lifecycle events are never suppressed"
+        );
+        // seq stays monotone across suppression
+        let seqs: Vec<u64> = lines.iter().map(|l| l.get("seq").unwrap().as_u64().unwrap()).collect();
+        assert!(seqs.windows(2).all(|w| w[1] == w[0] + 1), "{seqs:?}");
+    }
+}

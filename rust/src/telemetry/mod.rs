@@ -18,6 +18,11 @@
 //!   (`simulate --trace out.json`, loadable in Perfetto).
 //! * [`heartbeat`] — per-run worker liveness files behind
 //!   `campaign status`.
+//! * [`timeseries`] — event-log consumer deriving bounded per-point
+//!   streams (queue depth, utilization, backfill rate, power) with
+//!   deterministic LTTB downsampling (`runs/<id>/timeseries.csv`).
+//! * [`diaglog`] — leveled, rate-limited JSON-lines diagnostics
+//!   (`simulate`/`campaign run --log-json FILE`).
 //!
 //! # Examples
 //!
@@ -32,12 +37,16 @@
 //! assert_eq!(summary.dispatch_count, 1);
 //! ```
 
+pub mod diaglog;
 pub mod heartbeat;
 pub mod metrics;
+pub mod timeseries;
 pub mod trace;
 
+pub use diaglog::{DiagLevel, DiagLog};
 pub use heartbeat::{read_last, Heartbeat, HeartbeatWriter, DEFAULT_STALE_AFTER_SECS, HEARTBEAT_FILE};
 pub use metrics::{Counter, Histogram, MetricsRegistry, SpanKind};
+pub use timeseries::{TimeSeriesRecorder, TsPoint, DEFAULT_POINT_BUDGET, TIMESERIES_FILE};
 pub use trace::{TraceEvent, Tracer};
 
 use crate::util::json::Json;
@@ -150,6 +159,13 @@ impl Telemetry {
         if let Some(inner) = &self.inner {
             inner.reg.borrow_mut().set_gauge(name, v);
         }
+    }
+
+    /// Current value of one counter (0 when disabled) — a cheap read,
+    /// unlike cloning the whole registry; the diagnostic log polls
+    /// counters per time point through this.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.reg.borrow().counter(c))
     }
 
     /// Snapshot the registry (counters + gauges + histograms).

@@ -1,0 +1,454 @@
+//! Per-time-point simulation streams derived from the event log
+//! (DESIGN.md §Observability).
+//!
+//! A [`TimeSeriesRecorder`] is a cursor-bearing [`SimEvent`] consumer —
+//! exactly-once delivery, like the campaign store's streaming CSV sink —
+//! that turns the state-transition log into bounded per-point series:
+//! queue depth, running jobs, dispatched-per-point, backfill starts vs
+//! head-of-queue starts, per-type utilization, down-node count, and the
+//! power draw/cap when an addon publishes them. The recorder is strictly
+//! observation-only and gated by the [`crate::telemetry::Telemetry`]
+//! handle: with it on or off, `jobs.csv`/`perf.csv` are byte-identical
+//! (asserted in `rust/tests/observatory.rs`).
+//!
+//! Memory stays O(point budget) regardless of run length: whenever the
+//! buffer reaches twice the budget it is compressed back to the budget
+//! with largest-triangle-three-buckets (LTTB) downsampling — the
+//! standard visual downsampler, which keeps the points spanning the
+//! largest triangles with their neighbours and therefore preserves
+//! spikes a stride-based decimator would erase. Selection is driven by
+//! the queue-depth series (the headline dynamic); selected rows carry
+//! all columns. Everything is a pure function of the event stream and
+//! the sampled resource-manager state, so re-running the same
+//! simulation reproduces `timeseries.csv` byte for byte.
+
+use crate::resources::ResourceManager;
+use crate::sim::SimEvent;
+use crate::util::json::Json;
+use crate::workload::JobId;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// File name of the per-run time-series artifact inside a run directory.
+pub const TIMESERIES_FILE: &str = "timeseries.csv";
+
+/// Default retained-point budget (the LTTB target size).
+pub const DEFAULT_POINT_BUDGET: usize = 2000;
+
+/// One retained time point of the derived streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TsPoint {
+    /// Simulation time of the closed point.
+    pub t: u64,
+    /// Queue length entering the point's dispatch cycle.
+    pub queue: u32,
+    /// Jobs running after the point's dispatch cycle.
+    pub running: u32,
+    /// Jobs dispatched at this point.
+    pub started: u32,
+    /// Starts whose job was at the head of the arrival order.
+    pub head_starts: u32,
+    /// Starts that jumped an earlier-arrived, still-queued job
+    /// (backfill moves).
+    pub backfill_starts: u32,
+    /// Nodes down (failure windows / maintenance) at the point close.
+    pub down_nodes: u32,
+    /// Per-resource-type utilization in `[0, 1]`, in
+    /// [`ResourceManager::resource_types`] order.
+    pub util: Vec<f64>,
+    /// System power draw in watts, when a power addon published it.
+    pub power_w: Option<f64>,
+    /// Active power cap in watts, when published.
+    pub power_cap_w: Option<f64>,
+}
+
+/// Event-log consumer deriving bounded per-point time series (module
+/// docs). Drive it with [`TimeSeriesRecorder::apply`] from its own log
+/// cursor, call [`TimeSeriesRecorder::sample`] once after each advanced
+/// step to capture resource-manager state, then
+/// [`TimeSeriesRecorder::write`] the CSV and fold
+/// [`TimeSeriesRecorder::summary`] into `telemetry.json`.
+#[derive(Debug)]
+pub struct TimeSeriesRecorder {
+    types: Vec<String>,
+    budget: usize,
+    points: Vec<TsPoint>,
+    /// Index of the first buffered point not yet filled by `sample`.
+    unsampled: usize,
+    // --- backfill classifier -------------------------------------------
+    /// Monotone arrival counter; order of `Submitted` events.
+    arrivals: u64,
+    /// Still-queued jobs → their arrival sequence number.
+    queued: BTreeMap<JobId, u64>,
+    /// Starts classified since the last closed point.
+    head_acc: u32,
+    backfill_acc: u32,
+    // --- whole-run aggregates (immune to compression) ------------------
+    raw_points: u64,
+    compressions: u64,
+    head_total: u64,
+    backfill_total: u64,
+    queue_peak: u32,
+    down_peak: u32,
+    power_peak_w: Option<f64>,
+}
+
+impl TimeSeriesRecorder {
+    /// A recorder for a system with the given resource types, using the
+    /// default point budget.
+    pub fn new(resource_types: &[String]) -> Self {
+        Self::with_budget(resource_types, DEFAULT_POINT_BUDGET)
+    }
+
+    /// A recorder with an explicit retained-point budget (min 4: LTTB
+    /// needs the two endpoints plus interior buckets).
+    pub fn with_budget(resource_types: &[String], budget: usize) -> Self {
+        TimeSeriesRecorder {
+            types: resource_types.to_vec(),
+            budget: budget.max(4),
+            points: Vec::new(),
+            unsampled: 0,
+            arrivals: 0,
+            queued: BTreeMap::new(),
+            head_acc: 0,
+            backfill_acc: 0,
+            raw_points: 0,
+            compressions: 0,
+            head_total: 0,
+            backfill_total: 0,
+            queue_peak: 0,
+            down_peak: 0,
+            power_peak_w: None,
+        }
+    }
+
+    /// Consume one log event. Queue transitions feed the backfill
+    /// classifier; a closed point materializes a [`TsPoint`] whose
+    /// sampled columns (utilization, down nodes, power) are filled by
+    /// the next [`TimeSeriesRecorder::sample`] call.
+    pub fn apply(&mut self, ev: &SimEvent) {
+        match ev {
+            SimEvent::Submitted { id, .. } => {
+                self.arrivals += 1;
+                self.queued.insert(*id, self.arrivals);
+            }
+            SimEvent::Started { id, .. } => {
+                // A start is a *backfill* move when some earlier-arrived
+                // job is still waiting; otherwise the head advanced.
+                let seq = self.queued.remove(id).unwrap_or(0);
+                if self.queued.values().any(|&s| s < seq) {
+                    self.backfill_acc += 1;
+                    self.backfill_total += 1;
+                } else {
+                    self.head_acc += 1;
+                    self.head_total += 1;
+                }
+            }
+            SimEvent::Rejected { id, .. } => {
+                self.queued.remove(id);
+            }
+            SimEvent::Completed(_) => {}
+            SimEvent::PointClosed(p) => {
+                self.raw_points += 1;
+                self.queue_peak = self.queue_peak.max(p.queue_len);
+                self.points.push(TsPoint {
+                    t: p.t,
+                    queue: p.queue_len,
+                    running: p.running,
+                    started: p.started,
+                    head_starts: self.head_acc,
+                    backfill_starts: self.backfill_acc,
+                    down_nodes: 0,
+                    util: Vec::new(),
+                    power_w: None,
+                    power_cap_w: None,
+                });
+                self.head_acc = 0;
+                self.backfill_acc = 0;
+            }
+        }
+    }
+
+    /// Fill the sampled columns (per-type utilization, down-node count,
+    /// published power values) of every point closed since the last
+    /// call, then enforce the memory bound. Call once per advanced step,
+    /// after draining the recorder's cursor — a checkpoint restore
+    /// replays its whole event-log prefix into the first drain, so those
+    /// points all receive the restore-time sample (the one resume
+    /// caveat; event-derived columns replay exactly).
+    pub fn sample(&mut self, rm: &ResourceManager, extra: &BTreeMap<String, f64>) {
+        if self.unsampled < self.points.len() {
+            let util: Vec<f64> = (0..self.types.len()).map(|i| rm.utilization(i)).collect();
+            let down = (0..rm.num_nodes()).filter(|&n| rm.is_node_down(n)).count() as u32;
+            let power = extra.get("power.system_w").copied();
+            let cap = extra.get("power.cap_w").copied();
+            self.down_peak = self.down_peak.max(down);
+            if let Some(w) = power {
+                self.power_peak_w =
+                    Some(self.power_peak_w.map_or(w, |p: f64| p.max(w)));
+            }
+            for p in &mut self.points[self.unsampled..] {
+                p.util.clone_from(&util);
+                p.down_nodes = down;
+                p.power_w = power;
+                p.power_cap_w = cap;
+            }
+            self.unsampled = self.points.len();
+        }
+        self.maybe_compress();
+    }
+
+    /// Compress the buffer back to the budget once it doubles it. Only
+    /// fully sampled prefixes are compressed, so `sample` never loses
+    /// track of pending rows.
+    fn maybe_compress(&mut self) {
+        if self.points.len() < self.budget * 2 || self.unsampled < self.points.len() {
+            return;
+        }
+        let xs: Vec<f64> = self.points.iter().map(|p| p.t as f64).collect();
+        let ys: Vec<f64> = self.points.iter().map(|p| p.queue as f64).collect();
+        let keep = lttb_indices(&xs, &ys, self.budget);
+        let mut kept = Vec::with_capacity(keep.len());
+        for i in keep {
+            kept.push(self.points[i].clone());
+        }
+        self.points = kept;
+        self.unsampled = self.points.len();
+        self.compressions += 1;
+    }
+
+    /// Retained points (≤ 2× budget mid-run, ≤ budget after
+    /// [`TimeSeriesRecorder::write`]).
+    pub fn points(&self) -> &[TsPoint] {
+        &self.points
+    }
+
+    /// Raw time points observed before downsampling.
+    pub fn raw_points(&self) -> u64 {
+        self.raw_points
+    }
+
+    /// The CSV header for this recorder's column set.
+    pub fn csv_header(&self) -> String {
+        let mut h =
+            String::from("t,queue,running,started,head_starts,backfill_starts,down_nodes");
+        for ty in &self.types {
+            h.push_str(",util_");
+            h.push_str(ty);
+        }
+        h.push_str(",power_w,power_cap_w");
+        h
+    }
+
+    /// Final LTTB pass down to the budget, then write
+    /// `<dir>/timeseries.csv` and return its path. Power columns are
+    /// empty when no addon ever published them.
+    pub fn write(&mut self, dir: &Path) -> anyhow::Result<PathBuf> {
+        if self.points.len() > self.budget {
+            let xs: Vec<f64> = self.points.iter().map(|p| p.t as f64).collect();
+            let ys: Vec<f64> = self.points.iter().map(|p| p.queue as f64).collect();
+            let keep = lttb_indices(&xs, &ys, self.budget);
+            self.points = keep.into_iter().map(|i| self.points[i].clone()).collect();
+            self.unsampled = self.points.len();
+            self.compressions += 1;
+        }
+        let mut csv = self.csv_header();
+        csv.push('\n');
+        let fmt_opt = |v: Option<f64>| v.map(|w| format!("{w:.3}")).unwrap_or_default();
+        for p in &self.points {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{}",
+                p.t, p.queue, p.running, p.started, p.head_starts, p.backfill_starts,
+                p.down_nodes
+            ));
+            for u in &p.util {
+                csv.push_str(&format!(",{u:.6}"));
+            }
+            // short rows can only come from an unsampled tail (no
+            // `sample` call after the final drain); pad the columns
+            for _ in p.util.len()..self.types.len() {
+                csv.push_str(",0.000000");
+            }
+            csv.push_str(&format!(",{},{}\n", fmt_opt(p.power_w), fmt_opt(p.power_cap_w)));
+        }
+        let path = dir.join(TIMESERIES_FILE);
+        std::fs::write(&path, csv)?;
+        Ok(path)
+    }
+
+    /// The summary block folded into `telemetry.json` under
+    /// `"timeseries"`: whole-run aggregates that survive downsampling.
+    pub fn summary(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("points_raw".to_string(), Json::Num(self.raw_points as f64));
+        m.insert("points_kept".to_string(), Json::Num(self.points.len() as f64));
+        m.insert("budget".to_string(), Json::Num(self.budget as f64));
+        m.insert("compressions".to_string(), Json::Num(self.compressions as f64));
+        m.insert("head_starts".to_string(), Json::Num(self.head_total as f64));
+        m.insert("backfill_starts".to_string(), Json::Num(self.backfill_total as f64));
+        m.insert("queue_peak".to_string(), Json::Num(self.queue_peak as f64));
+        m.insert("down_nodes_peak".to_string(), Json::Num(self.down_peak as f64));
+        if let Some(w) = self.power_peak_w {
+            m.insert("power_peak_w".to_string(), Json::Num(w));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Largest-triangle-three-buckets downsampling: return the (sorted,
+/// deduplicated) indices of the `budget` points to keep from the series
+/// `(xs, ys)`. The first and last points are always kept; every interior
+/// bucket contributes the point forming the largest triangle with the
+/// previously selected point and the next bucket's centroid. Pure and
+/// deterministic — equal inputs select equal indices.
+pub fn lttb_indices(xs: &[f64], ys: &[f64], budget: usize) -> Vec<usize> {
+    let n = xs.len();
+    debug_assert_eq!(n, ys.len());
+    if n <= budget || budget < 3 {
+        return (0..n).collect();
+    }
+    let mut keep = Vec::with_capacity(budget);
+    keep.push(0);
+    let buckets = budget - 2;
+    // interior points [1, n-1) split into `buckets` equal ranges
+    let span = (n - 2) as f64 / buckets as f64;
+    let mut prev = 0usize;
+    for b in 0..buckets {
+        let lo = 1 + (b as f64 * span) as usize;
+        let hi = (1 + ((b + 1) as f64 * span) as usize).min(n - 1);
+        // centroid of the *next* bucket (the last one averages the end)
+        let (nlo, nhi) = if b + 1 < buckets {
+            (1 + ((b + 1) as f64 * span) as usize, (1 + ((b + 2) as f64 * span) as usize).min(n - 1))
+        } else {
+            (n - 1, n)
+        };
+        let m = (nhi - nlo).max(1) as f64;
+        let cx = xs[nlo..nhi].iter().sum::<f64>() / m;
+        let cy = ys[nlo..nhi].iter().sum::<f64>() / m;
+        let (px, py) = (xs[prev], ys[prev]);
+        let mut best = lo;
+        let mut best_area = -1.0f64;
+        for i in lo..hi.max(lo + 1) {
+            // twice the triangle area; ties keep the earliest index
+            let area = ((px - cx) * (ys[i] - py) - (px - xs[i]) * (cy - py)).abs();
+            if area > best_area {
+                best_area = area;
+                best = i;
+            }
+        }
+        keep.push(best);
+        prev = best;
+    }
+    keep.push(n - 1);
+    keep.dedup();
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::output::PerfRecord;
+
+    fn point(t: u64, queue: u32, started: u32) -> SimEvent {
+        SimEvent::PointClosed(PerfRecord {
+            t,
+            dispatch_ns: 0,
+            other_ns: 0,
+            queue_len: queue,
+            running: 0,
+            started,
+            rss_kb: 0,
+        })
+    }
+
+    #[test]
+    fn lttb_keeps_endpoints_and_spikes() {
+        let n = 1000;
+        let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut ys = vec![1.0f64; n];
+        ys[500] = 100.0; // the spike a decimator would drop
+        let keep = lttb_indices(&xs, &ys, 50);
+        assert!(keep.len() <= 50);
+        assert_eq!(keep[0], 0);
+        assert_eq!(*keep.last().unwrap(), n - 1);
+        assert!(keep.contains(&500), "LTTB must retain the spike: {keep:?}");
+        assert!(keep.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+        // determinism
+        assert_eq!(keep, lttb_indices(&xs, &ys, 50));
+        // short series pass through untouched
+        assert_eq!(lttb_indices(&xs[..10], &ys[..10], 50), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backfill_classifier_counts_jumps() {
+        let mut rec = TimeSeriesRecorder::new(&["core".to_string()]);
+        rec.apply(&SimEvent::Submitted { t: 0, id: 1 });
+        rec.apply(&SimEvent::Submitted { t: 0, id: 2 });
+        rec.apply(&SimEvent::Submitted { t: 0, id: 3 });
+        // job 2 starts while job 1 still queues: a backfill move
+        rec.apply(&SimEvent::Started { t: 1, id: 2 });
+        // then the head advances
+        rec.apply(&SimEvent::Started { t: 1, id: 1 });
+        rec.apply(&SimEvent::Started { t: 1, id: 3 });
+        rec.apply(&point(1, 0, 3));
+        assert_eq!(rec.points()[0].backfill_starts, 1);
+        assert_eq!(rec.points()[0].head_starts, 2);
+        assert_eq!((rec.backfill_total, rec.head_total), (1, 2));
+    }
+
+    #[test]
+    fn buffer_stays_within_twice_the_budget() {
+        let types = vec!["core".to_string()];
+        let mut rec = TimeSeriesRecorder::with_budget(&types, 16);
+        let rm = ResourceManager::from_config(&crate::config::SysConfig::homogeneous(
+            "ts",
+            2,
+            &[("core", 4)],
+            0,
+        ));
+        let extra = BTreeMap::new();
+        for t in 0..500u64 {
+            rec.apply(&point(t, (t % 7) as u32, 0));
+            rec.sample(&rm, &extra);
+        }
+        assert!(rec.points().len() < 32, "buffer {} breached 2x budget", rec.points().len());
+        assert_eq!(rec.raw_points(), 500);
+        let s = rec.summary();
+        assert_eq!(s.get("points_raw").unwrap().as_u64(), Some(500));
+        assert!(s.get("compressions").unwrap().as_u64().unwrap() > 0);
+        assert_eq!(s.get("queue_peak").unwrap().as_u64(), Some(6));
+        assert!(s.get("power_peak_w").is_none(), "no power addon, no power key");
+    }
+
+    #[test]
+    fn write_is_deterministic_and_budget_bounded() {
+        let tmp = crate::testutil::tempdir().unwrap();
+        let types = vec!["core".to_string(), "mem".to_string()];
+        let sys =
+            crate::config::SysConfig::homogeneous("ts", 2, &[("core", 4), ("mem", 16)], 0);
+        let rm = ResourceManager::from_config(&sys);
+        let run = |dir: &Path| {
+            let mut rec = TimeSeriesRecorder::with_budget(&types, 32);
+            let extra: BTreeMap<String, f64> =
+                [("power.system_w".to_string(), 123.456)].into_iter().collect();
+            for t in 0..300u64 {
+                rec.apply(&SimEvent::Submitted { t, id: t + 1 });
+                rec.apply(&SimEvent::Started { t, id: t + 1 });
+                rec.apply(&point(t, (t % 11) as u32, 1));
+                rec.sample(&rm, &extra);
+            }
+            rec.write(dir).unwrap()
+        };
+        let a = run(tmp.path());
+        let text = std::fs::read_to_string(&a).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("t,queue,running,started,head_starts,backfill_starts"));
+        assert!(lines[0].contains("util_core") && lines[0].contains("util_mem"));
+        assert!(lines.len() - 1 <= 32, "{} rows exceed the budget", lines.len() - 1);
+        assert!(lines[1].ends_with(",123.456,"), "power column present, cap empty: {}", lines[1]);
+        let dir2 = tmp.path().join("again");
+        std::fs::create_dir_all(&dir2).unwrap();
+        let b = run(&dir2);
+        assert_eq!(text, std::fs::read_to_string(&b).unwrap(), "re-run must be byte-identical");
+    }
+}

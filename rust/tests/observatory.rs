@@ -1,0 +1,309 @@
+//! Observatory invariants (DESIGN.md §Observability).
+//!
+//! Three families of guarantees around the time-series consumer and the
+//! campaign-wide aggregation pipeline:
+//!
+//! 1. **Observation-only** — a simulation driven with a
+//!    [`TimeSeriesRecorder`] consuming the event log produces
+//!    byte-identical job and perf records to one without, across the
+//!    dispatcher families and under a failure storm.
+//! 2. **Determinism** — the LTTB downsampler and the whole
+//!    `timeseries.csv` artifact are byte-identical across re-runs, and
+//!    the observatory aggregate is byte-identical across loader thread
+//!    counts (`--jobs`) and re-invocations over one finished store.
+//! 3. **Regression detection** — `--baseline` flags an injected
+//!    dispatch-p99 regression in a store fixture, while a store checked
+//!    against itself passes clean.
+
+use accasim::addons::FailureInjector;
+use accasim::campaign::{load_index, run_dir, Campaign, CampaignSpec, Observatory};
+use accasim::config::SysConfig;
+use accasim::dispatch::dispatcher_from_label;
+use accasim::output::OutputCollector;
+use accasim::rng::Pcg64;
+use accasim::sim::{SimOptions, SimOutput, Simulator, Step};
+use accasim::telemetry::{Telemetry, TimeSeriesRecorder, TIMESERIES_FILE};
+use accasim::testkit::arb_jobs;
+use accasim::testutil as tempfile;
+use accasim::util::json::Json;
+use accasim::workload::Job;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The deterministic portion of a run, as `rust/tests/telemetry.rs`
+/// renders it: full job records plus the timing-free perf columns.
+fn deterministic_bytes(out: &SimOutput) -> String {
+    let mut s = String::from("jobs.csv\n");
+    for j in &out.jobs {
+        s.push_str(&j.to_csv());
+        s.push('\n');
+    }
+    s.push_str("perf(t,queue,running,started)\n");
+    for p in &out.perf {
+        s.push_str(&format!("{},{},{},{}\n", p.t, p.queue_len, p.running, p.started));
+    }
+    s.push_str(&format!(
+        "completed={} rejected={} makespan={} slowdown_sum={} wait_sum={} max_queue={}\n",
+        out.jobs_completed,
+        out.jobs_rejected,
+        out.makespan,
+        out.slowdown_sum,
+        out.wait_sum,
+        out.max_queue
+    ));
+    s
+}
+
+fn opts_with(tel: Telemetry, addons: Vec<Box<dyn accasim::addons::AdditionalData>>) -> SimOptions {
+    SimOptions {
+        output: OutputCollector::in_memory(true, true),
+        mem_sample_secs: 0,
+        telemetry: tel,
+        addons,
+        ..Default::default()
+    }
+}
+
+/// Run a simulation step-by-step with a [`TimeSeriesRecorder`] attached
+/// as an event-log consumer, sampling resource state after every
+/// advanced point — the exact loop the campaign worker runs.
+fn record_run(
+    jobs: Vec<Job>,
+    sys: SysConfig,
+    label: &str,
+    opts: SimOptions,
+    budget: usize,
+) -> (SimOutput, TimeSeriesRecorder) {
+    let mut sim = Simulator::from_jobs(jobs, sys, dispatcher_from_label(label).unwrap(), opts);
+    let cursor = sim.register_consumer();
+    let mut rec = TimeSeriesRecorder::with_budget(sim.resource_manager().resource_types(), budget);
+    loop {
+        let step = sim.step().expect("step");
+        sim.drain_events(cursor, |ev| {
+            rec.apply(ev);
+            Ok(())
+        })
+        .expect("drain");
+        match step {
+            Step::Advanced(_) => rec.sample(sim.resource_manager(), sim.extra()),
+            Step::Idle | Step::Done => break,
+        }
+    }
+    (sim.finish().expect("finish"), rec)
+}
+
+/// Attaching the recorder (with telemetry on, as campaigns run it) must
+/// not change a single deterministic byte, for every dispatcher family.
+#[test]
+fn recorder_is_observation_only_across_dispatchers() {
+    let mut rng = Pcg64::new(0x0B5E);
+    let jobs = arb_jobs(&mut rng, 120, 12, 3);
+    let sys = SysConfig::homogeneous("obs", 6, &[("core", 8), ("gpu", 1), ("mem", 64)], 0);
+    for label in ["FIFO-FF", "SJF-BF", "LJF-WF", "EBF-FF", "CBF-FF", "FIFO_RND-FF"] {
+        let mut plain = Simulator::from_jobs(
+            jobs.clone(),
+            sys.clone(),
+            dispatcher_from_label(label).unwrap(),
+            opts_with(Telemetry::disabled(), vec![]),
+        );
+        let off = plain.run().expect("plain run");
+        let (on, rec) = record_run(
+            jobs.clone(),
+            sys.clone(),
+            label,
+            opts_with(Telemetry::enabled(), vec![]),
+            accasim::telemetry::DEFAULT_POINT_BUDGET,
+        );
+        assert_eq!(
+            deterministic_bytes(&off),
+            deterministic_bytes(&on),
+            "{label}: the time-series recorder changed simulation results"
+        );
+        assert!(off.jobs_completed > 0, "{label}: degenerate case");
+        assert_eq!(
+            rec.raw_points() as usize,
+            on.time_points as usize,
+            "{label}: one PointClosed event per time point"
+        );
+        // every start is classified exactly once
+        let s = rec.summary();
+        let starts = s.get("head_starts").unwrap().as_u64().unwrap()
+            + s.get("backfill_starts").unwrap().as_u64().unwrap();
+        assert_eq!(starts as usize, on.jobs_completed as usize, "{label}: start classification");
+    }
+}
+
+/// Same guarantee under a failure storm: down/up transitions churn the
+/// availability index and wake addons while the recorder derives the
+/// down-node series from the sampled state.
+#[test]
+fn recorder_is_observation_only_under_a_failure_storm() {
+    let mut rng = Pcg64::new(0x5709);
+    let jobs = arb_jobs(&mut rng, 80, 8, 2);
+    let sys = SysConfig::homogeneous("obsf", 4, &[("core", 8), ("mem", 64)], 0);
+    let storm = || -> Vec<Box<dyn accasim::addons::AdditionalData>> {
+        vec![Box::new(FailureInjector::new(vec![
+            (0, 100, 5_000),
+            (1, 2_000, 20_000),
+            (2, 100, 3_000),
+        ]))]
+    };
+    let mut plain = Simulator::from_jobs(
+        jobs.clone(),
+        sys.clone(),
+        dispatcher_from_label("FIFO-FF").unwrap(),
+        opts_with(Telemetry::disabled(), storm()),
+    );
+    let off = plain.run().expect("plain run");
+    let (on, rec) = record_run(
+        jobs,
+        sys,
+        "FIFO-FF",
+        opts_with(Telemetry::enabled(), storm()),
+        accasim::telemetry::DEFAULT_POINT_BUDGET,
+    );
+    assert_eq!(deterministic_bytes(&off), deterministic_bytes(&on));
+    assert_eq!(off.addon_wakes, on.addon_wakes, "wake path must not see the recorder");
+    let s = rec.summary();
+    assert!(
+        s.get("down_nodes_peak").unwrap().as_u64().unwrap() >= 1,
+        "failure windows must surface in the sampled down-node series: {s:?}"
+    );
+}
+
+/// The written artifact is deterministic even when the downsampler has
+/// to work: a small budget forces mid-run compressions, and two
+/// identical runs must still produce byte-identical `timeseries.csv`.
+#[test]
+fn timeseries_artifact_is_byte_identical_across_reruns() {
+    let tmp = tempfile::tempdir().unwrap();
+    let mut rng = Pcg64::new(0xD5A7);
+    let jobs = arb_jobs(&mut rng, 150, 10, 2);
+    let sys = SysConfig::homogeneous("ts", 4, &[("core", 8), ("mem", 64)], 0);
+    let write_once = |dir: &Path| -> (String, Json) {
+        let (_, mut rec) = record_run(
+            jobs.clone(),
+            sys.clone(),
+            "SJF-BF",
+            opts_with(Telemetry::enabled(), vec![]),
+            16,
+        );
+        let p = rec.write(dir).unwrap();
+        assert_eq!(p, dir.join(TIMESERIES_FILE));
+        (std::fs::read_to_string(p).unwrap(), rec.summary())
+    };
+    let (a, sa) = write_once(tmp.path());
+    let dir_b = tmp.path().join("again");
+    std::fs::create_dir_all(&dir_b).unwrap();
+    let (b, sb) = write_once(&dir_b);
+    assert_eq!(a, b, "downsampled artifact must be reproducible byte for byte");
+    assert_eq!(sa.to_string_compact(), sb.to_string_compact());
+    assert!(
+        sa.get("compressions").unwrap().as_u64().unwrap() > 0,
+        "the tiny budget must actually exercise LTTB: {sa:?}"
+    );
+    let lines: Vec<&str> = a.lines().collect();
+    assert!(lines[0].starts_with("t,queue,running,started,head_starts,backfill_starts"));
+    assert!(lines.len() - 1 <= 16, "{} rows exceed the budget", lines.len() - 1);
+}
+
+fn tiny_spec(name: &str) -> CampaignSpec {
+    let mut s = CampaignSpec::new(name);
+    s.add_trace("seth", 0.0005).add_system_trace("seth");
+    s.add_dispatcher("FIFO-FF").add_dispatcher("SJF-BF");
+    s.seeds = vec![1, 2];
+    s
+}
+
+/// One finished store, aggregated serially, with 3 loader threads, and
+/// then again: every observatory artifact must come out byte-identical.
+#[test]
+fn observatory_is_byte_identical_across_jobs_and_reinvocation() {
+    let tmp = tempfile::tempdir().unwrap();
+    let out = tmp.path().join("out");
+    let report = Campaign::new(tiny_spec("obsstore"), &out).run().unwrap();
+    assert_eq!(report.records.len(), 4);
+
+    let serial = Observatory::from_store(&out).unwrap();
+    let threaded = Observatory::from_store_with_jobs(&out, 3).unwrap();
+    assert_eq!(serial.telemetry_csv(), threaded.telemetry_csv());
+    assert_eq!(serial.report_md(), threaded.report_md());
+    assert_eq!(serial.report_html(), threaded.report_html());
+
+    // the aggregate reads observed spans and manifests
+    assert_eq!(serial.cells.len(), 2, "one row per dispatcher");
+    for c in &serial.cells {
+        assert_eq!((c.runs, c.with_telemetry), (2, 2), "{}: campaigns observe by default", c.dispatcher);
+        assert!(c.dispatch_p50_ns > 0.0, "{}: dispatch spans aggregated", c.dispatcher);
+        assert!(c.points_per_s > 0.0, "{}: throughput from run.json measure", c.dispatcher);
+        assert!(!c.queue_series.is_empty(), "{}: sparkline series loaded", c.dispatcher);
+    }
+
+    // re-invocation over the unchanged store rewrites identical bytes
+    serial.write(&out).unwrap();
+    serial.write_html(&out).unwrap();
+    let read = |name: &str| std::fs::read_to_string(out.join("observatory").join(name)).unwrap();
+    let (csv, md, html) = (read("telemetry.csv"), read("report.md"), read("observatory.html"));
+    let again = Observatory::from_store(&out).unwrap();
+    again.write(&out).unwrap();
+    again.write_html(&out).unwrap();
+    assert_eq!(csv, read("telemetry.csv"));
+    assert_eq!(md, read("report.md"));
+    assert_eq!(html, read("observatory.html"));
+    assert!(
+        !html.contains("src=") && !html.contains("href=") && !html.contains("<script"),
+        "dashboard must stay self-contained"
+    );
+}
+
+/// The regression fixture: a store checked against itself passes; the
+/// same store with one run's dispatch p99 inflated a hundredfold is
+/// flagged on exactly that dispatcher's cell.
+#[test]
+fn baseline_check_flags_an_injected_p99_regression() {
+    let tmp = tempfile::tempdir().unwrap();
+    let out = tmp.path().join("out");
+    Campaign::new(tiny_spec("obsbase"), &out).run().unwrap();
+    let baseline = Observatory::from_store(&out).unwrap();
+    assert!(
+        baseline.check_against(&baseline, 0.25).is_empty(),
+        "a store checked against itself must pass clean"
+    );
+
+    // inject the regression: multiply one FIFO-FF run's dispatch p99
+    let idx = load_index(&out).unwrap();
+    let victim = idx
+        .records
+        .iter()
+        .find(|r| r.dispatcher == "FIFO-FF")
+        .expect("store has FIFO-FF runs");
+    let tel_path = run_dir(&out, &victim.run_id).join("telemetry.json");
+    let mut doc = Json::parse(&std::fs::read_to_string(&tel_path).unwrap()).unwrap();
+    fn obj(j: &mut Json) -> &mut BTreeMap<String, Json> {
+        match j {
+            Json::Obj(m) => m,
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+    let spans = obj(obj(&mut doc).get_mut("spans").expect("spans block"));
+    let cycle = obj(spans.get_mut("dispatch_cycle").expect("dispatch span"));
+    match cycle.get_mut("p99_ns").expect("p99") {
+        Json::Num(v) => *v *= 100.0,
+        other => panic!("p99_ns not numeric: {other:?}"),
+    }
+    std::fs::write(&tel_path, doc.to_string_pretty()).unwrap();
+
+    let current = Observatory::from_store(&out).unwrap();
+    let regs = current.check_against(&baseline, 0.25);
+    assert!(
+        regs.iter().any(|r| r.metric == "dispatch_p99_ns" && r.cell.contains("FIFO-FF")),
+        "injected p99 regression must be flagged: {regs:?}"
+    );
+    assert!(
+        regs.iter().all(|r| r.cell.contains("FIFO-FF")),
+        "the untouched dispatcher must pass: {regs:?}"
+    );
+    let csv = Observatory::regressions_csv(&regs);
+    assert!(csv.starts_with(Observatory::REGRESSIONS_CSV_HEADER));
+    assert!(csv.contains("dispatch_p99_ns"), "{csv}");
+}

@@ -5,8 +5,9 @@
 //! 1. **Observation-only** — simulations and whole campaigns executed with
 //!    telemetry disabled, enabled, and enabled-with-tracing must produce
 //!    byte-identical outputs (including under a failure-storm scenario);
-//!    at the campaign level the *only* store difference is the presence
-//!    of `telemetry.json`.
+//!    at the campaign level the *only* store differences are the
+//!    observation artifacts themselves (`telemetry.json`,
+//!    `timeseries.csv`).
 //! 2. **Valid traces & live status** — `chrome_trace()` parses as Chrome
 //!    trace-event JSON with complete (`ph == "X"`) events, placements
 //!    nested inside their dispatch cycles and cycles disjoint in time;
@@ -137,8 +138,9 @@ fn failure_storms_are_byte_identical_with_telemetry_on() {
 }
 
 /// Campaign-level observation-only: the same matrix executed with
-/// telemetry on and off leaves stores that differ in exactly one way —
-/// the presence of `telemetry.json`.
+/// telemetry on and off leaves stores that differ only in the
+/// observation artifacts themselves — `telemetry.json` and the
+/// time-series CSV derived from the event log.
 #[test]
 fn campaign_store_differs_only_by_telemetry_json() {
     use accasim::campaign::{Campaign, CampaignSpec};
@@ -191,11 +193,18 @@ fn campaign_store_differs_only_by_telemetry_json() {
             "{}: perf.csv deterministic columns diverged",
             rec.run_id
         );
-        // the single store difference
-        assert!(run(&dir_on).join("telemetry.json").exists(), "{}", rec.run_id);
-        assert!(!run(&dir_off).join("telemetry.json").exists(), "{}", rec.run_id);
+        // the only store differences: the observation artifacts
+        for artifact in ["telemetry.json", "timeseries.csv"] {
+            assert!(run(&dir_on).join(artifact).exists(), "{}: {artifact}", rec.run_id);
+            assert!(!run(&dir_off).join(artifact).exists(), "{}: {artifact}", rec.run_id);
+        }
         let doc = Json::parse(&read(&run(&dir_on).join("telemetry.json"))).unwrap();
         assert!(doc.get("counters").is_some() && doc.get("spans").is_some());
+        assert!(
+            doc.get("timeseries").is_some(),
+            "{}: recorder summary folds into telemetry.json",
+            rec.run_id
+        );
     }
 }
 
