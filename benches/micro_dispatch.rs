@@ -95,6 +95,55 @@ fn main() -> anyhow::Result<()> {
     b.bench("can_host/indexed/480n", || rm.can_host(std::hint::black_box(&probe_interned)));
     b.bench("can_host/naive/480n", || rm.can_host(std::hint::black_box(&probe)));
 
+    // hierarchical feasibility bitmaps vs the flat scan, on a system large
+    // enough that the O(nodes) walk dominates (DESIGN.md §Perf): two
+    // identically loaded 4096-node managers, one with the bitmap layer
+    // disabled (the in-tree flat-scan oracle), both driven to heavy
+    // occupancy so the feasible set is sparse — the regime where skipping
+    // empty 64-node blocks pays
+    let big = SysConfig::homogeneous("xl", 4_096, &[("core", 4), ("mem", 4096)], 0);
+    let mut rm_on = ResourceManager::from_config(&big);
+    let mut rm_off = ResourceManager::from_config(&big);
+    rm_off.set_feasible_bitmap(false);
+    let mut loader = Pcg64::new(11);
+    let load: Vec<Job> = (0..6_000u64).map(|id| arb_job(&mut loader, 20_000 + id)).collect();
+    let mut ff = FirstFit::new();
+    for j in &load {
+        let mut j_on = j.clone();
+        j_on.shape = rm_on.intern_shape(&j.per_slot);
+        if let Some(a) = ff.place(&j_on, &rm_on) {
+            rm_on.allocate(&j_on, a).unwrap();
+        }
+        let mut j_off = j.clone();
+        j_off.shape = rm_off.intern_shape(&j.per_slot);
+        if let Some(a) = ff.place(&j_off, &rm_off) {
+            rm_off.allocate(&j_off, a).unwrap();
+        }
+    }
+    let mut probe_on = arb_job(&mut rng, 2);
+    let mut probe_off = probe_on.clone();
+    probe_on.shape = rm_on.intern_shape(&probe_on.per_slot);
+    probe_off.shape = rm_off.intern_shape(&probe_off.per_slot);
+    let sid_on = probe_on.shape;
+    let sid_off = probe_off.shape;
+    b.bench("feasible/bitmap/4096n", || {
+        rm_on.shaped_feasible_nodes(sid_on, &mut order);
+        order.len()
+    });
+    b.bench("feasible/flat/4096n", || {
+        rm_off.shaped_feasible_nodes(sid_off, &mut order);
+        order.len()
+    });
+    // First-Fit placement: early-exit streaming (stops once the slots are
+    // filled) vs the enumerate-then-fill oracle walking every feasible node
+    let mut ff = FirstFit::new();
+    b.bench("place/FF-early-exit/4096n", || {
+        ff.place(std::hint::black_box(&probe_on), &rm_on).map(|a| a.slices.len())
+    });
+    b.bench("place/FF-greedy/4096n", || {
+        ff.place(std::hint::black_box(&probe_off), &rm_off).map(|a| a.slices.len())
+    });
+
     // PJRT fit_score path (XlaFit), when artifacts are available
     if std::path::Path::new("artifacts/fit_score.hlo.txt").exists() {
         let engine = Arc::new(Engine::with_artifacts("artifacts")?);

@@ -119,6 +119,7 @@ pub struct Campaign<'a> {
     addon_factory: Option<AddonFactoryRef<'a>>,
     shape_index: bool,
     backfill_profile: bool,
+    feasible_bitmap: bool,
     checkpoint_every: u64,
     telemetry: bool,
     diag: Option<DiagLog>,
@@ -136,6 +137,7 @@ impl<'a> Campaign<'a> {
             addon_factory: None,
             shape_index: true,
             backfill_profile: true,
+            feasible_bitmap: true,
             checkpoint_every: 0,
             telemetry: true,
             diag: None,
@@ -213,6 +215,17 @@ impl<'a> Campaign<'a> {
         self
     }
 
+    /// Toggle the hierarchical feasibility bitmaps
+    /// ([`SimOptions::use_feasible_bitmap`]) for every run. An execution
+    /// knob outside the spec identity, like [`Campaign::shape_index`]:
+    /// results are identical either way by construction —
+    /// `rust/tests/availability_index.rs` runs the same campaign with the
+    /// bitmaps on and off and asserts byte-identical stores.
+    pub fn feasible_bitmap(mut self, on: bool) -> Self {
+        self.feasible_bitmap = on;
+        self
+    }
+
     /// Attach a programmatic addon factory applied to *every* run instead of
     /// the per-scenario addon data.
     ///
@@ -276,6 +289,7 @@ impl<'a> Campaign<'a> {
             output: OutputCollector::null(),
             use_shape_index: self.shape_index,
             use_backfill_profile: self.backfill_profile,
+            use_feasible_bitmap: self.feasible_bitmap,
             retain_log: self.checkpoint_every > 0,
             telemetry: if self.telemetry { Telemetry::enabled() } else { Telemetry::disabled() },
             ..Default::default()

@@ -103,9 +103,11 @@ COMMANDS:
   table1   [--scale 0.05] [--dir data] [--reps 3] [--out results/table1.csv]
   table2   [--scale 0.05] [--dir data] [--reps 1] [--out results/table2.csv]
   perf-smoke [--nodes 512,2048] [--dispatchers FIFO-FF,SJF-FF,EBF-FF,CBF-FF]
-           [--jobs 50000] [--seed 1] [--out results/BENCH_9.json]
+           [--jobs 50000] [--seed 1] [--out results/BENCH_10.json]
            [--deep-dispatchers EBF-FF,CBF-FF] [--deep-jobs JOBS/5]
-           [--no-backfill-profile]
+           [--xl-nodes 100000] [--xl-jobs JOBS/4]
+           [--xl-dispatchers FIFO-FF,SJF-FF]
+           [--no-backfill-profile] [--no-feasible-bitmap]
            dispatch-hot-path smoke over a nodes × dispatchers sweep:
            each cell simulates a synthetic oversubscribed workload with
            telemetry on and records machine-readable timings (wall_s,
@@ -113,11 +115,14 @@ COMMANDS:
            summary (span percentiles, index counters) for the perf
            trajectory tracked in CI. A deep-queue regime (2x
            oversubscription, smallest node count) additionally stresses
-           the backfilling dispatchers, and a time-series regime re-runs
+           the backfilling dispatchers, a time-series regime re-runs
            a subset with the campaign time-series recorder attached to
-           price the observation overhead; --no-backfill-profile forces
-           the naive oracle path for A/B timing. --dispatcher LABEL
-           (singular) restricts the sweep to one dispatcher
+           price the observation overhead, and an xl regime runs a
+           bounded job count on a 100k-node system — the scale the
+           hierarchical feasibility bitmaps are gated on (--xl-jobs 0
+           skips it). --no-backfill-profile / --no-feasible-bitmap
+           force the naive oracle paths for A/B timing. --dispatcher
+           LABEL (singular) restricts the sweep to one dispatcher
   bench-check <prev.json> <curr.json> [--max-regress 0.25]
            compare two perf-smoke outputs cell by cell (matched on
            bench/dispatcher/nodes/jobs/seed): exits non-zero when any
@@ -1135,28 +1140,79 @@ fn perf_smoke_jobs(
         .collect()
 }
 
+/// Which perf-smoke regime a cell belongs to. The regime is part of the
+/// bench-check cell identity: each regime's cells pair only with
+/// same-regime baseline cells, and a baseline that predates a regime
+/// simply has unmatched cells, which pass.
+#[derive(Clone, Copy, PartialEq)]
+enum SmokeRegime {
+    /// The standard nodes × dispatchers sweep, ~15% oversubscribed.
+    Standard,
+    /// 2× oversubscription on the smallest system: long blocked queues,
+    /// the cells the incremental availability profile is gated on.
+    Deep,
+    /// Standard workload with the campaign time-series recorder attached:
+    /// gates the recorder's per-point observation overhead.
+    Ts,
+    /// The 100k-node regime: a very large system with a bounded job
+    /// count, where O(nodes) feasibility scans dominate the dispatch
+    /// cycle — the cells the hierarchical feasibility bitmaps are
+    /// gated on.
+    Xl,
+}
+
+impl SmokeRegime {
+    /// The `bench` identity string written into the cell.
+    fn bench(self) -> &'static str {
+        match self {
+            SmokeRegime::Standard => "perf_smoke",
+            SmokeRegime::Deep => "perf_smoke_deep",
+            SmokeRegime::Ts => "perf_smoke_ts",
+            SmokeRegime::Xl => "perf_smoke_xl",
+        }
+    }
+
+    /// Human-readable tag for the per-cell progress line.
+    fn tag(self) -> &'static str {
+        match self {
+            SmokeRegime::Standard => "",
+            SmokeRegime::Deep => " [deep]",
+            SmokeRegime::Ts => " [ts]",
+            SmokeRegime::Xl => " [xl]",
+        }
+    }
+
+    /// Workload oversubscription factor for this regime.
+    fn oversub(self) -> f64 {
+        match self {
+            SmokeRegime::Deep => 2.0,
+            _ => 1.15,
+        }
+    }
+}
+
 /// One perf-smoke sweep cell: simulate `jobs` synthetic jobs on a
 /// `nodes`-node system under `dispatcher`, with telemetry enabled, and
 /// return the machine-readable cell object (identity keys + timings +
-/// telemetry summary). With `ts` the campaign time-series recorder rides
-/// along on its own event-log cursor (sampled every time point, exactly
-/// as `campaign run` attaches it), so the observation overhead itself is
-/// a gated cell on the perf trajectory.
+/// telemetry summary). In the [`SmokeRegime::Ts`] regime the campaign
+/// time-series recorder rides along on its own event-log cursor (sampled
+/// every time point, exactly as `campaign run` attaches it), so the
+/// observation overhead itself is a gated cell on the perf trajectory.
 fn perf_smoke_cell(
     nodes: u64,
     jobs: u64,
     seed: u64,
     dispatcher: &str,
-    deep: bool,
-    ts: bool,
+    regime: SmokeRegime,
     backfill_profile: bool,
+    feasible_bitmap: bool,
 ) -> anyhow::Result<accasim::util::json::Json> {
     use accasim::sim::Step;
     use accasim::telemetry::TimeSeriesRecorder;
     use accasim::util::json::Json;
     const CORES: u64 = 16;
     let sys = SysConfig::homogeneous("perfsmoke", nodes, &[("core", CORES), ("mem", 65_536)], 0);
-    let workload = perf_smoke_jobs(nodes, CORES, jobs, seed, if deep { 2.0 } else { 1.15 });
+    let workload = perf_smoke_jobs(nodes, CORES, jobs, seed, regime.oversub());
     let d = dispatcher_from_label(dispatcher)?;
     let tel = Telemetry::enabled();
     let opts = SimOptions {
@@ -1165,11 +1221,12 @@ fn perf_smoke_cell(
         seed,
         telemetry: tel.clone(),
         use_backfill_profile: backfill_profile,
+        use_feasible_bitmap: feasible_bitmap,
         ..Default::default()
     };
     let mut sim = Simulator::from_jobs(workload, sys, d, opts);
     let mut recorder = None;
-    let o = if ts {
+    let o = if regime == SmokeRegime::Ts {
         let cursor = sim.register_consumer();
         let mut rec = TimeSeriesRecorder::new(sim.resource_manager().resource_types());
         loop {
@@ -1190,18 +1247,7 @@ fn perf_smoke_cell(
     };
 
     let mut m = std::collections::BTreeMap::new();
-    // the regime is part of the bench-check cell identity: deep-queue and
-    // time-series cells pair with same-regime baseline cells, never with
-    // standard ones (and a baseline that predates a regime simply has
-    // unmatched cells, which pass)
-    let bench = if ts {
-        "perf_smoke_ts"
-    } else if deep {
-        "perf_smoke_deep"
-    } else {
-        "perf_smoke"
-    };
-    m.insert("bench".to_string(), Json::Str(bench.to_string()));
+    m.insert("bench".to_string(), Json::Str(regime.bench().to_string()));
     m.insert("dispatcher".to_string(), Json::Str(o.dispatcher.clone()));
     m.insert("nodes".to_string(), Json::Num(nodes as f64));
     m.insert("jobs".to_string(), Json::Num(jobs as f64));
@@ -1234,13 +1280,7 @@ fn perf_smoke_cell(
     println!(
         "perf-smoke{} {dispatcher}: {} nodes × {} jobs → {} completed in {:.2}s wall \
          (dispatch {:.1} ms over {} points, {:.0} ns/point, peak RSS {} KB)",
-        if ts {
-            " [ts]"
-        } else if deep {
-            " [deep]"
-        } else {
-            ""
-        },
+        regime.tag(),
         nodes,
         jobs,
         o.jobs_completed,
@@ -1255,18 +1295,22 @@ fn perf_smoke_cell(
 
 /// Perf smoke: a nodes × dispatchers sweep of large-system simulations
 /// with machine-readable output — the CI-tracked perf trajectory
-/// (`results/BENCH_9.json`, compared cell by cell against the previous run
-/// by `bench-check`). Each cell runs with telemetry enabled and embeds its
-/// span-percentile summary; the dispatch timing gated by `bench-check` is
-/// therefore measured *with* spans on, keeping the observation overhead
+/// (`results/BENCH_10.json`, compared cell by cell against the previous
+/// run by `bench-check`). Each cell runs with telemetry enabled and embeds
+/// its span-percentile summary; the dispatch timing gated by `bench-check`
+/// is therefore measured *with* spans on, keeping the observation overhead
 /// itself on the perf trajectory. Besides the standard ~15%-oversubscribed
 /// sweep, a deep-queue regime (2× oversubscription on the smallest node
 /// count) exercises the backfilling dispatchers against long blocked
 /// queues — the cells the incremental availability profile is gated on —
-/// and a time-series regime re-runs the sweep dispatchers on the smallest
+/// a time-series regime re-runs the sweep dispatchers on the smallest
 /// system with the campaign time-series recorder attached, gating the
-/// recorder's per-point overhead the same way. `--no-backfill-profile`
-/// forces every cell onto the naive oracle path for A/B timing.
+/// recorder's per-point overhead the same way, and an xl regime runs a
+/// bounded job count against a 100k-node system, where O(nodes) work per
+/// dispatch cycle is what dominates — the cells the hierarchical
+/// feasibility bitmaps are gated on. `--no-backfill-profile` /
+/// `--no-feasible-bitmap` force every cell onto the corresponding naive
+/// oracle path for A/B timing.
 fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     use accasim::util::json::Json;
     let nodes_list = args.get("nodes", "512,2048");
@@ -1279,8 +1323,12 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
     };
     let deep_dispatchers = args.get("deep-dispatchers", "EBF-FF,CBF-FF");
     let deep_jobs: u64 = args.get_parse("deep-jobs", jobs / 5)?;
+    let xl_nodes: u64 = args.get_parse("xl-nodes", 100_000)?;
+    let xl_jobs: u64 = args.get_parse("xl-jobs", jobs / 4)?;
+    let xl_dispatchers = args.get("xl-dispatchers", "FIFO-FF,SJF-FF");
     let backfill_profile = !args.flag("no-backfill-profile");
-    let out_path = PathBuf::from(args.get("out", "results/BENCH_9.json"));
+    let feasible_bitmap = !args.flag("no-feasible-bitmap");
+    let out_path = PathBuf::from(args.get("out", "results/BENCH_10.json"));
     args.reject_unknown()?;
     let nodes_axis = nodes_list
         .split(',')
@@ -1300,9 +1348,9 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
                 jobs,
                 seed,
                 dispatcher,
-                false,
-                false,
+                SmokeRegime::Standard,
                 backfill_profile,
+                feasible_bitmap,
             )?);
         }
     }
@@ -1317,9 +1365,9 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
                 deep_jobs,
                 seed,
                 dispatcher,
-                true,
-                false,
+                SmokeRegime::Deep,
                 backfill_profile,
+                feasible_bitmap,
             )?);
         }
     }
@@ -1334,9 +1382,28 @@ fn perf_smoke(args: &Args) -> anyhow::Result<()> {
                 deep_jobs,
                 seed,
                 dispatcher,
-                false,
-                true,
+                SmokeRegime::Ts,
                 backfill_profile,
+                feasible_bitmap,
+            )?);
+        }
+    }
+    // XL regime: the 100k-node system with a bounded job count. Node
+    // count, not queue depth, is the variable under test — O(nodes)
+    // feasibility scans would dominate every dispatch cycle here, so
+    // these cells gate the hierarchical bitmap enumeration and the
+    // First-Fit early-exit placement at scale (CI keeps the job count
+    // bounded so the regime stays inside the smoke-test time budget).
+    if xl_jobs > 0 && xl_nodes > 0 && !xl_dispatchers.trim().is_empty() {
+        for dispatcher in xl_dispatchers.split(',').map(str::trim) {
+            cells.push(perf_smoke_cell(
+                xl_nodes,
+                xl_jobs,
+                seed,
+                dispatcher,
+                SmokeRegime::Xl,
+                backfill_profile,
+                feasible_bitmap,
             )?);
         }
     }

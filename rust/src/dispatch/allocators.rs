@@ -47,6 +47,27 @@ impl Allocator for FirstFit {
     fn place_scratch(&mut self) -> &mut Vec<u32> {
         &mut self.scratch
     }
+
+    /// Early-exit placement: First-Fit's node order is ascending node id,
+    /// so instead of enumerating the whole feasible set and then filling,
+    /// stream feasible nodes from the availability bitmaps and stop as
+    /// soon as the job's slots are filled — byte-identical to the default
+    /// enumerate-then-fill by construction, without visiting the feasible
+    /// tail. Falls back to the default path for non-interned jobs and
+    /// when the bitmap layers are off (`SimOptions::use_feasible_bitmap`
+    /// = false keeps the flat scan as the in-tree oracle).
+    fn place(&mut self, job: &Job, rm: &ResourceManager) -> Option<Allocation> {
+        let shape = rm.shape_for(job);
+        if let Some(sid) = shape {
+            if rm.shaped_total_hostable(sid) < job.slots as u128 {
+                return None;
+            }
+            if let Some(alloc) = rm.shaped_place_first_fit(sid, job.slots as u64) {
+                return Some(alloc);
+            }
+        }
+        super::place_greedy(self, job, rm, shape)
+    }
 }
 
 /// Best-Fit: sort nodes by their current load, busiest first, "trying to fit
@@ -55,7 +76,9 @@ impl Allocator for FirstFit {
 /// determinism.
 #[derive(Debug, Default)]
 pub struct BestFit {
-    scored: Vec<(u32, u32)>, // (busy_slots, node)
+    /// Scratch: packed `(!busy_slots << 32) | node` sort keys, computed
+    /// once per `node_order` call (no per-comparison manager lookups).
+    keys: Vec<u64>,
     scratch: Vec<u32>,
 }
 
@@ -73,12 +96,18 @@ impl Allocator for BestFit {
 
     fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
         feasible_nodes(job, rm, out);
-        self.scored.clear();
-        self.scored.extend(out.iter().map(|&n| (rm.node_busy_slots(n as usize), n)));
-        // busiest first, then lowest index
-        self.scored.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        // Busy counts are read once per node and packed with the node id
+        // into one u64 key — `!busy` in the high half makes an ascending
+        // `sort_unstable` yield busiest-first with lowest-index ties,
+        // identical to the former `(busy, node)` tuple comparator.
+        self.keys.clear();
+        self.keys.extend(
+            out.iter()
+                .map(|&n| (((!rm.node_busy_slots(n as usize)) as u64) << 32) | n as u64),
+        );
+        self.keys.sort_unstable();
         out.clear();
-        out.extend(self.scored.iter().map(|&(_, n)| n));
+        out.extend(self.keys.iter().map(|&k| k as u32));
     }
 
     fn place_scratch(&mut self) -> &mut Vec<u32> {
@@ -91,7 +120,8 @@ impl Allocator for BestFit {
 /// set; provided as the natural ablation of the BF fragmentation argument.
 #[derive(Debug, Default)]
 pub struct WorstFit {
-    scored: Vec<(u32, u32)>,
+    /// Scratch: packed `(busy_slots << 32) | node` sort keys.
+    keys: Vec<u64>,
     scratch: Vec<u32>,
 }
 
@@ -109,12 +139,15 @@ impl Allocator for WorstFit {
 
     fn node_order(&mut self, job: &Job, rm: &ResourceManager, out: &mut Vec<u32>) {
         feasible_nodes(job, rm, out);
-        self.scored.clear();
-        self.scored.extend(out.iter().map(|&n| (rm.node_busy_slots(n as usize), n)));
-        // least busy first, then lowest index
-        self.scored.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        // Least busy first, then lowest index: busy in the high half of
+        // the packed key, one ascending u64 `sort_unstable`.
+        self.keys.clear();
+        self.keys.extend(
+            out.iter().map(|&n| ((rm.node_busy_slots(n as usize) as u64) << 32) | n as u64),
+        );
+        self.keys.sort_unstable();
         out.clear();
-        out.extend(self.scored.iter().map(|&(_, n)| n));
+        out.extend(self.keys.iter().map(|&k| k as u32));
     }
 
     fn place_scratch(&mut self) -> &mut Vec<u32> {
@@ -262,7 +295,50 @@ mod tests {
                 "{}: placements must match",
                 alloc.name()
             );
+            // The packed-key sorts must reproduce exactly the order the
+            // former `(busy, node)` tuple comparators produced.
+            let mut scored: Vec<(u32, u32)> =
+                a.iter().map(|&n| (rm.node_busy_slots(n as usize), n)).collect();
+            match alloc.name() {
+                "BF" => scored.sort_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1))),
+                "WF" => scored.sort_by(|x, y| x.0.cmp(&y.0).then(x.1.cmp(&y.1))),
+                _ => scored.sort_by_key(|&(_, n)| n),
+            }
+            let mut expected = Vec::new();
+            alloc.node_order(&fast, &rm, &mut expected);
+            assert_eq!(
+                expected,
+                scored.iter().map(|&(_, n)| n).collect::<Vec<_>>(),
+                "{}: key sort must match the comparator order",
+                alloc.name()
+            );
         }
+    }
+
+    #[test]
+    fn first_fit_early_exit_matches_flat_scan_oracle() {
+        // Same system, same jobs: bitmap streaming on vs flat-scan off
+        // must produce identical slices, placement after placement.
+        let mut on = rm();
+        let mut off = rm();
+        off.set_feasible_bitmap(false);
+        assert!(on.feasible_bitmap_enabled() && !off.feasible_bitmap_enabled());
+        let mut ff_on = FirstFit::new();
+        let mut ff_off = FirstFit::new();
+        for (id, slots) in [(1u64, 6u32), (2, 3), (3, 5), (4, 17), (5, 2)] {
+            let mut j = job(id, slots);
+            j.shape = on.intern_shape(&j.per_slot);
+            let mut j2 = j.clone();
+            j2.shape = off.intern_shape(&j2.per_slot);
+            let (a, b) = (ff_on.place(&j, &on), ff_off.place(&j2, &off));
+            assert_eq!(a, b, "job {id}: early-exit stream vs flat-scan oracle");
+            if let Some(alloc) = a {
+                on.allocate(&j, alloc.clone()).unwrap();
+                off.allocate(&j2, alloc).unwrap();
+            }
+        }
+        on.assert_index_bitmap_invariants();
+        off.assert_index_bitmap_invariants();
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! reservation ahead of it. The paper leaves advanced dispatchers as future
 //! work (§8); CBF is the canonical first step beyond EBF and doubles as an
 //! ablation of the single-reservation design choice.
+//!
+//! Perf note: immediate starts (jobs whose reservation is *now*) place
+//! through [`Allocator::place`], so with a First-Fit allocator they ride
+//! the hierarchical-bitmap early-exit streaming path (DESIGN.md §Perf);
+//! reservations at future times still walk the availability profile's
+//! free matrices, which the bitmap layer deliberately does not cover.
 
 use super::{Allocator, Decision, Scheduler, SystemView};
 use crate::resources::{hostable_slots_in, ResourceManager};

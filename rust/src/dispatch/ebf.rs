@@ -8,6 +8,13 @@
 //! they cannot delay the head's reservation: either they finish (by
 //! estimate) before the reservation time, or they fit in resources that
 //! remain free even once the reservation is in force.
+//!
+//! Perf note: the pre-head starts and the quick-backfill path go through
+//! [`Allocator::place`], so with a First-Fit allocator they inherit the
+//! hierarchical-bitmap early-exit streaming placement (DESIGN.md §Perf)
+//! transparently; only the past-reservation path keeps the explicit
+//! `node_order` + min-matrix walk, since it places against a derived
+//! matrix the availability index does not track.
 
 use super::allocators::place_in_matrix;
 use super::{Allocator, Decision, Scheduler, SystemView};

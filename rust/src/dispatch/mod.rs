@@ -121,6 +121,13 @@ pub trait Allocator {
     /// O(1) per cycle instead of a node scan. The check is exact for every
     /// shipped allocator because all of them enumerate *all* feasible nodes:
     /// greedy placement over that order succeeds iff the total suffices.
+    ///
+    /// Overrides must stay byte-identical to
+    /// [`place_greedy`] over their [`Allocator::node_order`] —
+    /// [`FirstFit`] overrides this with an early-exit stream over the
+    /// availability bitmaps that stops as soon as the slots are filled,
+    /// which is identical by construction because its node order *is*
+    /// ascending node id.
     fn place(&mut self, job: &Job, rm: &ResourceManager) -> Option<Allocation> {
         let shape = rm.shape_for(job);
         if let Some(sid) = shape {
@@ -128,30 +135,45 @@ pub trait Allocator {
                 return None;
             }
         }
-        let mut order = std::mem::take(self.place_scratch());
-        self.node_order(job, rm, &mut order);
-        let mut remaining = job.slots as u64;
-        let mut slices = Vec::new();
-        for &n in &order {
-            if remaining == 0 {
-                break;
-            }
-            let h = match shape {
-                Some(sid) => rm.shaped_hostable_slots(sid, n as usize),
-                None => rm.hostable_slots(n as usize, &job.per_slot),
-            }
-            .min(remaining);
-            if h > 0 {
-                slices.push((n, h as u32));
-                remaining -= h;
-            }
-        }
-        *self.place_scratch() = order;
+        place_greedy(self, job, rm, shape)
+    }
+}
+
+/// The enumerate-then-fill back half of the default [`Allocator::place`]:
+/// ask the allocator for its node order, then fill slots greedily along
+/// it. Split out so `place` overrides (First-Fit's early-exit streaming
+/// path) can fall back to the exact default behaviour without
+/// re-resolving the job's shape — `shape` is passed in pre-resolved so
+/// fallbacks never double-count naive-path demotions.
+pub(crate) fn place_greedy<A: Allocator + ?Sized>(
+    alloc: &mut A,
+    job: &Job,
+    rm: &ResourceManager,
+    shape: Option<crate::resources::ShapeId>,
+) -> Option<Allocation> {
+    let mut order = std::mem::take(alloc.place_scratch());
+    alloc.node_order(job, rm, &mut order);
+    let mut remaining = job.slots as u64;
+    let mut slices = Vec::new();
+    for &n in &order {
         if remaining == 0 {
-            Some(Allocation { slices })
-        } else {
-            None
+            break;
         }
+        let h = match shape {
+            Some(sid) => rm.shaped_hostable_slots(sid, n as usize),
+            None => rm.hostable_slots(n as usize, &job.per_slot),
+        }
+        .min(remaining);
+        if h > 0 {
+            slices.push((n, h as u32));
+            remaining -= h;
+        }
+    }
+    *alloc.place_scratch() = order;
+    if remaining == 0 {
+        Some(Allocation { slices })
+    } else {
+        None
     }
 }
 

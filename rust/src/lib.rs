@@ -10,7 +10,9 @@
 //! * [`workload`] — job model, SWF reader/writer, job factory (the *job
 //!   submission* component).
 //! * [`config`] — synthetic system configuration (resource types, node groups).
-//! * [`resources`] — the resource manager: per-node multi-resource accounting.
+//! * [`resources`] — the resource manager: per-node multi-resource
+//!   accounting behind a shape-interned availability index with
+//!   hierarchical feasibility bitmaps (DESIGN.md §Perf).
 //! * [`sim`] — the event manager / discrete-event core driving the
 //!   loaded → queued → running → completed lifecycle over a unified
 //!   time-indexed event queue (job, addon and probe events alike); a
@@ -61,7 +63,8 @@
 // `-D warnings` in CI, and every public item must carry a doc comment).
 // The flagship user-facing modules — `campaign`, `scenario`, `experiment`,
 // `plotdata`, `stats`, `addons`, `workload`, `sim`, `output`, `monitor`,
-// `telemetry`, `dispatch`, `config` — are fully documented; the remaining internal modules below are deliberately allowlisted
+// `telemetry`, `dispatch`, `config`, `resources` — are fully documented;
+// the remaining internal modules below are deliberately allowlisted
 // item-by-item (`#[allow(missing_docs)]`) until they get their own
 // documentation pass, so new flagship items can never regress silently.
 #![warn(missing_docs)]
@@ -80,7 +83,6 @@ pub mod generator;
 pub mod monitor;
 pub mod output;
 pub mod plotdata;
-#[allow(missing_docs)] // internal: resource manager hot path
 pub mod resources;
 #[allow(missing_docs)] // internal: PCG/SplitMix generators
 pub mod rng;

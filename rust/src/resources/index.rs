@@ -11,6 +11,25 @@
 //! * `ever_total` — the capacity-based sum computed once at intern time
 //!   (so `can_ever_host` is one comparison; node capacity never changes).
 //!
+//! **Hierarchical feasibility bitmaps.** On top of the counts, each
+//! materialised shape carries a two-level nonzero summary: bit `n % 64`
+//! of `blocks[n / 64]` is set iff `hostable[n] > 0`, and bit `b % 64` of
+//! `superblocks[b / 64]` is set iff `blocks[b] != 0`. Feasible-set
+//! enumeration then hops from nonzero superblock word to nonzero block
+//! word with `trailing_zeros`, skipping empty 64-node blocks outright:
+//! [`AvailabilityIndex::feasible_into`] is O(F + F/64) in the number of
+//! feasible nodes F instead of O(nodes), and
+//! [`AvailabilityIndex::stream_feasible`] feeds nodes to the caller one
+//! at a time in the same ascending order so First-Fit placement can stop
+//! as soon as the job's slots are filled. Both layers are maintained in
+//! the same lazy journal-sync path as the counts (and rebuilt together
+//! on compaction), so they can never drift from `hostable`. The flat
+//! O(nodes) scan stays compiled in as the in-tree oracle behind
+//! [`AvailabilityIndex::set_feasible_bitmap`]
+//! (`SimOptions::use_feasible_bitmap`, default on): speed must not
+//! change results, and `rust/tests/availability_index.rs` asserts the
+//! two paths byte-identical.
+//!
 //! **Lazy journal synchronisation.** Mutations (`allocate`, `release`,
 //! `set_node_down`, `set_node_up`) do *not* update shape entries eagerly —
 //! with many interned shapes that would trade one scan for another. They
@@ -22,17 +41,26 @@
 //! their per-node vector is never even materialised — memory stays
 //! O(queried shapes × nodes).
 //!
-//! The journal is bounded: past `4 × nodes` entries it is compacted, and
-//! shapes whose cursor did not keep up are marked stale and fully rebuilt
+//! **Journal bound and the memory/rebuild trade-off.** The journal is
+//! bounded: past `limit` entries (default `4 × nodes`, configurable via
+//! `SimOptions::index_journal_limit`) it is compacted, and shapes whose
+//! cursor did not keep up are marked stale and fully rebuilt
 //! (O(nodes × types)) on their next query — amortised against the ≥
-//! `4 × nodes` touches that forced the compaction.
+//! `limit` touches that forced the compaction. A larger limit trades
+//! journal memory (4 bytes/entry — 1.6 MB at the default bound on a
+//! 100k-node system) for fewer forced rebuilds of rarely-queried shapes;
+//! a smaller one caps memory but makes laggard shapes pay the O(nodes)
+//! rebuild more often. Compactions are counted
+//! ([`AvailabilityIndex::compactions`]) and folded into the telemetry
+//! counter `Counter::JournalCompactions` at end of run.
 //!
 //! Correctness invariant (enforced by `rust/tests/availability_index.rs`
 //! against a full-scan oracle): after synchronisation,
 //! `hostable[n] == hostable_slots_in(free[n], shape)` for up nodes and `0`
-//! for down nodes, and `total` is their exact sum. Queries therefore return
-//! byte-for-byte the same answers as the pre-index code path — speed must
-//! not change results.
+//! for down nodes, `total` is their exact sum, and the bitmap layers
+//! mirror `hostable` exactly ([`AvailabilityIndex::assert_bitmap_invariants`]).
+//! Queries therefore return byte-for-byte the same answers as the
+//! pre-index code path — speed must not change results.
 
 use super::hostable_slots_in;
 use crate::telemetry::{Counter, SpanKind, Telemetry};
@@ -73,6 +101,11 @@ impl NodeState<'_> {
 struct ShapeState {
     /// Hostable slots per node; empty until the shape is first queried.
     hostable: Vec<u64>,
+    /// Level-1 summary: bit `n % 64` of word `n / 64` ⇔ `hostable[n] > 0`.
+    /// Empty when the bitmap layers are disabled (flat-scan oracle mode).
+    blocks: Vec<u64>,
+    /// Level-2 summary: bit `b % 64` of word `b / 64` ⇔ `blocks[b] != 0`.
+    superblocks: Vec<u64>,
     /// Exact sum of `hostable` (u128: immune to pathological capacities).
     total: u128,
     /// Capacity-based sum (ignores current use and node outages), fixed at
@@ -83,20 +116,71 @@ struct ShapeState {
     cursor: usize,
 }
 
+impl ShapeState {
+    /// Rebuild both summary layers from `hostable` (full-rebuild path).
+    fn rebuild_bitmaps(&mut self) {
+        let nblocks = self.hostable.len().div_ceil(64);
+        self.blocks.clear();
+        self.blocks.resize(nblocks, 0);
+        self.superblocks.clear();
+        self.superblocks.resize(nblocks.div_ceil(64), 0);
+        for (n, &h) in self.hostable.iter().enumerate() {
+            if h > 0 {
+                self.blocks[n / 64] |= 1u64 << (n % 64);
+            }
+        }
+        for (b, &w) in self.blocks.iter().enumerate() {
+            if w != 0 {
+                self.superblocks[b / 64] |= 1u64 << (b % 64);
+            }
+        }
+    }
+
+    /// Flip the summary bits for node `n` after its hostable count crossed
+    /// zero in either direction (incremental-replay path).
+    #[inline]
+    fn flip_bit(&mut self, n: usize, now_feasible: bool) {
+        let (b, bit) = (n / 64, 1u64 << (n % 64));
+        let sbit = 1u64 << (b % 64);
+        if now_feasible {
+            if self.blocks[b] == 0 {
+                self.superblocks[b / 64] |= sbit;
+            }
+            self.blocks[b] |= bit;
+        } else {
+            self.blocks[b] &= !bit;
+            if self.blocks[b] == 0 {
+                self.superblocks[b / 64] &= !sbit;
+            }
+        }
+    }
+}
+
 /// Incremental per-shape availability over the free matrix.
 ///
 /// Owned by [`super::ResourceManager`] (behind a `RefCell`, since queries
 /// synchronise lazily through `&self` methods of the manager). All methods
 /// take the manager's current state as a [`NodeState`] plus the shape's
 /// `per_slot` vector, so the index holds no duplicated matrices.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct AvailabilityIndex {
     /// Node ids whose free vector or service state changed, in order.
     journal: Vec<u32>,
     /// Journal length that triggers compaction.
     limit: usize,
+    /// Whether the hierarchical bitmap layers are maintained and used for
+    /// enumeration (default on; off = flat-scan oracle mode).
+    bitmap: bool,
+    /// Journal compactions performed so far (folded into telemetry).
+    compactions: u64,
     /// Dense per-shape states, indexed like the shape table.
     shapes: Vec<ShapeState>,
+}
+
+impl Default for AvailabilityIndex {
+    fn default() -> Self {
+        AvailabilityIndex::new(0)
+    }
 }
 
 impl AvailabilityIndex {
@@ -105,6 +189,8 @@ impl AvailabilityIndex {
         AvailabilityIndex {
             journal: Vec::new(),
             limit: (4 * nodes).max(64),
+            bitmap: true,
+            compactions: 0,
             shapes: Vec::new(),
         }
     }
@@ -115,6 +201,8 @@ impl AvailabilityIndex {
     pub fn register_shape(&mut self, ever_total: u128) -> usize {
         self.shapes.push(ShapeState {
             hostable: Vec::new(),
+            blocks: Vec::new(),
+            superblocks: Vec::new(),
             total: 0,
             ever_total,
             cursor: STALE,
@@ -132,6 +220,46 @@ impl AvailabilityIndex {
         self.shapes.is_empty()
     }
 
+    /// Enable or disable the hierarchical bitmap layers. Disabling keeps
+    /// the flat O(nodes) scan as the enumeration path (the in-tree
+    /// oracle). Toggling marks every shape stale so the next query
+    /// rebuilds it in the new mode — the layers are never half-built.
+    pub fn set_feasible_bitmap(&mut self, enabled: bool) {
+        if self.bitmap == enabled {
+            return;
+        }
+        self.bitmap = enabled;
+        for st in &mut self.shapes {
+            st.cursor = STALE;
+        }
+    }
+
+    /// Whether the hierarchical bitmap layers are active.
+    #[inline]
+    pub fn feasible_bitmap(&self) -> bool {
+        self.bitmap
+    }
+
+    /// Override the journal compaction bound (entries; clamped to ≥ 64).
+    /// See the module docs for the memory/rebuild trade-off.
+    pub fn set_journal_limit(&mut self, limit: usize) {
+        self.limit = limit.max(64);
+    }
+
+    /// The current journal compaction bound, in entries.
+    #[inline]
+    pub fn journal_limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Journal compactions performed so far (each marks every lagging
+    /// shape stale; folded into `Counter::JournalCompactions` at end of
+    /// run).
+    #[inline]
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
     /// Record that `node`'s free vector or service state changed.
     /// O(1) amortised; compaction past the journal bound marks lagging
     /// shapes stale instead of replaying on their behalf.
@@ -144,6 +272,7 @@ impl AvailabilityIndex {
                 st.cursor = if st.cursor == len { 0 } else { STALE };
             }
             self.journal.clear();
+            self.compactions += 1;
         }
         self.journal.push(node);
     }
@@ -158,12 +287,15 @@ impl AvailabilityIndex {
     /// Bring shape `sid` up to date with the journal. Syncs that do
     /// work are timed as [`SpanKind::JournalSync`] spans; up-to-date
     /// shapes return before telemetry reads a clock, so idle queries
-    /// stay instrumentation-free.
+    /// stay instrumentation-free. The bitmap layers are maintained in
+    /// the same pass as the counts — rebuilt whole on the stale path,
+    /// bit-flipped per zero-crossing on the replay path.
     fn sync(&mut self, sid: usize, st: &NodeState, shape: &[u64], tel: &Telemetry) {
         if self.shapes[sid].cursor == self.journal.len() {
             return; // up to date: nothing to replay (STALE != len)
         }
         let t0 = tel.start();
+        let bitmap = self.bitmap;
         let entry = &mut self.shapes[sid];
         let mut replayed = 0u64;
         if entry.cursor == STALE {
@@ -177,6 +309,12 @@ impl AvailabilityIndex {
                 total += h as u128;
             }
             entry.total = total;
+            if bitmap {
+                entry.rebuild_bitmaps();
+            } else {
+                entry.blocks = Vec::new();
+                entry.superblocks = Vec::new();
+            }
             tel.count(Counter::JournalRebuilds, 1);
         } else {
             for &n in &self.journal[entry.cursor..] {
@@ -185,7 +323,11 @@ impl AvailabilityIndex {
                 // duplicates in the journal are harmless: recomputation is
                 // idempotent and the total tracks the stored delta
                 entry.total = entry.total + h as u128 - entry.hostable[n] as u128;
+                let was_feasible = entry.hostable[n] > 0;
                 entry.hostable[n] = h;
+                if bitmap && (h > 0) != was_feasible {
+                    entry.flip_bit(n, h > 0);
+                }
                 replayed += 1;
             }
             tel.count(Counter::JournalReplayedEntries, replayed);
@@ -217,6 +359,12 @@ impl AvailabilityIndex {
 
     /// Append the feasible nodes of shape `sid` (hostable > 0) to `out`, in
     /// ascending node order — exactly the pre-index First-Fit visit order.
+    ///
+    /// With the bitmap layers on this is O(F + F/64) in the number of
+    /// feasible nodes: empty 64-node blocks are skipped via the superblock
+    /// words and set bits are popped with `trailing_zeros`. With them off
+    /// it is the flat O(nodes) scan — the in-tree oracle the bitmap path
+    /// is asserted byte-identical to.
     pub fn feasible_into(
         &mut self,
         sid: usize,
@@ -226,9 +374,135 @@ impl AvailabilityIndex {
         out: &mut Vec<u32>,
     ) {
         self.sync(sid, st, shape, tel);
-        for (n, &h) in self.shapes[sid].hostable.iter().enumerate() {
-            if h > 0 {
-                out.push(n as u32);
+        let entry = &self.shapes[sid];
+        if !self.bitmap {
+            for (n, &h) in entry.hostable.iter().enumerate() {
+                if h > 0 {
+                    out.push(n as u32);
+                }
+            }
+            return;
+        }
+        for (si, &sword) in entry.superblocks.iter().enumerate() {
+            let mut sword = sword;
+            while sword != 0 {
+                let b = si * 64 + sword.trailing_zeros() as usize;
+                sword &= sword - 1;
+                let mut word = entry.blocks[b];
+                while word != 0 {
+                    out.push((b * 64 + word.trailing_zeros() as usize) as u32);
+                    word &= word - 1;
+                }
+            }
+        }
+        if tel.is_enabled() {
+            let nonzero: u64 = entry.superblocks.iter().map(|w| w.count_ones() as u64).sum();
+            tel.count(Counter::BitmapBlocksSkipped, entry.blocks.len() as u64 - nonzero);
+        }
+    }
+
+    /// Lowest-id feasible node of shape `sid`, or `None` when no node can
+    /// host it right now. O(F/64) with the bitmap layers on (first set bit
+    /// via the superblock), O(nodes) flat scan with them off.
+    pub fn first_feasible(
+        &mut self,
+        sid: usize,
+        st: &NodeState,
+        shape: &[u64],
+        tel: &Telemetry,
+    ) -> Option<u32> {
+        self.sync(sid, st, shape, tel);
+        let entry = &self.shapes[sid];
+        if !self.bitmap {
+            return entry.hostable.iter().position(|&h| h > 0).map(|n| n as u32);
+        }
+        for (si, &sword) in entry.superblocks.iter().enumerate() {
+            if sword != 0 {
+                let b = si * 64 + sword.trailing_zeros() as usize;
+                let word = entry.blocks[b];
+                return Some((b * 64 + word.trailing_zeros() as usize) as u32);
+            }
+        }
+        None
+    }
+
+    /// Stream the feasible nodes of shape `sid` in ascending node order,
+    /// calling `f(node, hostable)` for each until `f` returns `false`
+    /// (early exit) or the feasible set is exhausted. Returns `false`
+    /// without calling `f` when the bitmap layers are disabled — the
+    /// caller must fall back to full enumeration, keeping the flat path
+    /// the oracle for this one too.
+    ///
+    /// Ascending-id streaming visits exactly the nodes
+    /// [`AvailabilityIndex::feasible_into`] would emit, in the same
+    /// order, so a First-Fit placement that stops once its slots are
+    /// filled is byte-identical to enumerate-then-fill by construction.
+    /// Streams halted by the consumer are counted as
+    /// `Counter::BitmapStreamStops`.
+    pub fn stream_feasible(
+        &mut self,
+        sid: usize,
+        st: &NodeState,
+        shape: &[u64],
+        tel: &Telemetry,
+        mut f: impl FnMut(u32, u64) -> bool,
+    ) -> bool {
+        if !self.bitmap {
+            return false;
+        }
+        self.sync(sid, st, shape, tel);
+        let entry = &self.shapes[sid];
+        'blocks: for (si, &sword) in entry.superblocks.iter().enumerate() {
+            let mut sword = sword;
+            while sword != 0 {
+                let b = si * 64 + sword.trailing_zeros() as usize;
+                sword &= sword - 1;
+                let mut word = entry.blocks[b];
+                while word != 0 {
+                    let n = b * 64 + word.trailing_zeros() as usize;
+                    word &= word - 1;
+                    if !f(n as u32, entry.hostable[n]) {
+                        tel.count(Counter::BitmapStreamStops, 1);
+                        break 'blocks;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Test support (the oracle harness in
+    /// `rust/tests/availability_index.rs` calls this after every
+    /// mutation): panics unless, for every materialised shape, bit
+    /// `n % 64` of `blocks[n / 64]` equals `hostable[n] > 0` and bit
+    /// `b % 64` of `superblocks[b / 64]` equals `blocks[b] != 0` — and,
+    /// in flat-scan mode, that the layers are empty.
+    pub fn assert_bitmap_invariants(&self) {
+        for (sid, st) in self.shapes.iter().enumerate() {
+            if st.cursor == STALE || st.hostable.is_empty() {
+                continue; // rebuilt from scratch on next query
+            }
+            if !self.bitmap {
+                assert!(
+                    st.blocks.is_empty() && st.superblocks.is_empty(),
+                    "shape {sid}: bitmap layers present in flat-scan mode"
+                );
+                continue;
+            }
+            let nblocks = st.hostable.len().div_ceil(64);
+            assert_eq!(st.blocks.len(), nblocks, "shape {sid}: block layer length");
+            assert_eq!(
+                st.superblocks.len(),
+                nblocks.div_ceil(64),
+                "shape {sid}: superblock layer length"
+            );
+            for (n, &h) in st.hostable.iter().enumerate() {
+                let bit = st.blocks[n / 64] >> (n % 64) & 1 == 1;
+                assert_eq!(bit, h > 0, "shape {sid} node {n}: block bit vs hostable");
+            }
+            for (b, &w) in st.blocks.iter().enumerate() {
+                let sbit = st.superblocks[b / 64] >> (b % 64) & 1 == 1;
+                assert_eq!(sbit, w != 0, "shape {sid} block {b}: superblock bit vs block word");
             }
         }
     }
@@ -286,6 +560,7 @@ mod tests {
         h.idx.note_touch(0);
         assert_eq!(h.hostable(sid, 0, &shape), 0);
         assert_eq!(h.total(sid, &shape), 1);
+        h.idx.assert_bitmap_invariants();
     }
 
     #[test]
@@ -298,6 +573,7 @@ mod tests {
         h.idx.note_touch(1);
         assert_eq!(h.total(sid, &shape), 4);
         assert_eq!(h.feasible(sid, &shape), vec![0]);
+        h.idx.assert_bitmap_invariants();
     }
 
     #[test]
@@ -314,6 +590,8 @@ mod tests {
         // after compactions the shape must still answer exactly
         assert_eq!(h.total(sid, &shape), (h.free[0].min(h.free[1]) + 2) as u128);
         assert_eq!(h.hostable(sid, 1, &shape), 2);
+        assert!(h.idx.compactions() > 0, "flood must have compacted");
+        h.idx.assert_bitmap_invariants();
     }
 
     #[test]
@@ -347,5 +625,72 @@ mod tests {
         assert_eq!(h.total(live, &shape), 6);
         assert_eq!(h.idx.ever_total(dead), 42);
         assert!(h.idx.shapes[dead].hostable.is_empty(), "dead shape stays unbuilt");
+    }
+
+    #[test]
+    fn bitmap_and_flat_enumeration_agree() {
+        // A wider harness spanning several 64-node blocks, with holes.
+        let nodes = 300usize;
+        let mut free = vec![0u64; nodes];
+        for n in (0..nodes).step_by(7) {
+            free[n] = 2; // every 7th node feasible → most blocks sparse
+        }
+        let down = vec![false; nodes];
+        let shape = [1u64];
+        let st = NodeState { free: &free, down: &down, types: 1 };
+        let tel = Telemetry::default();
+
+        let mut on = AvailabilityIndex::new(nodes);
+        let sid = on.register_shape(0);
+        let mut off = on.clone();
+        off.set_feasible_bitmap(false);
+
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        on.feasible_into(sid, &st, &shape, &tel, &mut a);
+        off.feasible_into(sid, &st, &shape, &tel, &mut b);
+        assert_eq!(a, b, "bitmap and flat enumeration must be byte-identical");
+        assert_eq!(on.first_feasible(sid, &st, &shape, &tel), Some(0));
+        on.assert_bitmap_invariants();
+        off.assert_bitmap_invariants();
+
+        // Streaming visits the same prefix and stops on demand.
+        let mut seen = Vec::new();
+        let streamed = on.stream_feasible(sid, &st, &shape, &tel, |n, h| {
+            assert_eq!(h, 2);
+            seen.push(n);
+            seen.len() < 5
+        });
+        assert!(streamed);
+        assert_eq!(seen, a[..5].to_vec());
+        assert!(
+            !off.stream_feasible(sid, &st, &shape, &tel, |_, _| true),
+            "flat-scan mode must refuse to stream (caller falls back)"
+        );
+    }
+
+    #[test]
+    fn toggling_bitmap_rebuilds_cleanly() {
+        let mut h = Harness::new();
+        let shape = [1u64, 1];
+        let sid = h.idx.register_shape(0);
+        assert_eq!(h.feasible(sid, &shape), vec![0, 1]);
+        h.idx.set_feasible_bitmap(false);
+        assert_eq!(h.feasible(sid, &shape), vec![0, 1]);
+        h.idx.assert_bitmap_invariants(); // layers must be gone
+        h.idx.set_feasible_bitmap(true);
+        h.free[2] = 0; // node 1 infeasible
+        h.idx.note_touch(1);
+        assert_eq!(h.feasible(sid, &shape), vec![0]);
+        h.idx.assert_bitmap_invariants();
+    }
+
+    #[test]
+    fn journal_limit_is_configurable() {
+        let mut idx = AvailabilityIndex::new(1000);
+        assert_eq!(idx.journal_limit(), 4000);
+        idx.set_journal_limit(128);
+        assert_eq!(idx.journal_limit(), 128);
+        idx.set_journal_limit(0); // clamped: a tiny bound would thrash
+        assert_eq!(idx.journal_limit(), 64);
     }
 }

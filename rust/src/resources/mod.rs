@@ -6,8 +6,10 @@
 //! cache-friendly scans, and availability queries for *interned* job shapes
 //! ([`shapes`]) are answered from an incrementally-maintained index
 //! ([`index`]) instead of rescanned — `can_host`/`can_ever_host` are O(1)
-//! comparisons and allocator node orders enumerate precomputed feasible
-//! sets (see DESIGN.md §Perf). Jobs whose shape was never interned (built
+//! comparisons, allocator node orders enumerate precomputed feasible
+//! sets in O(F + F/64) via hierarchical nonzero bitmaps, and First-Fit
+//! placement streams feasible nodes with early exit (see DESIGN.md
+//! §Perf). Jobs whose shape was never interned (built
 //! by hand in tests/benches) transparently use the pre-index full-scan
 //! path; both paths return identical answers by construction, enforced by
 //! `rust/tests/availability_index.rs`.
@@ -29,6 +31,8 @@ use std::collections::HashMap;
 /// Where a job's slots were placed: `(node index, slot count)` slices.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Allocation {
+    /// `(node index, slot count)` pairs, one per node used, in the order
+    /// the allocator visited them (ascending node id for First-Fit).
     pub slices: Vec<(u32, u32)>,
 }
 
@@ -162,6 +166,41 @@ impl ResourceManager {
     /// Whether the incremental backfilling profile answers probes.
     pub fn backfill_profile_enabled(&self) -> bool {
         self.profile.borrow().enabled()
+    }
+
+    /// Switch the hierarchical feasibility bitmaps on or off
+    /// (`SimOptions::use_feasible_bitmap`, default on). Off keeps the
+    /// flat O(nodes) scan as the enumeration path — the in-tree oracle
+    /// the bitmap path is asserted byte-identical to.
+    pub fn set_feasible_bitmap(&mut self, on: bool) {
+        self.index.get_mut().set_feasible_bitmap(on);
+    }
+
+    /// Whether feasible-set enumeration uses the hierarchical bitmaps.
+    pub fn feasible_bitmap_enabled(&self) -> bool {
+        self.index.borrow().feasible_bitmap()
+    }
+
+    /// Override the availability-index journal compaction bound in
+    /// entries (`SimOptions::index_journal_limit`); `None` restores the
+    /// default `4 × nodes`. See the [`index`] module docs for the
+    /// memory/rebuild trade-off.
+    pub fn set_index_journal_limit(&mut self, limit: Option<usize>) {
+        self.index.get_mut().set_journal_limit(limit.unwrap_or(4 * self.nodes));
+    }
+
+    /// Availability-index journal compactions so far. Folded into
+    /// [`crate::telemetry::Counter::JournalCompactions`] at the end of
+    /// a run.
+    pub fn index_compactions(&self) -> u64 {
+        self.index.borrow().compactions()
+    }
+
+    /// Test support: assert the hierarchical bitmap invariants of every
+    /// materialised shape (see
+    /// [`AvailabilityIndex::assert_bitmap_invariants`]).
+    pub fn assert_index_bitmap_invariants(&self) {
+        self.index.borrow().assert_bitmap_invariants();
     }
 
     /// Backfill probes demoted to the naive oracle path so far. Folded
@@ -354,6 +393,39 @@ impl ResourceManager {
         let i = sid.index().expect("shaped query with ShapeId::UNSET");
         let shape = self.shapes.get(sid).expect("shape id from this manager");
         self.index.borrow_mut().feasible_into(i, &self.node_state(), shape, &self.tel, out);
+    }
+
+    /// First-Fit placement of `slots` slots of an interned shape:
+    /// streams the feasible nodes in ascending id order and stops as
+    /// soon as the request is filled — byte-identical to enumerating
+    /// the full feasible set and filling greedily, without visiting the
+    /// tail. Returns `None` when the bitmap layers are off (the caller
+    /// falls back to enumerate-then-fill, keeping the flat path the
+    /// in-tree oracle) or when the system cannot host the request.
+    pub fn shaped_place_first_fit(&self, sid: ShapeId, slots: u64) -> Option<Allocation> {
+        if !self.feasible_bitmap_enabled() {
+            return None;
+        }
+        let i = sid.index().expect("shaped query with ShapeId::UNSET");
+        let shape = self.shapes.get(sid).expect("shape id from this manager");
+        if slots == 0 {
+            return Some(Allocation { slices: Vec::new() });
+        }
+        let mut slices = Vec::new();
+        let mut remaining = slots;
+        let streamed = self.index.borrow_mut().stream_feasible(
+            i,
+            &self.node_state(),
+            shape,
+            &self.tel,
+            |n, h| {
+                let take = h.min(remaining);
+                slices.push((n, take as u32));
+                remaining -= take;
+                remaining > 0
+            },
+        );
+        (streamed && remaining == 0).then_some(Allocation { slices })
     }
 
     /// Current system-wide hostable total of an interned shape — the O(1)

@@ -105,6 +105,22 @@ pub struct SimOptions {
     /// (asserted in `rust/tests/backfill_profile.rs`), only slower, so the
     /// toggle exists for A/B measurements and the equivalence tests.
     pub use_backfill_profile: bool,
+    /// Enumerate feasible node sets through the availability index's
+    /// hierarchical nonzero bitmaps — O(F + F/64) in the number of
+    /// feasible nodes instead of O(nodes) — and let First-Fit place by
+    /// streaming with early exit. On by default; switching it off keeps
+    /// the flat O(nodes) scan compiled in as the in-tree oracle —
+    /// results are identical by construction (asserted in
+    /// `rust/tests/availability_index.rs`), only slower, so the toggle
+    /// exists for A/B measurements and the equivalence tests.
+    pub use_feasible_bitmap: bool,
+    /// Availability-index journal compaction bound in entries; `None`
+    /// uses the default `4 × nodes`. A larger bound trades journal
+    /// memory (4 bytes/entry) for fewer forced full rebuilds of
+    /// rarely-queried shapes; see the `resources::index` module docs.
+    /// Values below 64 are clamped up to 64. Observation-neutral:
+    /// compaction timing never changes query answers, only their cost.
+    pub index_journal_limit: Option<usize>,
     /// Keep the full [`SimEvent`] history instead of compacting delivered
     /// events away. Required for [`SimCore::snapshot`]/[`SimCore::fork`]
     /// (the snapshot carries the history so a restore can replay it into
@@ -133,6 +149,8 @@ impl Default for SimOptions {
             time_dispatch: true,
             use_shape_index: true,
             use_backfill_profile: true,
+            use_feasible_bitmap: true,
+            index_journal_limit: None,
             retain_log: false,
             telemetry: Telemetry::default(),
         }
@@ -381,6 +399,8 @@ impl SimCore {
         let log = EventLog::new(opts.retain_log);
         let mut rm = ResourceManager::from_config(&sys);
         rm.set_backfill_profile(opts.use_backfill_profile);
+        rm.set_feasible_bitmap(opts.use_feasible_bitmap);
+        rm.set_index_journal_limit(opts.index_journal_limit);
         SimCore {
             source,
             rm,
@@ -605,6 +625,7 @@ impl SimCore {
         tel.count(Counter::IndexDemotions, self.rm.naive_demotions());
         tel.count(Counter::ProfileDemotions, self.rm.profile_demotions());
         tel.count(Counter::CbfProfileSkips, self.rm.cbf_profile_skips());
+        tel.count(Counter::JournalCompactions, self.rm.index_compactions());
         tel.count(Counter::MemProbeSkipped, self.mem.skipped);
         tel.gauge("sim.time_points", out.time_points as f64);
         tel.gauge("sim.max_queue", out.max_queue as f64);

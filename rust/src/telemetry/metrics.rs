@@ -113,11 +113,20 @@ pub enum Counter {
     LogEventsCompacted,
     /// Trace events discarded after the tracer hit its capacity cap.
     TraceEventsDropped,
+    /// Availability-index journal compactions (each marks every lagging
+    /// shape stale; see `SimOptions::index_journal_limit`).
+    JournalCompactions,
+    /// Empty 64-node blocks skipped by hierarchical-bitmap feasible
+    /// enumeration (each skip replaces 64 per-node count reads).
+    BitmapBlocksSkipped,
+    /// Early-exit feasible streams halted by the consumer (First-Fit
+    /// filled the job's slots and stopped the scan).
+    BitmapStreamStops,
 }
 
 impl Counter {
     /// Every counter, in display/serialization order.
-    pub const ALL: [Counter; 10] = [
+    pub const ALL: [Counter; 13] = [
         Counter::IndexDemotions,
         Counter::JournalReplayedEntries,
         Counter::JournalRebuilds,
@@ -128,6 +137,9 @@ impl Counter {
         Counter::MemProbeSkipped,
         Counter::LogEventsCompacted,
         Counter::TraceEventsDropped,
+        Counter::JournalCompactions,
+        Counter::BitmapBlocksSkipped,
+        Counter::BitmapStreamStops,
     ];
 
     /// Stable serialization name.
@@ -143,6 +155,9 @@ impl Counter {
             Counter::MemProbeSkipped => "mem_probe_skipped",
             Counter::LogEventsCompacted => "log_events_compacted",
             Counter::TraceEventsDropped => "trace_events_dropped",
+            Counter::JournalCompactions => "journal_compactions",
+            Counter::BitmapBlocksSkipped => "bitmap_blocks_skipped",
+            Counter::BitmapStreamStops => "bitmap_stream_stops",
         }
     }
 

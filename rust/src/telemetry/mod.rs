@@ -196,6 +196,9 @@ impl Telemetry {
             journal_sync_ns: sync.sum(),
             journal_replayed_entries: reg.counter(Counter::JournalReplayedEntries),
             journal_rebuilds: reg.counter(Counter::JournalRebuilds),
+            journal_compactions: reg.counter(Counter::JournalCompactions),
+            bitmap_blocks_skipped: reg.counter(Counter::BitmapBlocksSkipped),
+            bitmap_stream_stops: reg.counter(Counter::BitmapStreamStops),
             profile_syncs: psync.count(),
             profile_sync_ns: psync.sum(),
             profile_rebuilds: reg.counter(Counter::ProfileRebuilds),
@@ -255,6 +258,14 @@ pub struct TelemetrySummary {
     pub journal_replayed_entries: u64,
     /// Full per-shape rebuilds forced by journal compaction.
     pub journal_rebuilds: u64,
+    /// Availability-index journal compactions
+    /// (`SimOptions::index_journal_limit` bounds the journal).
+    pub journal_compactions: u64,
+    /// Empty 64-node blocks skipped by bitmap feasible enumeration.
+    pub bitmap_blocks_skipped: u64,
+    /// First-Fit early-exit streams stopped before exhausting the
+    /// feasible set.
+    pub bitmap_stream_stops: u64,
     /// Backfill-profile cache syncs that did work.
     pub profile_syncs: u64,
     /// Total nanoseconds spent in profile syncs.
@@ -288,6 +299,9 @@ impl TelemetrySummary {
         put("journal_sync_ns", self.journal_sync_ns);
         put("journal_replayed_entries", self.journal_replayed_entries);
         put("journal_rebuilds", self.journal_rebuilds);
+        put("journal_compactions", self.journal_compactions);
+        put("bitmap_blocks_skipped", self.bitmap_blocks_skipped);
+        put("bitmap_stream_stops", self.bitmap_stream_stops);
         put("profile_syncs", self.profile_syncs);
         put("profile_sync_ns", self.profile_sync_ns);
         put("profile_rebuilds", self.profile_rebuilds);

@@ -5,11 +5,15 @@
 //! 1. **Oracle equivalence** — after every allocate/release/down/up/intern
 //!    step of a randomized sequence, every indexed query (per-node
 //!    hostable, feasible enumeration, `can_host`, `can_ever_host`) must
-//!    equal a naive full scan recomputed from the free/capacity matrices.
+//!    equal a naive full scan recomputed from the free/capacity matrices,
+//!    and the hierarchical block/superblock bitmaps must stay consistent
+//!    with the per-node hostable counts.
 //! 2. **Byte identity** — simulations and whole campaigns executed with the
 //!    index disabled (`SimOptions::use_shape_index = false`, the pre-index
-//!    code path) must produce byte-identical outputs: speed must not
-//!    change results.
+//!    code path) or the feasibility bitmaps disabled
+//!    (`SimOptions::use_feasible_bitmap = false`, the flat-scan oracle
+//!    path) must produce byte-identical outputs: speed must not change
+//!    results.
 
 use accasim::config::SysConfig;
 use accasim::dispatch::dispatcher_from_label;
@@ -115,7 +119,12 @@ fn oracle_place(rm: &ResourceManager, shape: &[u64], slots: u32) -> Option<Alloc
 
 /// The tentpole property: drive randomized allocate/release/down/up/intern
 /// sequences (long enough to force journal compactions) and assert the
-/// index equals the naive full-scan oracle after every single step.
+/// index equals the naive full-scan oracle after every single step — and
+/// that the block/superblock bitmap layers stay consistent with the
+/// hostable counts throughout, across compactions, mid-sequence interning
+/// and mid-sequence bitmap toggling. Half the cases run with a tiny
+/// configured journal limit so the compaction/STALE rebuild path fires
+/// constantly even on small systems.
 #[test]
 fn prop_index_matches_full_scan_oracle() {
     check("availability-index", 0x1DEC5, 30, |rng| {
@@ -127,6 +136,14 @@ fn prop_index_matches_full_scan_oracle() {
             0,
         );
         let mut rm = ResourceManager::from_config(&sys);
+        if rng.range_u64(0, 1) == 1 {
+            // the limit clamps to the 64-entry floor: the smallest legal
+            // journal, maximizing compaction pressure
+            rm.set_index_journal_limit(Some(1));
+        }
+        if rng.range_u64(0, 1) == 1 {
+            rm.set_feasible_bitmap(false); // start half the cases on the flat path
+        }
 
         let mut shapes: Vec<(Vec<u64>, ShapeId)> = Vec::new();
         fn intern(
@@ -149,7 +166,7 @@ fn prop_index_matches_full_scan_oracle() {
         // 150 ops × a few slices per allocate ≫ the 64-entry journal floor:
         // compaction paths are exercised on small systems every case
         for _ in 0..150 {
-            match rng.range_u64(0, 9) {
+            match rng.range_u64(0, 10) {
                 0..=3 => {
                     // allocate a random job of a random interned shape
                     let (vec, sid) = &shapes[rng.range_u64(0, shapes.len() as u64 - 1) as usize];
@@ -175,6 +192,13 @@ fn prop_index_matches_full_scan_oracle() {
                 8 => {
                     rm.set_node_up(rng.range_u64(0, nodes - 1) as usize);
                 }
+                9 => {
+                    // flip the bitmap layer mid-sequence: toggling marks
+                    // every shape stale, so the next query rebuilds (or
+                    // drops) both layers from scratch
+                    let on = rm.feasible_bitmap_enabled();
+                    rm.set_feasible_bitmap(!on);
+                }
                 _ => {
                     // intern a fresh shape mid-sequence: it must observe the
                     // *current* state on its first query
@@ -182,6 +206,7 @@ fn prop_index_matches_full_scan_oracle() {
                 }
             }
             assert_index_matches_oracle(&rm, &shapes);
+            rm.assert_index_bitmap_invariants();
         }
     });
 }
@@ -338,6 +363,93 @@ fn campaign_store_is_byte_identical_with_index_disabled() {
             strip(read(&run(&dir_on).join("perf.csv"))),
             strip(read(&run(&dir_off).join("perf.csv"))),
             "{}: perf.csv deterministic columns diverged",
+            rec.run_id
+        );
+    }
+}
+
+/// Byte identity across the feasibility-bitmap toggle at scale: every
+/// dispatcher × allocator family on a ≥2k-node system under a failure
+/// storm (dozens of staggered down/up windows driving zero-crossing bit
+/// flips and journal churn through the bitmap maintenance path). The
+/// flat-scan enumeration and the enumerate-then-fill placement stay
+/// compiled in as the in-tree oracle (`use_feasible_bitmap = false`);
+/// the hierarchical enumeration and the First-Fit early-exit streaming
+/// placement must be indistinguishable from them in every output byte.
+#[test]
+fn simulations_are_byte_identical_with_bitmap_disabled() {
+    use accasim::addons::FailureInjector;
+    let mut rng = Pcg64::new(0xB17A);
+    let jobs = arb_jobs(&mut rng, 150, 24, 3);
+    let sys = SysConfig::homogeneous("abxl", 2048, &[("core", 8), ("gpu", 1), ("mem", 64)], 0);
+    // failure storm: 48 staggered windows spread across the machine
+    let storm: Vec<(u32, u64, u64)> = (0..48u64)
+        .map(|i| (((i * 331) % 2048) as u32, 50 + i * 37, 50 + i * 37 + 2_500))
+        .collect();
+    let run = |label: &str, use_feasible_bitmap: bool| {
+        let opts = SimOptions {
+            output: OutputCollector::in_memory(true, true),
+            addons: vec![Box::new(FailureInjector::new(storm.clone()))],
+            mem_sample_secs: 0,
+            use_feasible_bitmap,
+            ..Default::default()
+        };
+        let mut sim = Simulator::from_jobs(
+            jobs.clone(),
+            sys.clone(),
+            dispatcher_from_label(label).unwrap(),
+            opts,
+        );
+        sim.run().expect("simulation completes")
+    };
+    for label in ["FIFO-FF", "SJF-BF", "LJF-WF", "EBF-FF", "CBF-FF"] {
+        let on = run(label, true);
+        let off = run(label, false);
+        assert_eq!(
+            deterministic_bytes(&on),
+            deterministic_bytes(&off),
+            "{label}: the feasibility bitmaps changed simulation results"
+        );
+        assert_eq!(on.addon_wakes, off.addon_wakes, "{label}");
+        assert!(on.jobs_completed > 0, "{label}: degenerate case");
+    }
+}
+
+/// Campaign-level byte identity across the feasibility-bitmap toggle:
+/// like the shape-index campaign A/B above, the same matrix run with
+/// bitmaps on and off must leave byte-identical stores.
+#[test]
+fn campaign_store_is_byte_identical_with_bitmap_disabled() {
+    use accasim::campaign::{Campaign, CampaignSpec};
+    let tmp = tempfile::tempdir().unwrap();
+    let spec = || {
+        let mut s = CampaignSpec::new("abbmp");
+        s.add_trace("seth", 0.0005).add_system_trace("seth");
+        s.add_dispatcher("FIFO-FF").add_dispatcher("SJF-BF");
+        s.seeds = vec![1, 2];
+        s
+    };
+    let dir_on = tmp.path().join("on");
+    let dir_off = tmp.path().join("off");
+    let rep_on = Campaign::new(spec(), &dir_on).feasible_bitmap(true).run().unwrap();
+    let rep_off = Campaign::new(spec(), &dir_off).feasible_bitmap(false).run().unwrap();
+    assert_eq!(rep_on.records.len(), 4);
+    assert_eq!(rep_on.records.len(), rep_off.records.len());
+    let read = |p: &std::path::Path| std::fs::read_to_string(p).unwrap();
+    for file in ["summary.csv", "index.json", "plots/fig10_slowdown.csv", "plots/fig11_queue.csv"]
+    {
+        assert_eq!(
+            read(&dir_on.join(file)),
+            read(&dir_off.join(file)),
+            "{file} must not depend on the feasibility bitmaps"
+        );
+    }
+    for rec in &rep_on.records {
+        let run = |d: &std::path::Path| d.join("runs").join(&rec.run_id);
+        assert_eq!(
+            read(&run(&dir_on).join("jobs.csv")),
+            read(&run(&dir_off).join("jobs.csv")),
+            "{}: jobs.csv must not depend on the feasibility bitmaps",
             rec.run_id
         );
     }
